@@ -1,0 +1,6 @@
+# Make `compile.*` importable when pytest runs from the repo root
+# (python/tests expect cwd=python/; CI and the capture command run from /).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,44 @@
+//! Scenario: compare vLLM / INFERCEPT / LAMPS on the paper's multi-API
+//! compound-AI workload (chatbots, image generation, VE agents...) at a
+//! contended memory budget — a miniature of the paper's Fig 6/Fig 10
+//! evaluation, runnable in seconds on the simulator.
+//!
+//!     cargo run --release --example augmented_serving
+use lamps::bench::{improvement_pct, Dataset, ModelPreset};
+use lamps::config::SystemConfig;
+use lamps::core::types::Tokens;
+use lamps::engine::Engine;
+
+fn main() {
+    let trace = Dataset::MultiApi.generate(250, 6.0, 7);
+    println!("workload: {} multi-API requests @ {}/s (classes: math, qa, \
+              ve, chatbot, image, tts)\n",
+             trace.len(), trace.rate);
+    println!("{:<15} {:>11} {:>11} {:>11} {:>11} {:>9} {:>7}", "system",
+             "lat_mean(s)", "lat_p99(s)", "ttft_mean", "ttft_p99",
+             "thr(r/s)", "preempt");
+    let mut lamps_lat = 0.0;
+    let mut baseline_lat = Vec::new();
+    for system in ["vllm", "infercept", "lamps-no-sched", "lamps"] {
+        let mut cfg = SystemConfig::preset(system).unwrap();
+        cfg.cost = ModelPreset::GptJ6b.cost();
+        cfg.memory_budget = Tokens(12_000);
+        let report = Engine::simulated(cfg).run_trace(&trace);
+        println!("{:<15} {:>11.2} {:>11.2} {:>11.2} {:>11.2} {:>9.3} \
+                  {:>7}",
+                 system, report.latency.mean_secs(),
+                 report.latency.p99_secs(),
+                 report.ttft.mean_us / 1e6, report.ttft.p99_us / 1e6,
+                 report.throughput_rps, report.preemptions);
+        if system == "lamps" {
+            lamps_lat = report.latency.mean_us;
+        } else {
+            baseline_lat.push((system, report.latency.mean_us));
+        }
+    }
+    println!();
+    for (system, lat) in baseline_lat {
+        println!("LAMPS vs {:<13}: {:+.1}% mean latency", system,
+                 improvement_pct(lamps_lat, lat));
+    }
+}

@@ -1,0 +1,81 @@
+//! Quickstart: serve three augmented requests end-to-end on the REAL
+//! model — PJRT prefill/decode of the AOT-compiled TinyGPT, the PJRT
+//! length predictor feeding the LAMPS scheduler, simulated external API
+//! calls, wall-clock latencies.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+use lamps::config::SystemConfig;
+use lamps::core::request::{ApiCallSpec, ApiType, RequestSpec};
+use lamps::core::types::{Micros, RequestId, Tokens};
+use lamps::engine::clock::Clock;
+use lamps::engine::pjrt_backend::PjrtBackend;
+use lamps::engine::Engine;
+use lamps::predictor::opt_classifier::PjrtPredictor;
+use lamps::runtime::{ArtifactMeta, ModelRuntime, PredictorRuntime,
+                     RuntimeClient};
+
+fn main() -> anyhow::Result<()> {
+    let meta = ArtifactMeta::load_default()?;
+    let client = RuntimeClient::cpu()?;
+    println!("PJRT platform: {} | model: gptj-tiny", client.platform());
+    let model = ModelRuntime::load(&client, &meta, "gptj-tiny")?;
+    let predictor = PredictorRuntime::load(&client, &meta)?;
+    let batch = model.meta.batch;
+    let max_seq = model.meta.max_seq;
+
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.memory_budget = Tokens((batch * max_seq) as u64);
+    cfg.max_batch = batch;
+    cfg.block_size = 16;
+
+    let mut engine = Engine::new(cfg, Box::new(PjrtBackend::new(model)),
+                                 Box::new(PjrtPredictor::new(predictor)),
+                                 Clock::wall_clock());
+
+    let prompts = [
+        ("call the weather api with a brief answer scale n2 today", 60),
+        ("call the code api with a verbose answer scale n40 please", 15),
+        ("call the search api with a medium answer scale n20 now", 120),
+    ];
+    for (i, (prompt, api_ms)) in prompts.iter().enumerate() {
+        engine.submit(RequestSpec {
+            id: RequestId(i as u64),
+            arrival: engine.now(),
+            prompt: prompt.to_string(),
+            prompt_tokens: Tokens(
+                lamps::util::tokenizer::valid_len(prompt, 64) as u64),
+            api_calls: vec![ApiCallSpec {
+                decode_before: Tokens(6),
+                api_type: ApiType::Tool(0),
+                duration: Micros(api_ms * 1000),
+                response_tokens: Tokens(3),
+            }],
+            final_decode: Tokens(8),
+        });
+    }
+    engine.run_until_idle(None);
+
+    let backend = engine
+        .backend_any()
+        .unwrap()
+        .downcast_ref::<PjrtBackend>()
+        .unwrap();
+    for (i, (prompt, _)) in prompts.iter().enumerate() {
+        let id = RequestId(i as u64);
+        let r = engine.request(id).unwrap();
+        println!("\nr{i}: \"{}\"", &prompt[..34.min(prompt.len())]);
+        println!("  handling: {:?} | latency {:.1} ms | ttft {:.1} ms",
+                 r.handling.first().map(|h| h.label()),
+                 (r.finished_at.unwrap() - r.spec.arrival).0 as f64
+                     / 1e3,
+                 r.first_token_at
+                     .map(|t| (t - r.spec.arrival).0 as f64 / 1e3)
+                     .unwrap_or(0.0));
+        println!("  generated tokens: {:?}",
+                 backend.generated_tokens(id).unwrap());
+    }
+    let report = engine.metrics.report();
+    println!("\ncompleted {}/{} | decoded {} real tokens",
+             report.completed, report.submitted, report.tokens_decoded);
+    Ok(())
+}

@@ -1,0 +1,167 @@
+"""AOT compile path: lower the L2 graphs to HLO **text** artifacts.
+
+Run once via ``make artifacts``; the Rust runtime
+(``rust/src/runtime/``) loads these with ``HloModuleProto::from_text_file``
+and executes them on the PJRT CPU client. Python never runs on the request
+path.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Artifacts (per model preset):
+  artifacts/<preset>_prefill.hlo.txt   (tokens, lengths) -> (next, k, v)
+  artifacts/<preset>_decode.hlo.txt    (token, pos, k, v) -> (next, k, v)
+  artifacts/predictor.hlo.txt          (tokens) -> (bin,)
+  artifacts/meta.json                  shapes + config for the Rust side
+  artifacts/predictor_stats.json       Table 3 accuracy metrics
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as model_mod
+from compile import predictor as predictor_mod
+from compile import tokenizer as tok
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big constants as ``{...}``, which the Rust-side text parser
+    silently reads back as zeros — i.e. the baked model weights vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_model(preset: str, out_dir: str, seed: int = 0) -> dict:
+    """Bake weights and lower prefill/decode for one model preset."""
+    cfg = model_mod.PRESETS[preset]
+    params = model_mod.init_params(jax.random.PRNGKey(seed), cfg)
+    B, S = cfg.batch, cfg.max_seq
+    L, H, D = cfg.n_layers, cfg.n_heads, cfg.head_dim
+
+    # Weights are closed over -> baked into the HLO as constants; only
+    # dynamic state crosses the Rust boundary.
+    def prefill_fn(tokens, lengths):
+        return model_mod.prefill_greedy(params, cfg, tokens, lengths)
+
+    def decode_fn(token, pos, k_cache, v_cache):
+        return model_mod.decode_step_greedy(params, cfg, token, pos,
+                                            k_cache, v_cache)
+
+    tokens_spec = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    vec_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+    kv_spec = jax.ShapeDtypeStruct((L, B, S, H, D), jnp.float32)
+
+    t0 = time.time()
+    prefill_hlo = to_hlo_text(jax.jit(prefill_fn).lower(tokens_spec,
+                                                        vec_spec))
+    decode_hlo = to_hlo_text(jax.jit(decode_fn).lower(vec_spec, vec_spec,
+                                                      kv_spec, kv_spec))
+    elapsed = time.time() - t0
+
+    pf = os.path.join(out_dir, f"{preset}_prefill.hlo.txt")
+    df = os.path.join(out_dir, f"{preset}_decode.hlo.txt")
+    with open(pf, "w") as f:
+        f.write(prefill_hlo)
+    with open(df, "w") as f:
+        f.write(decode_hlo)
+    print(f"[aot] {preset}: prefill {len(prefill_hlo)//1024} KiB, "
+          f"decode {len(decode_hlo)//1024} KiB (lowered in {elapsed:.1f}s)")
+
+    return {
+        "name": cfg.name,
+        "vocab_size": cfg.vocab_size,
+        "n_layers": L,
+        "n_heads": H,
+        "head_dim": D,
+        "d_model": cfg.d_model,
+        "max_seq": S,
+        "batch": B,
+        "kv_bytes_per_token": cfg.kv_bytes_per_token,
+        "prefill_hlo": os.path.basename(pf),
+        "decode_hlo": os.path.basename(df),
+        "eos_id": tok.EOS_ID,
+    }
+
+
+def export_predictor(out_dir: str, seed: int = 0, *, steps: int = 3000
+                     ) -> dict:
+    cfg = predictor_mod.PredictorConfig()
+    t0 = time.time()
+    params, stats = predictor_mod.train(cfg, steps=steps, seed=seed)
+    print(f"[aot] predictor trained in {time.time() - t0:.1f}s: "
+          f"acc5={stats['acc5']:.3f} acc15={stats['acc15']:.3f} "
+          f"mae={stats['mae_words']:.2f} words")
+
+    def predict_fn(tokens):
+        return (predictor_mod.predict_bin(params, tokens),)
+
+    spec = jax.ShapeDtypeStruct((1, cfg.max_prompt), jnp.int32)
+    hlo = to_hlo_text(jax.jit(predict_fn).lower(spec))
+    path = os.path.join(out_dir, "predictor.hlo.txt")
+    with open(path, "w") as f:
+        f.write(hlo)
+
+    with open(os.path.join(out_dir, "predictor_stats.json"), "w") as f:
+        json.dump(stats, f, indent=2)
+
+    return {
+        "predictor_hlo": os.path.basename(path),
+        "max_prompt": cfg.max_prompt,
+        "num_bins": cfg.num_bins,
+        "bin_width": cfg.bin_width,
+        "vocab_size": cfg.vocab_size,
+        "acc5": stats["acc5"],
+        "acc15": stats["acc15"],
+        "mae_words": stats["mae_words"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/meta.json",
+                    help="path of the meta.json to write; artifacts land "
+                         "in its directory")
+    ap.add_argument("--presets", default="gptj-tiny,vicuna-tiny")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--predictor-steps", type=int, default=3000)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    meta = {"format": "hlo-text", "models": {}, "tokenizer": {
+        "vocab_size": tok.VOCAB_SIZE, "pad_id": tok.PAD_ID,
+        "bos_id": tok.BOS_ID, "eos_id": tok.EOS_ID,
+        "reserved": tok.RESERVED, "scheme": "fnv1a64-word-hash",
+    }}
+    for preset in args.presets.split(","):
+        meta["models"][preset] = export_model(preset, out_dir,
+                                              seed=args.seed)
+    meta["predictor"] = export_predictor(out_dir, seed=args.seed,
+                                         steps=args.predictor_steps)
+
+    with open(args.out, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"[aot] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""Layer-1 Pallas attention kernels for the LAMPS serving stack.
+
+Two kernels cover the serving hot path:
+
+* :func:`decode_attention` — single-query ("flash-decoding") attention of one
+  new token against the KV cache. This is the per-iteration hot spot of the
+  decode phase the paper's scheduler optimizes around.
+* :func:`prefill_attention` — blocked causal self-attention used once per
+  request at admission (prefill phase).
+
+Hardware-adaptation notes (GPU paper -> TPU kernel), per DESIGN.md
+§Hardware-Adaptation:
+
+- The CUDA PagedAttention structure (warps gathering KV pages into shared
+  memory) becomes a ``BlockSpec``-driven HBM->VMEM schedule: the grid walks
+  ``(batch, head)`` and the kernel streams the sequence axis through VMEM in
+  ``block_k``-sized tiles with an *online softmax* (running max / denominator
+  / weighted-value accumulator), never materializing the full attention row.
+- The q.K^T and p.V contractions are plain dot products so Mosaic can place
+  them on the MXU when compiled for real TPUs.
+- ``interpret=True`` is mandatory on this CPU image: real TPU lowering emits
+  a Mosaic custom-call the CPU PJRT plugin cannot execute. Numerics are
+  validated against ``ref.py`` through the interpret path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single query token vs. KV cache)
+# ---------------------------------------------------------------------------
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, block_k: int,
+                        scale: float):
+    """One (batch, head) cell: online-softmax over sequence tiles.
+
+    Ref shapes (leading blocked dims of size 1 dropped by indexing):
+      q_ref:   (1, 1, D)        the query for this (b, h)
+      k_ref:   (1, S, 1, D)     keys for this (b, h)
+      v_ref:   (1, S, 1, D)     values
+      len_ref: (1, 1)           valid KV length for this b (int32)
+      o_ref:   (1, 1, D)        output
+    """
+    seq_len = k_ref.shape[1]
+    head_dim = q_ref.shape[-1]
+    num_blocks = seq_len // block_k
+
+    q = q_ref[0, 0, :].astype(jnp.float32)  # (D,)
+    valid = len_ref[0, 0]
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        start = i * block_k
+        k_blk = k_ref[0, pl.dslice(start, block_k), 0, :].astype(jnp.float32)
+        v_blk = v_ref[0, pl.dslice(start, block_k), 0, :].astype(jnp.float32)
+        # scores for this tile: (block_k,)
+        s = jnp.dot(k_blk, q) * scale
+        idx = start + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where(idx < valid, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_prev * alpha + jnp.sum(p)
+        acc_new = acc_prev * alpha + jnp.dot(p, v_blk)
+        return m_new, l_new, acc_new
+
+    init = (jnp.float32(NEG_INF), jnp.float32(0.0),
+            jnp.zeros((head_dim,), jnp.float32))
+    m, l, acc = jax.lax.fori_loop(0, num_blocks, body, init)
+    # Fully-masked rows (valid == 0): exp(NEG_INF - NEG_INF) == 1 would make
+    # the row an unweighted mean of V; masking is prefix-valid so this is
+    # the only degenerate case — emit zeros to match the oracle.
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = jnp.where(valid > 0, acc / l, 0.0)
+    o_ref[0, 0, :] = out.astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, block_k: int = 64,
+                     interpret: bool = True) -> jax.Array:
+    """Single-token decode attention against a (padded) KV cache.
+
+    Args:
+      q:       (B, H, D)    query vectors for the new token.
+      k, v:    (B, S, H, D) padded KV cache; entries at position >= lengths[b]
+               are ignored.
+      lengths: (B,) int32   valid cache length per sequence.
+      block_k: sequence tile size streamed through VMEM.
+
+    Returns:
+      (B, H, D) attention output.
+    """
+    batch, n_heads, head_dim = q.shape
+    seq_len = k.shape[1]
+    if seq_len % block_k != 0:
+        raise ValueError(f"seq_len {seq_len} must be a multiple of "
+                         f"block_k {block_k}")
+    scale = 1.0 / (head_dim ** 0.5)
+    lengths2 = lengths.astype(jnp.int32).reshape(batch, 1)
+
+    kernel = functools.partial(_decode_attn_kernel, block_k=block_k,
+                               scale=scale)
+    grid = (batch, n_heads)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, head_dim), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, seq_len, 1, head_dim), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, seq_len, 1, head_dim), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, head_dim), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_heads, head_dim), q.dtype),
+        interpret=interpret,
+    )(q, k, v, lengths2)
+
+
+# ---------------------------------------------------------------------------
+# Prefill attention (blocked causal self-attention)
+# ---------------------------------------------------------------------------
+
+
+def _prefill_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *,
+                         block_q: int, block_k: int, scale: float):
+    """One (batch, head, q-tile) cell: causal online-softmax over KV tiles.
+
+    Ref shapes:
+      q_ref:   (1, block_q, 1, D)
+      k_ref:   (1, S, 1, D)
+      v_ref:   (1, S, 1, D)
+      len_ref: (1, 1)
+      o_ref:   (1, block_q, 1, D)
+    """
+    qt = pl.program_id(2)
+    seq_len = k_ref.shape[1]
+    head_dim = q_ref.shape[-1]
+    valid = len_ref[0, 0]
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale  # (block_q, D)
+    q_idx = qt * block_q + jax.lax.iota(jnp.int32, block_q)  # (block_q,)
+
+    # Causality: a q-tile only attends to KV tiles with start <= tile end.
+    num_k_blocks = (qt * block_q + block_q + block_k - 1) // block_k
+    num_k_blocks = jnp.minimum(num_k_blocks, seq_len // block_k)
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        start = i * block_k
+        k_blk = k_ref[0, pl.dslice(start, block_k), 0, :].astype(jnp.float32)
+        v_blk = v_ref[0, pl.dslice(start, block_k), 0, :].astype(jnp.float32)
+        s = jnp.dot(q, k_blk.T)  # (block_q, block_k)
+        k_idx = start + jax.lax.iota(jnp.int32, block_k)
+        mask = (k_idx[None, :] <= q_idx[:, None]) & (k_idx[None, :] < valid)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(p, v_blk)
+        return m_new, l_new, acc_new
+
+    init = (jnp.full((block_q,), NEG_INF, jnp.float32),
+            jnp.zeros((block_q,), jnp.float32),
+            jnp.zeros((block_q, head_dim), jnp.float32))
+    m, l, acc = jax.lax.fori_loop(0, num_k_blocks, body, init)
+    # Rows at q_idx >= valid are fully masked (see decode kernel note):
+    # zero them explicitly so padded positions hold zeros, not garbage.
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = jnp.where((q_idx < valid)[:, None], acc / l[:, None], 0.0)
+    o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      lengths: jax.Array, *, block_q: int = 64,
+                      block_k: int = 64, interpret: bool = True) -> jax.Array:
+    """Blocked causal self-attention for the prefill phase.
+
+    Args:
+      q, k, v: (B, S, H, D) padded token projections.
+      lengths: (B,) int32 valid prompt length per sequence.
+
+    Returns:
+      (B, S, H, D) attention output (garbage at positions >= lengths[b]).
+    """
+    batch, seq_len, n_heads, head_dim = q.shape
+    if seq_len % block_q != 0 or seq_len % block_k != 0:
+        raise ValueError(f"seq_len {seq_len} must be a multiple of block_q "
+                         f"{block_q} and block_k {block_k}")
+    scale = 1.0 / (head_dim ** 0.5)
+    lengths2 = lengths.astype(jnp.int32).reshape(batch, 1)
+
+    kernel = functools.partial(_prefill_attn_kernel, block_q=block_q,
+                               block_k=block_k, scale=scale)
+    grid = (batch, n_heads, seq_len // block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, head_dim),
+                         lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, seq_len, 1, head_dim),
+                         lambda b, h, t: (b, 0, h, 0)),
+            pl.BlockSpec((1, seq_len, 1, head_dim),
+                         lambda b, h, t: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, t: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, head_dim),
+                               lambda b, h, t: (b, t, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v, lengths2)

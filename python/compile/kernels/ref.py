@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+These deliberately use the naive O(S^2) formulation so any blocking /
+online-softmax bug in the kernels shows up as a numeric mismatch.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """Naive single-query attention.
+
+    q: (B, H, D); k, v: (B, S, H, D); lengths: (B,) -> (B, H, D)
+    """
+    seq_len = k.shape[1]
+    head_dim = q.shape[-1]
+    scale = 1.0 / (head_dim ** 0.5)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # (B, H, S)
+    s = jnp.einsum("bhd,bshd->bhs", qf, kf) * scale
+    idx = jnp.arange(seq_len)[None, None, :]
+    mask = idx < lengths[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhs,bshd->bhd", p, vf)
+    # Fully-masked rows (lengths == 0) -> zeros, matching the kernel.
+    any_valid = (lengths > 0)[:, None, None]
+    return jnp.where(any_valid, out, 0.0).astype(q.dtype)
+
+
+def prefill_attention_ref(q, k, v, lengths):
+    """Naive causal self-attention.
+
+    q, k, v: (B, S, H, D); lengths: (B,) -> (B, S, H, D)
+
+    Positions >= lengths[b] produce zeros (the kernel emits garbage there;
+    callers must not read them — tests compare only valid positions).
+    """
+    seq_len = q.shape[1]
+    head_dim = q.shape[-1]
+    scale = 1.0 / (head_dim ** 0.5)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) * scale
+    q_idx = jnp.arange(seq_len)
+    k_idx = jnp.arange(seq_len)
+    causal = k_idx[None, :] <= q_idx[:, None]  # (S, S)
+    valid = k_idx[None, None, :] < lengths[:, None, None]  # (B, 1, S)
+    mask = causal[None, None, :, :] & valid[:, :, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    row_valid = (q_idx[None, :] < lengths[:, None])[:, :, None, None]
+    return jnp.where(row_valid, out, 0.0).astype(q.dtype)

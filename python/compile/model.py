@@ -1,0 +1,206 @@
+"""Layer-2 JAX model: TinyGPT, the serving target for the LAMPS stack.
+
+The paper serves GPT-J 6B and Vicuna 13B on A100s; that hardware/weights
+combination is unavailable here (DESIGN.md §2), so the served model is a
+small GPT-style decoder with two presets mirroring the paper's two model
+sizes ("gptj-tiny", "vicuna-tiny"). The *system* code paths are identical to
+serving a large model: prefill builds a KV cache, decode consumes and extends
+it one token per iteration, and the scheduler manages the cache's memory.
+
+Both entry points call the Layer-1 Pallas kernels
+(:mod:`compile.kernels.attention`), so the kernels lower into the same HLO
+modules exported by :mod:`compile.aot`.
+
+Shapes are static (PJRT executables are fixed-shape): the batch is padded to
+``B`` slots and caches to ``max_seq``; per-slot validity is carried in
+``lengths`` / ``pos`` vectors. Weights are baked into the HLO as constants at
+lowering time, so the Rust runtime passes only dynamic state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import decode_attention, prefill_attention
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """TinyGPT hyper-parameters.
+
+    ``kv_bytes_per_token`` is the quantity M in the paper's waste equations
+    (1)-(3): 2 (K and V) * n_layers * n_heads * head_dim * 4 bytes (f32).
+    """
+
+    name: str = "gptj-tiny"
+    vocab_size: int = 512
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 32
+    ffn_mult: int = 4
+    max_seq: int = 128
+    batch: int = 4
+
+    @property
+    def d_model(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        return 2 * self.n_layers * self.n_heads * self.head_dim * 4
+
+
+PRESETS = {
+    # Stand-ins for the paper's two evaluation models (DESIGN.md §2).
+    "gptj-tiny": ModelConfig(name="gptj-tiny", n_layers=4, n_heads=4,
+                             head_dim=32),
+    "vicuna-tiny": ModelConfig(name="vicuna-tiny", n_layers=6, n_heads=5,
+                               head_dim=32),
+}
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> Params:
+    """Random (but well-scaled) weights; the repo serves, it does not train."""
+    d = cfg.d_model
+    keys = jax.random.split(rng, 2 + cfg.n_layers)
+
+    def dense(key, shape):
+        fan_in = shape[0]
+        return jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)
+
+    layers = []
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(keys[2 + i], 6)
+        layers.append({
+            "wq": dense(ks[0], (d, d)),
+            "wk": dense(ks[1], (d, d)),
+            "wv": dense(ks[2], (d, d)),
+            "wo": dense(ks[3], (d, d)),
+            "w_up": dense(ks[4], (d, cfg.ffn_mult * d)),
+            "w_down": dense(ks[5], (cfg.ffn_mult * d, d)),
+            "ln1": jnp.ones((d,), jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32),
+        })
+    return {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, d),
+                                   jnp.float32) * 0.02,
+        "pos_embed": jax.random.normal(keys[1], (cfg.max_seq, d),
+                                       jnp.float32) * 0.02,
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": layers,
+    }
+
+
+def _rmsnorm(x: jax.Array, g: jax.Array) -> jax.Array:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * g
+
+
+def _split_heads(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(..., d_model) -> (..., H, D)."""
+    return x.reshape(x.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+
+
+def _merge_heads(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return x.reshape(x.shape[:-2] + (cfg.d_model,))
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            lengths: jax.Array, *, interpret: bool = True
+            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Run the prompt through the model, building the KV cache.
+
+    Args:
+      tokens:  (B, S) int32 padded prompt tokens.
+      lengths: (B,)   int32 valid prompt length per slot.
+
+    Returns:
+      logits:   (B, vocab) next-token logits at each slot's last valid pos.
+      k_cache:  (L, B, S, H, D)
+      v_cache:  (L, B, S, H, D)
+    """
+    batch, seq = tokens.shape
+    h = params["embed"][tokens] + params["pos_embed"][None, :seq, :]
+    k_all, v_all = [], []
+    for layer in params["layers"]:
+        xn = _rmsnorm(h, layer["ln1"])
+        q = _split_heads(xn @ layer["wq"], cfg)  # (B, S, H, D)
+        k = _split_heads(xn @ layer["wk"], cfg)
+        v = _split_heads(xn @ layer["wv"], cfg)
+        attn = prefill_attention(q, k, v, lengths, interpret=interpret)
+        h = h + _merge_heads(attn, cfg) @ layer["wo"]
+        xn = _rmsnorm(h, layer["ln2"])
+        h = h + jax.nn.gelu(xn @ layer["w_up"]) @ layer["w_down"]
+        k_all.append(k)
+        v_all.append(v)
+    h = _rmsnorm(h, params["ln_f"])
+    # Gather each slot's last valid hidden state.
+    last = jnp.clip(lengths - 1, 0, seq - 1)
+    h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0, :]
+    logits = h_last @ params["embed"].T
+    return logits, jnp.stack(k_all), jnp.stack(v_all)
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                pos: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                *, interpret: bool = True
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One iteration of decode: extend the KV cache and emit logits.
+
+    Args:
+      token:   (B,)  int32 the most recent token per slot.
+      pos:     (B,)  int32 the position this token occupies (== current
+               sequence length - 1); inactive slots can pass 0.
+      k_cache: (L, B, S, H, D) current cache (updated functionally).
+      v_cache: (L, B, S, H, D)
+
+    Returns:
+      logits (B, vocab), new k_cache, new v_cache.
+    """
+    batch = token.shape[0]
+    h = params["embed"][token] + params["pos_embed"][pos]  # (B, d)
+    new_k, new_v = [], []
+    lengths = pos + 1  # tokens visible to attention after the cache write
+    batch_idx = jnp.arange(batch)
+    for li, layer in enumerate(params["layers"]):
+        xn = _rmsnorm(h, layer["ln1"])
+        q = _split_heads(xn @ layer["wq"], cfg)  # (B, H, D)
+        k = _split_heads(xn @ layer["wk"], cfg)
+        v = _split_heads(xn @ layer["wv"], cfg)
+        kc = k_cache[li].at[batch_idx, pos].set(k)  # (B, S, H, D)
+        vc = v_cache[li].at[batch_idx, pos].set(v)
+        attn = decode_attention(q, kc, vc, lengths, interpret=interpret)
+        h = h + _merge_heads(attn, cfg) @ layer["wo"]
+        xn = _rmsnorm(h, layer["ln2"])
+        h = h + jax.nn.gelu(xn @ layer["w_up"]) @ layer["w_down"]
+        new_k.append(kc)
+        new_v.append(vc)
+    h = _rmsnorm(h, params["ln_f"])
+    logits = h @ params["embed"].T
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def decode_step_greedy(params: Params, cfg: ModelConfig, token: jax.Array,
+                       pos: jax.Array, k_cache: jax.Array,
+                       v_cache: jax.Array, *, interpret: bool = True
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """decode_step + argmax, the exact graph exported for the Rust hot path."""
+    logits, kc, vc = decode_step(params, cfg, token, pos, k_cache, v_cache,
+                                 interpret=interpret)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), kc, vc
+
+
+def prefill_greedy(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                   lengths: jax.Array, *, interpret: bool = True
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """prefill + argmax, the exact graph exported for the Rust hot path."""
+    logits, kc, vc = prefill(params, cfg, tokens, lengths,
+                             interpret=interpret)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), kc, vc

@@ -1,0 +1,156 @@
+"""Length-predictor model (the paper's OPT-125M stand-in, DESIGN.md §2).
+
+The paper extracts OPT-125M's final-token embedding and feeds it to a linear
+classifier over 50 bins of 10 tokens, trained with cross-entropy (§5). Here
+the backbone is a small learned embedding + mean-pool + MLP — the same
+mechanism (prompt -> embedding -> bin logits) at a size trainable at
+artifact-build time on CPU. Training data is the synthetic ToolBench corpus
+(:mod:`compile.corpus`); the trained network is baked into
+``artifacts/predictor.hlo.txt`` and evaluated for Table 3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import corpus as corpus_mod
+from compile import tokenizer as tok
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictorConfig:
+    vocab_size: int = tok.VOCAB_SIZE
+    max_prompt: int = 64
+    embed_dim: int = 32
+    hidden_dim: int = 64
+    num_bins: int = corpus_mod.NUM_BINS
+    bin_width: int = corpus_mod.BIN_WIDTH
+
+
+def init_params(rng: jax.Array, cfg: PredictorConfig) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "embed": jax.random.normal(k1, (cfg.vocab_size, cfg.embed_dim)) * 0.1,
+        "w1": jax.random.normal(
+            k2, (cfg.embed_dim, cfg.hidden_dim)) / math.sqrt(cfg.embed_dim),
+        "b1": jnp.zeros((cfg.hidden_dim,)),
+        "w2": jax.random.normal(
+            k3, (cfg.hidden_dim, cfg.num_bins)) / math.sqrt(cfg.hidden_dim),
+        "b2": jnp.zeros((cfg.num_bins,)),
+    }
+
+
+def forward(params: Params, tokens: jax.Array) -> jax.Array:
+    """tokens: (B, max_prompt) int32 -> bin logits (B, num_bins)."""
+    emb = params["embed"][tokens]  # (B, T, E)
+    mask = (tokens != tok.PAD_ID).astype(jnp.float32)[..., None]
+    pooled = jnp.sum(emb * mask, axis=1) / jnp.maximum(
+        jnp.sum(mask, axis=1), 1.0)
+    h = jax.nn.relu(pooled @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def predict_bin(params: Params, tokens: jax.Array) -> jax.Array:
+    """The graph exported to HLO: argmax bin, (B,) int32."""
+    return jnp.argmax(forward(params, tokens), axis=-1).astype(jnp.int32)
+
+
+def _loss(params: Params, tokens: jax.Array, bins: jax.Array) -> jax.Array:
+    logits = forward(params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, bins[:, None], axis=1))
+
+
+def encode_samples(samples: List[corpus_mod.Sample], cfg: PredictorConfig
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    xs = np.asarray([tok.encode(s.prompt, cfg.max_prompt) for s in samples],
+                    dtype=np.int32)
+    ys = np.asarray([s.bin for s in samples], dtype=np.int32)
+    return xs, ys
+
+
+def train(cfg: PredictorConfig, *, corpus_size: int = 6000,
+          steps: int = 2000, batch: int = 128, lr: float = 3e-3,
+          seed: int = 0) -> Tuple[Params, dict]:
+    """Train on the synthetic ToolBench corpus; returns (params, table3 stats).
+
+    Hand-rolled Adam keeps the compile path dependency-free (no optax on
+    this image); plain SGD stalls here — pooled-embedding gradients are tiny
+    at init and Adam's per-parameter normalization is what moves them.
+    """
+    samples = corpus_mod.gen_corpus(corpus_size, seed=seed)
+    train_s, val_s = corpus_mod.train_val_split(samples, 0.8)
+    xs, ys = encode_samples(train_s, cfg)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    m_state = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v_state = jax.tree_util.tree_map(jnp.zeros_like, params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def adam_update(params, m_state, v_state, step, xb, yb):
+        loss, grads = jax.value_and_grad(_loss)(params, xb, yb)
+        m_state = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, m_state, grads)
+        v_state = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * g * g, v_state, grads)
+        t = step + 1.0
+        mhat_scale = 1.0 / (1.0 - b1 ** t)
+        vhat_scale = 1.0 / (1.0 - b2 ** t)
+        params = jax.tree_util.tree_map(
+            lambda p, m, v: p - lr * (m * mhat_scale) /
+            (jnp.sqrt(v * vhat_scale) + eps),
+            params, m_state, v_state)
+        return params, m_state, v_state, loss
+
+    rng = np.random.default_rng(seed)
+    losses = []
+    for step in range(steps):
+        idx = rng.integers(0, len(xs), size=batch)
+        params, m_state, v_state, loss = adam_update(
+            params, m_state, v_state, float(step), xs[idx], ys[idx])
+        losses.append(float(loss))
+
+    stats = evaluate(params, cfg, val_s)
+    stats["final_train_loss"] = float(np.mean(losses[-20:]))
+    return params, stats
+
+
+def evaluate(params: Params, cfg: PredictorConfig,
+             samples: List[corpus_mod.Sample]) -> dict:
+    """Table 3 metrics: Acc-5 / Acc-15 overall + per-bin, MAE (in words)."""
+    xs, ys = encode_samples(samples, cfg)
+    pred_bins = np.asarray(jax.jit(predict_bin)(params, jnp.asarray(xs)))
+    true_len = np.asarray([s.length for s in samples], dtype=np.float64)
+    pred_len = pred_bins * cfg.bin_width + cfg.bin_width / 2.0
+    err = np.abs(pred_len - true_len)
+
+    per_bin = {}
+    for b in range(cfg.num_bins):
+        sel = ys == b
+        if not np.any(sel):
+            continue
+        per_bin[int(b)] = {
+            "n": int(sel.sum()),
+            "acc5": float(np.mean(err[sel] <= 5.0)),
+            "acc15": float(np.mean(err[sel] <= 15.0)),
+        }
+
+    first20 = ys < 20
+    return {
+        "n_val": len(samples),
+        "acc5": float(np.mean(err <= 5.0)),
+        "acc15": float(np.mean(err <= 15.0)),
+        "mae_bins": float(np.mean(np.abs(pred_bins - ys))),
+        "mae_words": float(np.mean(err)),
+        "mae_words_first20": float(np.mean(err[first20]))
+        if np.any(first20) else None,
+        "per_bin": per_bin,
+    }

@@ -1,0 +1,51 @@
+"""Toy word-hash tokenizer shared between the Python compile path and the
+Rust runtime (`rust/src/workload/tokenizer.rs` mirrors this byte-for-byte).
+
+A real deployment would ship a BPE vocabulary; for this reproduction the
+scheduler and predictor only need a *stable* prompt -> token-id mapping that
+both languages compute identically, so we use FNV-1a 64-bit word hashing into
+a small vocabulary. Ids 0..RESERVED are special.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+VOCAB_SIZE = 512
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+RESERVED = 8
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK64 = (1 << 64) - 1
+
+
+def hash_word(word: str) -> int:
+    """FNV-1a 64-bit over the UTF-8 bytes of ``word``."""
+    h = _FNV_OFFSET
+    for b in word.encode("utf-8"):
+        h ^= b
+        h = (h * _FNV_PRIME) & _MASK64
+    return h
+
+
+def word_id(word: str) -> int:
+    return RESERVED + hash_word(word) % (VOCAB_SIZE - RESERVED)
+
+
+def encode(text: str, max_len: int) -> List[int]:
+    """BOS + hashed words, truncated/padded to ``max_len``."""
+    ids = [BOS_ID]
+    for w in text.split():
+        if len(ids) >= max_len:
+            break
+        ids.append(word_id(w))
+    while len(ids) < max_len:
+        ids.append(PAD_ID)
+    return ids[:max_len]
+
+
+def valid_len(text: str, max_len: int) -> int:
+    return min(1 + len(text.split()), max_len)

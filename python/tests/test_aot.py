@@ -1,0 +1,57 @@
+"""AOT artifact smoke tests: lowering emits parseable HLO text with the
+expected entry signature (the contract the Rust runtime depends on)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_to_hlo_text_roundtrip_simple():
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[4]" in text
+
+
+def test_model_export_tiny(tmp_path):
+    """Export a scaled-down preset end-to-end and check the artifacts."""
+    M.PRESETS["unit-tiny"] = M.ModelConfig(
+        name="unit-tiny", vocab_size=64, n_layers=1, n_heads=2, head_dim=8,
+        max_seq=64, batch=2)
+    try:
+        meta = aot.export_model("unit-tiny", str(tmp_path))
+    finally:
+        del M.PRESETS["unit-tiny"]
+
+    for key in ("prefill_hlo", "decode_hlo"):
+        path = tmp_path / meta[key]
+        assert path.exists()
+        text = path.read_text()
+        assert "ENTRY" in text
+    assert meta["kv_bytes_per_token"] == 2 * 1 * 2 * 8 * 4
+
+    decode_text = (tmp_path / meta["decode_hlo"]).read_text()
+    # Decode entry takes (token, pos, k, v): two s32[B] and two KV f32s.
+    assert decode_text.count("s32[2]") >= 2
+    assert "f32[1,2,64,2,8]" in decode_text
+
+
+@pytest.mark.slow
+def test_predictor_export(tmp_path):
+    meta = aot.export_predictor(str(tmp_path), steps=60)
+    assert (tmp_path / meta["predictor_hlo"]).exists()
+    stats = json.loads((tmp_path / "predictor_stats.json").read_text())
+    assert stats["n_val"] > 0
+    assert 0.0 <= stats["acc15"] <= 1.0
+    text = (tmp_path / meta["predictor_hlo"]).read_text()
+    assert "ENTRY" in text
+    assert f"s32[1,{meta['max_prompt']}]" in text

@@ -1,0 +1,196 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal for Layer 1.
+
+Hypothesis sweeps shapes / dtypes / valid-length patterns; every case
+asserts allclose against the pure-jnp oracle in ``compile.kernels.ref``.
+Interpret-mode Pallas is slow, so example counts are kept moderate and
+dimensions small — coverage comes from the *structure* of the sweep
+(block-boundary lengths, degenerate rows, dtype mix), not raw volume.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention, prefill_attention
+
+SETTINGS = dict(deadline=None, max_examples=25, derandomize=True)
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-5, atol=2e-5) if dtype == jnp.float32 else dict(
+        rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    batch=st.integers(1, 4),
+    n_heads=st.sampled_from([1, 2, 4]),
+    head_dim=st.sampled_from([8, 16, 32]),
+    seq_blocks=st.integers(1, 4),
+    block_k=st.sampled_from([16, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_matches_ref(batch, n_heads, head_dim, seq_blocks, block_k,
+                            dtype, seed):
+    seq = seq_blocks * block_k
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (batch, n_heads, head_dim), dtype)
+    k = _rand(rng, (batch, seq, n_heads, head_dim), dtype)
+    v = _rand(rng, (batch, seq, n_heads, head_dim), dtype)
+    lengths = jnp.asarray(rng.integers(0, seq + 1, size=batch), jnp.int32)
+    out = decode_attention(q, k, v, lengths, block_k=block_k)
+    exp = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("length", [0, 1, 31, 32, 33, 64])
+def test_decode_block_boundary_lengths(length):
+    """Valid lengths straddling tile boundaries — the masking hot spots."""
+    rng = np.random.default_rng(7)
+    B, S, H, D = 2, 64, 2, 16
+    q = _rand(rng, (B, H, D), jnp.float32)
+    k = _rand(rng, (B, S, H, D), jnp.float32)
+    v = _rand(rng, (B, S, H, D), jnp.float32)
+    lengths = jnp.asarray([length, S], jnp.int32)
+    out = decode_attention(q, k, v, lengths, block_k=32)
+    exp = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_zero_length_is_zero():
+    rng = np.random.default_rng(1)
+    B, S, H, D = 1, 32, 2, 8
+    out = decode_attention(
+        _rand(rng, (B, H, D), jnp.float32),
+        _rand(rng, (B, S, H, D), jnp.float32),
+        _rand(rng, (B, S, H, D), jnp.float32),
+        jnp.zeros((B,), jnp.int32), block_k=16)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_decode_ignores_padding_values():
+    """Garbage beyond `lengths` must not leak into the output."""
+    rng = np.random.default_rng(3)
+    B, S, H, D = 2, 64, 2, 16
+    q = _rand(rng, (B, H, D), jnp.float32)
+    k = np.asarray(_rand(rng, (B, S, H, D), jnp.float32))
+    v = np.asarray(_rand(rng, (B, S, H, D), jnp.float32))
+    lengths = jnp.asarray([10, 40], jnp.int32)
+    base = decode_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            lengths, block_k=16)
+    k2, v2 = k.copy(), v.copy()
+    k2[0, 10:] = 1e6
+    v2[0, 10:] = -1e6
+    k2[1, 40:] = 1e6
+    v2[1, 40:] = -1e6
+    poisoned = decode_attention(q, jnp.asarray(k2), jnp.asarray(v2),
+                                lengths, block_k=16)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_decode_rejects_nondivisible_block():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        decode_attention(
+            _rand(rng, (1, 1, 8), jnp.float32),
+            _rand(rng, (1, 48, 1, 8), jnp.float32),
+            _rand(rng, (1, 48, 1, 8), jnp.float32),
+            jnp.asarray([48], jnp.int32), block_k=32)
+
+
+def test_decode_softmax_weights_sum_to_one():
+    """With V = all-ones, output must be exactly 1 (softmax normalizes)."""
+    rng = np.random.default_rng(5)
+    B, S, H, D = 2, 64, 2, 8
+    q = _rand(rng, (B, H, D), jnp.float32)
+    k = _rand(rng, (B, S, H, D), jnp.float32)
+    v = jnp.ones((B, S, H, D), jnp.float32)
+    out = decode_attention(q, k, v, jnp.asarray([17, 64], jnp.int32),
+                           block_k=16)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# prefill_attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    batch=st.integers(1, 3),
+    n_heads=st.sampled_from([1, 2]),
+    head_dim=st.sampled_from([8, 16]),
+    seq_blocks=st.integers(1, 3),
+    block=st.sampled_from([16, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**16),
+)
+def test_prefill_matches_ref(batch, n_heads, head_dim, seq_blocks, block,
+                             dtype, seed):
+    seq = seq_blocks * block
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (batch, seq, n_heads, head_dim), dtype)
+    k = _rand(rng, (batch, seq, n_heads, head_dim), dtype)
+    v = _rand(rng, (batch, seq, n_heads, head_dim), dtype)
+    lengths = jnp.asarray(rng.integers(0, seq + 1, size=batch), jnp.int32)
+    out = prefill_attention(q, k, v, lengths, block_q=block, block_k=block)
+    exp = ref.prefill_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_prefill_is_causal():
+    """Changing future tokens must not change past outputs."""
+    rng = np.random.default_rng(11)
+    B, S, H, D = 1, 64, 2, 16
+    q = np.asarray(_rand(rng, (B, S, H, D), jnp.float32))
+    k = np.asarray(_rand(rng, (B, S, H, D), jnp.float32))
+    v = np.asarray(_rand(rng, (B, S, H, D), jnp.float32))
+    lengths = jnp.asarray([S], jnp.int32)
+    base = np.asarray(prefill_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), lengths))
+    k2, v2 = k.copy(), v.copy()
+    k2[0, 40:] += 3.0
+    v2[0, 40:] -= 3.0
+    mod = np.asarray(prefill_attention(
+        jnp.asarray(q), jnp.asarray(k2), jnp.asarray(v2), lengths))
+    np.testing.assert_allclose(base[0, :40], mod[0, :40], rtol=1e-6,
+                               atol=1e-6)
+    assert not np.allclose(base[0, 41:], mod[0, 41:])
+
+
+def test_prefill_matches_decode_last_row():
+    """The prefill row at position L-1 equals a decode call with the same
+    cache — the exact invariant the serving engine relies on when switching
+    from prefill to decode."""
+    rng = np.random.default_rng(13)
+    B, S, H, D = 2, 64, 2, 16
+    q = _rand(rng, (B, S, H, D), jnp.float32)
+    k = _rand(rng, (B, S, H, D), jnp.float32)
+    v = _rand(rng, (B, S, H, D), jnp.float32)
+    lengths = jnp.asarray([23, 64], jnp.int32)
+    pre = np.asarray(prefill_attention(q, k, v, lengths))
+    last_q = np.stack([np.asarray(q)[b, int(lengths[b]) - 1]
+                       for b in range(B)])
+    dec = np.asarray(decode_attention(jnp.asarray(last_q), k, v, lengths,
+                                      block_k=16))
+    for b in range(B):
+        np.testing.assert_allclose(pre[b, int(lengths[b]) - 1], dec[b],
+                                   rtol=2e-5, atol=2e-5)

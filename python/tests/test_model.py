@@ -1,0 +1,135 @@
+"""Layer-2 model invariants: shapes, KV-cache consistency, padding hygiene.
+
+The serving engine's correctness rests on one identity: running a prompt
+through ``prefill`` and then extending token-by-token with ``decode_step``
+must produce the same logits as prefilling the longer prompt directly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(name="test-tiny", vocab_size=64, n_layers=2, n_heads=2,
+                    head_dim=16, max_seq=64, batch=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(42), CFG)
+
+
+def _pad_tokens(rows):
+    t = np.zeros((CFG.batch, CFG.max_seq), np.int32)
+    lens = np.zeros((CFG.batch,), np.int32)
+    for i, row in enumerate(rows):
+        t[i, :len(row)] = row
+        lens[i] = len(row)
+    return jnp.asarray(t), jnp.asarray(lens)
+
+
+def test_prefill_shapes(params):
+    tokens, lens = _pad_tokens([[3, 4, 5], [6, 7, 8, 9]])
+    logits, kc, vc = M.prefill(params, CFG, tokens, lens)
+    assert logits.shape == (CFG.batch, CFG.vocab_size)
+    assert kc.shape == (CFG.n_layers, CFG.batch, CFG.max_seq, CFG.n_heads,
+                        CFG.head_dim)
+    assert vc.shape == kc.shape
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_decode_step_shapes(params):
+    tokens, lens = _pad_tokens([[3, 4, 5], [6, 7]])
+    _, kc, vc = M.prefill(params, CFG, tokens, lens)
+    logits, kc2, vc2 = M.decode_step(params, CFG,
+                                     jnp.asarray([10, 11], jnp.int32),
+                                     lens, kc, vc)
+    assert logits.shape == (CFG.batch, CFG.vocab_size)
+    assert kc2.shape == kc.shape
+
+
+def test_prefill_then_decode_matches_longer_prefill(params):
+    """prefill(p) + decode(t) logits == prefill(p + [t]) logits."""
+    prompt = [5, 9, 13, 21, 2, 33]
+    nxt = 17
+    tokens, lens = _pad_tokens([prompt, prompt])
+    _, kc, vc = M.prefill(params, CFG, tokens, lens)
+    step_logits, _, _ = M.decode_step(
+        params, CFG, jnp.asarray([nxt, nxt], jnp.int32), lens, kc, vc)
+
+    tokens2, lens2 = _pad_tokens([prompt + [nxt], prompt + [nxt]])
+    full_logits, _, _ = M.prefill(params, CFG, tokens2, lens2)
+    np.testing.assert_allclose(np.asarray(step_logits),
+                               np.asarray(full_logits), rtol=2e-4, atol=2e-4)
+
+
+def test_multi_step_decode_matches_prefill(params):
+    """Three decode steps == one prefill of the concatenated sequence."""
+    prompt = [7, 8, 9]
+    extra = [11, 12, 13]
+    tokens, lens = _pad_tokens([prompt, prompt])
+    _, kc, vc = M.prefill(params, CFG, tokens, lens)
+    pos = np.asarray(lens)
+    logits = None
+    for t in extra:
+        logits, kc, vc = M.decode_step(
+            params, CFG, jnp.asarray([t, t], jnp.int32),
+            jnp.asarray(pos, jnp.int32), kc, vc)
+        pos = pos + 1
+    tokens2, lens2 = _pad_tokens([prompt + extra, prompt + extra])
+    full_logits, _, _ = M.prefill(params, CFG, tokens2, lens2)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full_logits),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_batch_slots_are_independent(params):
+    """Changing slot 1's prompt must not change slot 0's logits — the
+    engine packs unrelated requests into one fixed-shape batch."""
+    tokens_a, lens = _pad_tokens([[3, 4, 5, 6], [7, 8, 9]])
+    tokens_b, _ = _pad_tokens([[3, 4, 5, 6], [50, 51, 52]])
+    la, _, _ = M.prefill(params, CFG, tokens_a, lens)
+    lb, _, _ = M.prefill(params, CFG, tokens_b, lens)
+    np.testing.assert_allclose(np.asarray(la)[0], np.asarray(lb)[0],
+                               rtol=1e-6, atol=1e-6)
+    assert not np.allclose(np.asarray(la)[1], np.asarray(lb)[1])
+
+
+def test_padding_tokens_do_not_leak(params):
+    """Same prompt with different garbage in the padded tail -> same logits."""
+    prompt = [9, 10, 11]
+    t1 = np.zeros((CFG.batch, CFG.max_seq), np.int32)
+    t2 = np.full((CFG.batch, CFG.max_seq), 63, np.int32)
+    for t in (t1, t2):
+        t[0, :3] = prompt
+        t[1, :3] = prompt
+    lens = jnp.asarray([3, 3], jnp.int32)
+    l1, _, _ = M.prefill(params, CFG, jnp.asarray(t1), lens)
+    l2, _, _ = M.prefill(params, CFG, jnp.asarray(t2), lens)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_greedy_variants_match(params):
+    tokens, lens = _pad_tokens([[3, 4, 5], [6, 7, 8]])
+    logits, kc, vc = M.prefill(params, CFG, tokens, lens)
+    nxt, kc_g, vc_g = M.prefill_greedy(params, CFG, tokens, lens)
+    assert np.array_equal(np.asarray(nxt),
+                          np.argmax(np.asarray(logits), axis=-1))
+    np.testing.assert_allclose(np.asarray(kc), np.asarray(kc_g))
+
+    dl, _, _ = M.decode_step(params, CFG, nxt, lens, kc, vc)
+    dn, _, _ = M.decode_step_greedy(params, CFG, nxt, lens, kc, vc)
+    assert np.array_equal(np.asarray(dn), np.argmax(np.asarray(dl), axis=-1))
+
+
+def test_kv_bytes_per_token():
+    assert CFG.kv_bytes_per_token == 2 * 2 * 2 * 16 * 4
+    gptj = M.PRESETS["gptj-tiny"]
+    assert gptj.kv_bytes_per_token == 2 * 4 * 4 * 32 * 4
+
+
+def test_presets_are_distinct_sizes():
+    a, b = M.PRESETS["gptj-tiny"], M.PRESETS["vicuna-tiny"]
+    assert (b.n_layers, b.d_model) > (a.n_layers, a.d_model)

@@ -1,0 +1,64 @@
+"""Tokenizer cross-language contract.
+
+The golden FNV-1a values here are duplicated in
+``rust/src/workload/tokenizer.rs`` tests — if either side drifts, the
+predictor would silently see out-of-distribution token ids at serving time.
+"""
+
+from hypothesis import given, settings, strategies as st
+
+from compile import tokenizer as tok
+
+# (word, fnv1a64, token id) — mirrored in rust/src/workload/tokenizer.rs.
+GOLDEN = [
+    ("weather", 4051237610556911699, 331),
+    ("finance", 1035045675406308941, 61),
+    ("code", 843606417163895828, 52),
+    ("api", 16667751959619087879, 287),
+    ("exhaustive", 9052355608359096841, 249),
+    ("the", 6266135566914540924, 20),
+]
+
+
+def test_golden_hashes():
+    for word, h, wid in GOLDEN:
+        assert tok.hash_word(word) == h, word
+        assert tok.word_id(word) == wid, word
+
+
+def test_encode_golden():
+    assert tok.encode("call the weather api", 8) == \
+        [1, 369, 20, 331, 287, 0, 0, 0]
+
+
+def test_encode_shape_and_padding():
+    ids = tok.encode("a b c", 10)
+    assert len(ids) == 10
+    assert ids[0] == tok.BOS_ID
+    assert ids[4:] == [tok.PAD_ID] * 6
+
+
+def test_encode_truncates():
+    ids = tok.encode(" ".join(["w"] * 100), 8)
+    assert len(ids) == 8
+    assert tok.PAD_ID not in ids
+
+
+@settings(deadline=None, max_examples=100)
+@given(st.text(alphabet=st.characters(codec="utf-8"), min_size=0,
+               max_size=30))
+def test_word_id_in_range(word):
+    wid = tok.word_id(word)
+    assert tok.RESERVED <= wid < tok.VOCAB_SIZE
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(st.sampled_from("alpha beta gamma delta".split()),
+                min_size=0, max_size=20), st.integers(2, 32))
+def test_encode_deterministic_and_bounded(words, max_len):
+    text = " ".join(words)
+    a, b = tok.encode(text, max_len), tok.encode(text, max_len)
+    assert a == b
+    assert len(a) == max_len
+    assert all(0 <= t < tok.VOCAB_SIZE for t in a)
+    assert tok.valid_len(text, max_len) == min(1 + len(words), max_len)

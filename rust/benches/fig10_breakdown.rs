@@ -1,0 +1,16 @@
+//! Fig 10: component breakdown on the multi-API dataset with Vicuna 13B:
+//! vLLM -> vLLM + predicted handling (FCFS; "LAMPS w/o scheduling") ->
+//! full LAMPS, vs INFERCEPT. The paper: handling alone lands close to
+//! INFERCEPT; the scheduling policy delivers the main gains.
+use lamps::bench::{print_cells, run_cell, Cell, Dataset, ModelPreset,
+                   BREAKDOWN_SYSTEMS};
+
+fn main() {
+    let mut cells: Vec<Cell> = Vec::new();
+    for system in BREAKDOWN_SYSTEMS {
+        cells.push(run_cell(system, Dataset::MultiApi,
+                            ModelPreset::Vicuna13b, 5.0, 300, 42, None));
+    }
+    print_cells("Fig 10 — breakdown of LAMPS components (multi-API, \
+                 Vicuna 13B)", &cells);
+}

@@ -1,0 +1,31 @@
+//! Fig 11: controlled Gaussian error injection into the predictions
+//! (error ~ N(0, p x measured)) on the multi-API dataset with GPT-J 6B:
+//! latency and throughput vs rate for p in {0, 5, 10, 30, 50}%.
+use lamps::bench::{Dataset, ModelPreset};
+use lamps::config::{PredictorKind, SystemConfig};
+use lamps::core::types::Tokens;
+use lamps::engine::Engine;
+
+fn main() {
+    println!("{:>6} {:>5} {:>12} {:>12} {:>10}", "err%", "rate",
+             "lat_mean(s)", "lat_p50(s)", "thr(r/s)");
+    for error_pct in [0.0, 0.05, 0.10, 0.30, 0.50] {
+        for rate in [4.0, 6.0, 8.0, 10.0] {
+            let trace = Dataset::MultiApi.generate(250, rate, 42);
+            let mut cfg = SystemConfig::preset("lamps").unwrap();
+            cfg.cost = ModelPreset::GptJ6b.cost();
+            cfg.memory_budget = Tokens(12_000);
+            cfg.predictor = if error_pct == 0.0 {
+                PredictorKind::Oracle
+            } else {
+                PredictorKind::NoisyOracle { error_pct }
+            };
+            let report = Engine::simulated(cfg).run_trace(&trace);
+            println!("{:>6.0} {:>5.1} {:>12.3} {:>12.3} {:>10.3}",
+                     error_pct * 100.0, rate,
+                     report.latency.mean_secs(),
+                     report.latency.p50_us / 1e6,
+                     report.throughput_rps);
+        }
+    }
+}

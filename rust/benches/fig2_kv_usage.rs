@@ -1,0 +1,54 @@
+//! Fig 2: impact of API calls. (a) KV-cache usage over time with all
+//! calls handled by Preserve, with-API vs without-API variants of the
+//! single-API dataset; (b)/(c) completed requests over time under
+//! Preserve vs Discard.
+use lamps::bench::{Dataset, ModelPreset};
+use lamps::config::{HandlingPolicy, SystemConfig};
+use lamps::core::request::HandlingStrategy;
+use lamps::core::types::Tokens;
+use lamps::engine::Engine;
+use lamps::metrics::RunReport;
+use lamps::workload::infercept;
+
+fn run(trace: &lamps::workload::Trace,
+       handling: HandlingPolicy) -> RunReport {
+    let mut cfg = SystemConfig::preset("lamps-no-sched").unwrap();
+    cfg.cost = ModelPreset::GptJ6b.cost();
+    cfg.memory_budget = Tokens(12_000);
+    cfg.handling = handling;
+    let mut engine = Engine::simulated(cfg);
+    engine.record_timeline = true;
+    engine.run_trace(trace)
+}
+
+fn series(label: &str, report: &RunReport) {
+    println!("\n-- {label}: time(s)  kv%  completed --");
+    let step = (report.timeline.len() / 24).max(1);
+    for point in report.timeline.iter().step_by(step) {
+        println!("{:>8.1} {:>6.1} {:>6}", point.at.as_secs_f64(),
+                 point.kv_occupancy * 100.0, point.completed);
+    }
+}
+
+fn main() {
+    let with_api = Dataset::SingleApi.generate(150, 4.0, 42);
+    let without_api = infercept::strip_api_calls(&with_api);
+    let preserve = HandlingPolicy::Forced(HandlingStrategy::Preserve);
+    let discard = HandlingPolicy::Forced(HandlingStrategy::Discard);
+
+    let rep_with = run(&with_api, preserve);
+    let rep_without = run(&without_api, preserve);
+    let rep_discard = run(&with_api, discard);
+
+    println!("== Fig 2a: KV usage, Preserve handling ==");
+    series("with API calls", &rep_with);
+    series("without API calls", &rep_without);
+    println!("\n== Fig 2b/2c: completions, Preserve vs Discard ==");
+    series("with API, Preserve", &rep_with);
+    series("with API, Discard", &rep_discard);
+    println!("\nsummary: preserve mean lat {:.1}s vs discard {:.1}s; \
+              discard recomputed {} tokens",
+             rep_with.latency.mean_secs(),
+             rep_discard.latency.mean_secs(),
+             rep_discard.tokens_recomputed);
+}

@@ -1,0 +1,55 @@
+//! Fig 3 / Table 1: the paper's worked example, regenerated. Expected
+//! averages: FCFS 11.66, SJF 10.33, SJF-total 11, LAMPS 10.
+use lamps::config::{CostModel, SchedulerKind, SystemConfig};
+use lamps::core::request::{ApiCallSpec, ApiType, HandlingStrategy,
+                           RequestSpec};
+use lamps::core::types::{Micros, RequestId, Tokens};
+use lamps::engine::Engine;
+
+fn spec(id: u64, pre: u64, api: u64, post: u64) -> RequestSpec {
+    RequestSpec {
+        id: RequestId(id),
+        arrival: Micros::ZERO,
+        prompt: String::new(),
+        prompt_tokens: Tokens(0),
+        api_calls: vec![ApiCallSpec {
+            decode_before: Tokens(pre),
+            api_type: ApiType::Qa,
+            duration: Micros(api * 1_000_000),
+            response_tokens: Tokens(0),
+        }],
+        final_decode: Tokens(post),
+    }
+}
+
+fn main() {
+    println!("{:<10} {:>6} {:>6} {:>6} {:>8} {:>8}", "policy", "R1",
+             "R2", "R3", "avg", "paper");
+    for (kind, paper) in [(SchedulerKind::Fcfs, 11.66),
+                          (SchedulerKind::Sjf, 10.33),
+                          (SchedulerKind::SjfTotal, 11.0),
+                          (SchedulerKind::Lamps, 10.0)] {
+        let cfg = SystemConfig {
+            scheduler: kind,
+            memory_budget: Tokens(6),
+            max_batch: 1,
+            block_size: 1,
+            starvation_threshold: None,
+            cost: CostModel::unit(),
+            ..SystemConfig::default()
+        };
+        let mut engine = Engine::simulated(cfg);
+        engine.submit_with_handling(spec(1, 5, 2, 1),
+                                    vec![HandlingStrategy::Preserve]);
+        engine.submit_with_handling(spec(2, 1, 7, 1),
+                                    vec![HandlingStrategy::Discard]);
+        engine.submit_with_handling(spec(3, 2, 1, 1),
+                                    vec![HandlingStrategy::Swap]);
+        engine.run_until_idle(None);
+        let f = |id| engine.request(RequestId(id)).unwrap()
+            .finished_at.unwrap().as_secs_f64();
+        let avg = (f(1) + f(2) + f(3)) / 3.0;
+        println!("{:<10} {:>6.1} {:>6.1} {:>6.1} {:>8.2} {:>8.2}",
+                 kind.label(), f(1), f(2), f(3), avg, paper);
+    }
+}

@@ -1,0 +1,26 @@
+//! Fig 6: mean + P99 end-to-end latency and TTFT vs request arrival rate,
+//! for {vLLM, INFERCEPT, LAMPS} x {single-api, multi-api, toolbench} x
+//! {GPT-J 6B, Vicuna 13B} — the paper's headline grid. Also prints the
+//! §6.2 headline improvement percentages.
+use lamps::bench::{print_cells, print_headline, run_cell, Cell, Dataset,
+                   ModelPreset, SYSTEMS};
+
+fn main() {
+    let rates = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+    let n = 250;
+    for model in [ModelPreset::GptJ6b, ModelPreset::Vicuna13b] {
+        for dataset in Dataset::ALL {
+            let mut cells: Vec<Cell> = Vec::new();
+            for &rate in &rates {
+                for system in SYSTEMS {
+                    cells.push(run_cell(system, dataset, model, rate, n,
+                                        42, None));
+                }
+            }
+            print_cells(&format!("Fig 6 — {} / {}", dataset.label(),
+                                 model.label()),
+                        &cells);
+            print_headline(&cells);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Fig 7: mean latency and TTFT across datasets at a fixed arrival rate
+//! of 5 req/s, for both model presets.
+use lamps::bench::{print_cells, run_cell, Cell, Dataset, ModelPreset,
+                   SYSTEMS};
+
+fn main() {
+    let mut cells: Vec<Cell> = Vec::new();
+    for model in [ModelPreset::GptJ6b, ModelPreset::Vicuna13b] {
+        for dataset in Dataset::ALL {
+            for system in SYSTEMS {
+                cells.push(run_cell(system, dataset, model, 5.0, 250, 42,
+                                    None));
+            }
+        }
+    }
+    print_cells("Fig 7 — all datasets at rate 5", &cells);
+}

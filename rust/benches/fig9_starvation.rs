@@ -1,0 +1,27 @@
+//! Fig 9: starvation-prevention threshold sweep (multi-API dataset,
+//! GPT-J 6B): throughput and P99 latency per threshold. The paper finds
+//! 100 a good balance.
+use lamps::bench::{Dataset, ModelPreset};
+use lamps::config::SystemConfig;
+use lamps::core::types::Tokens;
+use lamps::engine::Engine;
+
+fn main() {
+    let trace = Dataset::MultiApi.generate(300, 6.0, 42);
+    println!("{:>10} {:>12} {:>12} {:>12} {:>10}", "threshold",
+             "lat_mean(s)", "lat_p99(s)", "ttft_p99(s)", "thr(r/s)");
+    let thresholds: [(&str, Option<u32>); 7] =
+        [("1", Some(1)), ("10", Some(10)), ("50", Some(50)),
+         ("100", Some(100)), ("200", Some(200)), ("500", Some(500)),
+         ("none", None)];
+    for (label, threshold) in thresholds {
+        let mut cfg = SystemConfig::preset("lamps").unwrap();
+        cfg.cost = ModelPreset::GptJ6b.cost();
+        cfg.memory_budget = Tokens(12_000);
+        cfg.starvation_threshold = threshold;
+        let report = Engine::simulated(cfg).run_trace(&trace);
+        println!("{:>10} {:>12.3} {:>12.3} {:>12.3} {:>10.3}", label,
+                 report.latency.mean_secs(), report.latency.p99_secs(),
+                 report.ttft.p99_us / 1e6, report.throughput_rps);
+    }
+}

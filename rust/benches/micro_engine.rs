@@ -1,0 +1,31 @@
+//! End-to-end simulator throughput: virtual-seconds simulated per
+//! wall-second, and engine iterations per second — the §Perf L3 numbers.
+use std::time::Instant;
+
+use lamps::bench::{Dataset, ModelPreset};
+use lamps::config::SystemConfig;
+use lamps::core::types::Tokens;
+use lamps::engine::Engine;
+
+fn main() {
+    for (name, dataset, n, rate) in [
+        ("single-api 500 @ 4/s", Dataset::SingleApi, 500, 4.0),
+        ("multi-api 300 @ 6/s", Dataset::MultiApi, 300, 6.0),
+        ("toolbench 300 @ 4/s", Dataset::ToolBench, 300, 4.0),
+    ] {
+        let trace = dataset.generate(n, rate, 42);
+        let mut cfg = SystemConfig::preset("lamps").unwrap();
+        cfg.cost = ModelPreset::GptJ6b.cost();
+        cfg.memory_budget = Tokens(12_000);
+        let mut engine = Engine::simulated(cfg);
+        let start = Instant::now();
+        let report = engine.run_trace(&trace);
+        let wall = start.elapsed().as_secs_f64();
+        println!("{name:<24} wall {wall:>6.2}s  virtual {:>8.1}s  \
+                  speedup {:>7.0}x  {:>7} iters ({:>6.0} iters/s)",
+                 report.duration.as_secs_f64(),
+                 report.duration.as_secs_f64() / wall,
+                 report.iterations,
+                 report.iterations as f64 / wall);
+    }
+}

@@ -1,0 +1,88 @@
+//! Micro-benchmarks of the scheduler hot paths (criterion is not in the
+//! offline vendor set; timing is hand-rolled over many iterations).
+//! §Perf target: a full LAMPS ranking pass over 10k waiting requests
+//! must stay well under one decode iteration (~10 ms).
+use std::time::Instant;
+
+use lamps::config::{CostModel, SchedulerKind};
+use lamps::coordinator::handling::{select_strategy, WasteInputs};
+use lamps::coordinator::ranking::{memory_over_time, RankInputs};
+use lamps::coordinator::scheduler::{make_scheduler, ScheduleContext};
+use lamps::core::types::{Micros, RequestId, Tokens};
+use lamps::kv::BlockManager;
+use lamps::predictor::oracle::OraclePredictor;
+use lamps::predictor::Predictor;
+use lamps::workload::infercept;
+
+fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) {
+    // warmup
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = start.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{name:<44} {:>12.0} ns/iter", per);
+}
+
+fn main() {
+    let trace = infercept::multi_api_dataset(10_000, 3.0, 42);
+    let mut oracle = OraclePredictor;
+    let requests: Vec<_> = trace
+        .requests
+        .iter()
+        .map(|spec| {
+            let preds = oracle.predict(spec);
+            let handling =
+                vec![lamps::core::request::HandlingStrategy::Preserve;
+                     spec.api_calls.len()];
+            lamps::core::request::Request::new(spec.clone(), preds,
+                                               handling)
+        })
+        .collect();
+    let cost = CostModel::paper_scale();
+    let ctx = ScheduleContext {
+        cost,
+        t_iter_est: Micros(12_000),
+        c_other_est: Tokens(6_000),
+        iteration: 0,
+    };
+
+    let lamps_sched = make_scheduler(SchedulerKind::Lamps);
+    bench("lamps score: one request", 100_000, || {
+        std::hint::black_box(lamps_sched.score(&requests[0], &ctx));
+    });
+    bench("lamps ranking pass: 10k requests", 100, || {
+        let mut scores: Vec<(f64, RequestId)> = requests
+            .iter()
+            .map(|r| (lamps_sched.score(r, &ctx), r.spec.id))
+            .collect();
+        scores.sort_by(|a, b| a.0.total_cmp(&b.0));
+        std::hint::black_box(scores.len());
+    });
+    bench("memory_over_time integral", 100_000, || {
+        std::hint::black_box(memory_over_time(
+            &requests[1], &cost,
+            &RankInputs { t_iter: Micros(12_000),
+                          c_other_est: Tokens(6_000) }));
+    });
+    bench("waste equations: select_strategy", 1_000_000, || {
+        std::hint::black_box(select_strategy(
+            &WasteInputs {
+                ctx: Tokens(300),
+                api_duration: Micros(700_000),
+                c_other: Tokens(6_000),
+            },
+            &cost));
+    });
+    bench("kv: alloc+append x16+free", 100_000, || {
+        let mut m = BlockManager::new(Tokens(1024), 16);
+        m.allocate(RequestId(1), Tokens(100)).unwrap();
+        for _ in 0..16 {
+            m.append_token(RequestId(1)).unwrap();
+        }
+        std::hint::black_box(m.free(RequestId(1)).unwrap());
+    });
+}

@@ -1,0 +1,33 @@
+//! Table 2 self-check: measured API duration and calls-per-request
+//! statistics of the synthetic datasets vs the published values.
+use lamps::bench::Dataset;
+
+fn main() {
+    println!("{:<10} {:>12} {:>12} {:>10} {:>10}   {}", "class",
+             "dur_mean(s)", "dur_std(s)", "calls_mu", "calls_sd",
+             "published (dur / calls)");
+    let published = [
+        ("math", "(9e-5, 6e-5) / (3.75, 1.3)"),
+        ("qa", "(0.69, 0.17) / (2.52, 1.73)"),
+        ("ve", "(0.09, 0.014) / (28.18, 15.2)"),
+        ("chatbot", "(28.6, 15.6) / (4.45, 1.96)"),
+        ("image", "(20.03, 7.8) / (6.91, 3.93)"),
+        ("tts", "(17.24, 7.6) / (6.91, 3.93)"),
+        ("tool", "(1.72, 3.33) / (2.45, 1.81)"),
+    ];
+    let lookup = |label: &str| {
+        published.iter().find(|(l, _)| *l == label).map(|(_, p)| *p)
+            .unwrap_or("")
+    };
+    for (name, trace) in [
+        ("multi-api", Dataset::MultiApi.generate(4000, 3.0, 42)),
+        ("toolbench", Dataset::ToolBench.generate(4000, 3.0, 42)),
+    ] {
+        println!("== {name} ==");
+        for (label, s) in trace.api_class_stats() {
+            println!("{:<10} {:>12.5} {:>12.5} {:>10.2} {:>10.2}   {}",
+                     label, s.duration_mean, s.duration_std,
+                     s.calls_mean, s.calls_std, lookup(&label));
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Table 3: length-predictor accuracy. Reads the Python-side training
+//! stats (artifacts/predictor_stats.json) and re-evaluates the exported
+//! HLO classifier from Rust on a fresh synthetic ToolBench eval split —
+//! a full cross-language validation of tokenizer + artifact + runtime.
+use lamps::runtime::{ArtifactMeta, PredictorRuntime, RuntimeClient};
+use lamps::util::json;
+use lamps::workload::toolbench;
+
+fn main() {
+    let Ok(meta) = ArtifactMeta::load_default() else {
+        println!("run `make artifacts` first");
+        return;
+    };
+    if let Ok(text) =
+        std::fs::read_to_string(meta.dir.join("predictor_stats.json"))
+    {
+        let v = json::parse(&text).unwrap();
+        println!("== python-side validation split ==");
+        println!("acc5 {:.3}  acc15 {:.3}  MAE {:.2} words \
+                  (paper: 0.685 / 0.783 / 3.06)",
+                 v.f64_field("acc5").unwrap(),
+                 v.f64_field("acc15").unwrap(),
+                 v.f64_field("mae_words").unwrap());
+    }
+
+    let client = RuntimeClient::cpu().unwrap();
+    let pred = PredictorRuntime::load(&client, &meta).unwrap();
+    let samples = toolbench::eval_samples(1500, 777);
+    let width = pred.meta.bin_width as u64;
+    let mut err = Vec::new();
+    let mut per_bin: Vec<Vec<f64>> = vec![Vec::new(); 50];
+    let start = std::time::Instant::now();
+    for s in &samples {
+        let bin = pred.predict_bin(&s.prompt).unwrap();
+        let predicted = bin as f64 * width as f64 + width as f64 / 2.0;
+        let e = (predicted - s.length as f64).abs();
+        err.push(e);
+        per_bin[s.bin() as usize].push(e);
+    }
+    let n = err.len() as f64;
+    let acc = |t: f64| err.iter().filter(|e| **e <= t).count() as f64 / n;
+    println!("\n== rust-side (PJRT) eval, {} samples ==", samples.len());
+    println!("acc5 {:.3}  acc15 {:.3}  MAE {:.2} words  \
+              ({:.2} ms/prediction)",
+             acc(5.0), acc(15.0), err.iter().sum::<f64>() / n,
+             start.elapsed().as_millis() as f64 / n);
+    println!("\nper-bin accuracy (first 11 bins; paper Table 3):");
+    println!("{:>4} {:>6} {:>7} {:>7}", "bin", "n", "acc5", "acc15");
+    for (b, errs) in per_bin.iter().enumerate().take(11) {
+        if errs.is_empty() {
+            continue;
+        }
+        let m = errs.len() as f64;
+        println!("{:>4} {:>6} {:>7.3} {:>7.3}", b, errs.len(),
+                 errs.iter().filter(|e| **e <= 5.0).count() as f64 / m,
+                 errs.iter().filter(|e| **e <= 15.0).count() as f64 / m);
+    }
+}

@@ -1,0 +1,204 @@
+//! Figure harness: the (system x dataset x rate) grid runner every paper
+//! figure bench drives, plus table formatting. See DESIGN.md §4 for the
+//! experiment index.
+
+use crate::config::{CostModel, SystemConfig};
+use crate::core::types::Micros;
+use crate::engine::Engine;
+use crate::metrics::RunReport;
+use crate::workload::{infercept, toolbench, Trace};
+
+/// The two model presets of the paper's evaluation, as cost-model scale
+/// factors over the calibrated base (Vicuna 13B is ~2x GPT-J 6B's compute
+/// per token; EXPERIMENTS.md §Calibration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelPreset {
+    GptJ6b,
+    Vicuna13b,
+}
+
+impl ModelPreset {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ModelPreset::GptJ6b => "gptj-6b",
+            ModelPreset::Vicuna13b => "vicuna-13b",
+        }
+    }
+
+    pub fn cost(&self) -> CostModel {
+        let base = CostModel::paper_scale();
+        match self {
+            ModelPreset::GptJ6b => base,
+            ModelPreset::Vicuna13b => CostModel {
+                decode_base: Micros(base.decode_base.0 * 19 / 10),
+                decode_per_ctx_token_us: base.decode_per_ctx_token_us
+                    * 1.8,
+                prefill_per_token_us: base.prefill_per_token_us * 1.8,
+                swap_per_token_us: base.swap_per_token_us * 1.4,
+                ..base
+            },
+        }
+    }
+}
+
+/// Datasets of the evaluation (§6.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    SingleApi,
+    MultiApi,
+    ToolBench,
+}
+
+impl Dataset {
+    pub const ALL: [Dataset; 3] =
+        [Dataset::SingleApi, Dataset::MultiApi, Dataset::ToolBench];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Dataset::SingleApi => "single-api",
+            Dataset::MultiApi => "multi-api",
+            Dataset::ToolBench => "toolbench",
+        }
+    }
+
+    pub fn generate(&self, n: usize, rate: f64, seed: u64) -> Trace {
+        match self {
+            Dataset::SingleApi => infercept::single_api_dataset(n, rate,
+                                                                seed),
+            Dataset::MultiApi => infercept::multi_api_dataset(n, rate,
+                                                              seed),
+            Dataset::ToolBench => toolbench::dataset(n, rate, seed),
+        }
+    }
+}
+
+/// The compared systems (§6.1 baselines + §6.3 ablation).
+pub const SYSTEMS: [&str; 3] = ["vllm", "infercept", "lamps"];
+pub const BREAKDOWN_SYSTEMS: [&str; 4] =
+    ["vllm", "infercept", "lamps-no-sched", "lamps"];
+
+/// One measured grid cell.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub system: String,
+    pub dataset: &'static str,
+    pub model: &'static str,
+    pub rate: f64,
+    pub report: RunReport,
+}
+
+/// KV budget for figure cells. The paper's evaluation regime is
+/// memory-bound (40 GB caps); scaled to this synthetic workload the
+/// binding point sits around 12k token slots (EXPERIMENTS.md
+/// §Calibration).
+pub const FIGURE_BUDGET: u64 = 12_000;
+
+/// Run one (system, dataset, model, rate) cell on the simulator.
+pub fn run_cell(system: &str, dataset: Dataset, model: ModelPreset,
+                rate: f64, n_requests: usize, seed: u64,
+                time_cap: Option<Micros>) -> Cell {
+    let mut cfg = SystemConfig::preset(system)
+        .unwrap_or_else(|| panic!("unknown system preset {system}"));
+    cfg.cost = model.cost();
+    cfg.seed = seed;
+    cfg.memory_budget = crate::core::types::Tokens(FIGURE_BUDGET);
+    // ToolBench uses the score-update interval of 10 (§5).
+    if dataset == Dataset::ToolBench {
+        cfg.score_update_interval = 10;
+    }
+    let trace = dataset.generate(n_requests, rate, seed);
+    let mut engine = Engine::simulated(cfg);
+    let report = engine.run_trace_limited(&trace, time_cap);
+    Cell {
+        system: system.to_string(),
+        dataset: dataset.label(),
+        model: model.label(),
+        rate,
+        report,
+    }
+}
+
+/// Print a figure table: one row per cell with the paper's four metrics.
+pub fn print_cells(title: &str, cells: &[Cell]) {
+    println!("\n== {title} ==");
+    println!("{:<12} {:<11} {:<10} {:>5}  {:>12} {:>12} {:>12} {:>12} \
+              {:>9} {:>6}",
+             "system", "dataset", "model", "rate", "lat_mean(s)",
+             "lat_p99(s)", "ttft_mean(s)", "ttft_p99(s)", "thr(r/s)",
+             "done");
+    for c in cells {
+        println!("{:<12} {:<11} {:<10} {:>5.1}  {:>12.3} {:>12.3} \
+                  {:>12.3} {:>12.3} {:>9.3} {:>6}",
+                 c.system, c.dataset, c.model, c.rate,
+                 c.report.latency.mean_secs(),
+                 c.report.latency.p99_secs(),
+                 c.report.ttft.mean_secs(),
+                 c.report.ttft.p99_secs(),
+                 c.report.throughput_rps,
+                 c.report.completed);
+    }
+}
+
+/// §6.2-style headline: percentage improvement of `a` over `b`
+/// (positive = `a` better, i.e. lower).
+pub fn improvement_pct(a: f64, b: f64) -> f64 {
+    if b <= 0.0 {
+        return 0.0;
+    }
+    (b - a) / b * 100.0
+}
+
+/// Print LAMPS-vs-baseline improvements for a set of cells sharing
+/// (dataset, model, rate).
+pub fn print_headline(cells: &[Cell]) {
+    let lamps: Vec<&Cell> =
+        cells.iter().filter(|c| c.system == "lamps").collect();
+    for l in lamps {
+        for base_name in ["infercept", "vllm"] {
+            if let Some(b) = cells.iter().find(|c| {
+                c.system == base_name
+                    && c.dataset == l.dataset
+                    && c.model == l.model
+                    && c.rate == l.rate
+            }) {
+                println!(
+                    "[headline] {} {} rate {:>4.1}: vs {:<9} latency {:+.1}% \
+                     ttft {:+.1}%",
+                    l.dataset, l.model, l.rate, base_name,
+                    improvement_pct(l.report.latency.mean_us,
+                                    b.report.latency.mean_us),
+                    improvement_pct(l.report.ttft.mean_us,
+                                    b.report.ttft.mean_us));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn improvement_math() {
+        assert_eq!(improvement_pct(50.0, 100.0), 50.0);
+        assert_eq!(improvement_pct(100.0, 100.0), 0.0);
+        assert!(improvement_pct(150.0, 100.0) < 0.0);
+        assert_eq!(improvement_pct(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn presets_have_distinct_costs() {
+        let g = ModelPreset::GptJ6b.cost();
+        let v = ModelPreset::Vicuna13b.cost();
+        assert!(v.decode_base > g.decode_base);
+        assert!(v.prefill_per_token_us > g.prefill_per_token_us);
+    }
+
+    #[test]
+    fn small_cell_runs() {
+        let cell = run_cell("lamps", Dataset::SingleApi,
+                            ModelPreset::GptJ6b, 2.0, 20, 42, None);
+        assert_eq!(cell.report.completed, 20);
+        assert!(cell.report.latency.mean_us > 0.0);
+    }
+}

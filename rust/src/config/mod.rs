@@ -1,0 +1,271 @@
+//! System configuration: scheduler choice, handling policy, memory budget,
+//! and the simulator's calibrated cost model.
+//!
+//! Baseline systems from the paper's evaluation are expressed as presets
+//! over two orthogonal axes (see [`SystemConfig::preset`]):
+//!
+//! | Preset            | Scheduler   | Handling policy          |
+//! |-------------------|-------------|--------------------------|
+//! | `vllm`            | FCFS        | always Discard (vLLM treats an API call as termination + a new request) |
+//! | `infercept`       | FCFS        | min-waste chosen *at API time* with true values |
+//! | `lamps`           | memory-over-time rank | min-waste *predicted at admission* |
+//! | `lamps-no-sched`  | FCFS        | min-waste predicted at admission (Fig 10 ablation) |
+//! | `sjf`             | SJF (pre-API length) | min-waste predicted |
+//! | `sjf-total`       | SJF (length + API)   | min-waste predicted |
+
+use crate::core::request::HandlingStrategy;
+use crate::core::types::{Micros, Tokens};
+
+/// Request-ordering policy (paper §3.1 / §4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// First-come first-served by request id (vLLM / INFERCEPT default).
+    Fcfs,
+    /// Shortest Job First by predicted *output length only* (Fig 3b).
+    Sjf,
+    /// SJF by total length = output + API duration-in-token-units (Fig 3c).
+    SjfTotal,
+    /// LAMPS: rank by predicted memory-over-time integral (Fig 3d, §4.3).
+    Lamps,
+}
+
+impl SchedulerKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulerKind::Fcfs => "fcfs",
+            SchedulerKind::Sjf => "sjf",
+            SchedulerKind::SjfTotal => "sjf-total",
+            SchedulerKind::Lamps => "lamps",
+        }
+    }
+}
+
+/// How handling strategies are assigned to API calls.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HandlingPolicy {
+    /// Fixed strategy for every call (vLLM ≙ `Forced(Discard)`; Fig 2 uses
+    /// `Forced(Preserve)` / `Forced(Discard)`).
+    Forced(HandlingStrategy),
+    /// INFERCEPT: evaluate waste equations (1)-(3) with *true* values when
+    /// the request reaches the API.
+    MinWasteAtApi,
+    /// LAMPS: evaluate waste equations with *predicted* values at admission,
+    /// before the request first runs (§4.2).
+    MinWastePredicted,
+}
+
+/// Analytic cost model for the simulated backend, calibrated against PJRT
+/// measurements of the tiny model and scaled to paper-like magnitudes
+/// (EXPERIMENTS.md §Calibration).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Fixed cost of one decode iteration (kernel launch, sampling, ...).
+    pub decode_base: Micros,
+    /// Additional decode cost per context token in the batch (attention is
+    /// memory-bound: time scales with the KV tokens read).
+    pub decode_per_ctx_token_us: f64,
+    /// Prefill / recompute cost per context token materialized.
+    pub prefill_per_token_us: f64,
+    /// Fixed latency of one swap transfer (PCIe round-trip + kernel
+    /// sync). Without this term eqn (3) would strictly dominate eqn (2) —
+    /// both scale identically in C_other — and Discard would never win.
+    pub swap_base_us: f64,
+    /// Cost per token for one direction of a CPU<->GPU swap.
+    pub swap_per_token_us: f64,
+    /// Scheduling overhead charged per *re-scored* request per iteration
+    /// (motivates the selective score-update optimization, §4.3).
+    pub rank_overhead_per_request_us: f64,
+}
+
+impl CostModel {
+    /// Paper-scale defaults: ~10 ms base iteration + 1 us per KV token
+    /// (≈30 ms at 20k ctx tokens, A100-like), 100 us/token prefill,
+    /// 30 us/token swap (≈0.9 MB/token over ~32 GB/s PCIe).
+    pub fn paper_scale() -> CostModel {
+        CostModel {
+            decode_base: Micros(10_000),
+            decode_per_ctx_token_us: 1.0,
+            prefill_per_token_us: 100.0,
+            swap_base_us: 1_000.0,
+            swap_per_token_us: 30.0,
+            rank_overhead_per_request_us: 0.0,
+        }
+    }
+
+    /// Unit-token mode: 1 decode iteration = 1 s, recompute 1 s/token,
+    /// free swaps — the semantics of the paper's Fig. 3 worked example.
+    pub fn unit() -> CostModel {
+        CostModel {
+            decode_base: Micros(1_000_000),
+            decode_per_ctx_token_us: 0.0,
+            prefill_per_token_us: 1_000_000.0,
+            swap_base_us: 0.0,
+            swap_per_token_us: 0.0,
+            rank_overhead_per_request_us: 0.0,
+        }
+    }
+
+    pub fn decode_iter_time(&self, batch_ctx: Tokens) -> Micros {
+        self.decode_base
+            + Micros((self.decode_per_ctx_token_us * batch_ctx.0 as f64)
+                as u64)
+    }
+
+    pub fn prefill_time(&self, ctx: Tokens) -> Micros {
+        Micros((self.prefill_per_token_us * ctx.0 as f64) as u64)
+    }
+
+    /// One direction (out or in) of a swap — eqn (3) charges 2x this.
+    pub fn swap_time(&self, ctx: Tokens) -> Micros {
+        if ctx == Tokens::ZERO {
+            return Micros::ZERO;
+        }
+        Micros((self.swap_base_us
+            + self.swap_per_token_us * ctx.0 as f64) as u64)
+    }
+}
+
+/// Which predictor feeds the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PredictorKind {
+    /// True values from the workload spec (complete-information analyses,
+    /// e.g. the Fig 3 example).
+    Oracle,
+    /// True values + Gaussian error ~ N(0, p * measured) per Fig 11.
+    NoisyOracle { error_pct: f64 },
+    /// The AOT-compiled OPT-125M stand-in, executed via PJRT (ToolBench).
+    Pjrt,
+}
+
+/// Top-level system configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    pub scheduler: SchedulerKind,
+    pub handling: HandlingPolicy,
+    pub predictor: PredictorKind,
+    /// KV memory budget in token slots (the paper caps each A100 at 40 GB;
+    /// ≈0.9 MB/token for GPT-J 6B -> ~44k slots).
+    pub memory_budget: Tokens,
+    /// Maximum concurrently *decoding* requests (API-waiting requests do
+    /// not occupy an execution slot).
+    pub max_batch: usize,
+    /// KV paging granularity in tokens (vLLM-style blocks).
+    pub block_size: u64,
+    /// Starvation promotion threshold in waited iterations; `None`
+    /// disables prevention (Fig 9 sweeps this; paper default 100, §4.4).
+    pub starvation_threshold: Option<u32>,
+    /// Re-rank cached LAMPS scores every N iterations (§4.3; 10 for
+    /// ToolBench, 1 elsewhere).
+    pub score_update_interval: u64,
+    /// Clairvoyant reservation admission: only admit a request if every
+    /// in-flight Preserve/Swap API request can still resume at its
+    /// (predicted) return time. This is what lets the pre-API part of a
+    /// short request run "inside" another request's API call in the
+    /// paper's Fig 3 walkthrough.
+    pub admission_lookahead: bool,
+    /// vLLM semantics: an API call terminates the request and the return
+    /// is queued as a *new* job (FCFS position = return time). INFERCEPT
+    /// and LAMPS keep the original arrival order.
+    pub requeue_as_new: bool,
+    pub cost: CostModel,
+    pub seed: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> SystemConfig {
+        SystemConfig {
+            scheduler: SchedulerKind::Lamps,
+            handling: HandlingPolicy::MinWastePredicted,
+            predictor: PredictorKind::Oracle,
+            memory_budget: Tokens(44_000),
+            max_batch: 64,
+            block_size: 16,
+            starvation_threshold: Some(100),
+            score_update_interval: 1,
+            admission_lookahead: true,
+            requeue_as_new: false,
+            cost: CostModel::paper_scale(),
+            seed: 0,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Named baseline presets (see module docs).
+    pub fn preset(name: &str) -> Option<SystemConfig> {
+        let base = SystemConfig::default();
+        Some(match name {
+            "vllm" => SystemConfig {
+                scheduler: SchedulerKind::Fcfs,
+                handling: HandlingPolicy::Forced(HandlingStrategy::Discard),
+                requeue_as_new: true,
+                ..base
+            },
+            "infercept" => SystemConfig {
+                scheduler: SchedulerKind::Fcfs,
+                handling: HandlingPolicy::MinWasteAtApi,
+                ..base
+            },
+            "lamps" => base,
+            "lamps-no-sched" => SystemConfig {
+                scheduler: SchedulerKind::Fcfs,
+                handling: HandlingPolicy::MinWastePredicted,
+                ..base
+            },
+            "sjf" => SystemConfig {
+                scheduler: SchedulerKind::Sjf,
+                ..base
+            },
+            "sjf-total" => SystemConfig {
+                scheduler: SchedulerKind::SjfTotal,
+                ..base
+            },
+            _ => return None,
+        })
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> SystemConfig {
+        self.seed = seed;
+        self
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_exist() {
+        for name in ["vllm", "infercept", "lamps", "lamps-no-sched", "sjf",
+                     "sjf-total"] {
+            assert!(SystemConfig::preset(name).is_some(), "{name}");
+        }
+        assert!(SystemConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn vllm_is_fcfs_discard() {
+        let c = SystemConfig::preset("vllm").unwrap();
+        assert_eq!(c.scheduler, SchedulerKind::Fcfs);
+        assert_eq!(c.handling,
+                   HandlingPolicy::Forced(HandlingStrategy::Discard));
+    }
+
+    #[test]
+    fn cost_model_unit_mode() {
+        let c = CostModel::unit();
+        assert_eq!(c.decode_iter_time(Tokens(1000)), Micros(1_000_000));
+        assert_eq!(c.prefill_time(Tokens(2)), Micros(2_000_000));
+        assert_eq!(c.swap_time(Tokens(5)), Micros::ZERO);
+    }
+
+    #[test]
+    fn cost_model_paper_scale() {
+        let c = CostModel::paper_scale();
+        assert_eq!(c.decode_iter_time(Tokens(20_000)), Micros(30_000));
+        assert_eq!(c.prefill_time(Tokens(100)), Micros(10_000));
+        assert_eq!(c.swap_time(Tokens(1000)), Micros(31_000));
+        assert_eq!(c.swap_time(Tokens(0)), Micros::ZERO);
+    }
+}

@@ -1,0 +1,182 @@
+//! Memory-waste model for the three handling strategies — INFERCEPT's
+//! equations (1)-(3), which LAMPS evaluates with *predicted* values before
+//! the request runs (paper §4.2) and the INFERCEPT baseline evaluates with
+//! *live* values at API-encounter time:
+//!
+//! ```text
+//! WastePreserve_i = T_INT x C_i x M                                  (1)
+//! WasteDiscard_i  = T_fwd(C_i) x C_i x M + T_fwd(C_i) x C_other x M  (2)
+//! WasteSwap_i     = 2 x T_swap(C_i) x C_batch x M                    (3)
+//! ```
+//!
+//! `C_i` is request i's context at the API call, `C_other` the context of
+//! the co-batched requests, `C_batch = C_i + C_other`. `M` (bytes/token)
+//! is a common factor and cancels in the comparison, so waste here is in
+//! **token-microseconds**.
+
+use crate::config::CostModel;
+use crate::core::request::HandlingStrategy;
+use crate::core::types::{Micros, Tokens};
+
+/// Inputs to the waste equations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WasteInputs {
+    /// Context size of the request at the API call (tokens), `C_i`.
+    pub ctx: Tokens,
+    /// API duration `T_INT`.
+    pub api_duration: Micros,
+    /// Context of other requests in the batch, `C_other`. LAMPS estimates
+    /// this by profiling (EMA of observed batch contexts, §3.2.1);
+    /// INFERCEPT reads it from the live batch.
+    pub c_other: Tokens,
+}
+
+impl WasteInputs {
+    pub fn c_batch(&self) -> Tokens {
+        self.ctx + self.c_other
+    }
+}
+
+/// Eqn (1): memory idly held for the whole call.
+pub fn waste_preserve(inp: &WasteInputs) -> f64 {
+    inp.api_duration.0 as f64 * inp.ctx.0 as f64
+}
+
+/// Eqn (2): recomputation occupies own context for T_fwd, and stalls the
+/// co-batched contexts for the same T_fwd.
+pub fn waste_discard(inp: &WasteInputs, cost: &CostModel) -> f64 {
+    let t_fwd = cost.prefill_time(inp.ctx).0 as f64;
+    t_fwd * inp.ctx.0 as f64 + t_fwd * inp.c_other.0 as f64
+}
+
+/// Eqn (3): two transfers (out + in), each stalling the whole batch.
+pub fn waste_swap(inp: &WasteInputs, cost: &CostModel) -> f64 {
+    2.0 * cost.swap_time(inp.ctx).0 as f64 * inp.c_batch().0 as f64
+}
+
+pub fn waste_of(strategy: HandlingStrategy, inp: &WasteInputs,
+                cost: &CostModel) -> f64 {
+    match strategy {
+        HandlingStrategy::Preserve => waste_preserve(inp),
+        HandlingStrategy::Discard => waste_discard(inp, cost),
+        HandlingStrategy::Swap => waste_swap(inp, cost),
+    }
+}
+
+/// Pick the strategy minimizing predicted memory waste. Ties break toward
+/// Preserve (cheapest to execute: no transfer, no recompute).
+pub fn select_strategy(inp: &WasteInputs, cost: &CostModel)
+                       -> HandlingStrategy {
+    let mut best = HandlingStrategy::Preserve;
+    let mut best_waste = waste_preserve(inp);
+    for s in [HandlingStrategy::Discard, HandlingStrategy::Swap] {
+        let w = waste_of(s, inp, cost);
+        if w < best_waste {
+            best = s;
+            best_waste = w;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost() -> CostModel {
+        // prefill 100 us/tok, swap 30 us/tok
+        CostModel::paper_scale()
+    }
+
+    #[test]
+    fn short_api_preserves() {
+        // Math-like: 90 us call, ctx 100 -> preserve waste 9e3, discard
+        // waste 1e4*(100+0)... preserve clearly wins.
+        let inp = WasteInputs {
+            ctx: Tokens(100),
+            api_duration: Micros(90),
+            c_other: Tokens(0),
+        };
+        assert_eq!(select_strategy(&inp, &cost()),
+                   HandlingStrategy::Preserve);
+    }
+
+    #[test]
+    fn long_api_small_ctx_discards() {
+        // Image-like 20 s call, tiny context, empty batch: recompute is
+        // nearly free, preserve wastes 20s x ctx.
+        let inp = WasteInputs {
+            ctx: Tokens(20),
+            api_duration: Micros(20_000_000),
+            c_other: Tokens(0),
+        };
+        assert_eq!(select_strategy(&inp, &cost()),
+                   HandlingStrategy::Discard);
+    }
+
+    #[test]
+    fn long_api_big_ctx_busy_batch_swaps() {
+        // Large own context + busy batch: recompute stalls everyone
+        // (discard expensive); preserve wastes ctx x 20 s; swap moves
+        // 2x1000 tokens.
+        let inp = WasteInputs {
+            ctx: Tokens(1000),
+            api_duration: Micros(20_000_000),
+            c_other: Tokens(500),
+        };
+        let c = cost();
+        let wp = waste_preserve(&inp);
+        let wd = waste_discard(&inp, &c);
+        let ws = waste_swap(&inp, &c);
+        assert!(ws < wd && ws < wp,
+                "swap {ws} vs discard {wd} vs preserve {wp}");
+        assert_eq!(select_strategy(&inp, &c), HandlingStrategy::Swap);
+    }
+
+    #[test]
+    fn equations_match_formulas() {
+        let inp = WasteInputs {
+            ctx: Tokens(10),
+            api_duration: Micros(1_000),
+            c_other: Tokens(5),
+        };
+        let c = cost();
+        assert_eq!(waste_preserve(&inp), 1_000.0 * 10.0);
+        // T_fwd(10) = 1000 us; own 1000*10 + other 1000*5
+        assert_eq!(waste_discard(&inp, &c), 1000.0 * 10.0 + 1000.0 * 5.0);
+        // T_swap(10) = 1000 + 300 us; 2 * 1300 * 15
+        assert_eq!(waste_swap(&inp, &c), 2.0 * 1300.0 * 15.0);
+    }
+
+    #[test]
+    fn zero_duration_ties_to_preserve() {
+        let inp = WasteInputs {
+            ctx: Tokens(0),
+            api_duration: Micros(0),
+            c_other: Tokens(0),
+        };
+        assert_eq!(select_strategy(&inp, &cost()),
+                   HandlingStrategy::Preserve);
+    }
+
+    #[test]
+    fn discard_swap_crossover_in_context_size() {
+        // Recompute cost grows ~C^2 while swap grows ~(base + 30C) x C:
+        // with the calibrated constants the crossover sits at C = 50
+        // tokens — "if the pre-API portion is short, Discard is
+        // beneficial; otherwise Swap" (paper §2.3).
+        let c = cost();
+        let long_api = Micros(20_000_000);
+        let small = WasteInputs {
+            ctx: Tokens(40),
+            api_duration: long_api,
+            c_other: Tokens(0),
+        };
+        assert_eq!(select_strategy(&small, &c), HandlingStrategy::Discard);
+        let large = WasteInputs {
+            ctx: Tokens(100),
+            ..small
+        };
+        assert_eq!(select_strategy(&large, &c), HandlingStrategy::Swap);
+    }
+}

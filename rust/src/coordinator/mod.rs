@@ -1,0 +1,10 @@
+//! The paper's L3 contribution: memory-waste-minimizing handling strategy
+//! selection (INFERCEPT equations (1)-(3)), the memory-over-time ranking
+//! function, and the scheduling policies (FCFS / SJF / SJF-total / LAMPS).
+
+pub mod handling;
+pub mod ranking;
+pub mod scheduler;
+
+pub use handling::{select_strategy, WasteInputs};
+pub use scheduler::{ScheduleContext, Scheduler};

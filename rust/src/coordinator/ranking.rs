@@ -1,0 +1,191 @@
+//! LAMPS's rank function: the **memory-over-time integral** (paper §4.3,
+//! Fig 4) of a request's remaining predicted lifetime, including the waste
+//! terms of its assigned API handling strategies.
+//!
+//! > "Our insight is that evaluating memory usage by integrating the
+//! > memory-over-time function offers a more accurate measure of resource
+//! > consumption than relying on instantaneous memory values." (§4.2)
+//!
+//! Units: token-microseconds. Decode phases contribute a ramp
+//! `sum_{k=1..d} (ctx + k) * t_iter`; each API call contributes its waste
+//! equation value (eqns (1)-(3), `handling.rs`) for the strategy assigned
+//! to it. Lower integral -> scheduled earlier.
+
+use crate::config::CostModel;
+use crate::coordinator::handling::{waste_of, WasteInputs};
+use crate::core::request::Request;
+use crate::core::types::{Micros, Tokens};
+
+/// Live quantities the score depends on (profiled by the engine).
+#[derive(Debug, Clone, Copy)]
+pub struct RankInputs {
+    /// Current estimate of one decode iteration's duration.
+    pub t_iter: Micros,
+    /// Profiled average co-batched context, the `C_other` estimate
+    /// (§3.2.1 "This estimation involves profiling the number of requests
+    /// in a batch").
+    pub c_other_est: Tokens,
+}
+
+/// Memory-over-time integral of the *remaining* predicted lifetime of `r`.
+pub fn memory_over_time(r: &Request, cost: &CostModel,
+                        inputs: &RankInputs) -> f64 {
+    let t_iter = inputs.t_iter.0.max(1) as f64;
+    let mut total = 0.0;
+    let mut ctx = r.logical_context.0 as f64;
+
+    for seg in r.segment..r.spec.num_segments() {
+        let pred = &r.predictions[seg];
+        // Remaining decode tokens in this segment.
+        let done = if seg == r.segment {
+            r.segment_generated.0
+        } else {
+            0
+        };
+        let d = pred.decode_tokens.0.saturating_sub(done) as f64;
+        // Decode ramp: sum_{k=1..d} (ctx + k) * t_iter.
+        total += t_iter * (d * ctx + d * (d + 1.0) / 2.0);
+        ctx += d;
+
+        if let Some(api_duration) = pred.api_duration {
+            let strategy = r.handling[seg];
+            let inp = WasteInputs {
+                ctx: Tokens(ctx as u64),
+                api_duration,
+                c_other: inputs.c_other_est,
+            };
+            total += waste_of(strategy, &inp, cost);
+            ctx += pred.response_tokens.0 as f64;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::request::{ApiCallSpec, ApiType, HandlingStrategy,
+                               RequestSpec, SegmentPrediction};
+    use crate::core::types::RequestId;
+
+    /// Unit-cost world: t_iter = 1 s, prefill 1 s/token, swap free — the
+    /// Fig 3 example's regime.
+    fn unit_cost() -> CostModel {
+        CostModel::unit()
+    }
+
+    fn unit_inputs(c_other: u64) -> RankInputs {
+        RankInputs {
+            t_iter: Micros(1_000_000),
+            c_other_est: Tokens(c_other),
+        }
+    }
+
+    fn fig3_request(id: u64, pre: u64, api_units: u64, post: u64,
+                    strategy: HandlingStrategy) -> Request {
+        let spec = RequestSpec {
+            id: RequestId(id),
+            arrival: Micros::ZERO,
+            prompt: String::new(),
+            prompt_tokens: Tokens(0),
+            api_calls: vec![ApiCallSpec {
+                decode_before: Tokens(pre),
+                api_type: ApiType::Qa,
+                duration: Micros(api_units * 1_000_000),
+                response_tokens: Tokens(0),
+            }],
+            final_decode: Tokens(post),
+        };
+        let preds = vec![
+            SegmentPrediction {
+                decode_tokens: Tokens(pre),
+                api_duration: Some(Micros(api_units * 1_000_000)),
+                response_tokens: Tokens(0),
+            },
+            SegmentPrediction {
+                decode_tokens: Tokens(post),
+                api_duration: None,
+                response_tokens: Tokens(0),
+            },
+        ];
+        Request::new(spec, preds, vec![strategy])
+    }
+
+    /// Unit-normalized integral: decode ramps are (token x us) with
+    /// t_iter = 1e6 us and waste terms are (us x token), so dividing by
+    /// 1e6 yields the paper's token-unit numbers.
+    fn score_units(r: &Request, c_other: u64) -> f64 {
+        memory_over_time(r, &unit_cost(), &unit_inputs(c_other)) / 1e6
+    }
+
+    #[test]
+    fn fig3_ordering_r3_r2_r1() {
+        // Table 1: R1 (6 total, API@5, dur 2, Preserve), R2 (2, @1, 7,
+        // Discard), R3 (3, @2, 1, Swap). Paper §3.1: "R3 ... should run
+        // first ... followed by R2, with R1 ... scheduled last."
+        let r1 = fig3_request(1, 5, 2, 1, HandlingStrategy::Preserve);
+        let r2 = fig3_request(2, 1, 7, 1, HandlingStrategy::Discard);
+        let r3 = fig3_request(3, 2, 1, 1, HandlingStrategy::Swap);
+        // c_other estimate = budget/2 = 3 (see engine profiling init).
+        let (s1, s2, s3) = (score_units(&r1, 3), score_units(&r2, 3),
+                            score_units(&r3, 3));
+        assert!(s3 < s2, "R3 {s3} should rank before R2 {s2}");
+        assert!(s2 < s1, "R2 {s2} should rank before R1 {s1}");
+    }
+
+    #[test]
+    fn fig3_exact_values() {
+        // Hand-computed in the unit world with C_other = 3:
+        // R1: ramp 1+2+3+4+5 = 15, preserve 5*2 = 10, post (5+1)=6 -> 31
+        // R2: ramp 1, discard T_fwd(1)*(1+3) = 4, post (1+1)=2 -> 7
+        // R3: ramp 1+2 = 3, swap 2*0*c = 0, post (2+1)=3 -> 6
+        let r1 = fig3_request(1, 5, 2, 1, HandlingStrategy::Preserve);
+        let r2 = fig3_request(2, 1, 7, 1, HandlingStrategy::Discard);
+        let r3 = fig3_request(3, 2, 1, 1, HandlingStrategy::Swap);
+        assert!((score_units(&r1, 3) - 31.0).abs() < 1e-9);
+        assert!((score_units(&r2, 3) - 7.0).abs() < 1e-9);
+        assert!((score_units(&r3, 3) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn progress_reduces_score() {
+        let mut r = fig3_request(1, 5, 2, 1, HandlingStrategy::Preserve);
+        let before = score_units(&r, 0);
+        r.segment_generated = Tokens(3);
+        r.logical_context = Tokens(3);
+        let after = score_units(&r, 0);
+        assert!(after < before);
+    }
+
+    #[test]
+    fn completed_api_drops_waste_term() {
+        let mut r = fig3_request(1, 5, 20, 1, HandlingStrategy::Preserve);
+        let before = score_units(&r, 0);
+        // Move to final segment (API done).
+        r.segment = 1;
+        r.segment_generated = Tokens(0);
+        r.logical_context = Tokens(5);
+        let after = score_units(&r, 0);
+        // before includes preserve waste 5*20 = 100; after only the final
+        // decode ramp (5+1) = 6.
+        assert!((after - 6.0).abs() < 1e-9, "after {after}");
+        assert!(before > 100.0);
+    }
+
+    #[test]
+    fn longer_api_means_lower_priority_under_preserve() {
+        let short = fig3_request(1, 5, 2, 1, HandlingStrategy::Preserve);
+        let long = fig3_request(2, 5, 50, 1, HandlingStrategy::Preserve);
+        assert!(score_units(&short, 0) < score_units(&long, 0));
+    }
+
+    #[test]
+    fn same_length_different_strategy_ranks_differently() {
+        // Paper §3.2.2: "it may order two requests with the same total
+        // length differently because they have different handling
+        // strategies during the API call."
+        let p = fig3_request(1, 5, 10, 1, HandlingStrategy::Preserve);
+        let d = fig3_request(2, 5, 10, 1, HandlingStrategy::Discard);
+        assert_ne!(score_units(&p, 3), score_units(&d, 3));
+    }
+}

@@ -1,0 +1,271 @@
+//! Scheduling policies: the score function each policy assigns to a
+//! waiting request. The engine sorts eligible requests by
+//! `(starving desc, score asc, id asc)` each iteration (Algorithm 1 line
+//! 16 + the §4.4 starvation promotion).
+
+use crate::config::{CostModel, SchedulerKind};
+use crate::coordinator::ranking::{memory_over_time, RankInputs};
+use crate::core::request::Request;
+use crate::core::types::{Micros, Tokens};
+
+/// Live engine state the score functions may consult.
+#[derive(Debug, Clone, Copy)]
+pub struct ScheduleContext {
+    pub cost: CostModel,
+    /// Estimate of one decode iteration's duration (EMA of observed).
+    pub t_iter_est: Micros,
+    /// Profiled co-batched context estimate (`C_other`).
+    pub c_other_est: Tokens,
+    pub iteration: u64,
+}
+
+impl ScheduleContext {
+    pub fn rank_inputs(&self) -> RankInputs {
+        RankInputs {
+            t_iter: self.t_iter_est,
+            c_other_est: self.c_other_est,
+        }
+    }
+}
+
+/// A scheduling policy: maps a request to a sortable score (lower runs
+/// first).
+pub trait Scheduler {
+    fn kind(&self) -> SchedulerKind;
+    fn score(&self, r: &Request, ctx: &ScheduleContext) -> f64;
+
+    /// Whether scores depend on live engine state and therefore benefit
+    /// from the selective-update cache (§4.3). Static policies (FCFS/SJF)
+    /// never need recomputation.
+    fn is_dynamic(&self) -> bool {
+        false
+    }
+}
+
+/// First-come first-served (vLLM / INFERCEPT default): queue-entry time,
+/// then request id (the paper's Fig 3 breaks the simultaneous-arrival tie
+/// by request ID). `queue_key` is bumped to the API-return time when a
+/// request re-enters the queue — vLLM treats the post-API continuation as
+/// a new job (paper §1), which is what "prioritize new requests over
+/// ongoing ones" (§6.2) means for the ToolBench throughput trade-off.
+#[derive(Debug, Default)]
+pub struct Fcfs;
+
+impl Scheduler for Fcfs {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Fcfs
+    }
+
+    fn score(&self, r: &Request, _ctx: &ScheduleContext) -> f64 {
+        r.queue_key.0 as f64 * 1e9 + r.spec.id.0 as f64
+    }
+}
+
+/// Remaining predicted decode work in token units: outstanding decode
+/// tokens across segments plus pending recompute/prefill work. The
+/// paper's size policies are remaining-work (SRPT-style): in Fig 3b, R2's
+/// post-API part is "length 2 (including recomputation)" and R1 "has two
+/// units remaining, so R2 must wait" — a tie on remaining work resolved
+/// toward the earlier request.
+fn remaining_work_tokens(r: &Request) -> f64 {
+    let mut remaining = r.pending_materialize.0 as f64;
+    for seg in r.segment..r.spec.num_segments() {
+        let done = if seg == r.segment {
+            r.segment_generated.0
+        } else {
+            0
+        };
+        remaining +=
+            r.predictions[seg].decode_tokens.0.saturating_sub(done) as f64;
+    }
+    remaining
+}
+
+/// Shortest Job First by *predicted output length only* (Fig 3b):
+/// remaining decode work, API time ignored.
+#[derive(Debug, Default)]
+pub struct Sjf;
+
+impl Scheduler for Sjf {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Sjf
+    }
+
+    fn score(&self, r: &Request, _ctx: &ScheduleContext) -> f64 {
+        remaining_work_tokens(r)
+    }
+
+    fn is_dynamic(&self) -> bool {
+        true // remaining work shrinks as the request progresses
+    }
+}
+
+/// SJF by *total length* (Fig 3c): remaining decode work plus remaining
+/// API durations converted to token-generation units.
+#[derive(Debug, Default)]
+pub struct SjfTotal;
+
+impl Scheduler for SjfTotal {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::SjfTotal
+    }
+
+    fn score(&self, r: &Request, ctx: &ScheduleContext) -> f64 {
+        let t_iter = ctx.t_iter_est.0.max(1) as f64;
+        let api_units: f64 = (r.segment..r.spec.num_segments())
+            .map(|seg| {
+                r.predictions[seg]
+                    .api_duration
+                    .map_or(0.0, |d| d.0 as f64 / t_iter)
+            })
+            .sum();
+        remaining_work_tokens(r) + api_units
+    }
+
+    fn is_dynamic(&self) -> bool {
+        true
+    }
+}
+
+/// LAMPS: rank by the remaining memory-over-time integral (§4.3).
+#[derive(Debug, Default)]
+pub struct Lamps;
+
+impl Scheduler for Lamps {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Lamps
+    }
+
+    fn score(&self, r: &Request, ctx: &ScheduleContext) -> f64 {
+        memory_over_time(r, &ctx.cost, &ctx.rank_inputs())
+    }
+
+    fn is_dynamic(&self) -> bool {
+        true
+    }
+}
+
+/// Factory from the config enum.
+pub fn make_scheduler(kind: SchedulerKind) -> Box<dyn Scheduler> {
+    match kind {
+        SchedulerKind::Fcfs => Box::new(Fcfs),
+        SchedulerKind::Sjf => Box::new(Sjf),
+        SchedulerKind::SjfTotal => Box::new(SjfTotal),
+        SchedulerKind::Lamps => Box::new(Lamps),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::request::{ApiCallSpec, ApiType, HandlingStrategy,
+                               RequestSpec, SegmentPrediction};
+    use crate::core::types::RequestId;
+
+    fn ctx() -> ScheduleContext {
+        ScheduleContext {
+            cost: CostModel::unit(),
+            t_iter_est: Micros(1_000_000),
+            c_other_est: Tokens(3),
+            iteration: 0,
+        }
+    }
+
+    fn req(id: u64, arrival: u64, pre: u64, api_units: u64, post: u64)
+           -> Request {
+        let spec = RequestSpec {
+            id: RequestId(id),
+            arrival: Micros(arrival),
+            prompt: String::new(),
+            prompt_tokens: Tokens(0),
+            api_calls: vec![ApiCallSpec {
+                decode_before: Tokens(pre),
+                api_type: ApiType::Qa,
+                duration: Micros(api_units * 1_000_000),
+                response_tokens: Tokens(0),
+            }],
+            final_decode: Tokens(post),
+        };
+        let preds = vec![
+            SegmentPrediction {
+                decode_tokens: Tokens(pre),
+                api_duration: Some(Micros(api_units * 1_000_000)),
+                response_tokens: Tokens(0),
+            },
+            SegmentPrediction {
+                decode_tokens: Tokens(post),
+                api_duration: None,
+                response_tokens: Tokens(0),
+            },
+        ];
+        Request::new(spec, preds, vec![HandlingStrategy::Preserve])
+    }
+
+    #[test]
+    fn fcfs_orders_by_arrival_then_id() {
+        let s = Fcfs;
+        let c = ctx();
+        let a = req(5, 100, 1, 1, 1);
+        let b = req(2, 200, 1, 1, 1);
+        assert!(s.score(&a, &c) < s.score(&b, &c));
+        let same_arrival_low_id = req(1, 100, 9, 9, 9);
+        assert!(s.score(&same_arrival_low_id, &c) < s.score(&a, &c));
+    }
+
+    #[test]
+    fn sjf_ignores_api_time() {
+        let s = Sjf;
+        let c = ctx();
+        // Fig 3: SJF orders R2 (len 2) < R3 (3) < R1 (6) despite R2's long
+        // API.
+        let r1 = req(1, 0, 5, 2, 1);
+        let r2 = req(2, 0, 1, 7, 1);
+        let r3 = req(3, 0, 2, 1, 1);
+        assert!(s.score(&r2, &c) < s.score(&r3, &c));
+        assert!(s.score(&r3, &c) < s.score(&r1, &c));
+    }
+
+    #[test]
+    fn sjf_total_includes_api_time() {
+        let s = SjfTotal;
+        let c = ctx();
+        // Fig 3c: totals R1 = 8, R2 = 9, R3 = 4 -> R3 < R1 < R2.
+        let r1 = req(1, 0, 5, 2, 1);
+        let r2 = req(2, 0, 1, 7, 1);
+        let r3 = req(3, 0, 2, 1, 1);
+        assert_eq!(s.score(&r1, &c), 8.0);
+        assert_eq!(s.score(&r2, &c), 9.0);
+        assert_eq!(s.score(&r3, &c), 4.0);
+    }
+
+    #[test]
+    fn factory_kinds() {
+        for kind in [SchedulerKind::Fcfs, SchedulerKind::Sjf,
+                     SchedulerKind::SjfTotal, SchedulerKind::Lamps] {
+            assert_eq!(make_scheduler(kind).kind(), kind);
+        }
+    }
+
+    #[test]
+    fn dynamic_flags() {
+        // All size-based policies track remaining work; only FCFS is
+        // static.
+        assert!(Lamps.is_dynamic());
+        assert!(Sjf.is_dynamic());
+        assert!(SjfTotal.is_dynamic());
+        assert!(!Fcfs.is_dynamic());
+    }
+
+    #[test]
+    fn sjf_score_shrinks_with_progress() {
+        let c = ctx();
+        let mut r = req(1, 0, 5, 2, 3);
+        let before = Sjf.score(&r, &c);
+        assert_eq!(before, 8.0);
+        r.segment_generated = Tokens(4);
+        assert_eq!(Sjf.score(&r, &c), 4.0);
+        // pending recompute counts as remaining work
+        r.pending_materialize = Tokens(3);
+        assert_eq!(Sjf.score(&r, &c), 7.0);
+    }
+}

@@ -1,0 +1,5 @@
+//! Core domain types shared by every subsystem: time/memory newtypes and
+//! the request state machine.
+
+pub mod request;
+pub mod types;

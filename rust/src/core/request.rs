@@ -1,0 +1,426 @@
+//! The request model: immutable workload spec + mutable serving state.
+//!
+//! A request's life (paper Fig. 1): prefill the prompt, decode until the
+//! first API call fires, wait for the API under a *handling strategy*
+//! (Preserve / Discard / Swap), resume, ... repeat per API call ...,
+//! decode the final segment, finish. Multi-API requests are segmented and
+//! re-enter scheduling after every API call (paper §4.2 "Multi-API").
+
+use crate::core::types::{Micros, RequestId, Tokens};
+
+/// External-augmentation classes with distinct latency profiles
+/// (paper Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ApiType {
+    /// Arithmetic (ToolkenGPT-style); ~90 us.
+    Math,
+    /// Knowledge-base question answering; ~0.69 s.
+    Qa,
+    /// Embodied virtual environment (ALFWorld); ~0.09 s.
+    Ve,
+    /// Multi-turn chatbot self-call; ~28.6 s.
+    Chatbot,
+    /// Image generation (DALL-E-style); ~20.0 s.
+    Image,
+    /// Text-to-speech; ~17.2 s.
+    Tts,
+    /// ToolBench real-world API, 49 categories collapsed to one latency
+    /// class in the paper's Table 2; the payload is the category index.
+    Tool(u8),
+}
+
+impl ApiType {
+    /// Stable label used in traces, logs, and figure outputs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ApiType::Math => "math",
+            ApiType::Qa => "qa",
+            ApiType::Ve => "ve",
+            ApiType::Chatbot => "chatbot",
+            ApiType::Image => "image",
+            ApiType::Tts => "tts",
+            ApiType::Tool(_) => "tool",
+        }
+    }
+}
+
+/// How a request's KV cache is handled while it waits on an API call
+/// (paper §1: the three strategies, and §4.2: LAMPS picks one *before*
+/// the request runs, from predictions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HandlingStrategy {
+    /// Keep the KV cache resident for the whole API call.
+    Preserve,
+    /// Free the cache at API start; recompute the context on return.
+    Discard,
+    /// Offload to CPU memory at API start; reload on return.
+    Swap,
+}
+
+impl HandlingStrategy {
+    pub const ALL: [HandlingStrategy; 3] = [
+        HandlingStrategy::Preserve,
+        HandlingStrategy::Discard,
+        HandlingStrategy::Swap,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            HandlingStrategy::Preserve => "preserve",
+            HandlingStrategy::Discard => "discard",
+            HandlingStrategy::Swap => "swap",
+        }
+    }
+}
+
+/// One API call within a request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiCallSpec {
+    /// Decode tokens generated in this segment before the call fires.
+    pub decode_before: Tokens,
+    pub api_type: ApiType,
+    /// True call duration (the generator knows it; predictors estimate it).
+    pub duration: Micros,
+    /// Tokens the API response appends to the context on return.
+    pub response_tokens: Tokens,
+}
+
+/// Immutable description of a request, produced by a workload generator or
+/// parsed from a trace file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestSpec {
+    pub id: RequestId,
+    pub arrival: Micros,
+    /// Prompt text; used by the PJRT predictor/tokenizer path. May be empty
+    /// for purely synthetic traces (the oracle predictor does not need it).
+    pub prompt: String,
+    pub prompt_tokens: Tokens,
+    /// API calls in order; between call `i-1` and call `i` the model decodes
+    /// `api_calls[i].decode_before` tokens.
+    pub api_calls: Vec<ApiCallSpec>,
+    /// Decode tokens in the final (post-last-API) segment.
+    pub final_decode: Tokens,
+}
+
+impl RequestSpec {
+    /// Total model-generated tokens across all segments.
+    pub fn total_decode(&self) -> Tokens {
+        self.api_calls.iter().map(|c| c.decode_before).sum::<Tokens>()
+            + self.final_decode
+    }
+
+    /// Total time spent inside API calls.
+    pub fn total_api_time(&self) -> Micros {
+        self.api_calls.iter().map(|c| c.duration).sum()
+    }
+
+    /// Number of segments (= api_calls + 1 final).
+    pub fn num_segments(&self) -> usize {
+        self.api_calls.len() + 1
+    }
+
+    /// Decode tokens in segment `seg`.
+    pub fn segment_decode(&self, seg: usize) -> Tokens {
+        if seg < self.api_calls.len() {
+            self.api_calls[seg].decode_before
+        } else {
+            self.final_decode
+        }
+    }
+
+    /// Context size (prompt + generated + API responses) at the *end* of
+    /// segment `seg`, before any handling strategy frees memory.
+    pub fn context_at_end_of_segment(&self, seg: usize) -> Tokens {
+        let mut ctx = self.prompt_tokens;
+        for (i, call) in self.api_calls.iter().enumerate() {
+            if i > seg {
+                break;
+            }
+            ctx += call.decode_before;
+            if i < seg {
+                ctx += call.response_tokens;
+            }
+        }
+        if seg >= self.api_calls.len() {
+            ctx += self.final_decode;
+        }
+        ctx
+    }
+}
+
+/// Predicted properties of one segment (paper §4.2: pre-API output length
+/// from the prompt predictor; API duration + response length from the
+/// per-class historical table).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SegmentPrediction {
+    /// Predicted decode tokens before the segment's API (or before finish,
+    /// for the final segment).
+    pub decode_tokens: Tokens,
+    /// Predicted API duration; `None` for the final segment.
+    pub api_duration: Option<Micros>,
+    /// Predicted API response length.
+    pub response_tokens: Tokens,
+}
+
+/// Where a request currently is in the serving pipeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Phase {
+    /// In the waiting queue; `needs_prefill` tokens of context must be
+    /// (re)materialized before decode can proceed (prompt tokens for new
+    /// requests; full context for discarded ones; zero after Preserve).
+    Waiting,
+    /// Member of the current running batch.
+    Running,
+    /// Blocked on an API call until `return_at`, held under `strategy`.
+    ApiWait {
+        strategy: HandlingStrategy,
+        return_at: Micros,
+    },
+    Finished,
+}
+
+/// A request in flight: spec + predictions + mutable serving state.
+///
+/// Invariants maintained by the engine:
+/// - `context` equals the KV tokens charged to this request in the block
+///   manager whenever `phase` is `Running` or `ApiWait{Preserve}`.
+/// - `segment < spec.num_segments()` unless `phase == Finished`.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub spec: RequestSpec,
+    /// One prediction per segment (len = num_segments()).
+    pub predictions: Vec<SegmentPrediction>,
+    /// Strategy assigned per API call (len = api_calls.len()). Assigned at
+    /// admission by LAMPS; at API-encounter time by the INFERCEPT baseline.
+    pub handling: Vec<HandlingStrategy>,
+
+    // ---- mutable serving state ----
+    pub phase: Phase,
+    /// Current segment index.
+    pub segment: usize,
+    /// Tokens decoded so far within the current segment.
+    pub segment_generated: Tokens,
+    /// Context tokens whose KV entries are *live on the device* right now.
+    pub context: Tokens,
+    /// Context tokens that exist logically (survive Discard) — what must be
+    /// rematerialized by a recompute.
+    pub logical_context: Tokens,
+    /// Prefill / recompute / swap-in work still owed before decode resumes,
+    /// in tokens of context to materialize.
+    pub pending_materialize: Tokens,
+    /// FCFS ordering key. Starts at `spec.arrival`; vLLM-style systems
+    /// treat a request returning from an API as a *new* job (paper §1,
+    /// §6.2), so the engine bumps this to the return time whenever the
+    /// request re-enters the waiting queue after an API call.
+    pub queue_key: Micros,
+    /// True once the request has been scheduled at least once — starvation
+    /// tracking only activates then (paper §4.4).
+    pub was_scheduled: bool,
+    pub starvation_cnt: u32,
+    /// Promoted-to-head flag; sticky until completion (paper §4.4).
+    pub starving: bool,
+
+    // ---- metrics ----
+    pub first_scheduled_at: Option<Micros>,
+    pub first_token_at: Option<Micros>,
+    pub finished_at: Option<Micros>,
+    /// Cached LAMPS score + the iteration it was computed on (selective
+    /// score update, paper §4.3).
+    pub cached_score: f64,
+    pub score_iteration: u64,
+}
+
+impl Request {
+    pub fn new(spec: RequestSpec, predictions: Vec<SegmentPrediction>,
+               handling: Vec<HandlingStrategy>) -> Request {
+        assert_eq!(predictions.len(), spec.num_segments(),
+                   "one prediction per segment");
+        assert_eq!(handling.len(), spec.api_calls.len(),
+                   "one handling strategy per API call");
+        let prompt_tokens = spec.prompt_tokens;
+        let queue_key = spec.arrival;
+        Request {
+            spec,
+            predictions,
+            handling,
+            queue_key,
+            phase: Phase::Waiting,
+            segment: 0,
+            segment_generated: Tokens::ZERO,
+            context: Tokens::ZERO,
+            logical_context: prompt_tokens,
+            pending_materialize: prompt_tokens,
+            was_scheduled: false,
+            starvation_cnt: 0,
+            starving: false,
+            first_scheduled_at: None,
+            first_token_at: None,
+            finished_at: None,
+            cached_score: f64::INFINITY,
+            score_iteration: u64::MAX,
+        }
+    }
+
+    pub fn id(&self) -> RequestId {
+        self.spec.id
+    }
+
+    /// Tokens still to decode in the current segment.
+    pub fn segment_remaining(&self) -> Tokens {
+        self.spec
+            .segment_decode(self.segment)
+            .saturating_sub(self.segment_generated)
+    }
+
+    /// Is the current segment's next boundary an API call (vs. completion)?
+    pub fn at_api_segment(&self) -> bool {
+        self.segment < self.spec.api_calls.len()
+    }
+
+    /// The strategy assigned to the current segment's API call.
+    pub fn current_handling(&self) -> Option<HandlingStrategy> {
+        self.handling.get(self.segment).copied()
+    }
+
+    /// Device memory this request holds in the given phase (what the
+    /// admission check and the KV manager charge).
+    pub fn held_memory(&self) -> Tokens {
+        match self.phase {
+            Phase::Running => self.context,
+            Phase::ApiWait { strategy: HandlingStrategy::Preserve, .. } => {
+                self.context
+            }
+            // Discard/Swap free device memory during the call; Waiting
+            // requests hold nothing until admitted.
+            _ => Tokens::ZERO,
+        }
+    }
+
+    /// Memory the request will need the moment it (re)starts decode:
+    /// context to materialize plus one slot for the next token.
+    pub fn admission_memory(&self) -> Tokens {
+        self.logical_context + Tokens(1)
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.phase, Phase::Finished)
+    }
+
+    pub fn in_api_wait(&self) -> bool {
+        matches!(self.phase, Phase::ApiWait { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec_with_two_apis() -> RequestSpec {
+        RequestSpec {
+            id: RequestId(1),
+            arrival: Micros::ZERO,
+            prompt: String::new(),
+            prompt_tokens: Tokens(10),
+            api_calls: vec![
+                ApiCallSpec {
+                    decode_before: Tokens(5),
+                    api_type: ApiType::Math,
+                    duration: Micros(100),
+                    response_tokens: Tokens(3),
+                },
+                ApiCallSpec {
+                    decode_before: Tokens(7),
+                    api_type: ApiType::Image,
+                    duration: Micros(2000),
+                    response_tokens: Tokens(2),
+                },
+            ],
+            final_decode: Tokens(4),
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let s = spec_with_two_apis();
+        assert_eq!(s.total_decode(), Tokens(16));
+        assert_eq!(s.total_api_time(), Micros(2100));
+        assert_eq!(s.num_segments(), 3);
+        assert_eq!(s.segment_decode(0), Tokens(5));
+        assert_eq!(s.segment_decode(2), Tokens(4));
+    }
+
+    #[test]
+    fn context_accumulates_responses() {
+        let s = spec_with_two_apis();
+        // end of seg 0: prompt 10 + 5 decoded
+        assert_eq!(s.context_at_end_of_segment(0), Tokens(15));
+        // end of seg 1: + resp 3 + 7 decoded
+        assert_eq!(s.context_at_end_of_segment(1), Tokens(25));
+        // end of seg 2: + resp 2 + 4 decoded
+        assert_eq!(s.context_at_end_of_segment(2), Tokens(31));
+    }
+
+    fn dummy_predictions(spec: &RequestSpec) -> Vec<SegmentPrediction> {
+        (0..spec.num_segments())
+            .map(|i| SegmentPrediction {
+                decode_tokens: spec.segment_decode(i),
+                api_duration: spec.api_calls.get(i).map(|c| c.duration),
+                response_tokens: spec
+                    .api_calls
+                    .get(i)
+                    .map(|c| c.response_tokens)
+                    .unwrap_or(Tokens::ZERO),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn new_request_state() {
+        let s = spec_with_two_apis();
+        let preds = dummy_predictions(&s);
+        let r = Request::new(s, preds,
+                             vec![HandlingStrategy::Preserve,
+                                  HandlingStrategy::Discard]);
+        assert_eq!(r.phase, Phase::Waiting);
+        assert_eq!(r.pending_materialize, Tokens(10));
+        assert_eq!(r.held_memory(), Tokens::ZERO);
+        assert_eq!(r.admission_memory(), Tokens(11));
+        assert!(r.at_api_segment());
+        assert_eq!(r.current_handling(), Some(HandlingStrategy::Preserve));
+    }
+
+    #[test]
+    fn held_memory_by_phase() {
+        let s = spec_with_two_apis();
+        let preds = dummy_predictions(&s);
+        let mut r = Request::new(s, preds,
+                                 vec![HandlingStrategy::Preserve,
+                                      HandlingStrategy::Swap]);
+        r.context = Tokens(15);
+        r.phase = Phase::Running;
+        assert_eq!(r.held_memory(), Tokens(15));
+        r.phase = Phase::ApiWait {
+            strategy: HandlingStrategy::Preserve,
+            return_at: Micros(10),
+        };
+        assert_eq!(r.held_memory(), Tokens(15));
+        r.phase = Phase::ApiWait {
+            strategy: HandlingStrategy::Discard,
+            return_at: Micros(10),
+        };
+        assert_eq!(r.held_memory(), Tokens::ZERO);
+        r.phase = Phase::ApiWait {
+            strategy: HandlingStrategy::Swap,
+            return_at: Micros(10),
+        };
+        assert_eq!(r.held_memory(), Tokens::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "one prediction per segment")]
+    fn prediction_arity_checked() {
+        let s = spec_with_two_apis();
+        Request::new(s, vec![], vec![HandlingStrategy::Preserve,
+                                     HandlingStrategy::Discard]);
+    }
+}

@@ -1,0 +1,199 @@
+//! Time and memory newtypes.
+//!
+//! The whole stack accounts memory in **tokens** (the paper's unit: KV-cache
+//! slots) and time in **integer microseconds**. Integer time keeps the
+//! discrete-event simulator exactly reproducible; byte conversions happen
+//! only at reporting boundaries via `kv_bytes_per_token`.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Sub, SubAssign};
+
+/// A point in (virtual or wall) time, in microseconds since engine start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Micros(pub u64);
+
+impl Micros {
+    pub const ZERO: Micros = Micros(0);
+    pub const MAX: Micros = Micros(u64::MAX);
+
+    pub fn from_secs_f64(secs: f64) -> Micros {
+        Micros((secs.max(0.0) * 1e6).round() as u64)
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    pub fn saturating_sub(self, rhs: Micros) -> Micros {
+        Micros(self.0.saturating_sub(rhs.0))
+    }
+
+    pub fn min(self, rhs: Micros) -> Micros {
+        Micros(self.0.min(rhs.0))
+    }
+
+    pub fn max(self, rhs: Micros) -> Micros {
+        Micros(self.0.max(rhs.0))
+    }
+}
+
+impl Add for Micros {
+    type Output = Micros;
+    fn add(self, rhs: Micros) -> Micros {
+        Micros(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Micros {
+    fn add_assign(&mut self, rhs: Micros) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Micros {
+    type Output = Micros;
+    fn sub(self, rhs: Micros) -> Micros {
+        Micros(self.0 - rhs.0)
+    }
+}
+
+impl SubAssign for Micros {
+    fn sub_assign(&mut self, rhs: Micros) {
+        self.0 -= rhs.0;
+    }
+}
+
+impl Mul<u64> for Micros {
+    type Output = Micros;
+    fn mul(self, rhs: u64) -> Micros {
+        Micros(self.0 * rhs)
+    }
+}
+
+impl Div<u64> for Micros {
+    type Output = Micros;
+    fn div(self, rhs: u64) -> Micros {
+        Micros(self.0 / rhs)
+    }
+}
+
+impl Sum for Micros {
+    fn sum<I: Iterator<Item = Micros>>(iter: I) -> Micros {
+        Micros(iter.map(|m| m.0).sum())
+    }
+}
+
+impl fmt::Display for Micros {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.6}s", self.as_secs_f64())
+    }
+}
+
+/// A count of KV-cache token slots (the paper's memory unit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Tokens(pub u64);
+
+impl Tokens {
+    pub const ZERO: Tokens = Tokens(0);
+
+    pub fn as_u64(self) -> u64 {
+        self.0
+    }
+
+    pub fn saturating_sub(self, rhs: Tokens) -> Tokens {
+        Tokens(self.0.saturating_sub(rhs.0))
+    }
+
+    pub fn min(self, rhs: Tokens) -> Tokens {
+        Tokens(self.0.min(rhs.0))
+    }
+
+    /// Bytes this many KV slots occupy for a model with the given
+    /// per-token KV cost (eqns (1)-(3)'s constant M).
+    pub fn bytes(self, kv_bytes_per_token: u64) -> u64 {
+        self.0 * kv_bytes_per_token
+    }
+}
+
+impl Add for Tokens {
+    type Output = Tokens;
+    fn add(self, rhs: Tokens) -> Tokens {
+        Tokens(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Tokens {
+    fn add_assign(&mut self, rhs: Tokens) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Tokens {
+    type Output = Tokens;
+    fn sub(self, rhs: Tokens) -> Tokens {
+        Tokens(self.0 - rhs.0)
+    }
+}
+
+impl SubAssign for Tokens {
+    fn sub_assign(&mut self, rhs: Tokens) {
+        self.0 -= rhs.0;
+    }
+}
+
+impl Sum for Tokens {
+    fn sum<I: Iterator<Item = Tokens>>(iter: I) -> Tokens {
+        Tokens(iter.map(|t| t.0).sum())
+    }
+}
+
+impl fmt::Display for Tokens {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} tok", self.0)
+    }
+}
+
+/// Unique, monotonically increasing request identifier. FCFS order is
+/// defined by this id for same-arrival requests (paper §3.1's example).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestId(pub u64);
+
+impl fmt::Display for RequestId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "r{}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micros_roundtrip() {
+        let m = Micros::from_secs_f64(1.5);
+        assert_eq!(m.0, 1_500_000);
+        assert!((m.as_secs_f64() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn micros_arithmetic() {
+        assert_eq!(Micros(3) + Micros(4), Micros(7));
+        assert_eq!(Micros(10) - Micros(4), Micros(6));
+        assert_eq!(Micros(10).saturating_sub(Micros(20)), Micros(0));
+        assert_eq!(Micros(3) * 4, Micros(12));
+        let total: Micros = [Micros(1), Micros(2)].into_iter().sum();
+        assert_eq!(total, Micros(3));
+    }
+
+    #[test]
+    fn tokens_bytes() {
+        // gptj-tiny: 2 * 4 layers * 4 heads * 32 dim * 4 bytes = 4096 B/tok
+        assert_eq!(Tokens(10).bytes(4096), 40_960);
+    }
+
+    #[test]
+    fn negative_secs_clamped() {
+        assert_eq!(Micros::from_secs_f64(-1.0), Micros::ZERO);
+    }
+}

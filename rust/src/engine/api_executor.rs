@@ -1,0 +1,115 @@
+//! In-flight API call tracking: the simulated external-API substrate
+//! (DESIGN.md §2 — real augmentation services are replaced by their
+//! published latency distributions; the true per-call duration is sampled
+//! by the workload generator and carried in the spec).
+//!
+//! Keeps a min-heap of (return_at, request) plus per-strategy membership
+//! (Algorithm 1's PQueue / DQueue / SQueue).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::core::request::HandlingStrategy;
+use crate::core::types::{Micros, RequestId};
+
+#[derive(Debug, Default)]
+pub struct ApiExecutor {
+    heap: BinaryHeap<Reverse<(Micros, RequestId)>>,
+    /// Counts per strategy (PQueue/DQueue/SQueue sizes, for metrics).
+    preserve: usize,
+    discard: usize,
+    swap: usize,
+}
+
+impl ApiExecutor {
+    pub fn new() -> ApiExecutor {
+        ApiExecutor::default()
+    }
+
+    /// Begin an API call for `id`, returning at `return_at`, held under
+    /// `strategy`.
+    pub fn begin(&mut self, id: RequestId, return_at: Micros,
+                 strategy: HandlingStrategy) {
+        self.heap.push(Reverse((return_at, id)));
+        match strategy {
+            HandlingStrategy::Preserve => self.preserve += 1,
+            HandlingStrategy::Discard => self.discard += 1,
+            HandlingStrategy::Swap => self.swap += 1,
+        }
+    }
+
+    /// Earliest pending return time.
+    pub fn next_return(&self) -> Option<Micros> {
+        self.heap.peek().map(|Reverse((t, _))| *t)
+    }
+
+    /// Pop every call that has returned by `now`.
+    pub fn drain_returned(&mut self, now: Micros,
+                          mut on_return: impl FnMut(RequestId)) {
+        while let Some(Reverse((t, _))) = self.heap.peek() {
+            if *t > now {
+                break;
+            }
+            let Reverse((_, id)) = self.heap.pop().unwrap();
+            on_return(id);
+        }
+    }
+
+    /// Caller must tell us which strategy the drained request was held
+    /// under so queue counts stay accurate.
+    pub fn note_returned(&mut self, strategy: HandlingStrategy) {
+        match strategy {
+            HandlingStrategy::Preserve => self.preserve -= 1,
+            HandlingStrategy::Discard => self.discard -= 1,
+            HandlingStrategy::Swap => self.swap -= 1,
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn queue_sizes(&self) -> (usize, usize, usize) {
+        (self.preserve, self.discard, self.swap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn returns_in_time_order() {
+        let mut ex = ApiExecutor::new();
+        ex.begin(RequestId(1), Micros(300), HandlingStrategy::Preserve);
+        ex.begin(RequestId(2), Micros(100), HandlingStrategy::Discard);
+        ex.begin(RequestId(3), Micros(200), HandlingStrategy::Swap);
+        assert_eq!(ex.next_return(), Some(Micros(100)));
+        let mut order = Vec::new();
+        ex.drain_returned(Micros(250), |id| order.push(id));
+        assert_eq!(order, vec![RequestId(2), RequestId(3)]);
+        assert_eq!(ex.in_flight(), 1);
+        assert_eq!(ex.next_return(), Some(Micros(300)));
+    }
+
+    #[test]
+    fn queue_counts() {
+        let mut ex = ApiExecutor::new();
+        ex.begin(RequestId(1), Micros(10), HandlingStrategy::Preserve);
+        ex.begin(RequestId(2), Micros(20), HandlingStrategy::Preserve);
+        ex.begin(RequestId(3), Micros(30), HandlingStrategy::Swap);
+        assert_eq!(ex.queue_sizes(), (2, 0, 1));
+        ex.drain_returned(Micros(15), |_| {});
+        ex.note_returned(HandlingStrategy::Preserve);
+        assert_eq!(ex.queue_sizes(), (1, 0, 1));
+    }
+
+    #[test]
+    fn empty_is_idle() {
+        let mut ex = ApiExecutor::new();
+        assert_eq!(ex.next_return(), None);
+        let mut called = false;
+        ex.drain_returned(Micros(1_000_000), |_| called = true);
+        assert!(!called);
+    }
+}

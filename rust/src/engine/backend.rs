@@ -1,0 +1,124 @@
+//! Execution backends: the engine's scheduling logic is backend-agnostic;
+//! a [`Backend`] supplies the *cost* (and, for PJRT, the actual compute) of
+//! prefill, decode, and swap operations.
+//!
+//! - [`SimBackend`] — analytic cost model over a virtual clock; used for
+//!   paper-scale figure sweeps (API durations up to ~30 s x thousands of
+//!   requests cannot run in wall-clock).
+//! - [`crate::engine::pjrt_backend::PjrtBackend`] — real token generation
+//!   through the AOT-compiled HLO artifacts.
+
+use crate::config::CostModel;
+use crate::core::types::{Micros, RequestId, Tokens};
+
+/// One member of a decode batch.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeSlot {
+    pub id: RequestId,
+    /// Live context size (tokens with KV entries) for this request.
+    pub ctx: Tokens,
+}
+
+/// Execution backend contract. All methods return the elapsed time of the
+/// operation (virtual for the simulator, measured for PJRT).
+pub trait Backend {
+    /// Hard cap on concurrently resident sequences (PJRT executables have
+    /// a fixed batch dimension). `None` = unbounded.
+    fn slot_capacity(&self) -> Option<usize> {
+        None
+    }
+
+    /// Hard cap on per-request context length. `None` = unbounded.
+    fn max_context(&self) -> Option<u64> {
+        None
+    }
+
+    /// Materialize context for `id` (prompt prefill, post-Discard
+    /// recompute, or API-response append). `total_ctx` is the full
+    /// logical context after materialization; `increment` is the newly
+    /// materialized part (what an incremental system computes — the
+    /// simulator charges prefill cost on it). `prompt` is the request's
+    /// prompt text (used by real backends; the simulator ignores it).
+    fn materialize(&mut self, id: RequestId, prompt: &str,
+                   total_ctx: Tokens, increment: Tokens) -> Micros;
+
+    /// One decode iteration over `batch`: every slot appends one token.
+    fn decode(&mut self, batch: &[DecodeSlot]) -> Micros;
+
+    /// Move `ctx` tokens of `id`'s KV state to host memory.
+    fn swap_out(&mut self, id: RequestId, ctx: Tokens) -> Micros;
+
+    /// Restore `id`'s KV state from host memory.
+    fn swap_in(&mut self, id: RequestId, ctx: Tokens) -> Micros;
+
+    /// Drop all backend state for `id` (finished or preempted).
+    fn release(&mut self, id: RequestId);
+
+    /// Downcast hook (used to reach PJRT-specific accessors like
+    /// generated-token histories from behind the trait object).
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
+}
+
+/// Analytic backend: charges the configured [`CostModel`], generates no
+/// real tokens.
+#[derive(Debug, Clone)]
+pub struct SimBackend {
+    pub cost: CostModel,
+}
+
+impl SimBackend {
+    pub fn new(cost: CostModel) -> SimBackend {
+        SimBackend { cost }
+    }
+}
+
+impl Backend for SimBackend {
+    fn materialize(&mut self, _id: RequestId, _prompt: &str,
+                   _total_ctx: Tokens, increment: Tokens) -> Micros {
+        self.cost.prefill_time(increment)
+    }
+
+    fn decode(&mut self, batch: &[DecodeSlot]) -> Micros {
+        let total_ctx: Tokens = batch.iter().map(|s| s.ctx).sum();
+        self.cost.decode_iter_time(total_ctx)
+    }
+
+    fn swap_out(&mut self, _id: RequestId, ctx: Tokens) -> Micros {
+        self.cost.swap_time(ctx)
+    }
+
+    fn swap_in(&mut self, _id: RequestId, ctx: Tokens) -> Micros {
+        self.cost.swap_time(ctx)
+    }
+
+    fn release(&mut self, _id: RequestId) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_costs_match_model() {
+        let mut b = SimBackend::new(CostModel::paper_scale());
+        assert_eq!(b.materialize(RequestId(1), "", Tokens(150),
+                                 Tokens(100)),
+                   Micros(10_000));
+        let batch = [
+            DecodeSlot { id: RequestId(1), ctx: Tokens(100) },
+            DecodeSlot { id: RequestId(2), ctx: Tokens(200) },
+        ];
+        assert_eq!(b.decode(&batch), Micros(10_300));
+        assert_eq!(b.swap_out(RequestId(1), Tokens(10)), Micros(1300));
+        assert_eq!(b.swap_in(RequestId(1), Tokens(10)), Micros(1300));
+    }
+
+    #[test]
+    fn sim_unbounded() {
+        let b = SimBackend::new(CostModel::unit());
+        assert_eq!(b.slot_capacity(), None);
+        assert_eq!(b.max_context(), None);
+    }
+}

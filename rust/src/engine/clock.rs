@@ -1,0 +1,98 @@
+//! Virtual vs. wall clock. The engine advances time after each unit of
+//! work and jumps/waits when idle; which of those is a simulation update
+//! or a real sleep is the only difference between bench runs and live
+//! serving.
+
+use std::time::Instant;
+
+use crate::core::types::Micros;
+
+#[derive(Debug)]
+pub enum Clock {
+    /// Discrete-event time: `advance` adds, `wait_until` jumps.
+    Virtual { now: Micros },
+    /// Real time anchored at engine start: `advance` re-reads the wall
+    /// clock (the work already took the time), `wait_until` sleeps.
+    Wall { start: Instant },
+}
+
+impl Clock {
+    pub fn virtual_clock() -> Clock {
+        Clock::Virtual { now: Micros::ZERO }
+    }
+
+    pub fn wall_clock() -> Clock {
+        Clock::Wall { start: Instant::now() }
+    }
+
+    pub fn now(&self) -> Micros {
+        match self {
+            Clock::Virtual { now } => *now,
+            Clock::Wall { start } => {
+                Micros(start.elapsed().as_micros() as u64)
+            }
+        }
+    }
+
+    /// Account for `elapsed` of work just performed.
+    pub fn advance(&mut self, elapsed: Micros) -> Micros {
+        match self {
+            Clock::Virtual { now } => {
+                *now += elapsed;
+                *now
+            }
+            // Wall time already passed while the backend executed.
+            Clock::Wall { .. } => self.now(),
+        }
+    }
+
+    /// Block (or jump) until `target`; returns the new now.
+    pub fn wait_until(&mut self, target: Micros) -> Micros {
+        match self {
+            Clock::Virtual { now } => {
+                if target > *now {
+                    *now = target;
+                }
+                *now
+            }
+            Clock::Wall { .. } => {
+                let now = self.now();
+                if target > now {
+                    std::thread::sleep(std::time::Duration::from_micros(
+                        (target - now).0));
+                }
+                self.now()
+            }
+        }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_advance_and_jump() {
+        let mut c = Clock::virtual_clock();
+        assert_eq!(c.now(), Micros::ZERO);
+        assert_eq!(c.advance(Micros(100)), Micros(100));
+        assert_eq!(c.wait_until(Micros(500)), Micros(500));
+        // waiting into the past is a no-op
+        assert_eq!(c.wait_until(Micros(10)), Micros(500));
+    }
+
+    #[test]
+    fn wall_clock_monotone() {
+        let mut c = Clock::wall_clock();
+        let a = c.now();
+        let b = c.advance(Micros(1)); // ignored; reads real time
+        assert!(b >= a);
+        let target = c.now() + Micros(2_000);
+        let after = c.wait_until(target);
+        assert!(after >= target);
+    }
+}

@@ -1,0 +1,217 @@
+//! Real-compute backend: token generation through the AOT-compiled HLO
+//! executables on the PJRT CPU client.
+//!
+//! Each live request owns a compact per-request KV buffer
+//! (L, S, H, D) host-side plus its token history. For every prefill /
+//! decode call the backend packs up to `B` requests into the executable's
+//! fixed-shape batch tensors and merges the updated slices back. Elapsed
+//! times are measured wall-clock, so the engine's metrics reflect real
+//! compute.
+//!
+//! Control lengths (segment boundaries, API trigger points) remain
+//! spec-driven so traces stay comparable with the simulator; the token
+//! *values* are the model's real greedy outputs and are retrievable via
+//! [`PjrtBackend::generated_tokens`].
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::core::types::{Micros, RequestId, Tokens};
+use crate::engine::backend::{Backend, DecodeSlot};
+use crate::runtime::ModelRuntime;
+use crate::util::tokenizer;
+
+/// Filler token used when a request's logical context outgrows its known
+/// token history (synthetic API-response tokens).
+const FILLER_TOKEN: i32 = 5;
+
+struct RequestState {
+    /// Token ids whose KV entries are materialized (history[..kv_len]).
+    history: Vec<i32>,
+    /// Compact (L, S, H, D) caches.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Tokens of `history` covered by the caches.
+    kv_len: usize,
+    /// Model-generated tokens (for inspection).
+    generated: Vec<i32>,
+    /// Next token to feed the decoder.
+    last_token: i32,
+}
+
+pub struct PjrtBackend {
+    model: ModelRuntime,
+    states: HashMap<RequestId, RequestState>,
+    /// Generated-token histories of released (finished) requests, kept so
+    /// callers can fetch outputs after completion.
+    finished: HashMap<RequestId, Vec<i32>>,
+    max_context_margin: u64,
+}
+
+impl PjrtBackend {
+    pub fn new(model: ModelRuntime) -> PjrtBackend {
+        PjrtBackend {
+            model,
+            states: HashMap::new(),
+            finished: HashMap::new(),
+            max_context_margin: 2,
+        }
+    }
+
+    pub fn model(&self) -> &ModelRuntime {
+        &self.model
+    }
+
+    /// Real token ids the model produced for `id` so far (live or
+    /// finished).
+    pub fn generated_tokens(&self, id: RequestId) -> Option<&[i32]> {
+        self.states
+            .get(&id)
+            .map(|s| s.generated.as_slice())
+            .or_else(|| self.finished.get(&id).map(|v| v.as_slice()))
+    }
+
+    fn state_entry(&mut self, id: RequestId) -> &mut RequestState {
+        let model = &self.model;
+        // Reclaim any generated history parked by a previous release
+        // (Discard drops device state, not the token record).
+        let parked = self.finished.remove(&id).unwrap_or_default();
+        self.states.entry(id).or_insert_with(|| RequestState {
+            history: Vec::new(),
+            k: model.zero_kv_slot(),
+            v: model.zero_kv_slot(),
+            kv_len: 0,
+            generated: parked,
+            last_token: tokenizer::BOS_ID,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn slot_capacity(&self) -> Option<usize> {
+        Some(self.model.meta.batch)
+    }
+
+    fn max_context(&self) -> Option<u64> {
+        Some(self.model.meta.max_seq as u64 - self.max_context_margin)
+    }
+
+    fn materialize(&mut self, id: RequestId, prompt: &str,
+                   total_ctx: Tokens, _increment: Tokens) -> Micros {
+        let ctx = total_ctx;
+        let start = Instant::now();
+        let max_seq = self.model.meta.max_seq;
+        {
+            let state = self.state_entry(id);
+            // (Re)build the token history to the requested context size:
+            // prompt tokens, then whatever the model generated, then
+            // filler standing in for API-response tokens.
+            let mut history: Vec<i32> = Vec::new();
+            if !prompt.is_empty() {
+                let n = tokenizer::valid_len(prompt, max_seq);
+                history.extend(&tokenizer::encode(prompt, max_seq)[..n]);
+            }
+            let mut gen_iter = state.generated.iter().copied();
+            while history.len() < ctx.0 as usize {
+                history.push(gen_iter.next().unwrap_or(FILLER_TOKEN));
+            }
+            history.truncate((ctx.0 as usize).min(max_seq));
+            state.history = history;
+        }
+
+        // Pack into slot 0 of the batch and prefill.
+        let b = self.model.meta.batch;
+        let mut tokens = vec![tokenizer::PAD_ID; b * max_seq];
+        let mut lengths = vec![0i32; b];
+        let state = &self.states[&id];
+        let n = state.history.len().max(1);
+        let mut history = state.history.clone();
+        if history.is_empty() {
+            history.push(tokenizer::BOS_ID);
+        }
+        tokens[..n].copy_from_slice(&history[..n]);
+        lengths[0] = n as i32;
+        let result = self
+            .model
+            .run_prefill(&tokens, &lengths)
+            .expect("prefill execution");
+        let state = self.states.get_mut(&id).unwrap();
+        state.k = self.model.extract_slot(&result.k, 0);
+        state.v = self.model.extract_slot(&result.v, 0);
+        state.kv_len = n;
+        state.last_token = result.next_tokens[0];
+        Micros(start.elapsed().as_micros() as u64)
+    }
+
+    fn decode(&mut self, batch: &[DecodeSlot]) -> Micros {
+        if batch.is_empty() {
+            return Micros::ZERO;
+        }
+        let start = Instant::now();
+        let b = self.model.meta.batch;
+        assert!(batch.len() <= b, "engine must respect slot_capacity");
+
+        let mut token = vec![tokenizer::PAD_ID; b];
+        let mut pos = vec![0i32; b];
+        let mut k = self.model.zero_kv();
+        let mut v = self.model.zero_kv();
+        for (slot, ds) in batch.iter().enumerate() {
+            let state = &self.states[&ds.id];
+            token[slot] = state.last_token;
+            pos[slot] =
+                (state.kv_len as i32).min(self.model.meta.max_seq as i32 - 1);
+            self.model.insert_slot(&mut k, slot, &state.k);
+            self.model.insert_slot(&mut v, slot, &state.v);
+        }
+        let result = self
+            .model
+            .run_decode(&token, &pos, &k, &v)
+            .expect("decode execution");
+        for (slot, ds) in batch.iter().enumerate() {
+            let new_k = self.model.extract_slot(&result.k, slot);
+            let new_v = self.model.extract_slot(&result.v, slot);
+            let state = self.states.get_mut(&ds.id).unwrap();
+            state.k = new_k;
+            state.v = new_v;
+            let tok = result.next_tokens[slot];
+            state.history.push(state.last_token);
+            state.kv_len = (state.kv_len + 1).min(self.model.meta.max_seq);
+            state.generated.push(tok);
+            state.last_token = tok;
+        }
+        Micros(start.elapsed().as_micros() as u64)
+    }
+
+    fn swap_out(&mut self, _id: RequestId, _ctx: Tokens) -> Micros {
+        // KV already lives host-side in this CPU deployment; the "swap"
+        // is a bookkeeping move. A GPU/TPU deployment would transfer the
+        // compact buffers here.
+        Micros::ZERO
+    }
+
+    fn swap_in(&mut self, _id: RequestId, _ctx: Tokens) -> Micros {
+        Micros::ZERO
+    }
+
+    fn release(&mut self, id: RequestId) {
+        if let Some(state) = self.states.remove(&id) {
+            if !state.generated.is_empty() {
+                self.finished
+                    .entry(id)
+                    .or_default()
+                    .extend(state.generated);
+            }
+        }
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+impl ModelRuntime {
+    /// Compact per-request KV buffer (L, S, H, D), zeroed.
+    pub fn zero_kv_slot(&self) -> Vec<f32> {
+        vec![0.0; self.meta.n_layers * self.slot_stride()]
+    }
+}

@@ -1,0 +1,289 @@
+//! vLLM-style paged KV-cache block manager.
+//!
+//! The device KV budget is divided into fixed-size blocks of
+//! `block_size` token slots. Each live request owns an ordered list of
+//! physical blocks; the last block may be partially filled. This gives the
+//! engine exact token-granular admission accounting (what the paper's
+//! scheduler reasons about) plus the physical block indices the PJRT
+//! backend uses to place sequences into fixed-shape cache slots.
+
+use std::collections::HashMap;
+
+use crate::core::types::{RequestId, Tokens};
+
+/// Physical block index.
+pub type BlockId = u32;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KvError {
+    /// Not enough free blocks for the allocation.
+    OutOfMemory {
+        requested: Tokens,
+        free: Tokens,
+    },
+    /// Request has no allocation.
+    UnknownRequest(RequestId),
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfMemory { requested, free } => {
+                write!(f, "KV OOM: requested {requested}, free {free}")
+            }
+            KvError::UnknownRequest(id) => {
+                write!(f, "no KV allocation for {id}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
+#[derive(Debug, Clone)]
+struct Allocation {
+    blocks: Vec<BlockId>,
+    tokens: u64,
+}
+
+/// Paged block manager.
+#[derive(Debug, Clone)]
+pub struct BlockManager {
+    block_size: u64,
+    free_blocks: Vec<BlockId>,
+    total_blocks: u64,
+    allocs: HashMap<RequestId, Allocation>,
+    /// Running sum of allocated tokens (logical).
+    used_tokens: u64,
+    /// High-water mark of block usage, for reporting.
+    peak_blocks_used: u64,
+}
+
+impl BlockManager {
+    /// `budget` is rounded *down* to whole blocks.
+    pub fn new(budget: Tokens, block_size: u64) -> BlockManager {
+        assert!(block_size > 0, "block_size must be positive");
+        let total_blocks = budget.0 / block_size;
+        BlockManager {
+            block_size,
+            free_blocks: (0..total_blocks as u32).rev().collect(),
+            total_blocks,
+            allocs: HashMap::new(),
+            used_tokens: 0,
+            peak_blocks_used: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> u64 {
+        self.block_size
+    }
+
+    /// Token capacity (whole blocks).
+    pub fn capacity(&self) -> Tokens {
+        Tokens(self.total_blocks * self.block_size)
+    }
+
+    /// Tokens logically allocated.
+    pub fn used_tokens(&self) -> Tokens {
+        Tokens(self.used_tokens)
+    }
+
+    /// Tokens physically reserved (whole blocks), >= used_tokens.
+    pub fn reserved_tokens(&self) -> Tokens {
+        Tokens((self.total_blocks - self.free_blocks.len() as u64)
+            * self.block_size)
+    }
+
+    /// Tokens still allocatable (whole-block granularity, i.e. what a new
+    /// allocation can actually get).
+    pub fn free_tokens(&self) -> Tokens {
+        Tokens(self.free_blocks.len() as u64 * self.block_size)
+    }
+
+    /// Fraction of capacity physically in use, in [0, 1].
+    pub fn occupancy(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 0.0;
+        }
+        1.0 - self.free_blocks.len() as f64 / self.total_blocks as f64
+    }
+
+    /// Internal fragmentation: reserved-but-unused token slots.
+    pub fn fragmentation(&self) -> Tokens {
+        self.reserved_tokens() - self.used_tokens()
+    }
+
+    pub fn peak_blocks_used(&self) -> u64 {
+        self.peak_blocks_used
+    }
+
+    /// Does `req` have an allocation?
+    pub fn contains(&self, req: RequestId) -> bool {
+        self.allocs.contains_key(&req)
+    }
+
+    /// Tokens allocated to `req` (0 if none).
+    pub fn tokens_of(&self, req: RequestId) -> Tokens {
+        Tokens(self.allocs.get(&req).map(|a| a.tokens).unwrap_or(0))
+    }
+
+    /// Physical block list of `req`.
+    pub fn blocks_of(&self, req: RequestId) -> Option<&[BlockId]> {
+        self.allocs.get(&req).map(|a| a.blocks.as_slice())
+    }
+
+    /// Would an allocation/growth of `tokens` for `req` succeed right now?
+    pub fn can_fit(&self, req: RequestId, tokens: Tokens) -> bool {
+        let existing = self.allocs.get(&req);
+        let cur_tokens = existing.map(|a| a.tokens).unwrap_or(0);
+        let cur_blocks = existing.map(|a| a.blocks.len() as u64).unwrap_or(0);
+        let needed_blocks =
+            (cur_tokens + tokens.0).div_ceil(self.block_size);
+        needed_blocks.saturating_sub(cur_blocks)
+            <= self.free_blocks.len() as u64
+    }
+
+    /// Allocate (or grow by) `tokens` for `req`.
+    pub fn allocate(&mut self, req: RequestId, tokens: Tokens)
+                    -> Result<(), KvError> {
+        if tokens == Tokens::ZERO {
+            self.allocs.entry(req).or_insert(Allocation {
+                blocks: Vec::new(),
+                tokens: 0,
+            });
+            return Ok(());
+        }
+        if !self.can_fit(req, tokens) {
+            return Err(KvError::OutOfMemory {
+                requested: tokens,
+                free: self.free_tokens(),
+            });
+        }
+        let alloc = self.allocs.entry(req).or_insert(Allocation {
+            blocks: Vec::new(),
+            tokens: 0,
+        });
+        let needed_blocks =
+            (alloc.tokens + tokens.0).div_ceil(self.block_size);
+        while (alloc.blocks.len() as u64) < needed_blocks {
+            alloc.blocks.push(self.free_blocks.pop().expect("can_fit held"));
+        }
+        alloc.tokens += tokens.0;
+        self.used_tokens += tokens.0;
+        self.peak_blocks_used = self
+            .peak_blocks_used
+            .max(self.total_blocks - self.free_blocks.len() as u64);
+        Ok(())
+    }
+
+    /// Grow `req` by one token (the per-iteration decode append).
+    pub fn append_token(&mut self, req: RequestId) -> Result<(), KvError> {
+        if !self.allocs.contains_key(&req) {
+            return Err(KvError::UnknownRequest(req));
+        }
+        self.allocate(req, Tokens(1))
+    }
+
+    /// Release the entire allocation of `req`, returning its token count.
+    pub fn free(&mut self, req: RequestId) -> Result<Tokens, KvError> {
+        let alloc = self
+            .allocs
+            .remove(&req)
+            .ok_or(KvError::UnknownRequest(req))?;
+        self.free_blocks.extend(alloc.blocks.iter().rev());
+        self.used_tokens -= alloc.tokens;
+        Ok(Tokens(alloc.tokens))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rid(n: u64) -> RequestId {
+        RequestId(n)
+    }
+
+    #[test]
+    fn capacity_rounds_down() {
+        let m = BlockManager::new(Tokens(100), 16);
+        assert_eq!(m.capacity(), Tokens(96));
+        assert_eq!(m.free_tokens(), Tokens(96));
+    }
+
+    #[test]
+    fn allocate_and_free_roundtrip() {
+        let mut m = BlockManager::new(Tokens(64), 16);
+        m.allocate(rid(1), Tokens(20)).unwrap();
+        assert_eq!(m.tokens_of(rid(1)), Tokens(20));
+        assert_eq!(m.reserved_tokens(), Tokens(32)); // 2 blocks
+        assert_eq!(m.fragmentation(), Tokens(12));
+        assert_eq!(m.free(rid(1)).unwrap(), Tokens(20));
+        assert_eq!(m.used_tokens(), Tokens::ZERO);
+        assert_eq!(m.free_tokens(), Tokens(64));
+    }
+
+    #[test]
+    fn append_token_grows_blocks_lazily() {
+        let mut m = BlockManager::new(Tokens(32), 16);
+        m.allocate(rid(1), Tokens(15)).unwrap();
+        assert_eq!(m.blocks_of(rid(1)).unwrap().len(), 1);
+        m.append_token(rid(1)).unwrap(); // 16th token: still 1 block
+        assert_eq!(m.blocks_of(rid(1)).unwrap().len(), 1);
+        m.append_token(rid(1)).unwrap(); // 17th: needs a second block
+        assert_eq!(m.blocks_of(rid(1)).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn oom_reported_and_state_unchanged() {
+        let mut m = BlockManager::new(Tokens(32), 16);
+        m.allocate(rid(1), Tokens(30)).unwrap();
+        let err = m.allocate(rid(2), Tokens(20)).unwrap_err();
+        assert!(matches!(err, KvError::OutOfMemory { .. }));
+        assert_eq!(m.tokens_of(rid(2)), Tokens::ZERO);
+        assert!(!m.contains(rid(2)));
+    }
+
+    #[test]
+    fn can_fit_accounts_partial_last_block() {
+        let mut m = BlockManager::new(Tokens(32), 16);
+        m.allocate(rid(1), Tokens(10)).unwrap();
+        // 6 slots left in r1's block + 1 free block = can fit 22 for r1...
+        assert!(m.can_fit(rid(1), Tokens(22)));
+        assert!(!m.can_fit(rid(1), Tokens(23)));
+        // ...but a new request only gets whole free blocks.
+        assert!(m.can_fit(rid(2), Tokens(16)));
+        assert!(!m.can_fit(rid(2), Tokens(17)));
+    }
+
+    #[test]
+    fn occupancy_and_peak() {
+        let mut m = BlockManager::new(Tokens(64), 16);
+        assert_eq!(m.occupancy(), 0.0);
+        m.allocate(rid(1), Tokens(32)).unwrap();
+        assert!((m.occupancy() - 0.5).abs() < 1e-9);
+        m.free(rid(1)).unwrap();
+        assert_eq!(m.occupancy(), 0.0);
+        assert_eq!(m.peak_blocks_used(), 2);
+    }
+
+    #[test]
+    fn unknown_request_errors() {
+        let mut m = BlockManager::new(Tokens(32), 16);
+        assert!(matches!(m.free(rid(9)), Err(KvError::UnknownRequest(_))));
+        assert!(matches!(m.append_token(rid(9)),
+                         Err(KvError::UnknownRequest(_))));
+    }
+
+    #[test]
+    fn blocks_are_unique_across_requests() {
+        let mut m = BlockManager::new(Tokens(64), 16);
+        m.allocate(rid(1), Tokens(20)).unwrap();
+        m.allocate(rid(2), Tokens(20)).unwrap();
+        let b1 = m.blocks_of(rid(1)).unwrap().to_vec();
+        let b2 = m.blocks_of(rid(2)).unwrap().to_vec();
+        for b in &b1 {
+            assert!(!b2.contains(b));
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Paged KV-cache accounting (vLLM-style block manager) + CPU swap space.
+
+pub mod block_manager;
+pub mod swap;
+
+pub use block_manager::{BlockManager, KvError};
+pub use swap::SwapSpace;

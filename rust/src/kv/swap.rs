@@ -1,0 +1,132 @@
+//! CPU swap space: destination for the Swap handling strategy.
+//!
+//! Tracks which requests' KV contexts are parked in host memory and
+//! charges the transfer-time cost model (eqn (3) charges `2 x T_swap(C)`:
+//! one transfer out, one back in).
+
+use std::collections::HashMap;
+
+use crate::config::CostModel;
+use crate::core::types::{Micros, RequestId, Tokens};
+
+#[derive(Debug, Clone)]
+pub struct SwapSpace {
+    capacity: Tokens,
+    parked: HashMap<RequestId, Tokens>,
+    used: u64,
+    /// Total tokens ever swapped out (traffic accounting for §Perf).
+    pub total_swapped_out: u64,
+    pub total_swapped_in: u64,
+}
+
+impl SwapSpace {
+    pub fn new(capacity: Tokens) -> SwapSpace {
+        SwapSpace {
+            capacity,
+            parked: HashMap::new(),
+            used: 0,
+            total_swapped_out: 0,
+            total_swapped_in: 0,
+        }
+    }
+
+    /// Effectively unlimited host memory (the paper's testbed has 503 GB
+    /// of RAM — host capacity is never the binding constraint).
+    pub fn unbounded() -> SwapSpace {
+        SwapSpace::new(Tokens(u64::MAX / 2))
+    }
+
+    pub fn used(&self) -> Tokens {
+        Tokens(self.used)
+    }
+
+    pub fn can_fit(&self, tokens: Tokens) -> bool {
+        self.used + tokens.0 <= self.capacity.0
+    }
+
+    pub fn contains(&self, req: RequestId) -> bool {
+        self.parked.contains_key(&req)
+    }
+
+    /// Park `tokens` of context for `req`; returns the transfer time.
+    pub fn swap_out(&mut self, req: RequestId, tokens: Tokens,
+                    cost: &CostModel) -> Option<Micros> {
+        if !self.can_fit(tokens) || self.parked.contains_key(&req) {
+            return None;
+        }
+        self.parked.insert(req, tokens);
+        self.used += tokens.0;
+        self.total_swapped_out += tokens.0;
+        Some(cost.swap_time(tokens))
+    }
+
+    /// Reload `req`'s context; returns (tokens, transfer time).
+    pub fn swap_in(&mut self, req: RequestId, cost: &CostModel)
+                   -> Option<(Tokens, Micros)> {
+        let tokens = self.parked.remove(&req)?;
+        self.used -= tokens.0;
+        self.total_swapped_in += tokens.0;
+        Some((tokens, cost.swap_time(tokens)))
+    }
+
+    /// Drop a parked context without reloading (request aborted).
+    pub fn discard(&mut self, req: RequestId) -> Option<Tokens> {
+        let tokens = self.parked.remove(&req)?;
+        self.used -= tokens.0;
+        Some(tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost() -> CostModel {
+        CostModel::paper_scale() // 30 us/token
+    }
+
+    #[test]
+    fn swap_roundtrip() {
+        let mut s = SwapSpace::new(Tokens(100));
+        let t = s.swap_out(RequestId(1), Tokens(50), &cost()).unwrap();
+        assert_eq!(t, Micros(2500)); // 1000 base + 50 x 30
+        assert_eq!(s.used(), Tokens(50));
+        assert!(s.contains(RequestId(1)));
+        let (tokens, t_in) = s.swap_in(RequestId(1), &cost()).unwrap();
+        assert_eq!(tokens, Tokens(50));
+        assert_eq!(t_in, Micros(2500));
+        assert_eq!(s.used(), Tokens::ZERO);
+        assert_eq!(s.total_swapped_out, 50);
+        assert_eq!(s.total_swapped_in, 50);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut s = SwapSpace::new(Tokens(60));
+        assert!(s.swap_out(RequestId(1), Tokens(50), &cost()).is_some());
+        assert!(s.swap_out(RequestId(2), Tokens(20), &cost()).is_none());
+        assert!(s.swap_out(RequestId(2), Tokens(10), &cost()).is_some());
+    }
+
+    #[test]
+    fn double_swap_out_rejected() {
+        let mut s = SwapSpace::unbounded();
+        assert!(s.swap_out(RequestId(1), Tokens(10), &cost()).is_some());
+        assert!(s.swap_out(RequestId(1), Tokens(10), &cost()).is_none());
+    }
+
+    #[test]
+    fn swap_in_unknown_is_none() {
+        let mut s = SwapSpace::unbounded();
+        assert!(s.swap_in(RequestId(7), &cost()).is_none());
+    }
+
+    #[test]
+    fn discard_drops_without_traffic() {
+        let mut s = SwapSpace::unbounded();
+        s.swap_out(RequestId(1), Tokens(25), &cost()).unwrap();
+        assert_eq!(s.discard(RequestId(1)), Some(Tokens(25)));
+        assert_eq!(s.total_swapped_in, 0);
+        assert_eq!(s.used(), Tokens::ZERO);
+    }
+}

@@ -1,0 +1,50 @@
+//! # LAMPS — LLM API- and Memory-based Predictive Scheduling
+//!
+//! Production-quality reproduction of *Fast Inference for Augmented Large
+//! Language Models* (Shahout et al., 2024) as a three-layer
+//! Rust + JAX + Pallas serving stack.
+//!
+//! The paper's contribution — a unified scheduler for API-augmented LLM
+//! requests that (1) predicts pre-API output length and API duration,
+//! (2) assigns the memory-handling strategy (Preserve / Discard / Swap)
+//! minimizing memory waste *before* the request runs, and (3) ranks requests
+//! by their **memory-over-time integral** — lives in [`coordinator`].
+//!
+//! Layer map (see `DESIGN.md`):
+//! - **L3 (this crate)**: scheduler, batcher, KV-cache manager, API
+//!   executor, baselines, workloads, metrics, CLI, serving frontend.
+//! - **L2/L1 (build-time Python)**: TinyGPT JAX model + Pallas attention
+//!   kernels, AOT-lowered to `artifacts/*.hlo.txt`.
+//! - **Runtime**: [`runtime`] loads the HLO artifacts via the PJRT C API
+//!   (`xla` crate) and executes them on the request path — Python is never
+//!   invoked at serving time.
+//!
+//! Quick start (simulated backend):
+//! ```no_run
+//! use lamps::config::SystemConfig;
+//! use lamps::engine::Engine;
+//! use lamps::workload::{infercept, ArrivalProcess};
+//!
+//! let cfg = SystemConfig::default();
+//! let trace = infercept::single_api_dataset(100, 2.0, 42);
+//! let mut engine = Engine::simulated(cfg);
+//! let report = engine.run_trace(&trace);
+//! println!("mean latency: {:.3}s", report.latency.mean_secs());
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod engine;
+pub mod kv;
+pub mod metrics;
+pub mod predictor;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;
+
+pub use config::SystemConfig;
+pub use core::request::{Request, RequestSpec};
+pub use core::types::{Micros, RequestId, Tokens};

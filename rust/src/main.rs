@@ -1,0 +1,280 @@
+//! `lamps` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//! - `serve`        JSON-lines TCP serving on the real PJRT model backend
+//! - `run`          run a dataset/trace through the simulator, print report
+//! - `gen-workload` write a synthetic dataset to a JSON trace file
+//! - `predict`      score a prompt with the AOT predictor
+//! - `info`         artifact + runtime environment report
+//!
+//! Argument parsing is hand-rolled (`--key value` pairs) — the offline
+//! vendor set has no clap.
+
+use anyhow::Result;
+
+use lamps::bench::{Dataset, ModelPreset};
+use lamps::config::SystemConfig;
+use lamps::core::types::Micros;
+use lamps::engine::pjrt_backend::PjrtBackend;
+use lamps::engine::Engine;
+use lamps::predictor::opt_classifier::PjrtPredictor;
+use lamps::runtime::{ArtifactMeta, ModelRuntime, PredictorRuntime,
+                     RuntimeClient};
+use lamps::workload::Trace;
+
+const USAGE: &str = "\
+lamps — LAMPS: predictive scheduling for augmented-LLM serving
+
+USAGE:
+  lamps serve   [--addr 127.0.0.1:7070] [--model gptj-tiny]
+                [--system lamps] [--artifacts artifacts]
+  lamps run     [--dataset single-api|multi-api|toolbench|<trace.json>]
+                [--system vllm|infercept|lamps|lamps-no-sched|sjf|sjf-total]
+                [--model gptj-6b|vicuna-13b] [--rate 3.0]
+                [--requests 500] [--seed 42] [--time-cap-secs N]
+                [--timeline]
+  lamps gen-workload --out trace.json [--dataset single-api] [--rate 3.0]
+                [--requests 500] [--seed 42]
+  lamps predict <prompt> [--artifacts artifacts]
+  lamps info    [--artifacts artifacts]
+";
+
+/// Tiny `--key value` argument map (no clap in the offline vendor set).
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // boolean flags: next token missing or another --flag
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn parse_dataset(name: &str) -> Option<Dataset> {
+    match name {
+        "single-api" => Some(Dataset::SingleApi),
+        "multi-api" => Some(Dataset::MultiApi),
+        "toolbench" => Some(Dataset::ToolBench),
+        _ => None,
+    }
+}
+
+fn parse_model(name: &str) -> ModelPreset {
+    match name {
+        "vicuna-13b" => ModelPreset::Vicuna13b,
+        _ => ModelPreset::GptJ6b,
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(command) = argv.first() else {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    };
+    let args = Args::parse(&argv[1..]);
+    match command.as_str() {
+        "serve" => serve(&args),
+        "run" => run(&args),
+        "gen-workload" => gen_workload(&args),
+        "predict" => predict(&args),
+        "info" => info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let addr = args.get("addr", "127.0.0.1:7070");
+    let model = args.get("model", "gptj-tiny");
+    let system = args.get("system", "lamps");
+    let artifacts = args.get("artifacts", "artifacts");
+
+    // Validate artifacts up front (nice errors before the thread starts).
+    let meta = ArtifactMeta::load(artifacts)?;
+    meta.model(model)?;
+    let base_cfg = SystemConfig::preset(system)
+        .ok_or_else(|| anyhow::anyhow!("unknown system preset {system}"))?;
+
+    // PJRT handles are not Send: build them inside the engine thread.
+    let model_name = model.to_string();
+    let artifacts_dir = artifacts.to_string();
+    let (handle, _join) = lamps::server::spawn(move || {
+        let meta = ArtifactMeta::load(&artifacts_dir).expect("artifacts");
+        let client = RuntimeClient::cpu().expect("PJRT client");
+        let model_rt = ModelRuntime::load(&client, &meta, &model_name)
+            .expect("model artifacts");
+        let pred_rt =
+            PredictorRuntime::load(&client, &meta).expect("predictor");
+        let mut cfg = base_cfg;
+        // Real backend: budget = what the fixed-shape executables hold.
+        cfg.memory_budget = lamps::core::types::Tokens(
+            (model_rt.meta.batch * model_rt.meta.max_seq) as u64);
+        cfg.max_batch = model_rt.meta.batch;
+        cfg.block_size = 16;
+        let backend = Box::new(PjrtBackend::new(model_rt));
+        let predictor = Box::new(PjrtPredictor::new(pred_rt));
+        (cfg, backend as Box<dyn lamps::engine::backend::Backend>,
+         predictor as Box<dyn lamps::predictor::Predictor>)
+    });
+    lamps::server::serve_tcp(handle, addr)
+}
+
+fn run(args: &Args) -> Result<()> {
+    let dataset = args.get("dataset", "single-api");
+    let system = args.get("system", "lamps");
+    let model = args.get("model", "gptj-6b");
+    let rate = args.get_f64("rate", 3.0);
+    let requests = args.get_usize("requests", 500);
+    let seed = args.get_u64("seed", 42);
+
+    let trace = if dataset.ends_with(".json") {
+        Trace::load_json(dataset)?
+    } else {
+        parse_dataset(dataset)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?
+            .generate(requests, rate, seed)
+    };
+    let mut cfg = SystemConfig::preset(system)
+        .ok_or_else(|| anyhow::anyhow!("unknown system preset {system}"))?;
+    cfg.cost = parse_model(model).cost();
+    cfg.seed = seed;
+    if let Some(budget) = args.flags.get("budget") {
+        cfg.memory_budget =
+            lamps::core::types::Tokens(budget.parse().unwrap_or(44_000));
+    }
+    if let Some(batch) = args.flags.get("max-batch") {
+        cfg.max_batch = batch.parse().unwrap_or(cfg.max_batch);
+    }
+    if args.has("no-lookahead") {
+        cfg.admission_lookahead = false;
+    }
+    let mut engine = Engine::simulated(cfg);
+    engine.record_timeline = args.has("timeline");
+    let cap = args
+        .flags
+        .get("time-cap-secs")
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Micros::from_secs_f64);
+    let report = engine.run_trace_limited(&trace, cap);
+    println!("{}", report.to_json(args.has("timeline")));
+    eprintln!(
+        "\n{} on {} ({} reqs @ {}/s): latency mean {:.3}s p99 {:.3}s | \
+         ttft mean {:.3}s p99 {:.3}s | throughput {:.3} r/s | \
+         {} completed, {} preemptions",
+        system, trace.name, trace.len(), trace.rate,
+        report.latency.mean_secs(), report.latency.p99_secs(),
+        report.ttft.mean_secs(), report.ttft.p99_secs(),
+        report.throughput_rps, report.completed, report.preemptions);
+    Ok(())
+}
+
+fn gen_workload(args: &Args) -> Result<()> {
+    let dataset = args.get("dataset", "single-api");
+    let rate = args.get_f64("rate", 3.0);
+    let requests = args.get_usize("requests", 500);
+    let seed = args.get_u64("seed", 42);
+    let out = args
+        .flags
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out is required"))?;
+    let trace = parse_dataset(dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?
+        .generate(requests, rate, seed);
+    trace.save_json(out)?;
+    eprintln!("wrote {} requests to {out}", trace.len());
+    Ok(())
+}
+
+fn predict(args: &Args) -> Result<()> {
+    let prompt = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: lamps predict <prompt>"))?;
+    let artifacts = args.get("artifacts", "artifacts");
+    let meta = ArtifactMeta::load(artifacts)?;
+    let client = RuntimeClient::cpu()?;
+    let pred = PredictorRuntime::load(&client, &meta)?;
+    let bin = pred.predict_bin(prompt)?;
+    println!("bin {} (~{} tokens)", bin, pred.bin_to_tokens(bin));
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts", "artifacts");
+    let meta = ArtifactMeta::load(artifacts)?;
+    let client = RuntimeClient::cpu()?;
+    println!("platform: {} ({} devices)", client.platform(),
+             client.device_count());
+    println!("artifacts: {}", meta.dir.display());
+    let mut names: Vec<_> = meta.models.keys().collect();
+    names.sort();
+    for name in names {
+        let m = &meta.models[name];
+        println!("  model {name}: {}L x {}H x {}d, seq {}, batch {}, \
+                  {} B/token KV",
+                 m.n_layers, m.n_heads, m.head_dim, m.max_seq, m.batch,
+                 m.kv_bytes_per_token);
+    }
+    println!("  predictor: {} bins x {} tokens, acc5 {:.3}, acc15 {:.3}, \
+              MAE {:.2} words",
+             meta.predictor.num_bins, meta.predictor.bin_width,
+             meta.predictor.acc5, meta.predictor.acc15,
+             meta.predictor.mae_words);
+    Ok(())
+}

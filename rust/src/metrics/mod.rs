@@ -1,0 +1,327 @@
+//! Serving metrics: end-to-end latency, TTFT, throughput (the paper's
+//! §6.1 metrics, each reported as mean and P99), plus the KV-occupancy /
+//! completion timelines behind Fig 2.
+
+use crate::core::types::{Micros, RequestId};
+
+/// Summary statistics over a set of duration samples.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[Micros]) -> Summary {
+        if samples.is_empty() {
+            return Summary::default();
+        }
+        let mut xs: Vec<u64> = samples.iter().map(|m| m.0).collect();
+        xs.sort_unstable();
+        let n = xs.len();
+        Summary {
+            n,
+            mean_us: xs.iter().map(|&x| x as f64).sum::<f64>() / n as f64,
+            p50_us: percentile(&xs, 0.50),
+            p99_us: percentile(&xs, 0.99),
+            max_us: xs[n - 1] as f64,
+        }
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_us / 1e6
+    }
+
+    pub fn p99_secs(&self) -> f64 {
+        self.p99_us / 1e6
+    }
+}
+
+/// Nearest-rank percentile on a sorted slice.
+fn percentile(sorted: &[u64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize)
+        .clamp(1, sorted.len());
+    sorted[rank - 1] as f64
+}
+
+/// Per-request lifecycle record.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestRecord {
+    pub id: RequestId,
+    pub arrival: Micros,
+    pub first_token: Option<Micros>,
+    pub finished: Option<Micros>,
+}
+
+impl RequestRecord {
+    pub fn latency(&self) -> Option<Micros> {
+        self.finished.map(|f| f - self.arrival)
+    }
+
+    pub fn ttft(&self) -> Option<Micros> {
+        self.first_token.map(|t| t - self.arrival)
+    }
+}
+
+/// One sampled point of the Fig 2 timelines.
+#[derive(Debug, Clone, Copy)]
+pub struct TimelinePoint {
+    pub at: Micros,
+    /// KV cache physical occupancy in [0, 1].
+    pub kv_occupancy: f64,
+    /// Requests completed so far.
+    pub completed: usize,
+    /// Requests currently blocked on API calls.
+    pub in_api: usize,
+    /// Requests currently decoding.
+    pub running: usize,
+    /// KV tokens held by running requests.
+    pub held_running: u64,
+    /// KV tokens held by API-waiting (Preserve) requests.
+    pub held_api: u64,
+    /// KV tokens held by paused/waiting requests.
+    pub held_waiting: u64,
+}
+
+/// Collects lifecycle events during a run and produces the final report.
+#[derive(Debug, Default)]
+pub struct MetricsCollector {
+    records: Vec<RequestRecord>,
+    index: std::collections::HashMap<RequestId, usize>,
+    timeline: Vec<TimelinePoint>,
+    /// Virtual/wall time the run ended.
+    pub end_time: Micros,
+    /// Total decode iterations executed.
+    pub iterations: u64,
+    /// Total tokens decoded.
+    pub tokens_decoded: u64,
+    /// Total tokens recomputed after Discard (wasted work accounting).
+    pub tokens_recomputed: u64,
+    /// Total preemptions (admitted requests evicted under memory pressure).
+    pub preemptions: u64,
+    /// Strategy usage counts (preserve, discard, swap).
+    pub strategy_counts: [u64; 3],
+    /// Engine time spent stalled on swap transfers.
+    pub swap_stall_us: u64,
+    /// Engine time spent on prefill/recompute materialization.
+    pub materialize_us: u64,
+    /// Admission rejections by cause (per request-round).
+    pub rejected_slot: u64,
+    pub rejected_memory: u64,
+    pub rejected_reservation: u64,
+}
+
+impl MetricsCollector {
+    pub fn new() -> MetricsCollector {
+        MetricsCollector::default()
+    }
+
+    pub fn on_arrival(&mut self, id: RequestId, at: Micros) {
+        let idx = self.records.len();
+        self.records.push(RequestRecord {
+            id,
+            arrival: at,
+            first_token: None,
+            finished: None,
+        });
+        self.index.insert(id, idx);
+    }
+
+    pub fn on_first_token(&mut self, id: RequestId, at: Micros) {
+        if let Some(&idx) = self.index.get(&id) {
+            let rec = &mut self.records[idx];
+            if rec.first_token.is_none() {
+                rec.first_token = Some(at);
+            }
+        }
+    }
+
+    pub fn on_finished(&mut self, id: RequestId, at: Micros) {
+        if let Some(&idx) = self.index.get(&id) {
+            self.records[idx].finished = Some(at);
+        }
+    }
+
+    pub fn sample_timeline(&mut self, point: TimelinePoint) {
+        self.timeline.push(point);
+    }
+
+    pub fn completed(&self) -> usize {
+        self.records.iter().filter(|r| r.finished.is_some()).count()
+    }
+
+    pub fn records(&self) -> &[RequestRecord] {
+        &self.records
+    }
+
+    pub fn report(&self) -> RunReport {
+        let latencies: Vec<Micros> =
+            self.records.iter().filter_map(|r| r.latency()).collect();
+        let ttfts: Vec<Micros> =
+            self.records.iter().filter_map(|r| r.ttft()).collect();
+        let completed = latencies.len();
+        let span = self.end_time.as_secs_f64().max(1e-9);
+        RunReport {
+            submitted: self.records.len(),
+            completed,
+            latency: Summary::from_samples(&latencies),
+            ttft: Summary::from_samples(&ttfts),
+            throughput_rps: completed as f64 / span,
+            duration: self.end_time,
+            iterations: self.iterations,
+            tokens_decoded: self.tokens_decoded,
+            tokens_recomputed: self.tokens_recomputed,
+            preemptions: self.preemptions,
+            strategy_counts: self.strategy_counts,
+            swap_stall_us: self.swap_stall_us,
+            materialize_us: self.materialize_us,
+            rejected_slot: self.rejected_slot,
+            rejected_memory: self.rejected_memory,
+            rejected_reservation: self.rejected_reservation,
+            timeline: self.timeline.clone(),
+        }
+    }
+}
+
+/// Final report of one serving run — the unit every figure bench consumes.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub submitted: usize,
+    pub completed: usize,
+    pub latency: Summary,
+    pub ttft: Summary,
+    /// Completed requests per second of (virtual) run time.
+    pub throughput_rps: f64,
+    pub duration: Micros,
+    pub iterations: u64,
+    pub tokens_decoded: u64,
+    pub tokens_recomputed: u64,
+    pub preemptions: u64,
+    /// Strategy usage counts (preserve, discard, swap).
+    pub strategy_counts: [u64; 3],
+    /// Engine time stalled on swap transfers.
+    pub swap_stall_us: u64,
+    /// Engine time spent on prefill/recompute materialization.
+    pub materialize_us: u64,
+    /// Admission rejections by cause (per request-round).
+    pub rejected_slot: u64,
+    pub rejected_memory: u64,
+    pub rejected_reservation: u64,
+    pub timeline: Vec<TimelinePoint>,
+}
+
+impl RunReport {
+    /// JSON rendering (timeline omitted unless `with_timeline`).
+    pub fn to_json(&self, with_timeline: bool) -> String {
+        use crate::util::json::{self, Value};
+        let summary = |s: &Summary| {
+            json::obj(vec![
+                ("n", json::num(s.n as f64)),
+                ("mean_us", json::num(s.mean_us)),
+                ("p50_us", json::num(s.p50_us)),
+                ("p99_us", json::num(s.p99_us)),
+                ("max_us", json::num(s.max_us)),
+            ])
+        };
+        let mut pairs = vec![
+            ("submitted", json::num(self.submitted as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("latency", summary(&self.latency)),
+            ("ttft", summary(&self.ttft)),
+            ("throughput_rps", json::num(self.throughput_rps)),
+            ("duration_us", json::num(self.duration.0 as f64)),
+            ("iterations", json::num(self.iterations as f64)),
+            ("tokens_decoded", json::num(self.tokens_decoded as f64)),
+            ("tokens_recomputed",
+             json::num(self.tokens_recomputed as f64)),
+            ("preemptions", json::num(self.preemptions as f64)),
+            ("preserve_count", json::num(self.strategy_counts[0] as f64)),
+            ("discard_count", json::num(self.strategy_counts[1] as f64)),
+            ("swap_count", json::num(self.strategy_counts[2] as f64)),
+            ("swap_stall_us", json::num(self.swap_stall_us as f64)),
+            ("materialize_us", json::num(self.materialize_us as f64)),
+            ("rejected_slot", json::num(self.rejected_slot as f64)),
+            ("rejected_memory", json::num(self.rejected_memory as f64)),
+            ("rejected_reservation",
+             json::num(self.rejected_reservation as f64)),
+        ];
+        if with_timeline {
+            pairs.push(("timeline", Value::Arr(
+                self.timeline
+                    .iter()
+                    .map(|p| json::obj(vec![
+                        ("at_us", json::num(p.at.0 as f64)),
+                        ("kv_occupancy", json::num(p.kv_occupancy)),
+                        ("completed", json::num(p.completed as f64)),
+                        ("in_api", json::num(p.in_api as f64)),
+                        ("running", json::num(p.running as f64)),
+                        ("held_running", json::num(p.held_running as f64)),
+                        ("held_api", json::num(p.held_api as f64)),
+                        ("held_waiting",
+                         json::num(p.held_waiting as f64)),
+                    ]))
+                    .collect())));
+        }
+        json::write(&json::obj(pairs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_percentiles() {
+        let samples: Vec<Micros> = (1..=100).map(Micros).collect();
+        let s = Summary::from_samples(&samples);
+        assert_eq!(s.n, 100);
+        assert_eq!(s.p50_us, 50.0);
+        assert_eq!(s.p99_us, 99.0);
+        assert_eq!(s.max_us, 100.0);
+        assert!((s.mean_us - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert_eq!(Summary::from_samples(&[]).n, 0);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::from_samples(&[Micros(42)]);
+        assert_eq!(s.p50_us, 42.0);
+        assert_eq!(s.p99_us, 42.0);
+    }
+
+    #[test]
+    fn lifecycle_to_report() {
+        let mut m = MetricsCollector::new();
+        m.on_arrival(RequestId(1), Micros(0));
+        m.on_arrival(RequestId(2), Micros(100));
+        m.on_first_token(RequestId(1), Micros(50));
+        m.on_first_token(RequestId(1), Micros(70)); // second call ignored
+        m.on_finished(RequestId(1), Micros(200));
+        m.end_time = Micros(1_000_000);
+        let rep = m.report();
+        assert_eq!(rep.submitted, 2);
+        assert_eq!(rep.completed, 1);
+        assert_eq!(rep.latency.mean_us, 200.0);
+        assert_eq!(rep.ttft.mean_us, 50.0);
+        assert!((rep.throughput_rps - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ttft_only_counts_first() {
+        let mut m = MetricsCollector::new();
+        m.on_arrival(RequestId(1), Micros(10));
+        m.on_first_token(RequestId(1), Micros(30));
+        m.on_first_token(RequestId(1), Micros(90));
+        assert_eq!(m.records()[0].ttft(), Some(Micros(20)));
+    }
+}

@@ -1,0 +1,116 @@
+//! Per-API-class duration / frequency statistics — the paper's Table 2.
+//!
+//! LAMPS predicts API duration from the API *type* alone: "each corresponds
+//! to specific operations with known computational complexities ...
+//! execution times within the same API type have low variance" (§3.2.1).
+//! This table is both the workload generator's sampling source and the
+//! predictor's estimate (the predictor uses the class mean).
+
+use crate::core::request::ApiType;
+use crate::core::types::Micros;
+
+/// (mean, std) pairs exactly as published in Table 2.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ApiClassStats {
+    /// API duration in seconds: (mean, std).
+    pub duration_secs: (f64, f64),
+    /// API calls per request: (mean, std).
+    pub calls_per_request: (f64, f64),
+    /// Response length in tokens: (mean, std). Not in Table 2; profiled
+    /// from the INFERCEPT artifact descriptions (short structured replies
+    /// for Math/VE, longer text for QA/Chatbot).
+    pub response_tokens: (f64, f64),
+}
+
+/// Table 2, INFERCEPT rows.
+pub fn stats_for(api: ApiType) -> ApiClassStats {
+    match api {
+        ApiType::Math => ApiClassStats {
+            duration_secs: (9e-5, 6e-5),
+            calls_per_request: (3.75, 1.3),
+            response_tokens: (4.0, 2.0),
+        },
+        ApiType::Qa => ApiClassStats {
+            duration_secs: (0.69, 0.17),
+            calls_per_request: (2.52, 1.73),
+            response_tokens: (32.0, 12.0),
+        },
+        ApiType::Ve => ApiClassStats {
+            duration_secs: (0.09, 0.014),
+            calls_per_request: (28.18, 15.2),
+            response_tokens: (8.0, 4.0),
+        },
+        ApiType::Chatbot => ApiClassStats {
+            duration_secs: (28.6, 15.6),
+            calls_per_request: (4.45, 1.96),
+            response_tokens: (48.0, 24.0),
+        },
+        ApiType::Image => ApiClassStats {
+            duration_secs: (20.03, 7.8),
+            calls_per_request: (6.91, 3.93),
+            response_tokens: (6.0, 2.0),
+        },
+        ApiType::Tts => ApiClassStats {
+            duration_secs: (17.24, 7.6),
+            calls_per_request: (6.91, 3.93),
+            response_tokens: (6.0, 2.0),
+        },
+        // Table 2, ToolBench row (one latency class for all categories).
+        ApiType::Tool(_) => ApiClassStats {
+            duration_secs: (1.72, 3.33),
+            calls_per_request: (2.45, 1.81),
+            response_tokens: (24.0, 10.0),
+        },
+    }
+}
+
+/// The predictor's duration estimate for a class: the historical mean.
+pub fn predicted_duration(api: ApiType) -> Micros {
+    Micros::from_secs_f64(stats_for(api).duration_secs.0)
+}
+
+/// The predictor's response-length estimate: the historical mean.
+pub fn predicted_response_tokens(api: ApiType) -> u64 {
+    stats_for(api).response_tokens.0.round() as u64
+}
+
+/// All INFERCEPT-dataset classes, with the mix weights used by the
+/// workload generator (uniform over the six augmentation types, matching
+/// INFERCEPT's combined-workload construction).
+pub const INFERCEPT_CLASSES: [ApiType; 6] = [
+    ApiType::Math,
+    ApiType::Qa,
+    ApiType::Ve,
+    ApiType::Chatbot,
+    ApiType::Image,
+    ApiType::Tts,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values_pinned() {
+        assert_eq!(stats_for(ApiType::Math).duration_secs, (9e-5, 6e-5));
+        assert_eq!(stats_for(ApiType::Chatbot).duration_secs, (28.6, 15.6));
+        assert_eq!(stats_for(ApiType::Tool(7)).duration_secs, (1.72, 3.33));
+        assert_eq!(stats_for(ApiType::Ve).calls_per_request, (28.18, 15.2));
+    }
+
+    #[test]
+    fn predicted_duration_is_class_mean() {
+        assert_eq!(predicted_duration(ApiType::Image),
+                   Micros::from_secs_f64(20.03));
+        assert_eq!(predicted_duration(ApiType::Math), Micros(90));
+    }
+
+    #[test]
+    fn class_labels_distinct() {
+        let labels: Vec<&str> =
+            INFERCEPT_CLASSES.iter().map(|c| c.label()).collect();
+        let mut dedup = labels.clone();
+        dedup.dedup();
+        assert_eq!(labels.len(), dedup.len());
+    }
+}

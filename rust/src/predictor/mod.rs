@@ -1,0 +1,31 @@
+//! Prediction of request properties (paper §4.2): pre-API output length
+//! from the prompt, API duration + response length from the per-class
+//! historical table (Table 2).
+//!
+//! The engine consumes predictions through the [`Predictor`] trait; three
+//! implementations exist:
+//! - [`oracle::OraclePredictor`] — true values from the spec (complete
+//!   information, used by the Fig 3 analysis and as INFERCEPT's at-API
+//!   knowledge).
+//! - [`oracle::NoisyOraclePredictor`] — Gaussian error injection
+//!   `N(0, p * measured)` per Fig 11.
+//! - [`opt_classifier::PjrtPredictor`] — the AOT-compiled OPT-125M
+//!   stand-in (embedding -> 50-bin classifier) executed via PJRT.
+
+pub mod api_stats;
+pub mod opt_classifier;
+pub mod oracle;
+
+use crate::core::request::{RequestSpec, SegmentPrediction};
+
+/// Produces one [`SegmentPrediction`] per segment of a request.
+pub trait Predictor {
+    fn predict(&mut self, spec: &RequestSpec) -> Vec<SegmentPrediction>;
+
+    /// Prediction latency to charge per request (the paper measures
+    /// 13.7 ms/input for OPT-125M on an A100; simulated predictors are
+    /// free unless configured otherwise).
+    fn latency(&self) -> crate::core::types::Micros {
+        crate::core::types::Micros::ZERO
+    }
+}

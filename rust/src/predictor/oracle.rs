@@ -1,0 +1,146 @@
+//! Oracle predictors: exact values and Gaussian-noised values (Fig 11's
+//! controlled error injection: `error ~ N(0, p * measured)`,
+//! `predicted = measured + error`).
+
+use crate::core::request::{RequestSpec, SegmentPrediction};
+use crate::core::types::{Micros, Tokens};
+use crate::predictor::Predictor;
+use crate::util::Rng;
+
+/// Complete-information predictor: returns the spec's true values.
+#[derive(Debug, Default)]
+pub struct OraclePredictor;
+
+impl Predictor for OraclePredictor {
+    fn predict(&mut self, spec: &RequestSpec) -> Vec<SegmentPrediction> {
+        (0..spec.num_segments())
+            .map(|seg| SegmentPrediction {
+                decode_tokens: spec.segment_decode(seg),
+                api_duration: spec.api_calls.get(seg).map(|c| c.duration),
+                response_tokens: spec
+                    .api_calls
+                    .get(seg)
+                    .map(|c| c.response_tokens)
+                    .unwrap_or(Tokens::ZERO),
+            })
+            .collect()
+    }
+}
+
+/// Oracle + Gaussian error on output length and API duration (Fig 11).
+#[derive(Debug)]
+pub struct NoisyOraclePredictor {
+    /// The paper's error parameter `p` (0.05, 0.10, 0.30, 0.50).
+    pub error_pct: f64,
+    rng: Rng,
+}
+
+impl NoisyOraclePredictor {
+    pub fn new(error_pct: f64, seed: u64) -> NoisyOraclePredictor {
+        NoisyOraclePredictor {
+            error_pct,
+            rng: Rng::new(seed ^ 0xB10E_F00D),
+        }
+    }
+
+    fn noisy(&mut self, measured: f64) -> f64 {
+        let err = self.rng.normal() * self.error_pct * measured;
+        (measured + err).max(0.0)
+    }
+}
+
+impl Predictor for NoisyOraclePredictor {
+    fn predict(&mut self, spec: &RequestSpec) -> Vec<SegmentPrediction> {
+        (0..spec.num_segments())
+            .map(|seg| {
+                let true_decode = spec.segment_decode(seg).0 as f64;
+                let decode = self.noisy(true_decode).round().max(1.0) as u64;
+                let api_duration = spec.api_calls.get(seg).map(|c| {
+                    Micros::from_secs_f64(
+                        self.noisy(c.duration.as_secs_f64()))
+                });
+                SegmentPrediction {
+                    decode_tokens: Tokens(decode),
+                    api_duration,
+                    response_tokens: spec
+                        .api_calls
+                        .get(seg)
+                        .map(|c| c.response_tokens)
+                        .unwrap_or(Tokens::ZERO),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::request::{ApiCallSpec, ApiType};
+    use crate::core::types::RequestId;
+
+    fn spec() -> RequestSpec {
+        RequestSpec {
+            id: RequestId(1),
+            arrival: Micros::ZERO,
+            prompt: String::new(),
+            prompt_tokens: Tokens(8),
+            api_calls: vec![ApiCallSpec {
+                decode_before: Tokens(40),
+                api_type: ApiType::Qa,
+                duration: Micros::from_secs_f64(0.7),
+                response_tokens: Tokens(20),
+            }],
+            final_decode: Tokens(60),
+        }
+    }
+
+    #[test]
+    fn oracle_is_exact() {
+        let preds = OraclePredictor.predict(&spec());
+        assert_eq!(preds.len(), 2);
+        assert_eq!(preds[0].decode_tokens, Tokens(40));
+        assert_eq!(preds[0].api_duration, Some(Micros::from_secs_f64(0.7)));
+        assert_eq!(preds[0].response_tokens, Tokens(20));
+        assert_eq!(preds[1].decode_tokens, Tokens(60));
+        assert_eq!(preds[1].api_duration, None);
+    }
+
+    #[test]
+    fn zero_noise_equals_oracle() {
+        let mut noisy = NoisyOraclePredictor::new(0.0, 1);
+        let preds = noisy.predict(&spec());
+        assert_eq!(preds, OraclePredictor.predict(&spec()));
+    }
+
+    #[test]
+    fn noise_scale_tracks_error_pct() {
+        let s = spec();
+        let sample_err = |pct: f64| -> f64 {
+            let mut p = NoisyOraclePredictor::new(pct, 3);
+            let n = 2000;
+            (0..n)
+                .map(|_| {
+                    let pred = p.predict(&s)[0].decode_tokens.0 as f64;
+                    (pred - 40.0).abs()
+                })
+                .sum::<f64>()
+                / n as f64
+        };
+        let small = sample_err(0.05);
+        let large = sample_err(0.50);
+        // E|N(0, p*40)| = p*40*sqrt(2/pi): ~1.6 at 5%, ~16 at 50%.
+        assert!(small < 3.0, "small {small}");
+        assert!(large > 10.0, "large {large}");
+        assert!(large > 4.0 * small);
+    }
+
+    #[test]
+    fn noisy_never_negative() {
+        let mut p = NoisyOraclePredictor::new(2.0, 9);
+        for _ in 0..500 {
+            let preds = p.predict(&spec());
+            assert!(preds[0].decode_tokens.0 >= 1);
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Artifact discovery: `artifacts/meta.json` describes the exported HLO
+//! modules (shapes, model dims, tokenizer contract) — the schema written
+//! by `python/compile/aot.py`. Parsed with the in-tree JSON module.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub vocab_size: u32,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_model: usize,
+    pub max_seq: usize,
+    pub batch: usize,
+    pub kv_bytes_per_token: u64,
+    pub prefill_hlo: String,
+    pub decode_hlo: String,
+    pub eos_id: i32,
+}
+
+impl ModelMeta {
+    fn from_value(v: &Value) -> Result<ModelMeta> {
+        Ok(ModelMeta {
+            name: v.str_field("name")?,
+            vocab_size: v.u64_field("vocab_size")? as u32,
+            n_layers: v.u64_field("n_layers")? as usize,
+            n_heads: v.u64_field("n_heads")? as usize,
+            head_dim: v.u64_field("head_dim")? as usize,
+            d_model: v.u64_field("d_model")? as usize,
+            max_seq: v.u64_field("max_seq")? as usize,
+            batch: v.u64_field("batch")? as usize,
+            kv_bytes_per_token: v.u64_field("kv_bytes_per_token")?,
+            prefill_hlo: v.str_field("prefill_hlo")?,
+            decode_hlo: v.str_field("decode_hlo")?,
+            eos_id: v.u64_field("eos_id")? as i32,
+        })
+    }
+
+    /// Elements of one KV tensor: (L, B, S, H, D).
+    pub fn kv_elements(&self) -> usize {
+        self.n_layers * self.batch * self.max_seq * self.n_heads
+            * self.head_dim
+    }
+
+    pub fn kv_dims(&self) -> [i64; 5] {
+        [self.n_layers as i64, self.batch as i64, self.max_seq as i64,
+         self.n_heads as i64, self.head_dim as i64]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PredictorMeta {
+    pub predictor_hlo: String,
+    pub max_prompt: usize,
+    pub num_bins: u32,
+    pub bin_width: u32,
+    pub vocab_size: u32,
+    pub acc5: f64,
+    pub acc15: f64,
+    pub mae_words: f64,
+}
+
+impl PredictorMeta {
+    fn from_value(v: &Value) -> Result<PredictorMeta> {
+        Ok(PredictorMeta {
+            predictor_hlo: v.str_field("predictor_hlo")?,
+            max_prompt: v.u64_field("max_prompt")? as usize,
+            num_bins: v.u64_field("num_bins")? as u32,
+            bin_width: v.u64_field("bin_width")? as u32,
+            vocab_size: v.u64_field("vocab_size")? as u32,
+            acc5: v.f64_field("acc5")?,
+            acc15: v.f64_field("acc15")?,
+            mae_words: v.f64_field("mae_words")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TokenizerMeta {
+    pub vocab_size: u32,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub reserved: u32,
+    pub scheme: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub format: String,
+    pub models: HashMap<String, ModelMeta>,
+    pub predictor: PredictorMeta,
+    pub tokenizer: TokenizerMeta,
+    pub dir: PathBuf,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str, dir: PathBuf) -> Result<ArtifactMeta> {
+        let v = json::parse(text).context("parsing meta.json")?;
+        let mut models = HashMap::new();
+        for (name, mv) in v
+            .field("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("models not an object"))?
+        {
+            models.insert(name.clone(), ModelMeta::from_value(mv)?);
+        }
+        let tok = v.field("tokenizer")?;
+        Ok(ArtifactMeta {
+            format: v.str_field("format")?,
+            models,
+            predictor: PredictorMeta::from_value(v.field("predictor")?)?,
+            tokenizer: TokenizerMeta {
+                vocab_size: tok.u64_field("vocab_size")? as u32,
+                pad_id: tok.u64_field("pad_id")? as i32,
+                bos_id: tok.u64_field("bos_id")? as i32,
+                eos_id: tok.u64_field("eos_id")? as i32,
+                reserved: tok.u64_field("reserved")? as u32,
+                scheme: tok.str_field("scheme")?,
+            },
+            dir,
+        })
+    }
+
+    /// Load `<dir>/meta.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactMeta> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} — run `make artifacts` first",
+                    path.display())
+        })?;
+        ArtifactMeta::parse(&text, dir)
+    }
+
+    /// Default artifact directory: `$LAMPS_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<ArtifactMeta> {
+        let dir = std::env::var("LAMPS_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        ArtifactMeta::load(dir)
+    }
+
+    pub fn hlo_path(&self, file: &str) -> String {
+        self.dir.join(file).to_string_lossy().into_owned()
+    }
+
+    pub fn model(&self, preset: &str) -> Result<&ModelMeta> {
+        self.models.get(preset).ok_or_else(|| {
+            anyhow::anyhow!("no model preset '{preset}' in meta.json \
+                             (available: {:?})",
+                            self.models.keys().collect::<Vec<_>>())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_schema() {
+        let json_text = r#"{
+            "format": "hlo-text",
+            "models": {
+                "gptj-tiny": {
+                    "name": "gptj-tiny", "vocab_size": 512,
+                    "n_layers": 4, "n_heads": 4, "head_dim": 32,
+                    "d_model": 128, "max_seq": 128, "batch": 4,
+                    "kv_bytes_per_token": 4096,
+                    "prefill_hlo": "gptj-tiny_prefill.hlo.txt",
+                    "decode_hlo": "gptj-tiny_decode.hlo.txt",
+                    "eos_id": 2
+                }
+            },
+            "predictor": {
+                "predictor_hlo": "predictor.hlo.txt",
+                "max_prompt": 64, "num_bins": 50, "bin_width": 10,
+                "vocab_size": 512, "acc5": 0.6, "acc15": 0.9,
+                "mae_words": 5.0
+            },
+            "tokenizer": {
+                "vocab_size": 512, "pad_id": 0, "bos_id": 1, "eos_id": 2,
+                "reserved": 8, "scheme": "fnv1a64-word-hash"
+            }
+        }"#;
+        let meta =
+            ArtifactMeta::parse(json_text, PathBuf::from("/tmp")).unwrap();
+        let m = meta.model("gptj-tiny").unwrap();
+        assert_eq!(m.kv_elements(), 4 * 4 * 128 * 4 * 32);
+        assert_eq!(m.kv_dims(), [4, 4, 128, 4, 32]);
+        assert!(meta.model("missing").is_err());
+        assert_eq!(meta.predictor.num_bins, 50);
+        assert_eq!(meta.tokenizer.scheme, "fnv1a64-word-hash");
+    }
+}

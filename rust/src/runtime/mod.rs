@@ -1,0 +1,87 @@
+//! PJRT runtime: loads the AOT-compiled HLO **text** artifacts produced by
+//! `python/compile/aot.py` and executes them via the `xla` crate's PJRT
+//! CPU client. This is the only place the Rust side touches XLA; Python
+//! never runs on the request path.
+//!
+//! Interchange is HLO text because jax >= 0.5 serializes HloModuleProtos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+pub mod artifacts;
+pub mod model;
+
+pub use artifacts::{ArtifactMeta, ModelMeta, PredictorMeta};
+pub use model::{ModelRuntime, PredictorRuntime};
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT CPU client + executable loader.
+pub struct RuntimeClient {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl RuntimeClient {
+    pub fn cpu() -> Result<RuntimeClient> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeClient {
+            client: Arc::new(client),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &str) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text at {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))?;
+        Ok(Executable {
+            exe,
+            path: path.to_string(),
+        })
+    }
+}
+
+/// A compiled, ready-to-run computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the first device's first
+    /// output literal (our artifacts are lowered with `return_tuple=True`,
+    /// so this is a tuple literal — decompose with `to_tupleN`).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.path))?;
+        Ok(outs[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?)
+    }
+}
+
+/// i32 helper: build a literal of the given shape from a slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// f32 helper.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}

@@ -1,0 +1,154 @@
+//! Typed wrappers over the exported executables: the TinyGPT serving pair
+//! (prefill + decode) and the length-predictor classifier.
+//!
+//! KV layout is `(L, B, S, H, D)` f32, matching `python/compile/aot.py`'s
+//! lowering. Helpers here slice/merge per-slot KV so the backend can pack
+//! independent requests into the fixed-shape batch.
+
+use anyhow::Result;
+
+use crate::runtime::artifacts::{ArtifactMeta, ModelMeta, PredictorMeta};
+use crate::runtime::{literal_i32, Executable, RuntimeClient};
+use crate::util::tokenizer;
+
+/// Prefill + decode executables for one model preset.
+pub struct ModelRuntime {
+    pub meta: ModelMeta,
+    prefill: Executable,
+    decode: Executable,
+}
+
+/// Outputs of a prefill/decode call: next tokens per slot + full-batch KV.
+pub struct StepResult {
+    pub next_tokens: Vec<i32>,
+    /// (L, B, S, H, D) flattened.
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl ModelRuntime {
+    pub fn load(client: &RuntimeClient, artifacts: &ArtifactMeta,
+                preset: &str) -> Result<ModelRuntime> {
+        let meta = artifacts.model(preset)?.clone();
+        let prefill =
+            client.load_hlo_text(&artifacts.hlo_path(&meta.prefill_hlo))?;
+        let decode =
+            client.load_hlo_text(&artifacts.hlo_path(&meta.decode_hlo))?;
+        Ok(ModelRuntime {
+            meta,
+            prefill,
+            decode,
+        })
+    }
+
+    /// Elements in one slot's KV slice per layer: S * H * D.
+    pub fn slot_stride(&self) -> usize {
+        self.meta.max_seq * self.meta.n_heads * self.meta.head_dim
+    }
+
+    /// Run prefill: `tokens` is (B, S) row-major, `lengths` (B,).
+    pub fn run_prefill(&self, tokens: &[i32], lengths: &[i32])
+                       -> Result<StepResult> {
+        let b = self.meta.batch as i64;
+        let s = self.meta.max_seq as i64;
+        assert_eq!(tokens.len(), (b * s) as usize);
+        assert_eq!(lengths.len(), b as usize);
+        let args = [
+            literal_i32(tokens, &[b, s])?,
+            literal_i32(lengths, &[b])?,
+        ];
+        let out = self.prefill.run(&args)?;
+        self.unpack(out)
+    }
+
+    /// Run one decode step: `token`/`pos` are (B,), `k`/`v` the full
+    /// (L,B,S,H,D) caches.
+    pub fn run_decode(&self, token: &[i32], pos: &[i32], k: &[f32],
+                      v: &[f32]) -> Result<StepResult> {
+        let b = self.meta.batch as i64;
+        let kv_dims: Vec<i64> = self.meta.kv_dims().to_vec();
+        assert_eq!(k.len(), self.meta.kv_elements());
+        let args = [
+            literal_i32(token, &[b])?,
+            literal_i32(pos, &[b])?,
+            crate::runtime::literal_f32(k, &kv_dims)?,
+            crate::runtime::literal_f32(v, &kv_dims)?,
+        ];
+        let out = self.decode.run(&args)?;
+        self.unpack(out)
+    }
+
+    fn unpack(&self, out: xla::Literal) -> Result<StepResult> {
+        let (next, k, v) = out.to_tuple3()?;
+        Ok(StepResult {
+            next_tokens: next.to_vec::<i32>()?,
+            k: k.to_vec::<f32>()?,
+            v: v.to_vec::<f32>()?,
+        })
+    }
+
+    /// Copy slot `b`'s per-layer KV slices out of a full-batch tensor into
+    /// a compact (L, S, H, D) buffer.
+    pub fn extract_slot(&self, full: &[f32], slot: usize) -> Vec<f32> {
+        let stride = self.slot_stride();
+        let b_count = self.meta.batch;
+        let mut out = Vec::with_capacity(self.meta.n_layers * stride);
+        for layer in 0..self.meta.n_layers {
+            let base = (layer * b_count + slot) * stride;
+            out.extend_from_slice(&full[base..base + stride]);
+        }
+        out
+    }
+
+    /// Write a compact (L, S, H, D) buffer into slot `b` of a full-batch
+    /// tensor.
+    pub fn insert_slot(&self, full: &mut [f32], slot: usize,
+                       compact: &[f32]) {
+        let stride = self.slot_stride();
+        let b_count = self.meta.batch;
+        for layer in 0..self.meta.n_layers {
+            let base = (layer * b_count + slot) * stride;
+            full[base..base + stride]
+                .copy_from_slice(&compact[layer * stride
+                    ..(layer + 1) * stride]);
+        }
+    }
+
+    pub fn zero_kv(&self) -> Vec<f32> {
+        vec![0.0; self.meta.kv_elements()]
+    }
+}
+
+/// The AOT-compiled length predictor (OPT-125M stand-in).
+pub struct PredictorRuntime {
+    pub meta: PredictorMeta,
+    exe: Executable,
+}
+
+impl PredictorRuntime {
+    pub fn load(client: &RuntimeClient, artifacts: &ArtifactMeta)
+                -> Result<PredictorRuntime> {
+        let exe = client
+            .load_hlo_text(&artifacts.hlo_path(
+                &artifacts.predictor.predictor_hlo))?;
+        Ok(PredictorRuntime {
+            meta: artifacts.predictor.clone(),
+            exe,
+        })
+    }
+
+    /// Predict the output-length bin for a prompt.
+    pub fn predict_bin(&self, prompt: &str) -> Result<u32> {
+        let ids = tokenizer::encode(prompt, self.meta.max_prompt);
+        let lit = literal_i32(&ids, &[1, self.meta.max_prompt as i64])?;
+        let out = self.exe.run(&[lit])?;
+        let bin = out.to_tuple1()?.to_vec::<i32>()?[0];
+        Ok(bin.clamp(0, self.meta.num_bins as i32 - 1) as u32)
+    }
+
+    /// Bin -> predicted length in tokens (bin midpoint).
+    pub fn bin_to_tokens(&self, bin: u32) -> u64 {
+        (bin as u64) * self.meta.bin_width as u64
+            + (self.meta.bin_width as u64) / 2
+    }
+}

@@ -1,0 +1,345 @@
+//! Serving frontend: a dedicated engine thread in wall-clock mode, fed
+//! through a channel; clients block on a per-request completion channel.
+//! A JSON-lines TCP listener (`serve_tcp`) exposes the same API over the
+//! network for the quickstart example.
+//!
+//! (The offline vendor set has no tokio; the frontend is std-thread based.
+//! Each TCP connection gets its own handler thread — adequate for the
+//! demo-scale deployments this CPU image can serve.)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::SystemConfig;
+use crate::core::request::RequestSpec;
+use crate::core::types::{Micros, RequestId};
+use crate::engine::backend::Backend;
+use crate::engine::clock::Clock;
+use crate::engine::Engine;
+use crate::predictor::Predictor;
+use crate::util::json::{self, Value};
+
+/// What the client receives when its request finishes.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub latency_us: u64,
+    pub ttft_us: Option<u64>,
+    pub tokens_decoded: u64,
+    /// Real model outputs when the engine runs on the PJRT backend.
+    pub generated: Option<Vec<i32>>,
+}
+
+impl Completion {
+    pub fn to_json(&self) -> String {
+        let mut pairs = vec![
+            ("id", json::num(self.id as f64)),
+            ("latency_us", json::num(self.latency_us as f64)),
+            ("tokens_decoded", json::num(self.tokens_decoded as f64)),
+        ];
+        pairs.push(("ttft_us", match self.ttft_us {
+            Some(t) => json::num(t as f64),
+            None => Value::Null,
+        }));
+        pairs.push(("generated", match &self.generated {
+            Some(toks) => Value::Arr(
+                toks.iter().map(|t| json::num(*t as f64)).collect()),
+            None => Value::Null,
+        }));
+        json::write(&json::obj(pairs))
+    }
+}
+
+enum Command {
+    Submit {
+        spec: RequestSpec,
+        done: mpsc::Sender<Completion>,
+    },
+    Shutdown,
+}
+
+/// Handle to a running engine thread.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Command>,
+    next_id: Arc<AtomicU64>,
+}
+
+// mpsc::Sender is !Sync; guard clone-per-thread use behind a Mutex-free
+// pattern: each connection thread clones the handle (Sender clones are
+// cheap and Send).
+impl ServerHandle {
+    /// Submit a spec and block until completion. The spec's `id` and
+    /// `arrival` are overwritten by the server.
+    pub fn submit_blocking(&self, mut spec: RequestSpec)
+                           -> anyhow::Result<Completion> {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        spec.id = RequestId(id);
+        let (done_tx, done_rx) = mpsc::channel();
+        self.tx
+            .send(Command::Submit {
+                spec,
+                done: done_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("server thread gone"))?;
+        Ok(done_rx.recv()?)
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Command::Shutdown);
+    }
+}
+
+/// Spawn the engine thread. PJRT handles are not `Send`, so the caller
+/// provides a *factory* that constructs (config, backend, predictor)
+/// inside the engine thread; both the sim and PJRT paths share this
+/// frontend.
+pub fn spawn<F>(factory: F) -> (ServerHandle, std::thread::JoinHandle<()>)
+where
+    F: FnOnce() -> (SystemConfig, Box<dyn Backend>, Box<dyn Predictor>)
+        + Send
+        + 'static,
+{
+    let (tx, rx) = mpsc::channel::<Command>();
+    let handle = ServerHandle {
+        tx,
+        next_id: Arc::new(AtomicU64::new(0)),
+    };
+    let join = std::thread::spawn(move || {
+        let (cfg, backend, predictor) = factory();
+        engine_thread(cfg, backend, predictor, rx);
+    });
+    (handle, join)
+}
+
+fn engine_thread(cfg: SystemConfig, backend: Box<dyn Backend>,
+                 predictor: Box<dyn Predictor>,
+                 rx: mpsc::Receiver<Command>) {
+    let mut engine =
+        Engine::new(cfg, backend, predictor, Clock::wall_clock());
+    let mut watchers: Vec<(RequestId, mpsc::Sender<Completion>)> =
+        Vec::new();
+    let mut shutdown = false;
+
+    loop {
+        // Drain commands without blocking.
+        loop {
+            match rx.try_recv() {
+                Ok(Command::Submit { mut spec, done }) => {
+                    spec.arrival = engine.now();
+                    let id = spec.id;
+                    engine.submit(spec);
+                    watchers.push((id, done));
+                }
+                Ok(Command::Shutdown) => shutdown = true,
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+
+        let progressed = if watchers.is_empty() {
+            false
+        } else {
+            engine.step()
+        };
+
+        // Notify completions.
+        let mut still: Vec<(RequestId, mpsc::Sender<Completion>)> =
+            Vec::new();
+        for (id, done) in watchers.drain(..) {
+            let finished = engine
+                .request(id)
+                .map(|r| r.is_finished())
+                .unwrap_or(false);
+            if finished {
+                let r = engine.request(id).unwrap();
+                let generated = engine.backend_any().and_then(|any| {
+                    any.downcast_ref::<crate::engine::pjrt_backend::PjrtBackend>()
+                        .and_then(|b| {
+                            b.generated_tokens(id).map(|t| t.to_vec())
+                        })
+                });
+                let completion = Completion {
+                    id: id.0,
+                    latency_us: (r.finished_at.unwrap()
+                        - r.spec.arrival).0,
+                    ttft_us: r
+                        .first_token_at
+                        .map(|t| (t - r.spec.arrival).0),
+                    tokens_decoded: r.spec.total_decode().0,
+                    generated,
+                };
+                let _ = done.send(completion);
+            } else {
+                still.push((id, done));
+            }
+        }
+        watchers = still;
+
+        if shutdown && watchers.is_empty() {
+            return;
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+}
+
+/// JSON-lines TCP request format:
+/// `{"prompt": "...", "output_tokens": N, "pre_api_tokens": N,
+///   "api_ms": N}`
+#[derive(Debug, Clone)]
+pub struct WireRequest {
+    pub prompt: String,
+    /// Decode length before the API call (0 = no API call).
+    pub pre_api_tokens: u64,
+    /// API latency in milliseconds (simulated external service).
+    pub api_ms: u64,
+    pub output_tokens: u64,
+}
+
+impl WireRequest {
+    pub fn parse(line: &str) -> anyhow::Result<WireRequest> {
+        let v = json::parse(line)?;
+        Ok(WireRequest {
+            prompt: v.str_field("prompt")?,
+            pre_api_tokens: v
+                .get("pre_api_tokens")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(0),
+            api_ms: v.get("api_ms").and_then(|x| x.as_u64()).unwrap_or(0),
+            output_tokens: v.u64_field("output_tokens")?,
+        })
+    }
+
+    pub fn to_spec(&self) -> RequestSpec {
+        use crate::core::request::{ApiCallSpec, ApiType};
+        use crate::core::types::Tokens;
+        let prompt_tokens =
+            crate::util::tokenizer::valid_len(&self.prompt, 64) as u64;
+        let api_calls = if self.pre_api_tokens > 0 {
+            vec![ApiCallSpec {
+                decode_before: Tokens(self.pre_api_tokens),
+                api_type: ApiType::Tool(0),
+                duration: Micros(self.api_ms * 1000),
+                response_tokens: Tokens(4),
+            }]
+        } else {
+            vec![]
+        };
+        RequestSpec {
+            id: RequestId(0), // assigned by the server
+            arrival: Micros::ZERO,
+            prompt: self.prompt.clone(),
+            prompt_tokens: Tokens(prompt_tokens),
+            api_calls,
+            final_decode: Tokens(self.output_tokens.max(1)),
+        }
+    }
+}
+
+/// Serve JSON-lines over TCP: one request object per line, one
+/// [`Completion`] object per line back. Blocks forever.
+pub fn serve_tcp(handle: ServerHandle, addr: &str) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("lamps: serving on {addr}");
+    let handle = Arc::new(Mutex::new(handle));
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let handle = {
+            let guard = handle.lock().unwrap();
+            guard.clone()
+        };
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, handle) {
+                eprintln!("lamps: connection error: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, handle: ServerHandle)
+               -> anyhow::Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match WireRequest::parse(&line) {
+            Ok(req) => match handle.submit_blocking(req.to_spec()) {
+                Ok(completion) => completion.to_json(),
+                Err(e) => format!("{{\"error\":\"{e}\"}}"),
+            },
+            Err(e) => format!("{{\"error\":\"bad request: {e}\"}}"),
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    eprintln!("lamps: {peer} disconnected");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_request_parse_full() {
+        let r = WireRequest::parse(
+            r#"{"prompt": "hi there", "output_tokens": 12,
+                "pre_api_tokens": 4, "api_ms": 50}"#).unwrap();
+        assert_eq!(r.output_tokens, 12);
+        assert_eq!(r.pre_api_tokens, 4);
+        let spec = r.to_spec();
+        assert_eq!(spec.api_calls.len(), 1);
+        assert_eq!(spec.api_calls[0].duration, Micros(50_000));
+        assert_eq!(spec.final_decode.0, 12);
+    }
+
+    #[test]
+    fn wire_request_defaults() {
+        let r = WireRequest::parse(
+            r#"{"prompt": "x", "output_tokens": 3}"#).unwrap();
+        assert_eq!(r.api_ms, 0);
+        assert!(r.to_spec().api_calls.is_empty());
+    }
+
+    #[test]
+    fn wire_request_rejects_missing_fields() {
+        assert!(WireRequest::parse(r#"{"prompt": "x"}"#).is_err());
+        assert!(WireRequest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn completion_json_shape() {
+        let c = Completion {
+            id: 3,
+            latency_us: 1000,
+            ttft_us: Some(10),
+            tokens_decoded: 5,
+            generated: Some(vec![1, 2]),
+        };
+        let v = json::parse(&c.to_json()).unwrap();
+        assert_eq!(v.u64_field("id").unwrap(), 3);
+        assert_eq!(v.get("generated").unwrap().as_arr().unwrap().len(), 2);
+        let c2 = Completion {
+            ttft_us: None,
+            generated: None,
+            ..c
+        };
+        let v2 = json::parse(&c2.to_json()).unwrap();
+        assert_eq!(v2.get("ttft_us"), Some(&Value::Null));
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained utilities: a deterministic RNG (the whole
+//! simulator must replay bit-identically from a seed) and the FNV-1a word
+//! tokenizer shared with the Python compile path.
+
+pub mod json;
+pub mod rng;
+pub mod tokenizer;
+
+pub use rng::Rng;

@@ -1,0 +1,205 @@
+//! Synthetic INFERCEPT-style datasets (DESIGN.md §2 substitution).
+//!
+//! The paper evaluates on (1) a *single-API* subset of the INFERCEPT
+//! dataset and (2) the *full* (multi-API) INFERCEPT dataset, which mixes
+//! six augmentation classes (math, QA, virtual environment, chatbot, image
+//! generation, TTS). The real artifact is not redistributable; these
+//! generators reproduce its published Table 2 statistics: per-class API
+//! durations and calls-per-request counts drawn from truncated normals.
+
+use crate::core::request::{ApiCallSpec, ApiType, RequestSpec};
+use crate::core::types::{Micros, RequestId, Tokens};
+use crate::predictor::api_stats::{stats_for, INFERCEPT_CLASSES};
+use crate::util::Rng;
+use crate::workload::{ArrivalProcess, Trace};
+
+/// Output-length profile shared by both INFERCEPT variants. Not in
+/// Table 2; chosen to give paper-like context sizes (prompts of ~10^2
+/// tokens, outputs of ~10^2 tokens).
+const PROMPT_MEAN: f64 = 128.0;
+const PROMPT_STD: f64 = 64.0;
+const PRE_API_MEAN: f64 = 80.0;
+const PRE_API_STD: f64 = 40.0;
+const FINAL_MEAN: f64 = 120.0;
+const FINAL_STD: f64 = 60.0;
+
+fn sample_tokens(rng: &mut Rng, mean: f64, std: f64, min: f64) -> Tokens {
+    Tokens(rng.truncated_normal(mean, std, min).round() as u64)
+}
+
+fn sample_call(rng: &mut Rng, api: ApiType, decode_mean: f64,
+               decode_std: f64) -> ApiCallSpec {
+    let st = stats_for(api);
+    let duration = rng.truncated_normal(st.duration_secs.0,
+                                        st.duration_secs.1, 1e-6);
+    let response = rng.truncated_normal(st.response_tokens.0,
+                                        st.response_tokens.1, 0.0);
+    ApiCallSpec {
+        decode_before: sample_tokens(rng, decode_mean, decode_std, 1.0),
+        api_type: api,
+        duration: Micros::from_secs_f64(duration),
+        response_tokens: Tokens(response.round() as u64),
+    }
+}
+
+/// Single-API subset: every request has exactly one API call, class drawn
+/// uniformly over the six augmentation types.
+pub fn single_api_dataset(n: usize, rate: f64, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let arrivals = ArrivalProcess::Poisson { rate }.sample(n, &mut rng);
+    let requests = arrivals
+        .into_iter()
+        .enumerate()
+        .map(|(i, arrival)| {
+            let api = *rng.choice(&INFERCEPT_CLASSES);
+            RequestSpec {
+                id: RequestId(i as u64),
+                arrival,
+                prompt: String::new(),
+                prompt_tokens: sample_tokens(&mut rng, PROMPT_MEAN,
+                                             PROMPT_STD, 8.0),
+                api_calls: vec![sample_call(&mut rng, api, PRE_API_MEAN,
+                                            PRE_API_STD)],
+                final_decode: sample_tokens(&mut rng, FINAL_MEAN,
+                                            FINAL_STD, 1.0),
+            }
+        })
+        .collect();
+    Trace::new("infercept-single-api", rate, requests)
+}
+
+/// Full (multi-API) dataset: each request draws one augmentation class and
+/// a per-class number of calls from Table 2's calls-per-request normal.
+pub fn multi_api_dataset(n: usize, rate: f64, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x5EED_0002);
+    let arrivals = ArrivalProcess::Poisson { rate }.sample(n, &mut rng);
+    let requests = arrivals
+        .into_iter()
+        .enumerate()
+        .map(|(i, arrival)| {
+            let api = *rng.choice(&INFERCEPT_CLASSES);
+            let st = stats_for(api);
+            let n_calls = rng
+                .truncated_normal(st.calls_per_request.0,
+                                  st.calls_per_request.1, 1.0)
+                .round() as usize;
+            // Inter-API decode segments are shorter than single-API ones
+            // (the same total output is split across segments).
+            let seg_mean = (PRE_API_MEAN / (n_calls as f64).sqrt()).max(4.0);
+            let api_calls = (0..n_calls)
+                .map(|_| sample_call(&mut rng, api, seg_mean, seg_mean / 2.0))
+                .collect();
+            RequestSpec {
+                id: RequestId(i as u64),
+                arrival,
+                prompt: String::new(),
+                prompt_tokens: sample_tokens(&mut rng, PROMPT_MEAN,
+                                             PROMPT_STD, 8.0),
+                api_calls,
+                final_decode: sample_tokens(&mut rng, FINAL_MEAN,
+                                            FINAL_STD, 1.0),
+            }
+        })
+        .collect();
+    Trace::new("infercept-multi-api", rate, requests)
+}
+
+/// Fig 2's comparison dataset: the single-API subset with API calls
+/// stripped (the "without API calls" variant).
+pub fn strip_api_calls(trace: &Trace) -> Trace {
+    let requests = trace
+        .requests
+        .iter()
+        .map(|r| {
+            let decode_total = r.total_decode();
+            RequestSpec {
+                id: r.id,
+                arrival: r.arrival,
+                prompt: r.prompt.clone(),
+                prompt_tokens: r.prompt_tokens,
+                api_calls: vec![],
+                final_decode: decode_total,
+            }
+        })
+        .collect();
+    Trace::new(&format!("{}-no-api", trace.name), trace.rate, requests)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_api_shape() {
+        let t = single_api_dataset(200, 3.0, 1);
+        assert_eq!(t.len(), 200);
+        for r in &t.requests {
+            assert_eq!(r.api_calls.len(), 1);
+            assert!(r.prompt_tokens.0 >= 8);
+            assert!(r.final_decode.0 >= 1);
+            assert!(r.api_calls[0].decode_before.0 >= 1);
+        }
+    }
+
+    #[test]
+    fn single_api_durations_match_table2() {
+        let t = single_api_dataset(4000, 3.0, 2);
+        for (label, summary) in t.api_class_stats() {
+            let expected = match label.as_str() {
+                "math" => 9e-5,
+                "qa" => 0.69,
+                "ve" => 0.09,
+                "chatbot" => 28.6,
+                "image" => 20.03,
+                "tts" => 17.24,
+                other => panic!("unexpected class {other}"),
+            };
+            let rel = (summary.duration_mean - expected).abs()
+                / expected.max(1e-9);
+            // Truncation at 0 biases the heavy-std classes slightly up.
+            assert!(rel < 0.15,
+                    "{label}: mean {} vs expected {expected}",
+                    summary.duration_mean);
+        }
+    }
+
+    #[test]
+    fn multi_api_calls_per_request_match_table2() {
+        let t = multi_api_dataset(3000, 3.0, 3);
+        for (label, summary) in t.api_class_stats() {
+            let expected = match label.as_str() {
+                "math" => 3.75,
+                "qa" => 2.52,
+                "ve" => 28.18,
+                "chatbot" => 4.45,
+                "image" => 6.91,
+                "tts" => 6.91,
+                other => panic!("unexpected class {other}"),
+            };
+            let rel = (summary.calls_mean - expected).abs() / expected;
+            assert!(rel < 0.25,
+                    "{label}: calls {} vs expected {expected}",
+                    summary.calls_mean);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = multi_api_dataset(50, 3.0, 9);
+        let b = multi_api_dataset(50, 3.0, 9);
+        assert_eq!(a.requests, b.requests);
+        let c = multi_api_dataset(50, 3.0, 10);
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn strip_preserves_total_decode() {
+        let t = multi_api_dataset(50, 3.0, 4);
+        let stripped = strip_api_calls(&t);
+        for (orig, bare) in t.requests.iter().zip(&stripped.requests) {
+            assert!(bare.api_calls.is_empty());
+            assert_eq!(bare.total_decode(), orig.total_decode());
+            assert_eq!(bare.total_api_time(), Micros::ZERO);
+        }
+    }
+}

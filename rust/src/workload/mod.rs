@@ -1,0 +1,315 @@
+//! Workload generation: synthetic equivalents of the paper's two datasets
+//! (INFERCEPT-style and ToolBench-style, DESIGN.md §2), Poisson arrivals,
+//! and JSON trace (de)serialization.
+
+pub mod infercept;
+pub mod toolbench;
+
+use crate::core::request::{ApiType, RequestSpec};
+use crate::core::types::Micros;
+use crate::util::Rng;
+
+/// A complete workload: requests sorted by arrival time.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    /// Request rate (req/s) the arrivals were drawn at, for reporting.
+    pub rate: f64,
+    pub requests: Vec<RequestSpec>,
+}
+
+impl Trace {
+    pub fn new(name: &str, rate: f64,
+               mut requests: Vec<RequestSpec>) -> Trace {
+        requests.sort_by_key(|r| (r.arrival, r.id));
+        Trace {
+            name: name.to_string(),
+            rate,
+            requests,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn save_json(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, trace_json::to_json(self))?;
+        Ok(())
+    }
+
+    pub fn load_json(path: &str) -> anyhow::Result<Trace> {
+        trace_json::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    /// Per-class (duration mean/std, calls-per-request mean/std) — the
+    /// Table 2 self-check used by `--bench table2_datasets`.
+    pub fn api_class_stats(&self) -> Vec<(String, ClassSummary)> {
+        use std::collections::BTreeMap;
+        let mut durations: BTreeMap<&'static str, Vec<f64>> =
+            BTreeMap::new();
+        let mut counts: BTreeMap<&'static str, Vec<f64>> = BTreeMap::new();
+        for req in &self.requests {
+            let mut per_req: BTreeMap<&'static str, f64> = BTreeMap::new();
+            for call in &req.api_calls {
+                durations
+                    .entry(call.api_type.label())
+                    .or_default()
+                    .push(call.duration.as_secs_f64());
+                *per_req.entry(call.api_type.label()).or_default() += 1.0;
+            }
+            for (label, n) in per_req {
+                counts.entry(label).or_default().push(n);
+            }
+        }
+        durations
+            .into_iter()
+            .map(|(label, durs)| {
+                let cnts = counts.get(label).cloned().unwrap_or_default();
+                (label.to_string(), ClassSummary {
+                    duration_mean: mean(&durs),
+                    duration_std: std_dev(&durs),
+                    calls_mean: mean(&cnts),
+                    calls_std: std_dev(&cnts),
+                    n_calls: durs.len(),
+                })
+            })
+            .collect()
+    }
+}
+
+/// Summary row for Table 2 comparison.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassSummary {
+    pub duration_mean: f64,
+    pub duration_std: f64,
+    pub calls_mean: f64,
+    pub calls_std: f64,
+    pub n_calls: usize,
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Arrival-time generator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Poisson with the given rate in requests/second.
+    Poisson { rate: f64 },
+    /// All at t=0 (the Fig 3 worked example).
+    Simultaneous,
+}
+
+impl ArrivalProcess {
+    /// Draw `n` arrival times (sorted).
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> Vec<Micros> {
+        match self {
+            ArrivalProcess::Poisson { rate } => {
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exponential(*rate);
+                        Micros::from_secs_f64(t)
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Simultaneous => vec![Micros::ZERO; n],
+        }
+    }
+}
+
+/// Manual JSON mapping for traces (no serde in the offline vendor set).
+pub mod trace_json {
+    use super::Trace;
+    use crate::core::request::{ApiCallSpec, ApiType, RequestSpec};
+    use crate::core::types::{Micros, RequestId, Tokens};
+    use crate::util::json::{self, Value};
+
+    fn api_type_to_str(t: ApiType) -> String {
+        match t {
+            ApiType::Tool(cat) => format!("tool:{cat}"),
+            other => other.label().to_string(),
+        }
+    }
+
+    fn api_type_from_str(s: &str) -> anyhow::Result<ApiType> {
+        Ok(match s {
+            "math" => ApiType::Math,
+            "qa" => ApiType::Qa,
+            "ve" => ApiType::Ve,
+            "chatbot" => ApiType::Chatbot,
+            "image" => ApiType::Image,
+            "tts" => ApiType::Tts,
+            other => {
+                let cat = other
+                    .strip_prefix("tool:")
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("unknown api type '{other}'")
+                    })?
+                    .parse::<u8>()?;
+                ApiType::Tool(cat)
+            }
+        })
+    }
+
+    fn call_to_value(c: &ApiCallSpec) -> Value {
+        json::obj(vec![
+            ("decode_before", json::num(c.decode_before.0 as f64)),
+            ("api_type", json::s(&api_type_to_str(c.api_type))),
+            ("duration_us", json::num(c.duration.0 as f64)),
+            ("response_tokens", json::num(c.response_tokens.0 as f64)),
+        ])
+    }
+
+    fn call_from_value(v: &Value) -> anyhow::Result<ApiCallSpec> {
+        Ok(ApiCallSpec {
+            decode_before: Tokens(v.u64_field("decode_before")?),
+            api_type: api_type_from_str(&v.str_field("api_type")?)?,
+            duration: Micros(v.u64_field("duration_us")?),
+            response_tokens: Tokens(v.u64_field("response_tokens")?),
+        })
+    }
+
+    fn spec_to_value(r: &RequestSpec) -> Value {
+        json::obj(vec![
+            ("id", json::num(r.id.0 as f64)),
+            ("arrival_us", json::num(r.arrival.0 as f64)),
+            ("prompt", json::s(&r.prompt)),
+            ("prompt_tokens", json::num(r.prompt_tokens.0 as f64)),
+            ("api_calls",
+             Value::Arr(r.api_calls.iter().map(call_to_value).collect())),
+            ("final_decode", json::num(r.final_decode.0 as f64)),
+        ])
+    }
+
+    fn spec_from_value(v: &Value) -> anyhow::Result<RequestSpec> {
+        let calls = v
+            .field("api_calls")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("api_calls not an array"))?
+            .iter()
+            .map(call_from_value)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(RequestSpec {
+            id: RequestId(v.u64_field("id")?),
+            arrival: Micros(v.u64_field("arrival_us")?),
+            prompt: v.str_field("prompt")?,
+            prompt_tokens: Tokens(v.u64_field("prompt_tokens")?),
+            api_calls: calls,
+            final_decode: Tokens(v.u64_field("final_decode")?),
+        })
+    }
+
+    pub fn to_json(trace: &Trace) -> String {
+        let value = json::obj(vec![
+            ("name", json::s(&trace.name)),
+            ("rate", json::num(trace.rate)),
+            ("requests",
+             Value::Arr(trace.requests.iter().map(spec_to_value).collect())),
+        ]);
+        json::write(&value)
+    }
+
+    pub fn from_json(text: &str) -> anyhow::Result<Trace> {
+        let v = json::parse(text)?;
+        let requests = v
+            .field("requests")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("requests not an array"))?
+            .iter()
+            .map(spec_from_value)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Trace {
+            name: v.str_field("name")?,
+            rate: v.f64_field("rate")?,
+            requests,
+        })
+    }
+}
+
+/// Convenience: all API types present in a trace.
+pub fn api_types_in(trace: &Trace) -> Vec<ApiType> {
+    let mut types: Vec<ApiType> = trace
+        .requests
+        .iter()
+        .flat_map(|r| r.api_calls.iter().map(|c| c.api_type))
+        .collect();
+    types.sort_by_key(|t| t.label());
+    types.dedup();
+    types
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_approx() {
+        let mut rng = Rng::new(1);
+        let arrivals =
+            ArrivalProcess::Poisson { rate: 5.0 }.sample(5000, &mut rng);
+        assert!(arrivals.windows(2).all(|w| w[0] <= w[1]));
+        let span = arrivals.last().unwrap().as_secs_f64();
+        let measured_rate = 5000.0 / span;
+        assert!((measured_rate - 5.0).abs() < 0.3, "rate {measured_rate}");
+    }
+
+    #[test]
+    fn simultaneous_all_zero() {
+        let mut rng = Rng::new(1);
+        let arrivals = ArrivalProcess::Simultaneous.sample(3, &mut rng);
+        assert_eq!(arrivals, vec![Micros::ZERO; 3]);
+    }
+
+    #[test]
+    fn stats_helpers() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn trace_sorts_by_arrival() {
+        use crate::core::types::RequestId;
+        let mk = |id: u64, at: u64| RequestSpec {
+            id: RequestId(id),
+            arrival: Micros(at),
+            prompt: String::new(),
+            prompt_tokens: crate::core::types::Tokens(1),
+            api_calls: vec![],
+            final_decode: crate::core::types::Tokens(1),
+        };
+        let t = Trace::new("t", 1.0, vec![mk(1, 50), mk(2, 10)]);
+        assert_eq!(t.requests[0].id, RequestId(2));
+    }
+
+    #[test]
+    fn trace_json_roundtrip() {
+        let t = infercept::single_api_dataset(10, 2.0, 7);
+        let dir = std::env::temp_dir().join("lamps_trace_test.json");
+        let path = dir.to_str().unwrap();
+        t.save_json(path).unwrap();
+        let back = Trace::load_json(path).unwrap();
+        assert_eq!(t.requests, back.requests);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,217 @@
+//! Synthetic ToolBench-style dataset (DESIGN.md §2 substitution).
+//!
+//! ToolBench [Qin et al. 2023] is an instruction-tuning corpus of 16k+
+//! real-world APIs in 49 categories with single- and multi-API scenarios;
+//! the paper uses it as the prediction-required dataset (prompts + API
+//! call types only, no recorded output lengths). This generator mirrors
+//! `python/compile/corpus.py` — the corpus the exported predictor was
+//! trained on — so PJRT predictions at serving time are in-distribution,
+//! and samples API durations/call counts from Table 2's ToolBench row.
+
+use crate::core::request::{ApiCallSpec, ApiType, RequestSpec};
+use crate::core::types::{Micros, RequestId, Tokens};
+use crate::predictor::api_stats::stats_for;
+use crate::util::Rng;
+use crate::workload::{ArrivalProcess, Trace};
+
+/// Mirrored from python/compile/corpus.py — keep in sync.
+pub const CATEGORIES: [(&str, f64); 8] = [
+    ("weather", 20.0),
+    ("finance", 60.0),
+    ("translate", 35.0),
+    ("search", 90.0),
+    ("media", 140.0),
+    ("sports", 50.0),
+    ("travel", 110.0),
+    ("code", 180.0),
+];
+
+pub const DETAILS: [(&str, f64); 7] = [
+    ("brief", 0.0),
+    ("short", 25.0),
+    ("plain", 50.0),
+    ("medium", 90.0),
+    ("long", 150.0),
+    ("verbose", 220.0),
+    ("exhaustive", 300.0),
+];
+
+const FILLER: [&str; 19] = [
+    "please", "fetch", "the", "current", "value", "for", "my", "account",
+    "and", "report", "it", "back", "with", "any", "relevant", "context",
+    "from", "service", "today",
+];
+
+pub const BIN_WIDTH: u64 = 10;
+pub const NUM_BINS: u64 = 50;
+
+/// One generated prompt + its true pre-API output length (the quantity the
+/// predictor estimates).
+#[derive(Debug, Clone)]
+pub struct ToolbenchSample {
+    pub prompt: String,
+    pub category: usize,
+    pub length: u64,
+}
+
+impl ToolbenchSample {
+    pub fn bin(&self) -> u64 {
+        (self.length / BIN_WIDTH).min(NUM_BINS - 1)
+    }
+}
+
+/// Same length model as `corpus.gen_sample`: category/detail base + noise,
+/// plus a quantized size-hint word whose error grows with length.
+pub fn gen_sample(rng: &mut Rng) -> ToolbenchSample {
+    let cat_idx = (rng.next_u64() % CATEGORIES.len() as u64) as usize;
+    let (cat, base) = CATEGORIES[cat_idx];
+    let (det, extra) = *rng.choice(&DETAILS);
+    let mean = base + extra;
+    let noise = rng.normal() * (2.0 + 0.06 * mean);
+    let length = ((mean + noise) as i64)
+        .clamp(1, (NUM_BINS * BIN_WIDTH - 1) as i64) as u64;
+    let hint_noise = rng.normal() * (1.0 + 0.02 * length as f64);
+    let hint = (((length as f64 + hint_noise) / 8.0) as i64).max(0) as u64;
+    let n_fill = rng.int_range(3, 10);
+    let fill: Vec<&str> =
+        (0..n_fill).map(|_| *rng.choice(&FILLER)).collect();
+    let prompt = format!("call the {cat} api with a {det} answer scale \
+                          n{hint} {}",
+                         fill.join(" "));
+    ToolbenchSample {
+        prompt,
+        category: cat_idx,
+        length,
+    }
+}
+
+/// Full dataset: single- and multi-API tool-use requests with prompts the
+/// exported predictor can score.
+pub fn dataset(n: usize, rate: f64, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x7001_BE4C);
+    let arrivals = ArrivalProcess::Poisson { rate }.sample(n, &mut rng);
+    let tool_stats = stats_for(ApiType::Tool(0));
+    let requests = arrivals
+        .into_iter()
+        .enumerate()
+        .map(|(i, arrival)| {
+            let sample = gen_sample(&mut rng);
+            let n_calls = rng
+                .truncated_normal(tool_stats.calls_per_request.0,
+                                  tool_stats.calls_per_request.1, 1.0)
+                .round() as usize;
+            // The sampled length is the *first* pre-API segment (what the
+            // prompt predicts); later segments are shorter continuations.
+            let api_calls: Vec<ApiCallSpec> = (0..n_calls)
+                .map(|k| {
+                    let decode = if k == 0 {
+                        sample.length
+                    } else {
+                        rng.truncated_normal(sample.length as f64 * 0.4,
+                                             sample.length as f64 * 0.2,
+                                             1.0)
+                            .round() as u64
+                    };
+                    let duration = rng.truncated_normal(
+                        tool_stats.duration_secs.0,
+                        tool_stats.duration_secs.1,
+                        1e-3);
+                    let response = rng.truncated_normal(
+                        tool_stats.response_tokens.0,
+                        tool_stats.response_tokens.1,
+                        0.0);
+                    ApiCallSpec {
+                        decode_before: Tokens(decode),
+                        api_type: ApiType::Tool(sample.category as u8),
+                        duration: Micros::from_secs_f64(duration),
+                        response_tokens: Tokens(response.round() as u64),
+                    }
+                })
+                .collect();
+            let prompt_tokens =
+                crate::util::tokenizer::valid_len(&sample.prompt, 64) as u64;
+            RequestSpec {
+                id: RequestId(i as u64),
+                arrival,
+                prompt: sample.prompt,
+                prompt_tokens: Tokens(prompt_tokens),
+                api_calls,
+                final_decode: Tokens(
+                    rng.truncated_normal(sample.length as f64 * 0.5,
+                                         sample.length as f64 * 0.25, 1.0)
+                        .round() as u64),
+            }
+        })
+        .collect();
+    Trace::new("toolbench", rate, requests)
+}
+
+/// Evaluation split for Table 3: (prompt, true-length) pairs only.
+pub fn eval_samples(n: usize, seed: u64) -> Vec<ToolbenchSample> {
+    let mut rng = Rng::new(seed ^ 0x7001_E7A1_u64);
+    (0..n).map(|_| gen_sample(&mut rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_shape() {
+        let mut rng = Rng::new(4);
+        for _ in 0..200 {
+            let s = gen_sample(&mut rng);
+            assert!((1..NUM_BINS * BIN_WIDTH).contains(&s.length));
+            assert!(s.bin() < NUM_BINS);
+            assert!(s.prompt.starts_with("call the "));
+            assert!(s.prompt.contains(" api with a "));
+            assert!(s.prompt.contains(" scale n"));
+        }
+    }
+
+    #[test]
+    fn category_correlates_with_length() {
+        let mut rng = Rng::new(6);
+        let mut by_cat = vec![Vec::new(); CATEGORIES.len()];
+        for _ in 0..4000 {
+            let s = gen_sample(&mut rng);
+            by_cat[s.category].push(s.length as f64);
+        }
+        let avg = |v: &Vec<f64>| v.iter().sum::<f64>() / v.len() as f64;
+        // code (base 180) >> weather (base 20)
+        assert!(avg(&by_cat[7]) > avg(&by_cat[0]) + 80.0);
+    }
+
+    #[test]
+    fn dataset_durations_match_table2_toolbench_row() {
+        let t = dataset(3000, 3.0, 5);
+        let stats = t.api_class_stats();
+        let (label, s) = &stats[0];
+        assert_eq!(label, "tool");
+        // A clamped normal with std 3.33 >> mean 1.72 is biased upward
+        // (E ~ 2.36); the published std itself comes from a skewed
+        // empirical distribution a normal cannot match. Allow the band.
+        assert!((s.duration_mean - 1.72).abs() < 1.0,
+                "duration mean {}", s.duration_mean);
+        assert!((s.calls_mean - 2.45).abs() < 0.6,
+                "calls mean {}", s.calls_mean);
+    }
+
+    #[test]
+    fn prompts_tokenize_within_window() {
+        let t = dataset(100, 3.0, 8);
+        for r in &t.requests {
+            assert!(!r.prompt.is_empty());
+            assert!(r.prompt_tokens.0 <= 64);
+            let ids = crate::util::tokenizer::encode(&r.prompt, 64);
+            assert_eq!(ids.len(), 64);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = dataset(30, 2.0, 11);
+        let b = dataset(30, 2.0, 11);
+        assert_eq!(a.requests, b.requests);
+    }
+}

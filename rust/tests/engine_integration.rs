@@ -1,0 +1,226 @@
+//! End-to-end engine scenarios on the simulated backend: the paper's
+//! qualitative claims at mini scale, plus determinism and accounting
+//! invariants.
+
+use lamps::config::{HandlingPolicy, PredictorKind, SystemConfig};
+use lamps::core::request::HandlingStrategy;
+use lamps::core::types::{Micros, Tokens};
+use lamps::engine::Engine;
+use lamps::metrics::RunReport;
+use lamps::workload::{infercept, toolbench, Trace};
+
+fn run(preset: &str, trace: &Trace) -> RunReport {
+    let cfg = SystemConfig::preset(preset).unwrap();
+    Engine::simulated(cfg).run_trace(trace)
+}
+
+/// Memory-contended variant: the paper's evaluation regime is
+/// memory-bound (§1); gains appear when the KV budget binds.
+fn run_contended(preset: &str, trace: &Trace) -> RunReport {
+    let mut cfg = SystemConfig::preset(preset).unwrap();
+    cfg.memory_budget = Tokens(12_000);
+    Engine::simulated(cfg).run_trace(trace)
+}
+
+fn run_cfg(cfg: SystemConfig, trace: &Trace) -> RunReport {
+    Engine::simulated(cfg).run_trace(trace)
+}
+
+#[test]
+fn single_api_trace_completes_under_all_systems() {
+    let trace = infercept::single_api_dataset(80, 2.0, 11);
+    for preset in ["vllm", "infercept", "lamps", "lamps-no-sched", "sjf",
+                   "sjf-total"] {
+        let report = run(preset, &trace);
+        assert_eq!(report.completed, 80, "{preset}");
+        assert!(report.latency.mean_us > 0.0);
+        assert!(report.ttft.mean_us <= report.latency.mean_us,
+                "{preset}: TTFT must not exceed end-to-end latency");
+    }
+}
+
+#[test]
+fn multi_api_trace_completes() {
+    let trace = infercept::multi_api_dataset(60, 2.0, 13);
+    let report = run("lamps", &trace);
+    assert_eq!(report.completed, 60);
+    // Multi-API requests decode across several segments.
+    let total_decode: u64 =
+        trace.requests.iter().map(|r| r.total_decode().0).sum();
+    assert_eq!(report.tokens_decoded, total_decode);
+}
+
+#[test]
+fn toolbench_trace_completes() {
+    let trace = toolbench::dataset(50, 2.0, 17);
+    let report = run("lamps", &trace);
+    assert_eq!(report.completed, 50);
+}
+
+#[test]
+fn deterministic_replay() {
+    let trace = infercept::multi_api_dataset(40, 3.0, 23);
+    let a = run("lamps", &trace);
+    let b = run("lamps", &trace);
+    assert_eq!(a.latency.mean_us, b.latency.mean_us);
+    assert_eq!(a.ttft.p99_us, b.ttft.p99_us);
+    assert_eq!(a.iterations, b.iterations);
+    assert_eq!(a.tokens_decoded, b.tokens_decoded);
+}
+
+#[test]
+fn lamps_beats_vllm_under_load() {
+    // The headline claim (§6.2) at mini scale: under pressure, LAMPS's
+    // predicted handling + memory-over-time scheduling beats vLLM's
+    // FCFS + always-discard.
+    let trace = infercept::multi_api_dataset(150, 6.0, 31);
+    let lamps = run_contended("lamps", &trace);
+    let vllm = run_contended("vllm", &trace);
+    assert!(lamps.latency.mean_us < vllm.latency.mean_us,
+            "lamps {} vs vllm {}", lamps.latency.mean_us,
+            vllm.latency.mean_us);
+    assert!(lamps.ttft.mean_us < vllm.ttft.mean_us,
+            "lamps ttft {} vs vllm ttft {}", lamps.ttft.mean_us,
+            vllm.ttft.mean_us);
+}
+
+#[test]
+fn infercept_beats_vllm_under_load() {
+    // Min-waste handling alone (FCFS kept) already improves on
+    // always-discard.
+    let trace = infercept::multi_api_dataset(150, 6.0, 37);
+    let icept = run_contended("infercept", &trace);
+    let vllm = run_contended("vllm", &trace);
+    assert!(icept.latency.mean_us < vllm.latency.mean_us,
+            "infercept {} vs vllm {}", icept.latency.mean_us,
+            vllm.latency.mean_us);
+}
+
+#[test]
+fn lamps_beats_infercept_under_load() {
+    let trace = infercept::multi_api_dataset(200, 8.0, 41);
+    let lamps = run_contended("lamps", &trace);
+    let icept = run_contended("infercept", &trace);
+    assert!(lamps.latency.mean_us < icept.latency.mean_us,
+            "lamps {} vs infercept {}", lamps.latency.mean_us,
+            icept.latency.mean_us);
+}
+
+#[test]
+fn preserve_holds_more_memory_than_discard() {
+    // Fig 2's mechanism: all-Preserve keeps KV occupied through API
+    // calls; all-Discard frees it.
+    let trace = infercept::single_api_dataset(60, 3.0, 43);
+    let mk = |strategy| {
+        let mut cfg = SystemConfig::preset("lamps-no-sched").unwrap();
+        cfg.handling = HandlingPolicy::Forced(strategy);
+        let mut engine = Engine::simulated(cfg);
+        engine.record_timeline = true;
+        engine.run_trace(&trace)
+    };
+    let preserve = mk(HandlingStrategy::Preserve);
+    let discard = mk(HandlingStrategy::Discard);
+    let avg_kv = |r: &RunReport| {
+        r.timeline.iter().map(|p| p.kv_occupancy).sum::<f64>()
+            / r.timeline.len().max(1) as f64
+    };
+    assert!(avg_kv(&preserve) > avg_kv(&discard),
+            "preserve kv {} vs discard kv {}", avg_kv(&preserve),
+            avg_kv(&discard));
+    // Discard pays recompute work instead.
+    assert!(discard.tokens_recomputed > 0);
+    assert_eq!(preserve.tokens_recomputed, 0);
+}
+
+#[test]
+fn starvation_threshold_improves_tail() {
+    // Fig 9's mechanism: with promotion, P99 latency must not be much
+    // worse than without, and typically improves under pressure.
+    let trace = infercept::multi_api_dataset(200, 8.0, 47);
+    let mut with = SystemConfig::preset("lamps").unwrap();
+    with.starvation_threshold = Some(100);
+    let mut without = SystemConfig::preset("lamps").unwrap();
+    without.starvation_threshold = None;
+    let rep_with = run_cfg(with, &trace);
+    let rep_without = run_cfg(without, &trace);
+    assert!(rep_with.latency.p99_us <= rep_without.latency.p99_us * 1.05,
+            "threshold should not hurt tail: with {} vs without {}",
+            rep_with.latency.p99_us, rep_without.latency.p99_us);
+}
+
+#[test]
+fn large_prediction_error_degrades_lamps() {
+    // Fig 11: performance degrades as injected error grows.
+    let trace = infercept::multi_api_dataset(150, 7.0, 53);
+    let mut exact = SystemConfig::preset("lamps").unwrap();
+    exact.predictor = PredictorKind::Oracle;
+    let mut noisy = SystemConfig::preset("lamps").unwrap();
+    noisy.predictor = PredictorKind::NoisyOracle { error_pct: 1.0 };
+    let rep_exact = run_cfg(exact, &trace);
+    let rep_noisy = run_cfg(noisy, &trace);
+    assert_eq!(rep_exact.completed, rep_noisy.completed);
+    assert!(rep_exact.latency.mean_us <= rep_noisy.latency.mean_us * 1.10,
+            "oracle {} should not be much worse than 100% error {}",
+            rep_exact.latency.mean_us, rep_noisy.latency.mean_us);
+}
+
+#[test]
+fn time_cap_stops_early() {
+    let trace = infercept::single_api_dataset(200, 2.0, 59);
+    let cfg = SystemConfig::preset("lamps").unwrap();
+    let mut engine = Engine::simulated(cfg);
+    let report =
+        engine.run_trace_limited(&trace,
+                                 Some(Micros::from_secs_f64(20.0)));
+    assert!(report.completed < 200);
+    assert!(report.duration <= Micros::from_secs_f64(120.0));
+}
+
+#[test]
+fn no_api_trace_equals_plain_serving() {
+    // With API calls stripped, all handling policies coincide; the run
+    // must still complete and never recompute.
+    let trace = infercept::strip_api_calls(
+        &infercept::single_api_dataset(50, 2.0, 61));
+    for preset in ["vllm", "infercept", "lamps"] {
+        let report = run(preset, &trace);
+        assert_eq!(report.completed, 50, "{preset}");
+        assert_eq!(report.tokens_recomputed, 0, "{preset}");
+    }
+}
+
+#[test]
+fn memory_budget_is_respected_throughout() {
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.memory_budget = Tokens(2_000); // tight
+    let trace = infercept::single_api_dataset(60, 4.0, 67);
+    let mut engine = Engine::simulated(cfg);
+    for spec in &trace.requests {
+        engine.enqueue(spec.clone());
+    }
+    let mut steps = 0u64;
+    while engine.step() {
+        assert!(engine.kv_occupancy() <= 1.0 + 1e-9);
+        steps += 1;
+        assert!(steps < 2_000_000, "runaway");
+    }
+    // Tight memory may drop oversized requests, but everything else
+    // completes and all memory is returned.
+    assert_eq!(engine.kv_occupancy(), 0.0);
+}
+
+#[test]
+fn score_update_interval_changes_little() {
+    // §4.3's selective score update: interval 10 must stay close to
+    // interval 1 on latency while doing less ranking work.
+    let trace = toolbench::dataset(120, 4.0, 71);
+    let mut every = SystemConfig::preset("lamps").unwrap();
+    every.score_update_interval = 1;
+    let mut sparse = SystemConfig::preset("lamps").unwrap();
+    sparse.score_update_interval = 10;
+    let rep_every = run_cfg(every, &trace);
+    let rep_sparse = run_cfg(sparse, &trace);
+    assert_eq!(rep_every.completed, rep_sparse.completed);
+    let ratio = rep_sparse.latency.mean_us / rep_every.latency.mean_us;
+    assert!(ratio < 1.30, "sparse updates cost {ratio:.2}x latency");
+}

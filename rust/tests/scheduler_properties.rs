@@ -1,0 +1,275 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! proptest is not in the offline vendor set (DESIGN.md §2); these are
+//! hand-rolled randomized properties driven by the crate's deterministic
+//! `util::Rng` — seeds are fixed, so failures are exactly reproducible.
+
+use lamps::config::{CostModel, SchedulerKind, SystemConfig};
+use lamps::coordinator::handling::{select_strategy, waste_of, WasteInputs};
+use lamps::coordinator::ranking::{memory_over_time, RankInputs};
+use lamps::core::request::{ApiCallSpec, ApiType, HandlingStrategy, Request,
+                           RequestSpec, SegmentPrediction};
+use lamps::core::types::{Micros, RequestId, Tokens};
+use lamps::engine::Engine;
+use lamps::kv::BlockManager;
+use lamps::util::Rng;
+use lamps::workload::{infercept, toolbench};
+
+const CASES: usize = 200;
+
+fn random_spec(rng: &mut Rng, id: u64) -> RequestSpec {
+    let n_calls = rng.int_range(0, 3) as usize;
+    let api_calls = (0..n_calls)
+        .map(|_| ApiCallSpec {
+            decode_before: Tokens(rng.int_range(1, 60)),
+            api_type: ApiType::Qa,
+            duration: Micros(rng.int_range(1_000, 30_000_000)),
+            response_tokens: Tokens(rng.int_range(0, 20)),
+        })
+        .collect();
+    RequestSpec {
+        id: RequestId(id),
+        arrival: Micros(rng.int_range(0, 10_000_000)),
+        prompt: String::new(),
+        prompt_tokens: Tokens(rng.int_range(1, 100)),
+        api_calls,
+        final_decode: Tokens(rng.int_range(1, 120)),
+    }
+}
+
+fn oracle_request(spec: RequestSpec, strategy: HandlingStrategy) -> Request {
+    let preds: Vec<SegmentPrediction> = (0..spec.num_segments())
+        .map(|seg| SegmentPrediction {
+            decode_tokens: spec.segment_decode(seg),
+            api_duration: spec.api_calls.get(seg).map(|c| c.duration),
+            response_tokens: spec
+                .api_calls
+                .get(seg)
+                .map(|c| c.response_tokens)
+                .unwrap_or(Tokens::ZERO),
+        })
+        .collect();
+    let handling = vec![strategy; spec.api_calls.len()];
+    Request::new(spec, preds, handling)
+}
+
+// ---------------------------------------------------------------------
+// Waste-equation properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_selected_strategy_minimizes_waste() {
+    let mut rng = Rng::new(0xA11CE);
+    let cost = CostModel::paper_scale();
+    for _ in 0..CASES {
+        let inp = WasteInputs {
+            ctx: Tokens(rng.int_range(0, 5_000)),
+            api_duration: Micros(rng.int_range(0, 60_000_000)),
+            c_other: Tokens(rng.int_range(0, 50_000)),
+        };
+        let chosen = select_strategy(&inp, &cost);
+        let w_chosen = waste_of(chosen, &inp, &cost);
+        for s in HandlingStrategy::ALL {
+            assert!(w_chosen <= waste_of(s, &inp, &cost) + 1e-9,
+                    "{chosen:?} not minimal for {inp:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_waste_monotone_in_duration_for_preserve() {
+    let mut rng = Rng::new(0xBEEF);
+    let cost = CostModel::paper_scale();
+    for _ in 0..CASES {
+        let ctx = Tokens(rng.int_range(1, 5_000));
+        let c_other = Tokens(rng.int_range(0, 20_000));
+        let d1 = rng.int_range(0, 10_000_000);
+        let d2 = d1 + rng.int_range(1, 10_000_000);
+        let w1 = waste_of(HandlingStrategy::Preserve, &WasteInputs {
+            ctx,
+            api_duration: Micros(d1),
+            c_other,
+        }, &cost);
+        let w2 = waste_of(HandlingStrategy::Preserve, &WasteInputs {
+            ctx,
+            api_duration: Micros(d2),
+            c_other,
+        }, &cost);
+        assert!(w2 >= w1);
+    }
+}
+
+#[test]
+fn prop_long_enough_api_never_preserves() {
+    // As T_INT grows with everything else fixed, Preserve's waste grows
+    // without bound while Discard/Swap stay constant.
+    let mut rng = Rng::new(0xCAFE);
+    let cost = CostModel::paper_scale();
+    for _ in 0..CASES {
+        let inp = WasteInputs {
+            ctx: Tokens(rng.int_range(1, 2_000)),
+            api_duration: Micros(3_600_000_000), // one hour
+            c_other: Tokens(rng.int_range(0, 20_000)),
+        };
+        assert_ne!(select_strategy(&inp, &cost),
+                   HandlingStrategy::Preserve, "{inp:?}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Ranking properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_rank_nonnegative_and_finite() {
+    let mut rng = Rng::new(0xD00D);
+    let cost = CostModel::paper_scale();
+    let inputs = RankInputs {
+        t_iter: Micros(10_000),
+        c_other_est: Tokens(1_000),
+    };
+    for i in 0..CASES as u64 {
+        for strategy in HandlingStrategy::ALL {
+            let r = oracle_request(random_spec(&mut rng, i), strategy);
+            let score = memory_over_time(&r, &cost, &inputs);
+            assert!(score.is_finite() && score >= 0.0, "score {score}");
+        }
+    }
+}
+
+#[test]
+fn prop_rank_monotone_in_progress() {
+    // Decoding tokens never increases the remaining integral.
+    let mut rng = Rng::new(0xF00);
+    let cost = CostModel::paper_scale();
+    let inputs = RankInputs {
+        t_iter: Micros(10_000),
+        c_other_est: Tokens(1_000),
+    };
+    for i in 0..CASES as u64 {
+        let spec = random_spec(&mut rng, i);
+        let mut r = oracle_request(spec, HandlingStrategy::Preserve);
+        let mut prev = memory_over_time(&r, &cost, &inputs);
+        let seg_len = r.spec.segment_decode(0).0;
+        for _ in 0..seg_len.min(10) {
+            r.segment_generated += Tokens(1);
+            // logical context grows by the same token; remaining ramp
+            // shrinks by strictly more than the context growth adds.
+            let score = memory_over_time(&r, &cost, &inputs);
+            assert!(score <= prev + 1e-6,
+                    "progress increased score: {prev} -> {score}");
+            prev = score;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Block-manager properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_block_manager_conserves_blocks() {
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..50 {
+        let block_size = rng.int_range(1, 32);
+        let budget = Tokens(rng.int_range(1, 200) * block_size);
+        let mut m = BlockManager::new(budget, block_size);
+        let capacity = m.capacity();
+        let mut live: Vec<RequestId> = Vec::new();
+        for op in 0..400 {
+            let coin = rng.f64();
+            if coin < 0.5 {
+                let id = RequestId(case * 1_000 + op);
+                let tokens = Tokens(rng.int_range(0, 3 * block_size));
+                if m.can_fit(id, tokens) {
+                    m.allocate(id, tokens).unwrap();
+                    live.push(id);
+                } else {
+                    assert!(m.allocate(id, tokens).is_err());
+                    // Failed allocation must not leak state.
+                    assert!(!m.contains(id) || live.contains(&id));
+                }
+            } else if coin < 0.8 {
+                if let Some(&id) = live.last() {
+                    if rng.f64() < 0.7 && m.can_fit(id, Tokens(1)) {
+                        m.append_token(id).unwrap();
+                    }
+                }
+            } else if let Some(id) = live.pop() {
+                m.free(id).unwrap();
+            }
+            // Invariants.
+            assert!(m.used_tokens() <= m.reserved_tokens());
+            assert!(m.reserved_tokens() <= capacity);
+            assert!(m.free_tokens() + m.reserved_tokens() == capacity);
+            assert!(m.occupancy() >= 0.0 && m.occupancy() <= 1.0);
+        }
+        for id in live {
+            m.free(id).unwrap();
+        }
+        assert_eq!(m.used_tokens(), Tokens::ZERO);
+        assert_eq!(m.free_tokens(), capacity);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Whole-engine properties over random workloads
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_engine_accounting_invariants() {
+    // For random (dataset, scheduler, rate, seed) cells: every
+    // non-dropped request completes, memory returns to zero, latency >=
+    // TTFT per request, completion >= arrival.
+    let mut rng = Rng::new(0x1AB5);
+    for case in 0..12 {
+        let seed = rng.next_u64() % 1_000;
+        let rate = 1.0 + rng.f64() * 6.0;
+        let n = 30 + (rng.next_u64() % 40) as usize;
+        let trace = match case % 3 {
+            0 => infercept::single_api_dataset(n, rate, seed),
+            1 => infercept::multi_api_dataset(n, rate, seed),
+            _ => toolbench::dataset(n, rate, seed),
+        };
+        let scheduler = match case % 4 {
+            0 => SchedulerKind::Fcfs,
+            1 => SchedulerKind::Sjf,
+            2 => SchedulerKind::SjfTotal,
+            _ => SchedulerKind::Lamps,
+        };
+        let mut cfg = SystemConfig::default();
+        cfg.scheduler = scheduler;
+        cfg.seed = seed;
+        let mut engine = Engine::simulated(cfg);
+        let report = engine.run_trace(&trace);
+        assert_eq!(report.completed + engine.dropped.len(), n,
+                   "case {case}");
+        assert_eq!(engine.kv_occupancy(), 0.0, "case {case}");
+        for rec in engine.metrics.records() {
+            if let (Some(lat), Some(ttft)) = (rec.latency(), rec.ttft()) {
+                assert!(ttft <= lat, "case {case}: ttft > latency");
+            }
+            if let Some(f) = rec.finished {
+                assert!(f >= rec.arrival);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_engine_deterministic_across_schedulers() {
+    let mut rng = Rng::new(0xDE7);
+    for case in 0..6 {
+        let seed = rng.next_u64() % 500;
+        let trace = infercept::multi_api_dataset(40, 4.0, seed);
+        for kind in [SchedulerKind::Fcfs, SchedulerKind::Lamps] {
+            let mut cfg = SystemConfig::default();
+            cfg.scheduler = kind;
+            let a = Engine::simulated(cfg.clone()).run_trace(&trace);
+            let b = Engine::simulated(cfg).run_trace(&trace);
+            assert_eq!(a.latency.mean_us, b.latency.mean_us,
+                       "case {case} {kind:?}");
+            assert_eq!(a.iterations, b.iterations);
+        }
+    }
+}
