@@ -2,10 +2,21 @@
 //! for {vLLM, INFERCEPT, LAMPS} x {single-api, multi-api, toolbench} x
 //! {GPT-J 6B, Vicuna 13B} — the paper's headline grid. Also prints the
 //! §6.2 headline improvement percentages.
-use lamps::bench::{print_cells, print_headline, run_cell, Cell, Dataset,
-                   ModelPreset, SYSTEMS};
+//!
+//! Runs with the chunked batch composer enabled (512-token prefill
+//! chunks + async swap) for every system; set `LAMPS_CHUNK=off` to
+//! reproduce the legacy whole-prompt, synchronous-swap grid.
+use lamps::bench::{print_cells, print_headline, run_cell_with, Cell,
+                   Dataset, ModelPreset, SYSTEMS};
+use lamps::config::ComposeConfig;
 
 fn main() {
+    let compose = match std::env::var("LAMPS_CHUNK").as_deref() {
+        Ok("off") | Ok("0") => ComposeConfig::default(),
+        _ => ComposeConfig::chunked(),
+    };
+    println!("batch composer: prefill chunk {:?}, async swap {}",
+             compose.prefill_chunk, compose.async_swap);
     let rates = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
     let n = 250;
     for model in [ModelPreset::GptJ6b, ModelPreset::Vicuna13b] {
@@ -13,8 +24,9 @@ fn main() {
             let mut cells: Vec<Cell> = Vec::new();
             for &rate in &rates {
                 for system in SYSTEMS {
-                    cells.push(run_cell(system, dataset, model, rate, n,
-                                        42, None));
+                    cells.push(run_cell_with(system, dataset, model,
+                                             rate, n, 42, None,
+                                             compose));
                 }
             }
             print_cells(&format!("Fig 6 — {} / {}", dataset.label(),

@@ -7,7 +7,8 @@ use std::time::Instant;
 use lamps::config::{CostModel, SchedulerKind};
 use lamps::coordinator::handling::{select_strategy, WasteInputs};
 use lamps::coordinator::ranking::{memory_over_time, RankInputs};
-use lamps::coordinator::scheduler::{make_scheduler, ScheduleContext};
+use lamps::coordinator::scheduler::{make_scheduler, ScheduleContext,
+                                    Score};
 use lamps::core::types::{Micros, RequestId, Tokens};
 use lamps::kv::BlockManager;
 use lamps::predictor::oracle::OraclePredictor;
@@ -48,6 +49,7 @@ fn main() {
         t_iter_est: Micros(12_000),
         c_other_est: Tokens(6_000),
         iteration: 0,
+        account_prefill: false,
     };
 
     let lamps_sched = make_scheduler(SchedulerKind::Lamps);
@@ -55,18 +57,19 @@ fn main() {
         std::hint::black_box(lamps_sched.score(&requests[0], &ctx));
     });
     bench("lamps ranking pass: 10k requests", 100, || {
-        let mut scores: Vec<(f64, RequestId)> = requests
+        let mut scores: Vec<(Score, RequestId)> = requests
             .iter()
             .map(|r| (lamps_sched.score(r, &ctx), r.spec.id))
             .collect();
-        scores.sort_by(|a, b| a.0.total_cmp(&b.0));
+        scores.sort_by(|a, b| a.0.cmp(&b.0));
         std::hint::black_box(scores.len());
     });
     bench("memory_over_time integral", 100_000, || {
         std::hint::black_box(memory_over_time(
             &requests[1], &cost,
             &RankInputs { t_iter: Micros(12_000),
-                          c_other_est: Tokens(6_000) }));
+                          c_other_est: Tokens(6_000),
+                          account_prefill: false }));
     });
     bench("waste equations: select_strategy", 1_000_000, || {
         std::hint::black_box(select_strategy(

@@ -2,7 +2,7 @@
 //! figure bench drives, plus table formatting. See DESIGN.md §4 for the
 //! experiment index.
 
-use crate::config::{CostModel, SystemConfig};
+use crate::config::{ComposeConfig, CostModel, SystemConfig};
 use crate::core::types::Micros;
 use crate::engine::Engine;
 use crate::metrics::RunReport;
@@ -93,15 +93,29 @@ pub struct Cell {
 /// §Calibration).
 pub const FIGURE_BUDGET: u64 = 12_000;
 
-/// Run one (system, dataset, model, rate) cell on the simulator.
+/// Run one (system, dataset, model, rate) cell on the simulator with the
+/// legacy (unchunked, synchronous-swap) composer settings.
 pub fn run_cell(system: &str, dataset: Dataset, model: ModelPreset,
                 rate: f64, n_requests: usize, seed: u64,
                 time_cap: Option<Micros>) -> Cell {
+    run_cell_with(system, dataset, model, rate, n_requests, seed,
+                  time_cap, ComposeConfig::default())
+}
+
+/// Run one cell with explicit batch-composer settings (chunked prefill /
+/// token budget / async swap) — the before/after axis of the
+/// `micro_batch_composer` bench and the chunked Fig 6 grid.
+#[allow(clippy::too_many_arguments)]
+pub fn run_cell_with(system: &str, dataset: Dataset, model: ModelPreset,
+                     rate: f64, n_requests: usize, seed: u64,
+                     time_cap: Option<Micros>, compose: ComposeConfig)
+                     -> Cell {
     let mut cfg = SystemConfig::preset(system)
         .unwrap_or_else(|| panic!("unknown system preset {system}"));
     cfg.cost = model.cost();
     cfg.seed = seed;
     cfg.memory_budget = crate::core::types::Tokens(FIGURE_BUDGET);
+    cfg.compose = compose;
     // ToolBench uses the score-update interval of 10 (§5).
     if dataset == Dataset::ToolBench {
         cfg.score_update_interval = 10;

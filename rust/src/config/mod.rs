@@ -137,6 +137,48 @@ pub enum PredictorKind {
     Pjrt,
 }
 
+/// Knobs of the token-budgeted batch composer
+/// ([`crate::coordinator::batch`]). Defaults reproduce the legacy
+/// engine behavior exactly: whole-prompt prefill, no per-iteration token
+/// budget, synchronous (batch-stalling) swap transfers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ComposeConfig {
+    /// Token budget for one composed iteration: each decode slot costs 1
+    /// token, each prefill chunk its length. `None` = unbounded.
+    /// Decode-ready requests are always scheduled even if the budget is
+    /// smaller than the batch (decodes are latency-critical); the budget
+    /// throttles prefill work.
+    pub max_batch_tokens: Option<u64>,
+    /// Maximum prefill tokens materialized per request per iteration;
+    /// longer prompts and discard-recomputes are split into chunks so a
+    /// single long recompute cannot stall co-batched decodes for its
+    /// whole forward pass. `None` = whole-context (legacy behavior).
+    pub prefill_chunk: Option<u64>,
+    /// Run swap-out/swap-in as asynchronous background transfers tracked
+    /// by [`crate::kv::TransferQueue`], overlapping decode instead of
+    /// charging the whole batch synchronously (INFERCEPT eqn (3)'s stall
+    /// term becomes overlap).
+    pub async_swap: bool,
+}
+
+impl ComposeConfig {
+    /// Preset used by the figure benches when chunking is enabled: a
+    /// 512-token chunk bounds a recompute's per-iteration stall to
+    /// ~51 ms at paper-scale prefill cost while leaving typical prompts
+    /// (< 512 tokens) whole.
+    pub fn chunked() -> ComposeConfig {
+        ComposeConfig {
+            max_batch_tokens: None,
+            prefill_chunk: Some(512),
+            async_swap: true,
+        }
+    }
+
+    pub fn is_chunked(&self) -> bool {
+        self.prefill_chunk.is_some()
+    }
+}
+
 /// Top-level system configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemConfig {
@@ -167,6 +209,8 @@ pub struct SystemConfig {
     /// is queued as a *new* job (FCFS position = return time). INFERCEPT
     /// and LAMPS keep the original arrival order.
     pub requeue_as_new: bool,
+    /// Batch-composer knobs (token budget, chunked prefill, async swap).
+    pub compose: ComposeConfig,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -184,6 +228,7 @@ impl Default for SystemConfig {
             score_update_interval: 1,
             admission_lookahead: true,
             requeue_as_new: false,
+            compose: ComposeConfig::default(),
             cost: CostModel::paper_scale(),
             seed: 0,
         }
@@ -258,6 +303,18 @@ mod tests {
         assert_eq!(c.decode_iter_time(Tokens(1000)), Micros(1_000_000));
         assert_eq!(c.prefill_time(Tokens(2)), Micros(2_000_000));
         assert_eq!(c.swap_time(Tokens(5)), Micros::ZERO);
+    }
+
+    #[test]
+    fn compose_defaults_are_legacy() {
+        let c = ComposeConfig::default();
+        assert_eq!(c.max_batch_tokens, None);
+        assert_eq!(c.prefill_chunk, None);
+        assert!(!c.async_swap);
+        assert!(!c.is_chunked());
+        assert!(ComposeConfig::chunked().is_chunked());
+        // Presets must not silently enable the composer features.
+        assert_eq!(SystemConfig::preset("lamps").unwrap().compose, c);
     }
 
     #[test]

@@ -1,0 +1,274 @@
+//! Token-budgeted batch composer: the compose→execute→commit pipeline.
+//!
+//! Every scheduling round the engine no longer "materializes then
+//! decodes" serially; it runs three phases:
+//!
+//! 1. **compose** (this module, pure): from the admitted running set,
+//!    assemble one mixed iteration under the
+//!    [`ComposeConfig`](crate::config::ComposeConfig) token budget —
+//!    which requests decode one token, and which materialize a *chunk*
+//!    of pending prefill/recompute work. Long prompts and
+//!    discard-recomputes are split into `prefill_chunk`-sized segments,
+//!    so a 4k-token recompute charges at most one chunk's forward time
+//!    to each co-batched decode iteration instead of stalling everyone
+//!    for the whole pass (the waste INFERCEPT's eqn (2) charges).
+//! 2. **execute** (engine): run the planned chunks and the decode batch
+//!    on the [`Backend`](crate::engine::backend::Backend), measuring (or
+//!    simulating) elapsed time. Synchronous swap restores execute here
+//!    too; asynchronous ones run in the
+//!    [`TransferQueue`](crate::kv::TransferQueue) instead and never
+//!    appear in a plan.
+//! 3. **commit** (engine): apply the results — advance materialization
+//!    cursors, append decoded tokens, route API encounters and
+//!    completions, update the profiling EMAs.
+//!
+//! The split keeps composition a pure function of request state, which
+//! is what makes it testable in isolation and reusable across both
+//! backends and every scheduler policy; it is also the seam the
+//! ROADMAP's multi-replica dispatch will plug into (compose per replica,
+//! execute in parallel).
+//!
+//! **Budget semantics.** A decode slot costs 1 token (it appends one);
+//! a prefill chunk costs its length. Decode-ready requests are always
+//! scheduled — the budget throttles prefill, never decode — and at
+//! least one prefill chunk makes progress per round even under an
+//! exhausted budget, so composition can never livelock.
+
+use crate::config::ComposeConfig;
+use crate::core::types::{RequestId, Tokens};
+use crate::engine::backend::DecodeSlot;
+
+/// Composer's view of one admitted (running) request.
+#[derive(Debug, Clone, Copy)]
+pub struct ComposeItem {
+    pub id: RequestId,
+    /// Prefill / recompute tokens still owed before decode can resume.
+    pub pending: Tokens,
+    /// Full logical context (the decode slot's ctx once materialized).
+    pub logical_context: Tokens,
+    /// The request's context is parked in swap space and must be
+    /// restored synchronously before its chunk runs (sync-swap mode
+    /// only; async restores go through the `TransferQueue` and are never
+    /// offered to the composer).
+    pub needs_swap_in: bool,
+}
+
+/// One planned materialization step for a request.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillChunk {
+    pub id: RequestId,
+    /// Tokens to materialize this iteration (may be zero for a pure
+    /// swap-in restore whose API response was empty).
+    pub tokens: Tokens,
+    /// Restore the swapped context before materializing (sync mode).
+    pub swap_in: bool,
+    /// This chunk completes the request's materialization; the request
+    /// joins the decode batch in the same iteration (matching the
+    /// legacy prefill-then-decode round exactly when chunking is off).
+    pub finishes: bool,
+}
+
+/// The composed iteration: what execute() runs and commit() applies.
+#[derive(Debug, Clone, Default)]
+pub struct IterationPlan {
+    pub prefill: Vec<PrefillChunk>,
+    pub decode: Vec<DecodeSlot>,
+    /// Tokens of budget consumed (decode slots + chunk lengths).
+    pub budget_used: u64,
+}
+
+impl IterationPlan {
+    pub fn is_empty(&self) -> bool {
+        self.prefill.is_empty() && self.decode.is_empty()
+    }
+}
+
+/// Assemble one iteration from the running set (given in priority
+/// order). Pure: no engine state is touched.
+pub fn compose(cfg: &ComposeConfig, items: &[ComposeItem])
+               -> IterationPlan {
+    let mut plan = IterationPlan::default();
+    let budget = cfg.max_batch_tokens.unwrap_or(u64::MAX);
+
+    // Decode-ready requests first: each costs one budget token but is
+    // never dropped from the iteration (decode latency is the metric
+    // chunking protects).
+    for item in items {
+        if item.pending == Tokens::ZERO && !item.needs_swap_in {
+            plan.decode.push(DecodeSlot {
+                id: item.id,
+                ctx: item.logical_context,
+            });
+            plan.budget_used += 1;
+        }
+    }
+
+    // Prefill chunks from the leftover budget, in priority order.
+    for item in items {
+        if item.pending == Tokens::ZERO && !item.needs_swap_in {
+            continue;
+        }
+        let left = budget.saturating_sub(plan.budget_used);
+        let cap = cfg
+            .prefill_chunk
+            .unwrap_or(u64::MAX)
+            .min(if cfg.max_batch_tokens.is_some() {
+                left
+            } else {
+                u64::MAX
+            });
+        let progress_starved = plan.prefill.is_empty() && cap == 0;
+        let chunk = if progress_starved {
+            // Liveness floor: the head-of-line materialization always
+            // advances by one chunk per round, budget notwithstanding.
+            item.pending.0.min(cfg.prefill_chunk.unwrap_or(u64::MAX))
+        } else {
+            item.pending.0.min(cap)
+        };
+        if chunk == 0 && item.pending > Tokens::ZERO && !item.needs_swap_in
+        {
+            continue; // budget-starved this round; retried next round
+        }
+        let finishes = chunk == item.pending.0;
+        plan.prefill.push(PrefillChunk {
+            id: item.id,
+            tokens: Tokens(chunk),
+            swap_in: item.needs_swap_in,
+            finishes,
+        });
+        plan.budget_used += chunk;
+        if finishes {
+            plan.decode.push(DecodeSlot {
+                id: item.id,
+                ctx: item.logical_context,
+            });
+            plan.budget_used += 1;
+        }
+    }
+
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(id: u64, pending: u64, ctx: u64) -> ComposeItem {
+        ComposeItem {
+            id: RequestId(id),
+            pending: Tokens(pending),
+            logical_context: Tokens(ctx),
+            needs_swap_in: false,
+        }
+    }
+
+    fn legacy() -> ComposeConfig {
+        ComposeConfig::default()
+    }
+
+    fn chunked(chunk: u64) -> ComposeConfig {
+        ComposeConfig {
+            prefill_chunk: Some(chunk),
+            ..ComposeConfig::default()
+        }
+    }
+
+    #[test]
+    fn legacy_mode_materializes_whole_and_decodes_same_round() {
+        let plan = compose(&legacy(), &[item(1, 0, 10), item(2, 40, 40)]);
+        assert_eq!(plan.decode.len(), 2, "finisher joins decode");
+        assert_eq!(plan.prefill.len(), 1);
+        assert_eq!(plan.prefill[0].tokens, Tokens(40));
+        assert!(plan.prefill[0].finishes);
+    }
+
+    #[test]
+    fn long_prefill_is_chunked() {
+        let cfg = chunked(16);
+        let plan = compose(&cfg, &[item(1, 0, 10), item(2, 40, 40)]);
+        assert_eq!(plan.prefill.len(), 1);
+        assert_eq!(plan.prefill[0].tokens, Tokens(16));
+        assert!(!plan.prefill[0].finishes);
+        // The partial request does not decode yet; the ready one does.
+        assert_eq!(plan.decode.len(), 1);
+        assert_eq!(plan.decode[0].id, RequestId(1));
+    }
+
+    #[test]
+    fn final_chunk_joins_decode() {
+        let cfg = chunked(16);
+        let plan = compose(&cfg, &[item(2, 12, 40)]);
+        assert_eq!(plan.prefill[0].tokens, Tokens(12));
+        assert!(plan.prefill[0].finishes);
+        assert_eq!(plan.decode.len(), 1);
+        assert_eq!(plan.decode[0].ctx, Tokens(40));
+    }
+
+    #[test]
+    fn token_budget_throttles_prefill_not_decode() {
+        let cfg = ComposeConfig {
+            max_batch_tokens: Some(20),
+            prefill_chunk: Some(64),
+            async_swap: false,
+        };
+        let items = [item(1, 0, 5), item(2, 0, 5), item(3, 100, 100),
+                     item(4, 100, 100)];
+        let plan = compose(&cfg, &items);
+        // Both decodes run (2 tokens), first prefiller gets the
+        // remaining 18, the second is starved to next round.
+        assert_eq!(plan.decode.len(), 2);
+        assert_eq!(plan.prefill.len(), 1);
+        assert_eq!(plan.prefill[0].id, RequestId(3));
+        assert_eq!(plan.prefill[0].tokens, Tokens(18));
+        assert_eq!(plan.budget_used, 20);
+    }
+
+    #[test]
+    fn exhausted_budget_still_makes_progress() {
+        // Budget smaller than the decode batch: decodes all run anyway,
+        // and the head-of-line prefiller still advances (liveness).
+        let cfg = ComposeConfig {
+            max_batch_tokens: Some(1),
+            prefill_chunk: Some(8),
+            async_swap: false,
+        };
+        let items = [item(1, 0, 5), item(2, 0, 5), item(3, 30, 30)];
+        let plan = compose(&cfg, &items);
+        assert_eq!(plan.decode.len(), 2);
+        assert_eq!(plan.prefill.len(), 1);
+        assert!(plan.prefill[0].tokens >= Tokens(1));
+        assert!(plan.prefill[0].tokens <= Tokens(8));
+    }
+
+    #[test]
+    fn pure_swap_restore_composes_with_zero_tokens() {
+        // Swap return with an empty API response: nothing to prefill,
+        // but the restore must still be planned and decode follows.
+        let mut it = item(1, 0, 25);
+        it.needs_swap_in = true;
+        let plan = compose(&legacy(), &[it]);
+        assert_eq!(plan.prefill.len(), 1);
+        assert_eq!(plan.prefill[0].tokens, Tokens::ZERO);
+        assert!(plan.prefill[0].swap_in);
+        assert!(plan.prefill[0].finishes);
+        assert_eq!(plan.decode.len(), 1);
+    }
+
+    #[test]
+    fn priority_order_is_preserved() {
+        let cfg = chunked(10);
+        let items = [item(9, 50, 50), item(3, 50, 50), item(7, 0, 4)];
+        let plan = compose(&cfg, &items);
+        // Prefill chunks follow the given (priority) order.
+        assert_eq!(plan.prefill[0].id, RequestId(9));
+        assert_eq!(plan.prefill[1].id, RequestId(3));
+        assert_eq!(plan.decode[0].id, RequestId(7));
+    }
+
+    #[test]
+    fn empty_input_is_empty_plan() {
+        let plan = compose(&legacy(), &[]);
+        assert!(plan.is_empty());
+        assert_eq!(plan.budget_used, 0);
+    }
+}

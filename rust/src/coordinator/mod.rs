@@ -2,9 +2,11 @@
 //! selection (INFERCEPT equations (1)-(3)), the memory-over-time ranking
 //! function, and the scheduling policies (FCFS / SJF / SJF-total / LAMPS).
 
+pub mod batch;
 pub mod handling;
 pub mod ranking;
 pub mod scheduler;
 
+pub use batch::{compose, ComposeItem, IterationPlan, PrefillChunk};
 pub use handling::{select_strategy, WasteInputs};
-pub use scheduler::{ScheduleContext, Scheduler};
+pub use scheduler::{ScheduleContext, Scheduler, Score};

@@ -25,6 +25,11 @@ pub struct RankInputs {
     /// (§3.2.1 "This estimation involves profiling the number of requests
     /// in a batch").
     pub c_other_est: Tokens,
+    /// Chunked prefill enabled: charge the held context of
+    /// partially-materialized requests for their remaining prefill time.
+    /// Off (the legacy engine), that state never exists and the integral
+    /// is bit-identical to the original formula.
+    pub account_prefill: bool,
 }
 
 /// Memory-over-time integral of the *remaining* predicted lifetime of `r`.
@@ -33,6 +38,19 @@ pub fn memory_over_time(r: &Request, cost: &CostModel,
     let t_iter = inputs.t_iter.0.max(1) as f64;
     let mut total = 0.0;
     let mut ctx = r.logical_context.0 as f64;
+
+    // Chunked prefill can pause a request mid-materialization (context
+    // partially live, `pending_materialize` still owed). The live part
+    // sits in device memory for the remaining prefill time before the
+    // decode ramp below even starts — charge it, or half-prefilled
+    // giants rank as if their held KV were free.
+    if inputs.account_prefill
+        && r.pending_materialize > Tokens::ZERO
+        && r.context > Tokens::ZERO
+    {
+        let t_mat = cost.prefill_time(r.pending_materialize).0 as f64;
+        total += t_mat * r.context.0 as f64;
+    }
 
     for seg in r.segment..r.spec.num_segments() {
         let pred = &r.predictions[seg];
@@ -78,6 +96,7 @@ mod tests {
         RankInputs {
             t_iter: Micros(1_000_000),
             c_other_est: Tokens(c_other),
+            account_prefill: false,
         }
     }
 
@@ -177,6 +196,33 @@ mod tests {
         let short = fig3_request(1, 5, 2, 1, HandlingStrategy::Preserve);
         let long = fig3_request(2, 5, 50, 1, HandlingStrategy::Preserve);
         assert!(score_units(&short, 0) < score_units(&long, 0));
+    }
+
+    #[test]
+    fn partial_prefill_hold_term_only_when_enabled() {
+        // A half-materialized request (chunked-prefill state): 4 of 8
+        // context tokens live, 4 still owed.
+        let mut r = fig3_request(1, 5, 2, 1, HandlingStrategy::Preserve);
+        r.logical_context = Tokens(8);
+        r.context = Tokens(4);
+        r.pending_materialize = Tokens(4);
+        let off = memory_over_time(&r, &unit_cost(), &unit_inputs(3));
+        let on = memory_over_time(&r, &unit_cost(), &RankInputs {
+            account_prefill: true,
+            ..unit_inputs(3)
+        });
+        // Unit cost: 4 tokens x 1 s/token prefill x 4 held tokens.
+        assert!((on - off - 4.0 * 1e6 * 4.0).abs() < 1e-6,
+                "off {off} on {on}");
+        // Legacy states (nothing pending, or nothing yet live) are
+        // unaffected even when enabled.
+        r.pending_materialize = Tokens::ZERO;
+        let a = memory_over_time(&r, &unit_cost(), &unit_inputs(3));
+        let b = memory_over_time(&r, &unit_cost(), &RankInputs {
+            account_prefill: true,
+            ..unit_inputs(3)
+        });
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -3,10 +3,74 @@
 //! `(starving desc, score asc, id asc)` each iteration (Algorithm 1 line
 //! 16 + the §4.4 starvation promotion).
 
+use std::cmp::Ordering;
+
 use crate::config::{CostModel, SchedulerKind};
 use crate::coordinator::ranking::{memory_over_time, RankInputs};
 use crate::core::request::Request;
 use crate::core::types::{Micros, Tokens};
+
+/// Composite, totally-ordered scheduling key: an f64 primary value plus
+/// an integer tie-breaker compared exactly.
+///
+/// Folding a tie-breaker into the f64 itself (the old
+/// `queue_key * 1e9 + id`) collides once the primary exceeds ~2^53/1e9:
+/// the mantissa runs out and distinct (key, id) pairs map to the same —
+/// or worse, *reordered* — floats. Keeping the tie-breaker as an integer
+/// field makes the key exact for any u64 id, and the primary alone stays
+/// exact up to 2^53 (as microseconds: ~285 years of uptime).
+#[derive(Debug, Clone, Copy)]
+pub struct Score {
+    /// Policy value; lower runs first.
+    pub primary: f64,
+    /// Exact integer tie-breaker (0 for policies that don't need one —
+    /// the engine's final same-score fallback is the request id).
+    pub tie: u64,
+}
+
+impl Score {
+    pub const MAX: Score = Score {
+        primary: f64::INFINITY,
+        tie: u64::MAX,
+    };
+
+    pub fn of(primary: f64) -> Score {
+        Score { primary, tie: 0 }
+    }
+
+    pub fn with_tie(primary: f64, tie: u64) -> Score {
+        Score { primary, tie }
+    }
+}
+
+impl PartialEq for Score {
+    fn eq(&self, other: &Score) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Score {}
+
+impl PartialOrd for Score {
+    fn partial_cmp(&self, other: &Score) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Score {
+    fn cmp(&self, other: &Score) -> Ordering {
+        self.primary
+            .total_cmp(&other.primary)
+            .then(self.tie.cmp(&other.tie))
+    }
+}
+
+/// Convenience for tests and assertions against plain policy values.
+impl PartialEq<f64> for Score {
+    fn eq(&self, other: &f64) -> bool {
+        self.primary == *other
+    }
+}
 
 /// Live engine state the score functions may consult.
 #[derive(Debug, Clone, Copy)]
@@ -17,6 +81,10 @@ pub struct ScheduleContext {
     /// Profiled co-batched context estimate (`C_other`).
     pub c_other_est: Tokens,
     pub iteration: u64,
+    /// Chunked prefill is enabled: scores must charge for the held
+    /// context of partially-materialized requests (a state that only
+    /// exists when materialization can pause mid-way).
+    pub account_prefill: bool,
 }
 
 impl ScheduleContext {
@@ -24,6 +92,7 @@ impl ScheduleContext {
         RankInputs {
             t_iter: self.t_iter_est,
             c_other_est: self.c_other_est,
+            account_prefill: self.account_prefill,
         }
     }
 }
@@ -32,7 +101,7 @@ impl ScheduleContext {
 /// first).
 pub trait Scheduler {
     fn kind(&self) -> SchedulerKind;
-    fn score(&self, r: &Request, ctx: &ScheduleContext) -> f64;
+    fn score(&self, r: &Request, ctx: &ScheduleContext) -> Score;
 
     /// Whether scores depend on live engine state and therefore benefit
     /// from the selective-update cache (§4.3). Static policies (FCFS/SJF)
@@ -56,8 +125,11 @@ impl Scheduler for Fcfs {
         SchedulerKind::Fcfs
     }
 
-    fn score(&self, r: &Request, _ctx: &ScheduleContext) -> f64 {
-        r.queue_key.0 as f64 * 1e9 + r.spec.id.0 as f64
+    fn score(&self, r: &Request, _ctx: &ScheduleContext) -> Score {
+        // queue_key microseconds stay exact in the f64 primary up to
+        // 2^53 us; the id is an exact integer tie instead of being
+        // folded into the mantissa.
+        Score::with_tie(r.queue_key.0 as f64, r.spec.id.0)
     }
 }
 
@@ -91,8 +163,8 @@ impl Scheduler for Sjf {
         SchedulerKind::Sjf
     }
 
-    fn score(&self, r: &Request, _ctx: &ScheduleContext) -> f64 {
-        remaining_work_tokens(r)
+    fn score(&self, r: &Request, _ctx: &ScheduleContext) -> Score {
+        Score::of(remaining_work_tokens(r))
     }
 
     fn is_dynamic(&self) -> bool {
@@ -110,7 +182,7 @@ impl Scheduler for SjfTotal {
         SchedulerKind::SjfTotal
     }
 
-    fn score(&self, r: &Request, ctx: &ScheduleContext) -> f64 {
+    fn score(&self, r: &Request, ctx: &ScheduleContext) -> Score {
         let t_iter = ctx.t_iter_est.0.max(1) as f64;
         let api_units: f64 = (r.segment..r.spec.num_segments())
             .map(|seg| {
@@ -119,7 +191,7 @@ impl Scheduler for SjfTotal {
                     .map_or(0.0, |d| d.0 as f64 / t_iter)
             })
             .sum();
-        remaining_work_tokens(r) + api_units
+        Score::of(remaining_work_tokens(r) + api_units)
     }
 
     fn is_dynamic(&self) -> bool {
@@ -136,8 +208,8 @@ impl Scheduler for Lamps {
         SchedulerKind::Lamps
     }
 
-    fn score(&self, r: &Request, ctx: &ScheduleContext) -> f64 {
-        memory_over_time(r, &ctx.cost, &ctx.rank_inputs())
+    fn score(&self, r: &Request, ctx: &ScheduleContext) -> Score {
+        Score::of(memory_over_time(r, &ctx.cost, &ctx.rank_inputs()))
     }
 
     fn is_dynamic(&self) -> bool {
@@ -168,6 +240,7 @@ mod tests {
             t_iter_est: Micros(1_000_000),
             c_other_est: Tokens(3),
             iteration: 0,
+            account_prefill: false,
         }
     }
 
@@ -210,6 +283,36 @@ mod tests {
         assert!(s.score(&a, &c) < s.score(&b, &c));
         let same_arrival_low_id = req(1, 100, 9, 9, 9);
         assert!(s.score(&same_arrival_low_id, &c) < s.score(&a, &c));
+    }
+
+    #[test]
+    fn fcfs_key_is_integer_safe_at_large_uptimes() {
+        // Regression: the old f64 key `queue_key * 1e9 + id` exhausted
+        // the mantissa once queue_key exceeded 2^53/1e9 us (~9 virtual
+        // seconds!) and collided/reordered ids. The composite key ties
+        // by id exactly and still separates adjacent microseconds.
+        let s = Fcfs;
+        let c = ctx();
+        let big = 1u64 << 40; // ~13 days of uptime in microseconds
+        let mut a = req(1, 0, 1, 1, 1);
+        a.queue_key = Micros(big);
+        let mut b = req(2, 0, 1, 1, 1);
+        b.queue_key = Micros(big);
+        assert!(s.score(&a, &c) < s.score(&b, &c),
+                "equal keys must tie-break by id");
+        let mut later = req(0, 0, 1, 1, 1);
+        later.queue_key = Micros(big + 1);
+        assert!(s.score(&b, &c) < s.score(&later, &c),
+                "1 us later must rank later regardless of id");
+    }
+
+    #[test]
+    fn score_total_order() {
+        assert!(Score::of(1.0) < Score::of(2.0));
+        assert!(Score::with_tie(1.0, 0) < Score::with_tie(1.0, 1));
+        assert_eq!(Score::with_tie(3.0, 7), Score::with_tie(3.0, 7));
+        assert!(Score::of(5.0) < Score::MAX);
+        assert_eq!(Score::of(4.5), 4.5);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! decode the final segment, finish. Multi-API requests are segmented and
 //! re-enter scheduling after every API call (paper §4.2 "Multi-API").
 
+use crate::coordinator::scheduler::Score;
 use crate::core::types::{Micros, RequestId, Tokens};
 
 /// External-augmentation classes with distinct latency profiles
@@ -206,8 +207,15 @@ pub struct Request {
     /// rematerialized by a recompute.
     pub logical_context: Tokens,
     /// Prefill / recompute / swap-in work still owed before decode resumes,
-    /// in tokens of context to materialize.
+    /// in tokens of context to materialize. The engine maintains
+    /// `context = logical_context - pending_materialize` for admitted
+    /// requests, so a chunked prefill that pauses mid-way leaves an
+    /// accurate picture of what is live.
     pub pending_materialize: Tokens,
+    /// The materialization in progress is a post-Discard recompute
+    /// (wasted-work accounting); set when it starts, cleared when
+    /// `pending_materialize` drains.
+    pub recomputing: bool,
     /// FCFS ordering key. Starts at `spec.arrival`; vLLM-style systems
     /// treat a request returning from an API as a *new* job (paper §1,
     /// §6.2), so the engine bumps this to the return time whenever the
@@ -224,9 +232,9 @@ pub struct Request {
     pub first_scheduled_at: Option<Micros>,
     pub first_token_at: Option<Micros>,
     pub finished_at: Option<Micros>,
-    /// Cached LAMPS score + the iteration it was computed on (selective
-    /// score update, paper §4.3).
-    pub cached_score: f64,
+    /// Cached scheduling score + the iteration it was computed on
+    /// (selective score update, paper §4.3).
+    pub cached_score: Score,
     pub score_iteration: u64,
 }
 
@@ -250,13 +258,14 @@ impl Request {
             context: Tokens::ZERO,
             logical_context: prompt_tokens,
             pending_materialize: prompt_tokens,
+            recomputing: false,
             was_scheduled: false,
             starvation_cnt: 0,
             starving: false,
             first_scheduled_at: None,
             first_token_at: None,
             finished_at: None,
-            cached_score: f64::INFINITY,
+            cached_score: Score::MAX,
             score_iteration: u64::MAX,
         }
     }

@@ -2,14 +2,26 @@
 //! over a pluggable execution [`Backend`] and [`Clock`].
 //!
 //! One scheduling round:
-//! 1. admit arrivals (predict + assign handling strategies),
-//! 2. drain returned API calls back into the waiting queue,
-//! 3. rank the waiting queue (scheduler policy + starvation promotion),
-//! 4. admit requests into the running batch under the memory budget and
+//! 1. admit arrivals (predict + assign handling strategies), land
+//!    finished background swap transfers, drain returned API calls back
+//!    into the waiting queue,
+//! 2. rank the waiting queue (scheduler policy + starvation promotion),
+//! 3. admit requests into the running batch under the memory budget and
 //!    the clairvoyant reservation check (see below),
-//! 5. materialize admitted contexts (prefill / recompute / swap-in),
-//! 6. run one decode iteration; route API-encounters to the P/D/S queues,
-//!    complete finished requests.
+//! 4. **compose** one mixed prefill+decode iteration under the
+//!    `ComposeConfig` token budget ([`crate::coordinator::batch`]):
+//!    decode slots plus chunked prefill/recompute segments,
+//! 5. **execute** the plan on the backend (chunk materializations, swap
+//!    restores, one decode pass),
+//! 6. **commit** the results: advance materialization cursors, append
+//!    decoded tokens, route API-encounters to the P/D/S queues, complete
+//!    finished requests.
+//!
+//! With `ComposeConfig::default()` the pipeline reproduces the legacy
+//! serial loop exactly (whole-context prefill, synchronous swap stalls);
+//! `prefill_chunk` bounds how long a big recompute may stall co-batched
+//! decodes, and `async_swap` turns eqn (3)'s batch stall into background
+//! transfers tracked by a [`TransferQueue`].
 //!
 //! **Reservation admission** (`admission_lookahead`): a candidate is only
 //! admitted if every in-flight Preserve/Swap API request can still resume
@@ -28,19 +40,20 @@ use std::collections::HashMap;
 
 use crate::config::{HandlingPolicy, PredictorKind, SchedulerKind,
                     SystemConfig};
+use crate::coordinator::batch::{self, ComposeItem, IterationPlan};
 use crate::coordinator::handling::{select_strategy, WasteInputs};
 use crate::coordinator::scheduler::{make_scheduler, ScheduleContext,
                                     Scheduler};
 use crate::core::request::{HandlingStrategy, Phase, Request, RequestSpec};
 use crate::core::types::{Micros, RequestId, Tokens};
-use crate::kv::{BlockManager, SwapSpace};
+use crate::kv::{BlockManager, SwapSpace, TransferDir, TransferQueue};
 use crate::metrics::{MetricsCollector, RunReport, TimelinePoint};
 use crate::predictor::oracle::{NoisyOraclePredictor, OraclePredictor};
 use crate::predictor::Predictor;
 use crate::workload::Trace;
 
 use api_executor::ApiExecutor;
-use backend::{Backend, DecodeSlot, SimBackend};
+use backend::{Backend, SimBackend};
 use clock::Clock;
 
 /// Safety valve against scheduling livelock in buggy configs.
@@ -54,6 +67,8 @@ pub struct Engine {
     clock: Clock,
     kv: BlockManager,
     swap: SwapSpace,
+    /// In-flight background swap transfers (`ComposeConfig::async_swap`).
+    transfers: TransferQueue,
     api: ApiExecutor,
 
     requests: HashMap<RequestId, Request>,
@@ -92,6 +107,7 @@ impl Engine {
             clock,
             kv,
             swap: SwapSpace::unbounded(),
+            transfers: TransferQueue::new(),
             api: ApiExecutor::new(),
             requests: HashMap::new(),
             waiting: Vec::new(),
@@ -258,6 +274,7 @@ impl Engine {
     pub fn step(&mut self) -> bool {
         let now = self.now();
         self.drain_arrivals(now);
+        self.complete_transfers(now);
         self.drain_api_returns(now);
         // Algorithm 1 line 17: the running batch is rebuilt from the
         // sorted queue every iteration. Deselected requests keep their KV
@@ -271,16 +288,9 @@ impl Engine {
         self.admit();
 
         if self.running.is_empty() {
-            // Idle: jump to the next event.
-            let next_arrival = self.pending.front().map(|s| s.arrival);
-            let next_return = self.api.next_return();
-            let target = match (next_arrival, next_return) {
-                (Some(a), Some(r)) => Some(a.min(r)),
-                (Some(a), None) => Some(a),
-                (None, Some(r)) => Some(r),
-                (None, None) => None,
-            };
-            match target {
+            // Idle: jump to the next event (arrival, API return, or a
+            // background swap transfer landing).
+            match self.next_event() {
                 Some(t) => {
                     self.clock.wait_until(t);
                     return true;
@@ -302,8 +312,20 @@ impl Engine {
             }
         }
 
-        self.materialize_admitted();
-        self.decode_iteration();
+        // Tentpole pipeline: compose → execute → commit.
+        let plan = self.compose_iteration();
+        if plan.is_empty() {
+            // Defensive (compose guarantees progress for a non-empty
+            // running set): jump to the next event rather than spin.
+            return match self.next_event() {
+                Some(t) if t > now => {
+                    self.clock.wait_until(t);
+                    true
+                }
+                _ => false,
+            };
+        }
+        self.execute_and_commit(plan);
         self.iteration += 1;
         self.metrics.iterations = self.iteration;
         if self.record_timeline {
@@ -328,6 +350,20 @@ impl Engine {
             self.metrics.sample_timeline(point);
         }
         true
+    }
+
+    /// Earliest future event the engine can jump to when nothing is
+    /// runnable: the next arrival, API return, or background swap
+    /// transfer completion.
+    fn next_event(&self) -> Option<Micros> {
+        [
+            self.pending.front().map(|s| s.arrival),
+            self.api.next_return(),
+            self.transfers.next_completion(),
+        ]
+        .into_iter()
+        .flatten()
+        .min()
     }
 
     fn drain_arrivals(&mut self, now: Micros) {
@@ -363,11 +399,13 @@ impl Engine {
                 HandlingStrategy::Discard => {
                     // Everything must be recomputed.
                     req.pending_materialize = req.logical_context;
+                    req.context = Tokens::ZERO;
                 }
                 HandlingStrategy::Swap => {
                     // Swap-in restores the old context; the response is
-                    // new.
+                    // new. Nothing is live until the restore runs.
                     req.pending_materialize = response;
+                    req.context = Tokens::ZERO;
                 }
             }
             req.phase = Phase::Waiting;
@@ -387,6 +425,7 @@ impl Engine {
             t_iter_est: Micros(self.t_iter_ema as u64),
             c_other_est: Tokens(self.c_other_ema as u64),
             iteration: self.iteration,
+            account_prefill: self.cfg.compose.is_chunked(),
         }
     }
 
@@ -413,7 +452,7 @@ impl Engine {
             let rb = &requests[b];
             rb.starving
                 .cmp(&ra.starving)
-                .then(ra.cached_score.total_cmp(&rb.cached_score))
+                .then(ra.cached_score.cmp(&rb.cached_score))
                 .then(ra.spec.id.cmp(&rb.spec.id))
         });
     }
@@ -435,10 +474,18 @@ impl Engine {
         let mut rest: std::collections::VecDeque<RequestId> =
             waiting.into();
         while let Some(id) = rest.pop_front() {
+            // An in-flight background transfer pins the request: it
+            // neither runs nor competes for admission until the
+            // transfer lands.
+            if self.transfers.contains(id) {
+                still_waiting.push(id);
+                continue;
+            }
             // A context that outgrew the whole budget can never run again:
             // drop it rather than livelock (real deployments would error
             // the request back to the client).
             if self.requests[&id].admission_memory() > self.kv.capacity() {
+                self.transfers.cancel(id);
                 if self.kv.contains(id) {
                     self.kv.free(id).expect("drop free");
                 }
@@ -465,7 +512,10 @@ impl Engine {
                     let victim = rest
                         .iter()
                         .rev()
-                        .find(|v| self.kv.tokens_of(**v) > Tokens::ZERO)
+                        .find(|v| {
+                            self.kv.tokens_of(**v) > Tokens::ZERO
+                                && !self.transfers.contains(**v)
+                        })
                         .copied();
                     let Some(v) = victim else { break };
                     if self.cfg.scheduler == SchedulerKind::Lamps
@@ -483,8 +533,8 @@ impl Engine {
                             as f64
                             * ctx.0 as f64;
                         let candidate_score =
-                            self.requests[&id].cached_score;
-                        if vr.cached_score
+                            self.requests[&id].cached_score.primary;
+                        if vr.cached_score.primary
                             <= candidate_score + evict_cost
                         {
                             break; // not worth destroying preserved work
@@ -515,13 +565,30 @@ impl Engine {
                 if delta > Tokens::ZERO {
                     self.kv.allocate(id, delta).expect("fits_memory held");
                 }
-                req.phase = Phase::Running;
                 req.was_scheduled = true;
                 req.starvation_cnt = 0;
                 if req.first_scheduled_at.is_none() {
                     req.first_scheduled_at = Some(now);
                 }
-                admitted.push(id);
+                if self.cfg.compose.async_swap && self.swap.contains(id) {
+                    // Begin the background swap-in: device blocks are
+                    // charged from now, the batch keeps decoding, and
+                    // the request rejoins once the transfer lands.
+                    let (tokens, t_in) = self
+                        .swap
+                        .swap_in(id, &self.cfg.cost)
+                        .expect("parked context");
+                    let t_backend = self.backend.swap_in(id, tokens);
+                    let stall = t_in.max(t_backend);
+                    self.metrics.swap_overlap_us += stall.0;
+                    self.transfers.begin(id, TransferDir::SwapIn, tokens,
+                                         now + stall);
+                    still_waiting.push(id);
+                } else {
+                    let req = self.requests.get_mut(&id).unwrap();
+                    req.phase = Phase::Running;
+                    admitted.push(id);
+                }
             } else {
                 still_waiting.push(id);
             }
@@ -529,8 +596,12 @@ impl Engine {
 
         // Starvation accounting for the left-behind (Algorithm 1 lines
         // 22-31): increment, promote at threshold, sticky until finish.
+        // Transfer-pinned requests are progressing, not starving.
         if let Some(threshold) = self.cfg.starvation_threshold {
             for id in &still_waiting {
+                if self.transfers.contains(*id) {
+                    continue;
+                }
                 let req = self.requests.get_mut(id).unwrap();
                 if !req.starving {
                     req.starvation_cnt += 1;
@@ -547,13 +618,14 @@ impl Engine {
     }
 
     /// Immediate memory check: context + 1 token of headroom must fit.
+    /// Mirrors admit()'s allocation delta exactly — in particular, a
+    /// request whose async swap-in already reserved `logical + 1` tokens
+    /// needs nothing more.
     fn fits_memory(&self, id: RequestId) -> bool {
         let req = &self.requests[&id];
         let existing = self.kv.tokens_of(id);
-        let needed = req
-            .logical_context
-            .saturating_sub(existing)
-            + Tokens(1);
+        let needed = (req.logical_context + Tokens(1))
+            .saturating_sub(existing);
         self.kv.can_fit(id, needed)
     }
 
@@ -644,94 +716,159 @@ impl Engine {
         }
     }
 
-    /// Charge prefill / recompute / swap-in work for newly admitted
-    /// requests. Prefill blocks the engine (vLLM-style prefill priority).
-    fn materialize_admitted(&mut self) {
-        let ids: Vec<RequestId> = self.running.clone();
-        for id in ids {
-            let req = self.requests.get_mut(&id).unwrap();
-            let mut elapsed = Micros::ZERO;
-            if self.swap.contains(id) {
-                let (tokens, t_in) =
-                    self.swap.swap_in(id, &self.cfg.cost).expect("swapped");
-                let t_backend = self.backend.swap_in(id, tokens);
-                let stall = t_in.max(t_backend);
-                self.metrics.swap_stall_us += stall.0;
-                elapsed += stall;
-                req.context = tokens;
-            }
-            if req.pending_materialize > Tokens::ZERO {
-                let ctx = req.pending_materialize;
-                let total = req.logical_context;
-                let prompt = req.spec.prompt.clone();
-                let t = self.backend.materialize(id, &prompt, total, ctx);
-                elapsed += t;
-                if req.segment > 0
-                    && req.pending_materialize == req.logical_context
-                {
-                    // Post-Discard recompute (wasted work accounting).
-                    self.metrics.tokens_recomputed += ctx.0;
+    /// Land finished background swap transfers (async mode): a swap-in
+    /// makes the restored context live; a swap-out releases the device
+    /// blocks it was draining from.
+    fn complete_transfers(&mut self, now: Micros) {
+        if self.transfers.is_empty() {
+            return;
+        }
+        for t in self.transfers.pop_completed(now) {
+            match t.dir {
+                TransferDir::SwapIn => {
+                    if let Some(req) = self.requests.get_mut(&t.id) {
+                        req.context = t.tokens;
+                    }
                 }
-                req.context = req.logical_context;
-                req.pending_materialize = Tokens::ZERO;
-            } else {
-                req.context = req.logical_context;
+                TransferDir::SwapOut => {
+                    if self.kv.contains(t.id) {
+                        self.kv.free(t.id).expect("swap-out drain free");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Phase 1 — **compose**: build the iteration plan from the running
+    /// set (already in priority order) under the token budget. Pure
+    /// projection of request state; see [`crate::coordinator::batch`].
+    fn compose_iteration(&self) -> IterationPlan {
+        let items: Vec<ComposeItem> = self
+            .running
+            .iter()
+            .map(|id| {
+                let req = &self.requests[id];
+                ComposeItem {
+                    id: *id,
+                    pending: req.pending_materialize,
+                    logical_context: req.logical_context,
+                    // Async restores run in the TransferQueue and are
+                    // intercepted at admission; only the synchronous
+                    // path surfaces here.
+                    needs_swap_in: self.swap.contains(*id),
+                }
+            })
+            .collect();
+        batch::compose(&self.cfg.compose, &items)
+    }
+
+    /// Phases 2+3 — **execute** the plan on the backend and **commit**
+    /// the results. With `ComposeConfig::default()` (one whole-context
+    /// chunk per request, decode in the same round) this reproduces the
+    /// legacy materialize-then-decode loop time-step for time-step.
+    fn execute_and_commit(&mut self, plan: IterationPlan) {
+        // Materialization chunks: swap restores + prefill segments, in
+        // batch priority order. Prefill still blocks the round
+        // (vLLM-style prefill priority) but only for its chunk.
+        for chunk in &plan.prefill {
+            let id = chunk.id;
+            let mut elapsed = Micros::ZERO;
+            if chunk.swap_in {
+                if let Some((tokens, t_in)) =
+                    self.swap.swap_in(id, &self.cfg.cost)
+                {
+                    let t_backend = self.backend.swap_in(id, tokens);
+                    let stall = t_in.max(t_backend);
+                    self.metrics.swap_stall_us += stall.0;
+                    elapsed += stall;
+                    self.requests.get_mut(&id).unwrap().context = tokens;
+                }
+            }
+            if chunk.tokens > Tokens::ZERO {
+                let (prompt, total_after) = {
+                    let req = self.requests.get_mut(&id).unwrap();
+                    if req.segment > 0
+                        && req.pending_materialize == req.logical_context
+                    {
+                        // Post-Discard recompute starting over (wasted
+                        // work accounting).
+                        req.recomputing = true;
+                    }
+                    let after = req
+                        .logical_context
+                        .saturating_sub(req.pending_materialize)
+                        + chunk.tokens;
+                    (req.spec.prompt.clone(), after)
+                };
+                let t = self
+                    .backend
+                    .materialize(id, &prompt, total_after, chunk.tokens);
+                elapsed += t;
+                if self.requests[&id].recomputing {
+                    self.metrics.tokens_recomputed += chunk.tokens.0;
+                }
             }
             if elapsed > Micros::ZERO {
                 self.metrics.materialize_us += elapsed.0;
                 self.clock.advance(elapsed);
             }
+            // Commit the chunk: advance the materialization cursor,
+            // keeping `context = logical_context - pending_materialize`.
+            let req = self.requests.get_mut(&id).unwrap();
+            req.pending_materialize =
+                req.pending_materialize.saturating_sub(chunk.tokens);
+            req.context = req
+                .logical_context
+                .saturating_sub(req.pending_materialize);
+            if req.pending_materialize == Tokens::ZERO {
+                req.recomputing = false;
+            }
         }
-    }
 
-    /// One decode iteration for the whole running batch.
-    fn decode_iteration(&mut self) {
-        let slots: Vec<DecodeSlot> = self
-            .running
-            .iter()
-            .map(|id| DecodeSlot {
-                id: *id,
-                ctx: self.requests[id].context,
-            })
-            .collect();
-        let elapsed = self.backend.decode(&slots);
+        if plan.decode.is_empty() {
+            // All budget went to prefill this round; decode resumes next
+            // iteration.
+            return;
+        }
+        let elapsed = self.backend.decode(&plan.decode);
         let now = self.clock.advance(elapsed);
 
         // Profiling EMAs for the ranking inputs.
         self.t_iter_ema = 0.9 * self.t_iter_ema + 0.1 * elapsed.0 as f64;
-        if slots.len() > 1 {
-            let total: u64 = slots.iter().map(|s| s.ctx.0).sum();
-            let c_other = slots
+        if plan.decode.len() > 1 {
+            let total: u64 = plan.decode.iter().map(|s| s.ctx.0).sum();
+            let c_other = plan
+                .decode
                 .iter()
                 .map(|s| (total - s.ctx.0) as f64)
                 .sum::<f64>()
-                / slots.len() as f64;
+                / plan.decode.len() as f64;
             self.c_other_ema = 0.95 * self.c_other_ema + 0.05 * c_other;
         }
 
-        // Consume the admission-reserved headroom slot: each running
-        // request's new token was pre-allocated in admit().
-        let ids: Vec<RequestId> = self.running.clone();
-        for id in ids {
-            let req = self.requests.get_mut(&id).unwrap();
-            debug_assert!(self.kv.tokens_of(id) >= req.context + Tokens(1),
+        // Commit decode: consume the admission-reserved headroom slot —
+        // each decoded request's new token was pre-allocated in admit().
+        let decode_ids: Vec<RequestId> =
+            plan.decode.iter().map(|s| s.id).collect();
+        for id in &decode_ids {
+            let req = self.requests.get_mut(id).unwrap();
+            debug_assert!(self.kv.tokens_of(*id) >= req.context + Tokens(1),
                           "admission must have reserved the headroom \
                            ({id}: tokens_of={}, context={})",
-                          self.kv.tokens_of(id).0, req.context.0);
+                          self.kv.tokens_of(*id).0, req.context.0);
             req.context += Tokens(1);
             req.logical_context += Tokens(1);
             req.segment_generated += Tokens(1);
             self.metrics.tokens_decoded += 1;
             if req.first_token_at.is_none() {
                 req.first_token_at = Some(now);
-                self.metrics.on_first_token(id, now);
+                self.metrics.on_first_token(*id, now);
             }
         }
 
         // Route segment boundaries: API encounters and completions.
-        let ids: Vec<RequestId> = self.running.clone();
         let mut leaving: Vec<RequestId> = Vec::new();
-        for id in ids {
+        for id in decode_ids {
             let req = &self.requests[&id];
             if req.segment_remaining() > Tokens::ZERO {
                 continue;
@@ -758,16 +895,21 @@ impl Engine {
     }
 
     /// Lowest-priority *paused* request still holding device memory —
-    /// the victim when memory pressure blocks all progress.
+    /// the victim when memory pressure blocks all progress. Requests
+    /// with an in-flight transfer are untouchable (their blocks are
+    /// mid-copy).
     fn pick_preemption_victim(&self) -> Option<RequestId> {
         self.waiting
             .iter()
-            .filter(|id| self.kv.tokens_of(**id) > Tokens::ZERO)
+            .filter(|id| {
+                self.kv.tokens_of(**id) > Tokens::ZERO
+                    && !self.transfers.contains(**id)
+            })
             .max_by(|a, b| {
                 let ra = &self.requests[*a];
                 let rb = &self.requests[*b];
                 ra.cached_score
-                    .total_cmp(&rb.cached_score)
+                    .cmp(&rb.cached_score)
                     .then(ra.spec.id.cmp(&rb.spec.id))
             })
             .copied()
@@ -776,10 +918,13 @@ impl Engine {
     /// vLLM recompute-style preemption: drop device state. The victim
     /// stays wherever it is queued (or is re-queued by the caller).
     fn preempt_state(&mut self, id: RequestId, now: Micros) {
+        debug_assert!(!self.transfers.contains(id),
+                      "{id} preempted mid-transfer");
         let req = self.requests.get_mut(&id).unwrap();
         req.phase = Phase::Waiting;
         req.pending_materialize = req.logical_context;
         req.context = Tokens::ZERO;
+        req.recomputing = false;
         if self.cfg.requeue_as_new {
             req.queue_key = now;
         }
@@ -850,17 +995,40 @@ impl Engine {
             HandlingStrategy::Swap => {
                 self.metrics.strategy_counts[2] += 1;
                 let ctx = self.requests[&id].context;
-                let t_book =
-                    self.swap.swap_out(id, ctx, &self.cfg.cost);
-                let t_backend = self.backend.swap_out(id, ctx);
-                // Eqn (3): the transfer stalls the whole batch.
-                let stall = t_book.unwrap_or(Micros::ZERO).max(t_backend);
-                if stall > Micros::ZERO {
-                    self.metrics.swap_stall_us += stall.0;
-                    self.clock.advance(stall);
-                }
-                if self.kv.contains(id) {
-                    self.kv.free(id).expect("swap free");
+                if self.cfg.compose.async_swap {
+                    // Background transfer: the batch keeps decoding;
+                    // device blocks stay charged until the copy drains.
+                    match self.swap.swap_out(id, ctx, &self.cfg.cost) {
+                        Some(t_book) => {
+                            let t_backend = self.backend.swap_out(id, ctx);
+                            let stall = t_book.max(t_backend);
+                            self.metrics.swap_overlap_us += stall.0;
+                            self.transfers.begin(
+                                id, TransferDir::SwapOut, ctx,
+                                self.clock.now() + stall);
+                        }
+                        None => {
+                            // Swap space refused (full): nothing was
+                            // parked, so the KV must stay resident —
+                            // degrade to Preserve rather than lose the
+                            // context. Unreachable with the unbounded
+                            // host space the engine provisions.
+                        }
+                    }
+                } else {
+                    let t_book =
+                        self.swap.swap_out(id, ctx, &self.cfg.cost);
+                    let t_backend = self.backend.swap_out(id, ctx);
+                    // Eqn (3): the transfer stalls the whole batch.
+                    let stall =
+                        t_book.unwrap_or(Micros::ZERO).max(t_backend);
+                    if stall > Micros::ZERO {
+                        self.metrics.swap_stall_us += stall.0;
+                        self.clock.advance(stall);
+                    }
+                    if self.kv.contains(id) {
+                        self.kv.free(id).expect("swap free");
+                    }
                 }
             }
         }
@@ -879,6 +1047,7 @@ impl Engine {
         let req = self.requests.get_mut(&id).unwrap();
         req.phase = Phase::Finished;
         req.finished_at = Some(now);
+        self.transfers.cancel(id);
         if self.kv.contains(id) {
             self.kv.free(id).expect("finish free");
         }
@@ -1086,5 +1255,115 @@ mod tests {
         e.run_until_idle(None);
         assert_eq!(e.metrics.completed(), 5);
         assert_eq!(e.kv_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn chunked_prefill_bounds_co_batched_stall() {
+        // A 64-token prompt co-batched with a running decoder:
+        // unchunked, its prefill stalls the decoder 64 token-times in a
+        // single round; chunked at 8, no round may exceed one decode
+        // plus one chunk's forward time (the acceptance bound).
+        let mk = |chunk: Option<u64>| {
+            let mut cfg = unit_cfg(SchedulerKind::Fcfs, 1000);
+            cfg.max_batch = 4;
+            cfg.cost = CostModel {
+                decode_base: Micros(1_000),
+                decode_per_ctx_token_us: 0.0,
+                prefill_per_token_us: 1_000.0,
+                swap_base_us: 0.0,
+                swap_per_token_us: 0.0,
+                rank_overhead_per_request_us: 0.0,
+            };
+            cfg.compose.prefill_chunk = chunk;
+            let mut e = Engine::simulated(cfg);
+            e.submit(simple_spec(0, 0, 100));
+            e.submit(RequestSpec {
+                prompt_tokens: Tokens(64),
+                ..simple_spec(1, 0, 1)
+            });
+            let mut max_step = Micros::ZERO;
+            loop {
+                let before = e.now();
+                if !e.step() {
+                    break;
+                }
+                let d = e.now() - before;
+                if d > max_step {
+                    max_step = d;
+                }
+            }
+            assert!(e.request(RequestId(0)).unwrap().is_finished());
+            assert!(e.request(RequestId(1)).unwrap().is_finished());
+            max_step
+        };
+        let unchunked = mk(None);
+        let chunked = mk(Some(8));
+        assert!(unchunked >= Micros(65_000),
+                "unchunked worst round was {unchunked}");
+        // decode 1 ms + one 8-token chunk (8 ms) = 9 ms ceiling.
+        assert!(chunked <= Micros(9_000),
+                "chunked worst round was {chunked}");
+    }
+
+    #[test]
+    fn chunking_preserves_decode_totals() {
+        let trace_decode: u64 = 5 + 3 + 1; // api_spec(0, 5, 2, 3) + extra
+        let mk = |chunk: Option<u64>| {
+            let mut cfg = unit_cfg(SchedulerKind::Lamps, 200);
+            cfg.max_batch = 4;
+            cfg.compose.prefill_chunk = chunk;
+            let mut e = Engine::simulated(cfg);
+            e.submit_with_handling(api_spec(0, 5, 2, 3),
+                                   vec![HandlingStrategy::Discard]);
+            e.submit(simple_spec(1, 0, 1));
+            e.run_until_idle(None);
+            assert_eq!(e.metrics.completed(), 2);
+            assert_eq!(e.kv_occupancy(), 0.0);
+            e.metrics.tokens_decoded
+        };
+        assert_eq!(mk(None), trace_decode);
+        assert_eq!(mk(Some(2)), trace_decode);
+    }
+
+    #[test]
+    fn async_swap_overlaps_and_does_not_stall() {
+        // Sync semantics charge both transfers to the batch: 2 decode +
+        // 1 swap-out stall + 3 API + 1 swap-in stall + 1 decode = 8
+        // units (see swap_strategy_roundtrips_memory). Async, the
+        // swap-out overlaps the API wait entirely and only the swap-in
+        // transfer (1 unit, off the batch) remains on the critical
+        // path: 2 + 3 + 1 + 1 = 7 units.
+        let mut cfg = unit_cfg(SchedulerKind::Fcfs, 100);
+        cfg.cost.swap_per_token_us = 500_000.0;
+        cfg.compose.async_swap = true;
+        let mut e = Engine::simulated(cfg);
+        e.submit_with_handling(api_spec(0, 2, 3, 1),
+                               vec![HandlingStrategy::Swap]);
+        e.run_until_idle(None);
+        let r = e.request(RequestId(0)).unwrap();
+        assert!(r.is_finished());
+        assert_eq!(r.finished_at, Some(Micros(7_000_000)));
+        assert_eq!(e.metrics.swap_stall_us, 0);
+        assert_eq!(e.metrics.swap_overlap_us, 2_000_000);
+        assert_eq!(e.kv_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn token_budget_defers_prefill_but_completes() {
+        let mut cfg = unit_cfg(SchedulerKind::Fcfs, 500);
+        cfg.max_batch = 8;
+        cfg.compose.max_batch_tokens = Some(16);
+        cfg.compose.prefill_chunk = Some(8);
+        let mut e = Engine::simulated(cfg);
+        for i in 0..3 {
+            e.submit(RequestSpec {
+                prompt_tokens: Tokens(40),
+                ..simple_spec(i, 0, 2)
+            });
+        }
+        e.run_until_idle(None);
+        assert_eq!(e.metrics.completed(), 3);
+        assert_eq!(e.kv_occupancy(), 0.0);
+        assert_eq!(e.metrics.tokens_decoded, 6);
     }
 }

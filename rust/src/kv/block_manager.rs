@@ -16,7 +16,12 @@ pub type BlockId = u32;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum KvError {
-    /// Not enough free blocks for the allocation.
+    /// Not enough free blocks for the allocation. `free` is reported in
+    /// the same unit the admission check uses: tokens the *requesting*
+    /// allocation could actually get right now — whole free blocks plus
+    /// the slack in the request's own partial last block (a bare
+    /// whole-block count under-reports exactly when the last block is
+    /// partial).
     OutOfMemory {
         requested: Tokens,
         free: Tokens,
@@ -132,6 +137,18 @@ impl BlockManager {
         self.allocs.get(&req).map(|a| a.blocks.as_slice())
     }
 
+    /// Tokens `req` could grow by right now: whole free blocks plus the
+    /// slack in its own partial last block. This is the exact bound
+    /// `can_fit` enforces: `can_fit(req, t)` iff `t <= available_for(req)`.
+    pub fn available_for(&self, req: RequestId) -> Tokens {
+        let slack = self
+            .allocs
+            .get(&req)
+            .map(|a| a.blocks.len() as u64 * self.block_size - a.tokens)
+            .unwrap_or(0);
+        Tokens(self.free_blocks.len() as u64 * self.block_size + slack)
+    }
+
     /// Would an allocation/growth of `tokens` for `req` succeed right now?
     pub fn can_fit(&self, req: RequestId, tokens: Tokens) -> bool {
         let existing = self.allocs.get(&req);
@@ -156,7 +173,7 @@ impl BlockManager {
         if !self.can_fit(req, tokens) {
             return Err(KvError::OutOfMemory {
                 requested: tokens,
-                free: self.free_tokens(),
+                free: self.available_for(req),
             });
         }
         let alloc = self.allocs.entry(req).or_insert(Allocation {
@@ -242,6 +259,24 @@ mod tests {
         assert!(matches!(err, KvError::OutOfMemory { .. }));
         assert_eq!(m.tokens_of(rid(2)), Tokens::ZERO);
         assert!(!m.contains(rid(2)));
+    }
+
+    #[test]
+    fn oom_reports_free_in_requester_tokens() {
+        // r1 holds 10 of its 16-slot block: 6 slack + 1 free block = 22
+        // tokens available *to r1*; a plain free-block count would say 16.
+        let mut m = BlockManager::new(Tokens(32), 16);
+        m.allocate(rid(1), Tokens(10)).unwrap();
+        assert_eq!(m.available_for(rid(1)), Tokens(22));
+        assert_eq!(m.available_for(rid(2)), Tokens(16));
+        let err = m.allocate(rid(1), Tokens(23)).unwrap_err();
+        assert_eq!(err, KvError::OutOfMemory {
+            requested: Tokens(23),
+            free: Tokens(22),
+        });
+        // The reported amount must itself be allocatable.
+        m.allocate(rid(1), Tokens(22)).unwrap();
+        assert_eq!(m.available_for(rid(1)), Tokens::ZERO);
     }
 
     #[test]

@@ -4,4 +4,4 @@ pub mod block_manager;
 pub mod swap;
 
 pub use block_manager::{BlockManager, KvError};
-pub use swap::SwapSpace;
+pub use swap::{SwapSpace, Transfer, TransferDir, TransferQueue};

@@ -77,6 +77,100 @@ impl SwapSpace {
     }
 }
 
+/// Direction of an in-flight KV transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferDir {
+    /// Device -> host (Swap handling at an API encounter). Device blocks
+    /// stay charged until the transfer drains.
+    SwapOut,
+    /// Host -> device (resuming a swapped request). Device blocks are
+    /// charged from transfer start; decode may begin at completion.
+    SwapIn,
+}
+
+/// One asynchronous host<->device KV transfer.
+#[derive(Debug, Clone, Copy)]
+pub struct Transfer {
+    pub id: RequestId,
+    pub dir: TransferDir,
+    /// Context tokens being moved.
+    pub tokens: Tokens,
+    pub completes_at: Micros,
+}
+
+/// Tracker for swap transfers running in the background of the decode
+/// loop (`ComposeConfig::async_swap`). The engine polls
+/// [`TransferQueue::pop_completed`] at the top of every scheduling round
+/// and treats [`TransferQueue::next_completion`] as a wake-up event when
+/// idle, so transfers overlap decode instead of stalling the batch the
+/// way INFERCEPT's eqn (3) charges.
+#[derive(Debug, Clone, Default)]
+pub struct TransferQueue {
+    in_flight: Vec<Transfer>,
+}
+
+impl TransferQueue {
+    pub fn new() -> TransferQueue {
+        TransferQueue::default()
+    }
+
+    /// Register a transfer. A request can have at most one in flight —
+    /// the engine gates admission/encounter on [`TransferQueue::contains`].
+    pub fn begin(&mut self, id: RequestId, dir: TransferDir,
+                 tokens: Tokens, completes_at: Micros) {
+        debug_assert!(!self.contains(id),
+                      "{id} already has an in-flight transfer");
+        self.in_flight.push(Transfer {
+            id,
+            dir,
+            tokens,
+            completes_at,
+        });
+    }
+
+    pub fn contains(&self, id: RequestId) -> bool {
+        self.in_flight.iter().any(|t| t.id == id)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.in_flight.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Earliest pending completion time (idle-jump target).
+    pub fn next_completion(&self) -> Option<Micros> {
+        self.in_flight.iter().map(|t| t.completes_at).min()
+    }
+
+    /// Remove and return every transfer completed by `now`, in
+    /// completion-time order (ties broken by start order — the queue is
+    /// insertion-ordered, and the sort is stable — keeping the
+    /// discrete-event simulation deterministic).
+    pub fn pop_completed(&mut self, now: Micros) -> Vec<Transfer> {
+        let mut done: Vec<Transfer> = Vec::new();
+        self.in_flight.retain(|t| {
+            if t.completes_at <= now {
+                done.push(*t);
+                false
+            } else {
+                true
+            }
+        });
+        done.sort_by_key(|t| t.completes_at);
+        done
+    }
+
+    /// Drop a request's transfer without completing it (request dropped
+    /// or preempted). Returns the cancelled transfer, if any.
+    pub fn cancel(&mut self, id: RequestId) -> Option<Transfer> {
+        let idx = self.in_flight.iter().position(|t| t.id == id)?;
+        Some(self.in_flight.remove(idx))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,5 +222,45 @@ mod tests {
         assert_eq!(s.discard(RequestId(1)), Some(Tokens(25)));
         assert_eq!(s.total_swapped_in, 0);
         assert_eq!(s.used(), Tokens::ZERO);
+    }
+
+    #[test]
+    fn transfer_queue_completion_order() {
+        let mut q = TransferQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.next_completion(), None);
+        q.begin(RequestId(1), TransferDir::SwapOut, Tokens(10),
+                Micros(300));
+        q.begin(RequestId(2), TransferDir::SwapIn, Tokens(20),
+                Micros(100));
+        q.begin(RequestId(3), TransferDir::SwapOut, Tokens(5),
+                Micros(200));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.next_completion(), Some(Micros(100)));
+        assert!(q.contains(RequestId(2)));
+
+        let done = q.pop_completed(Micros(250));
+        let ids: Vec<RequestId> = done.iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![RequestId(2), RequestId(3)]);
+        assert_eq!(done[0].tokens, Tokens(20));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.next_completion(), Some(Micros(300)));
+
+        // Nothing completes before its time.
+        assert!(q.pop_completed(Micros(299)).is_empty());
+        assert_eq!(q.pop_completed(Micros(300)).len(), 1);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn transfer_queue_cancel() {
+        let mut q = TransferQueue::new();
+        q.begin(RequestId(7), TransferDir::SwapIn, Tokens(8), Micros(50));
+        assert!(q.cancel(RequestId(9)).is_none());
+        let t = q.cancel(RequestId(7)).unwrap();
+        assert_eq!(t.dir, TransferDir::SwapIn);
+        assert_eq!(t.tokens, Tokens(8));
+        assert!(q.is_empty());
+        assert!(q.pop_completed(Micros(1000)).is_empty());
     }
 }

@@ -28,10 +28,12 @@ lamps — LAMPS: predictive scheduling for augmented-LLM serving
 USAGE:
   lamps serve   [--addr 127.0.0.1:7070] [--model gptj-tiny]
                 [--system lamps] [--artifacts artifacts]
+                [--max-batch-tokens N] [--prefill-chunk N] [--async-swap]
   lamps run     [--dataset single-api|multi-api|toolbench|<trace.json>]
                 [--system vllm|infercept|lamps|lamps-no-sched|sjf|sjf-total]
                 [--model gptj-6b|vicuna-13b] [--rate 3.0]
                 [--requests 500] [--seed 42] [--time-cap-secs N]
+                [--max-batch-tokens N] [--prefill-chunk N] [--async-swap]
                 [--timeline]
   lamps gen-workload --out trace.json [--dataset single-api] [--rate 3.0]
                 [--requests 500] [--seed 42]
@@ -115,6 +117,20 @@ fn parse_model(name: &str) -> ModelPreset {
     }
 }
 
+/// Apply the batch-composer flags (`--max-batch-tokens`,
+/// `--prefill-chunk`, `--async-swap`) to a config.
+fn apply_compose_flags(cfg: &mut SystemConfig, args: &Args) {
+    if let Some(budget) = args.flags.get("max-batch-tokens") {
+        cfg.compose.max_batch_tokens = budget.parse().ok();
+    }
+    if let Some(chunk) = args.flags.get("prefill-chunk") {
+        cfg.compose.prefill_chunk = chunk.parse().ok();
+    }
+    if args.has("async-swap") {
+        cfg.compose.async_swap = true;
+    }
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(command) = argv.first() else {
@@ -148,8 +164,9 @@ fn serve(args: &Args) -> Result<()> {
     // Validate artifacts up front (nice errors before the thread starts).
     let meta = ArtifactMeta::load(artifacts)?;
     meta.model(model)?;
-    let base_cfg = SystemConfig::preset(system)
+    let mut base_cfg = SystemConfig::preset(system)
         .ok_or_else(|| anyhow::anyhow!("unknown system preset {system}"))?;
+    apply_compose_flags(&mut base_cfg, args);
 
     // PJRT handles are not Send: build them inside the engine thread.
     let model_name = model.to_string();
@@ -204,6 +221,7 @@ fn run(args: &Args) -> Result<()> {
     if args.has("no-lookahead") {
         cfg.admission_lookahead = false;
     }
+    apply_compose_flags(&mut cfg, args);
     let mut engine = Engine::simulated(cfg);
     engine.record_timeline = args.has("timeline");
     let cap = args

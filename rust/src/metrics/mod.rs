@@ -109,6 +109,9 @@ pub struct MetricsCollector {
     pub strategy_counts: [u64; 3],
     /// Engine time spent stalled on swap transfers.
     pub swap_stall_us: u64,
+    /// Swap transfer time that ran as background transfers overlapping
+    /// decode (async swap) instead of stalling the batch.
+    pub swap_overlap_us: u64,
     /// Engine time spent on prefill/recompute materialization.
     pub materialize_us: u64,
     /// Admission rejections by cause (per request-round).
@@ -180,6 +183,7 @@ impl MetricsCollector {
             preemptions: self.preemptions,
             strategy_counts: self.strategy_counts,
             swap_stall_us: self.swap_stall_us,
+            swap_overlap_us: self.swap_overlap_us,
             materialize_us: self.materialize_us,
             rejected_slot: self.rejected_slot,
             rejected_memory: self.rejected_memory,
@@ -207,6 +211,8 @@ pub struct RunReport {
     pub strategy_counts: [u64; 3],
     /// Engine time stalled on swap transfers.
     pub swap_stall_us: u64,
+    /// Swap transfer time overlapped with decode (async swap).
+    pub swap_overlap_us: u64,
     /// Engine time spent on prefill/recompute materialization.
     pub materialize_us: u64,
     /// Admission rejections by cause (per request-round).
@@ -245,6 +251,7 @@ impl RunReport {
             ("discard_count", json::num(self.strategy_counts[1] as f64)),
             ("swap_count", json::num(self.strategy_counts[2] as f64)),
             ("swap_stall_us", json::num(self.swap_stall_us as f64)),
+            ("swap_overlap_us", json::num(self.swap_overlap_us as f64)),
             ("materialize_us", json::num(self.materialize_us as f64)),
             ("rejected_slot", json::num(self.rejected_slot as f64)),
             ("rejected_memory", json::num(self.rejected_memory as f64)),

@@ -94,6 +94,22 @@ impl ServerHandle {
     }
 }
 
+/// Spawn a simulated-backend server from a config alone — the frontend
+/// counterpart of [`Engine::simulated`]. All engine knobs, including the
+/// batch-composer settings (`cfg.compose`: per-iteration token budget,
+/// chunked prefill, async swap), take effect as-is.
+pub fn spawn_sim(cfg: SystemConfig)
+                 -> (ServerHandle, std::thread::JoinHandle<()>) {
+    spawn(move || {
+        let backend = Box::new(
+            crate::engine::backend::SimBackend::new(cfg.cost));
+        let predictor =
+            Box::new(crate::predictor::oracle::OraclePredictor);
+        (cfg, backend as Box<dyn Backend>,
+         predictor as Box<dyn Predictor>)
+    })
+}
+
 /// Spawn the engine thread. PJRT handles are not `Send`, so the caller
 /// provides a *factory* that constructs (config, backend, predictor)
 /// inside the engine thread; both the sim and PJRT paths share this
@@ -119,6 +135,17 @@ where
 fn engine_thread(cfg: SystemConfig, backend: Box<dyn Backend>,
                  predictor: Box<dyn Predictor>,
                  rx: mpsc::Receiver<Command>) {
+    eprintln!(
+        "lamps: engine up (scheduler {}, batch composer: budget {}, \
+         prefill chunk {}, async swap {})",
+        cfg.scheduler.label(),
+        cfg.compose
+            .max_batch_tokens
+            .map_or("unbounded".to_string(), |t| t.to_string()),
+        cfg.compose
+            .prefill_chunk
+            .map_or("whole-context".to_string(), |t| t.to_string()),
+        cfg.compose.async_swap);
     let mut engine =
         Engine::new(cfg, backend, predictor, Clock::wall_clock());
     let mut watchers: Vec<(RequestId, mpsc::Sender<Completion>)> =

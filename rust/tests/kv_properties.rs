@@ -1,0 +1,160 @@
+//! Randomized property tests of the BlockManager invariants, driven by
+//! the crate's deterministic `util::Rng` (fixed seeds — every failure is
+//! exactly reproducible):
+//!
+//! - alloc/free/grow round-trips never leak or duplicate blocks,
+//! - `used_tokens` always equals the sum of live allocations,
+//! - a failed (OOM) allocation leaves all observable state unchanged and
+//!   reports `free` in requester-tokens (the unit `can_fit` checks).
+
+use std::collections::BTreeMap;
+
+use lamps::core::types::{RequestId, Tokens};
+use lamps::kv::{BlockManager, KvError};
+use lamps::util::Rng;
+
+/// Shadow model: per-request token counts tracked independently.
+fn check_against_shadow(m: &BlockManager,
+                        shadow: &BTreeMap<RequestId, u64>,
+                        capacity: Tokens) {
+    let shadow_sum: u64 = shadow.values().sum();
+    assert_eq!(m.used_tokens(), Tokens(shadow_sum),
+               "used_tokens must equal the sum of live allocations");
+    for (&id, &tokens) in shadow {
+        assert_eq!(m.tokens_of(id), Tokens(tokens));
+        assert!(m.contains(id));
+    }
+    assert!(m.used_tokens() <= m.reserved_tokens());
+    assert!(m.reserved_tokens() <= capacity);
+    assert_eq!(m.free_tokens() + m.reserved_tokens(), capacity,
+               "blocks must be conserved");
+}
+
+#[test]
+fn prop_random_op_sequences_hold_invariants() {
+    let mut rng = Rng::new(0xB10C_0001);
+    for case in 0..40u64 {
+        let block_size = rng.int_range(1, 24);
+        let budget = Tokens(rng.int_range(2, 120) * block_size);
+        let mut m = BlockManager::new(budget, block_size);
+        let capacity = m.capacity();
+        let mut shadow: BTreeMap<RequestId, u64> = BTreeMap::new();
+        let mut next_id = case * 100_000;
+
+        for _ in 0..600 {
+            let coin = rng.f64();
+            if coin < 0.40 {
+                // Fresh or growing allocation.
+                let id = if shadow.is_empty() || rng.f64() < 0.5 {
+                    next_id += 1;
+                    RequestId(next_id)
+                } else {
+                    *shadow.keys().nth(
+                        (rng.next_u64() % shadow.len() as u64) as usize)
+                        .unwrap()
+                };
+                let tokens = Tokens(rng.int_range(0, 4 * block_size));
+                let fits = m.can_fit(id, tokens);
+                let before_used = m.used_tokens();
+                let before_free = m.free_tokens();
+                let before_own = m.tokens_of(id);
+                match m.allocate(id, tokens) {
+                    Ok(()) => {
+                        assert!(fits, "allocate succeeded where \
+                                       can_fit said no");
+                        *shadow.entry(id).or_insert(0) += tokens.0;
+                    }
+                    Err(KvError::OutOfMemory { requested, free }) => {
+                        assert!(!fits);
+                        assert_eq!(requested, tokens);
+                        // `free` is the requester-token bound can_fit
+                        // enforces: anything <= free must fit.
+                        assert_eq!(free, m.available_for(id));
+                        assert!(m.can_fit(id, free));
+                        assert!(!m.can_fit(id, free + Tokens(1)));
+                        // OOM must leave state untouched.
+                        assert_eq!(m.used_tokens(), before_used);
+                        assert_eq!(m.free_tokens(), before_free);
+                        assert_eq!(m.tokens_of(id), before_own);
+                        if before_own == Tokens::ZERO {
+                            assert!(!m.contains(id)
+                                        || shadow.contains_key(&id));
+                        }
+                    }
+                    Err(e) => panic!("unexpected error {e}"),
+                }
+            } else if coin < 0.70 {
+                // Grow-by-one (the decode append path).
+                if let Some(&id) = shadow.keys().next() {
+                    if m.can_fit(id, Tokens(1)) {
+                        m.append_token(id).unwrap();
+                        *shadow.get_mut(&id).unwrap() += 1;
+                    } else {
+                        assert!(matches!(
+                            m.append_token(id),
+                            Err(KvError::OutOfMemory { .. })));
+                    }
+                }
+            } else if coin < 0.95 {
+                // Free a random live allocation.
+                if !shadow.is_empty() {
+                    let idx =
+                        (rng.next_u64() % shadow.len() as u64) as usize;
+                    let id = *shadow.keys().nth(idx).unwrap();
+                    let expect = shadow.remove(&id).unwrap();
+                    assert_eq!(m.free(id).unwrap(), Tokens(expect));
+                    assert!(!m.contains(id));
+                }
+            } else {
+                // Operations on unknown ids must error cleanly.
+                let ghost = RequestId(next_id + 999_999);
+                assert!(matches!(m.free(ghost),
+                                 Err(KvError::UnknownRequest(_))));
+                assert!(matches!(m.append_token(ghost),
+                                 Err(KvError::UnknownRequest(_))));
+            }
+            check_against_shadow(&m, &shadow, capacity);
+        }
+
+        // Drain: everything frees back to an empty manager.
+        let ids: Vec<RequestId> = shadow.keys().copied().collect();
+        for id in ids {
+            let expect = shadow.remove(&id).unwrap();
+            assert_eq!(m.free(id).unwrap(), Tokens(expect));
+        }
+        assert_eq!(m.used_tokens(), Tokens::ZERO);
+        assert_eq!(m.free_tokens(), capacity);
+        assert_eq!(m.occupancy(), 0.0, "case {case}");
+    }
+}
+
+#[test]
+fn prop_blocks_never_shared_between_live_requests() {
+    let mut rng = Rng::new(0xB10C_0002);
+    for _ in 0..20 {
+        let mut m = BlockManager::new(Tokens(64 * 16), 16);
+        let mut live: Vec<RequestId> = Vec::new();
+        for op in 0..200u64 {
+            if rng.f64() < 0.6 {
+                let id = RequestId(op);
+                let tokens = Tokens(rng.int_range(1, 40));
+                if m.can_fit(id, tokens) {
+                    m.allocate(id, tokens).unwrap();
+                    if !live.contains(&id) {
+                        live.push(id);
+                    }
+                }
+            } else if let Some(id) = live.pop() {
+                m.free(id).unwrap();
+            }
+            // No physical block may appear in two allocations.
+            let mut seen = std::collections::HashSet::new();
+            for id in &live {
+                for b in m.blocks_of(*id).unwrap() {
+                    assert!(seen.insert(*b),
+                            "block {b} owned by two requests");
+                }
+            }
+        }
+    }
+}

@@ -127,6 +127,7 @@ fn prop_rank_nonnegative_and_finite() {
     let inputs = RankInputs {
         t_iter: Micros(10_000),
         c_other_est: Tokens(1_000),
+        account_prefill: false,
     };
     for i in 0..CASES as u64 {
         for strategy in HandlingStrategy::ALL {
@@ -145,6 +146,7 @@ fn prop_rank_monotone_in_progress() {
     let inputs = RankInputs {
         t_iter: Micros(10_000),
         c_other_est: Tokens(1_000),
+        account_prefill: false,
     };
     for i in 0..CASES as u64 {
         let spec = random_spec(&mut rng, i);

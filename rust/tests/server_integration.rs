@@ -102,6 +102,26 @@ fn api_request_waits_wall_time() {
 }
 
 #[test]
+fn spawn_sim_serves_with_composer_knobs() {
+    // The config-only frontend constructor, with the batch-composer
+    // knobs (chunked prefill + async swap) active end-to-end.
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.cost = fast_cost();
+    cfg.compose.prefill_chunk = Some(4);
+    cfg.compose.async_swap = true;
+    let handle = {
+        let (handle, _join) = server::spawn_sim(cfg);
+        handle
+    };
+    let mut spec = simple_spec(6);
+    spec.prompt_tokens = Tokens(19); // 5 chunks of <=4 tokens
+    let completion = handle.submit_blocking(spec).unwrap();
+    assert_eq!(completion.tokens_decoded, 6);
+    assert!(completion.ttft_us.unwrap() <= completion.latency_us);
+    handle.shutdown();
+}
+
+#[test]
 fn tcp_json_lines_roundtrip() {
     let handle = spawn_sim_server();
     let addr = "127.0.0.1:17071";

@@ -1,0 +1,209 @@
+//! Offline stand-in for the `anyhow` crate: the subset this workspace
+//! uses (`Result`, `Error`, `anyhow!`, `bail!`, `Context`), vendored so
+//! the build needs no network access. API-compatible for those items, so
+//! swapping in the real crate later is a one-line Cargo change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Boxed dynamic error with an optional chain of context messages.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+    context: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            inner: Box::new(StringError(message.to_string())),
+            context: Vec::new(),
+        }
+    }
+
+    fn push_context(mut self, ctx: String) -> Error {
+        self.context.push(ctx);
+        self
+    }
+
+    /// The root cause, like `anyhow::Error::root_cause`.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cause: &(dyn StdError + 'static) = self.inner.as_ref();
+        while let Some(source) = cause.source() {
+            cause = source;
+        }
+        cause
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes the blanket `From` below legal.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error {
+            inner: Box::new(e),
+            context: Vec::new(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Outermost context first, then the chain down to the cause.
+        for ctx in self.context.iter().rev() {
+            write!(f, "{ctx}: ")?;
+        }
+        write!(f, "{}", self.inner)
+    }
+}
+
+// Debug renders like Display plus the source chain — what `?` in `main`
+// prints.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")?;
+        let mut source = self.inner.source();
+        while let Some(s) = source {
+            write!(f, "\n\nCaused by:\n    {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+/// `anyhow::Result<T>` — defaulted error parameter, as in the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Plain-string error used by `anyhow!` / `Error::msg`.
+#[derive(Debug)]
+struct StringError(String);
+
+impl fmt::Display for StringError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl StdError for StringError {}
+
+/// Attach context to an error, as `anyhow::Context` does.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().push_context(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T, Error> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// `anyhow!("...")` — construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("...")` — early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "nope")
+    }
+
+    #[test]
+    fn from_std_error_and_question_mark() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("nope"));
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r
+            .context("reading file")
+            .map_err(|e| e.push_context("loading config".into()))
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "loading config: reading file: nope");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert!(format!("{e}").starts_with("step 3: "));
+    }
+
+    #[test]
+    fn anyhow_and_bail_macros() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("failed with code {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format!("{}", f(true).unwrap_err()),
+                   "failed with code 7");
+        let e = anyhow!("x={}", 2);
+        assert_eq!(format!("{e}"), "x=2");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+    }
+
+    #[test]
+    fn collect_into_result() {
+        let parsed: Result<Vec<u32>> = ["1", "2"]
+            .iter()
+            .map(|s| s.parse::<u32>().map_err(Error::from))
+            .collect();
+        assert_eq!(parsed.unwrap(), vec![1, 2]);
+    }
+}

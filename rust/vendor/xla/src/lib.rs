@@ -1,0 +1,215 @@
+//! Offline **stub** of the `xla` PJRT bindings: mirrors the API surface
+//! `lamps::runtime` compiles against, but carries no real XLA. Client
+//! construction and HLO loading return a descriptive error at runtime, so
+//! every PJRT entry point fails fast while the simulator path (the tier-1
+//! test surface) is fully functional. The PJRT integration tests detect
+//! missing artifacts and skip, so `cargo test` stays green.
+//!
+//! Pure-data pieces (`Literal` packing/reshaping) are implemented for
+//! real so unit code around them behaves sensibly.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real crate's `xla::Error` role.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla(stub): {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} unavailable — this build vendors the offline xla stub; \
+         link the real xla/PJRT crate to run compiled artifacts"))
+}
+
+/// Element types a [`Literal`] can hold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    S32,
+    F32,
+}
+
+/// Conversion between Rust scalars and literal storage.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn to_f64(self) -> f64;
+    fn from_f64(v: f64) -> Self;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(v: f64) -> i32 {
+        v as i32
+    }
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+}
+
+/// Host-side tensor literal (dense, row-major). Functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    data: Vec<f64>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            ty: T::TY,
+            data: data.iter().map(|x| x.to_f64()).collect(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims)));
+        }
+        Ok(Literal {
+            ty: self.ty,
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f64(x)).collect())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable("tuple decomposition of stub literal"))
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal)> {
+        Err(unavailable("tuple decomposition of stub literal"))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module handle (never constructible at runtime in the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "parsing HLO text at {}", path.as_ref().display())))
+    }
+}
+
+/// Computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compilation"))
+    }
+}
+
+/// Device buffer holding one execution output.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("buffer fetch"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: AsRef<Literal>>(&self, _args: &[T])
+                                      -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execution"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn f32_literals() {
+        let l = Literal::vec1(&[0.5f32, 1.5]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![0.5, 1.5]);
+    }
+
+    #[test]
+    fn runtime_entry_points_fail_fast() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/no/such.hlo").is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("stub"));
+    }
+}
