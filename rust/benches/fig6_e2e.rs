@@ -18,7 +18,12 @@ fn main() {
     println!("batch composer: prefill chunk {:?}, async swap {}",
              compose.prefill_chunk, compose.async_swap);
     let rates = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
-    let n = 250;
+    // `LAMPS_REQUESTS` shrinks the grid for CI smoke runs (the full
+    // 250-request grid is the paper-fidelity default).
+    let n = std::env::var("LAMPS_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(250);
     for model in [ModelPreset::GptJ6b, ModelPreset::Vicuna13b] {
         for dataset in Dataset::ALL {
             let mut cells: Vec<Cell> = Vec::new();

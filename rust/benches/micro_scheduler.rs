@@ -77,6 +77,7 @@ fn main() {
                 ctx: Tokens(300),
                 api_duration: Micros(700_000),
                 c_other: Tokens(6_000),
+                cached: Tokens::ZERO,
             },
             &cost));
     });

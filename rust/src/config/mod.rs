@@ -179,6 +179,37 @@ impl ComposeConfig {
     }
 }
 
+/// Knobs of the refcounted prefix cache in the KV
+/// [`BlockManager`](crate::kv::BlockManager). Shared prompt prefixes
+/// (system prompts, few-shot templates) and post-Discard recomputes are
+/// deduplicated at full-block granularity: cache hits skip both the
+/// physical block allocation and the prefill of the covered tokens.
+/// Defaults are off-compatible: with `enabled = false` the block
+/// manager, scheduler, and engine behave byte-identically to a build
+/// without the feature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PrefixCacheConfig {
+    /// Master switch (`--prefix-cache` on the CLI). Off by default.
+    pub enabled: bool,
+    /// Maximum zero-ref cached blocks retained after frees, i.e. how
+    /// much reclaimable "cold" prefix state may linger for future hits
+    /// (`--prefix-cache-blocks N` on the CLI). `None` retains every
+    /// freed shareable block; memory pressure still reclaims them (LRU)
+    /// before any allocation reports OOM, so the cache never causes an
+    /// admission failure.
+    pub cache_blocks: Option<u64>,
+}
+
+impl PrefixCacheConfig {
+    /// Enabled, unbounded retention (pressure-reclaimed only).
+    pub fn on() -> PrefixCacheConfig {
+        PrefixCacheConfig {
+            enabled: true,
+            cache_blocks: None,
+        }
+    }
+}
+
 /// Top-level system configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemConfig {
@@ -211,6 +242,9 @@ pub struct SystemConfig {
     pub requeue_as_new: bool,
     /// Batch-composer knobs (token budget, chunked prefill, async swap).
     pub compose: ComposeConfig,
+    /// Refcounted prefix caching in the KV block manager (off by
+    /// default ⇒ byte-identical to the uncached engine).
+    pub prefix_cache: PrefixCacheConfig,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -229,6 +263,7 @@ impl Default for SystemConfig {
             admission_lookahead: true,
             requeue_as_new: false,
             compose: ComposeConfig::default(),
+            prefix_cache: PrefixCacheConfig::default(),
             cost: CostModel::paper_scale(),
             seed: 0,
         }
@@ -315,6 +350,19 @@ mod tests {
         assert!(ComposeConfig::chunked().is_chunked());
         // Presets must not silently enable the composer features.
         assert_eq!(SystemConfig::preset("lamps").unwrap().compose, c);
+    }
+
+    #[test]
+    fn prefix_cache_defaults_off() {
+        let c = PrefixCacheConfig::default();
+        assert!(!c.enabled);
+        assert_eq!(c.cache_blocks, None);
+        assert!(PrefixCacheConfig::on().enabled);
+        // Presets must not silently enable the cache.
+        for name in ["vllm", "infercept", "lamps"] {
+            assert!(!SystemConfig::preset(name).unwrap()
+                        .prefix_cache.enabled, "{name}");
+        }
     }
 
     #[test]

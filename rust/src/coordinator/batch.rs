@@ -43,6 +43,11 @@ use crate::engine::backend::DecodeSlot;
 pub struct ComposeItem {
     pub id: RequestId,
     /// Prefill / recompute tokens still owed before decode can resume.
+    /// Already net of KV prefix-cache hits: the engine discounts cached
+    /// leading tokens at admission (`Engine::allocate_admitted`), so
+    /// chunking starts at the first *uncached* token and a fully-cached
+    /// prefix composes as `pending == 0` — straight into the decode
+    /// batch with no prefill chunk at all.
     pub pending: Tokens,
     /// Full logical context (the decode slot's ctx once materialized).
     pub logical_context: Tokens,

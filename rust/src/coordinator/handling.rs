@@ -29,6 +29,13 @@ pub struct WasteInputs {
     /// this by profiling (EMA of observed batch contexts, §3.2.1);
     /// INFERCEPT reads it from the live batch.
     pub c_other: Tokens,
+    /// Context tokens expected to be served from the KV prefix cache on
+    /// a post-Discard recompute (the full blocks registered at the API
+    /// encounter). Shrinks eqn (2)'s forward-pass time: only
+    /// `ctx - cached` tokens are actually recomputed. Zero when the
+    /// prefix cache is disabled, reproducing the paper's eqn (2)
+    /// exactly.
+    pub cached: Tokens,
 }
 
 impl WasteInputs {
@@ -43,9 +50,13 @@ pub fn waste_preserve(inp: &WasteInputs) -> f64 {
 }
 
 /// Eqn (2): recomputation occupies own context for T_fwd, and stalls the
-/// co-batched contexts for the same T_fwd.
+/// co-batched contexts for the same T_fwd. With prefix caching, the
+/// forward pass only covers the uncached tail (`ctx - cached`): cached
+/// full blocks are re-pinned, not recomputed, so both the self-occupancy
+/// and the co-batch stall shrink proportionally.
 pub fn waste_discard(inp: &WasteInputs, cost: &CostModel) -> f64 {
-    let t_fwd = cost.prefill_time(inp.ctx).0 as f64;
+    let recompute = inp.ctx.saturating_sub(inp.cached);
+    let t_fwd = cost.prefill_time(recompute).0 as f64;
     t_fwd * inp.ctx.0 as f64 + t_fwd * inp.c_other.0 as f64
 }
 
@@ -96,6 +107,7 @@ mod tests {
             ctx: Tokens(100),
             api_duration: Micros(90),
             c_other: Tokens(0),
+            cached: Tokens::ZERO,
         };
         assert_eq!(select_strategy(&inp, &cost()),
                    HandlingStrategy::Preserve);
@@ -109,6 +121,7 @@ mod tests {
             ctx: Tokens(20),
             api_duration: Micros(20_000_000),
             c_other: Tokens(0),
+            cached: Tokens::ZERO,
         };
         assert_eq!(select_strategy(&inp, &cost()),
                    HandlingStrategy::Discard);
@@ -123,6 +136,7 @@ mod tests {
             ctx: Tokens(1000),
             api_duration: Micros(20_000_000),
             c_other: Tokens(500),
+            cached: Tokens::ZERO,
         };
         let c = cost();
         let wp = waste_preserve(&inp);
@@ -139,6 +153,7 @@ mod tests {
             ctx: Tokens(10),
             api_duration: Micros(1_000),
             c_other: Tokens(5),
+            cached: Tokens::ZERO,
         };
         let c = cost();
         assert_eq!(waste_preserve(&inp), 1_000.0 * 10.0);
@@ -154,9 +169,39 @@ mod tests {
             ctx: Tokens(0),
             api_duration: Micros(0),
             c_other: Tokens(0),
+            cached: Tokens::ZERO,
         };
         assert_eq!(select_strategy(&inp, &cost()),
                    HandlingStrategy::Preserve);
+    }
+
+    #[test]
+    fn cached_prefix_discounts_discard_only() {
+        // 80 of 100 context tokens sit in cached full blocks: the
+        // recompute forward pass covers 20 tokens, not 100, so eqn (2)
+        // shrinks 5x while eqns (1) and (3) are unchanged.
+        let cold = WasteInputs {
+            ctx: Tokens(100),
+            api_duration: Micros(1_000_000),
+            c_other: Tokens(50),
+            cached: Tokens::ZERO,
+        };
+        let warm = WasteInputs {
+            cached: Tokens(80),
+            ..cold
+        };
+        let c = cost();
+        assert_eq!(waste_discard(&warm, &c),
+                   waste_discard(&cold, &c) / 5.0);
+        assert_eq!(waste_preserve(&warm), waste_preserve(&cold));
+        assert_eq!(waste_swap(&warm, &c), waste_swap(&cold, &c));
+        // A fully-cached recompute is free; saturation guards cached >
+        // ctx (stale estimate after the context shrank).
+        let full = WasteInputs {
+            cached: Tokens(200),
+            ..cold
+        };
+        assert_eq!(waste_discard(&full, &c), 0.0);
     }
 
     #[test]
@@ -171,6 +216,7 @@ mod tests {
             ctx: Tokens(40),
             api_duration: long_api,
             c_other: Tokens(0),
+            cached: Tokens::ZERO,
         };
         assert_eq!(select_strategy(&small, &c), HandlingStrategy::Discard);
         let large = WasteInputs {

@@ -67,10 +67,16 @@ pub fn memory_over_time(r: &Request, cost: &CostModel,
 
         if let Some(api_duration) = pred.api_duration {
             let strategy = r.handling[seg];
+            // `cached` stays zero here: the rank integral is computed
+            // at admission, before any of this request's blocks exist
+            // in the prefix cache, and scores must stay byte-identical
+            // with the cache disabled. (Discount follow-on tracked in
+            // ROADMAP.)
             let inp = WasteInputs {
                 ctx: Tokens(ctx as u64),
                 api_duration,
                 c_other: inputs.c_other_est,
+                cached: Tokens::ZERO,
             };
             total += waste_of(strategy, &inp, cost);
             ctx += pred.response_tokens.0 as f64;

@@ -54,6 +54,17 @@ pub trait Backend {
     /// Drop all backend state for `id` (finished or preempted).
     fn release(&mut self, id: RequestId);
 
+    /// Can this backend resume decoding from KV state it never saw a
+    /// `materialize` call for? The engine only lets prefix-cache hits
+    /// skip prefill when this is true. The simulator is stateless
+    /// (true); the PJRT backend keeps per-request fixed-slot state that
+    /// must be built by its own `materialize`, so it opts out and the
+    /// cache degrades to a no-op there until the runtime grows real
+    /// paged-KV sharing.
+    fn supports_prefix_reuse(&self) -> bool {
+        true
+    }
+
     /// Downcast hook (used to reach PJRT-specific accessors like
     /// generated-token histories from behind the trait object).
     fn as_any(&self) -> Option<&dyn std::any::Any> {

@@ -34,6 +34,7 @@
 pub mod api_executor;
 pub mod backend;
 pub mod clock;
+#[cfg(feature = "pjrt")]
 pub mod pjrt_backend;
 
 use std::collections::HashMap;
@@ -46,7 +47,8 @@ use crate::coordinator::scheduler::{make_scheduler, ScheduleContext,
                                     Scheduler};
 use crate::core::request::{HandlingStrategy, Phase, Request, RequestSpec};
 use crate::core::types::{Micros, RequestId, Tokens};
-use crate::kv::{BlockManager, SwapSpace, TransferDir, TransferQueue};
+use crate::kv::{prefix, BlockManager, SwapSpace, TransferDir,
+                TransferQueue};
 use crate::metrics::{MetricsCollector, RunReport, TimelinePoint};
 use crate::predictor::oracle::{NoisyOraclePredictor, OraclePredictor};
 use crate::predictor::Predictor;
@@ -97,7 +99,13 @@ pub struct Engine {
 impl Engine {
     pub fn new(cfg: SystemConfig, backend: Box<dyn Backend>,
                predictor: Box<dyn Predictor>, clock: Clock) -> Engine {
-        let kv = BlockManager::new(cfg.memory_budget, cfg.block_size);
+        let kv = if cfg.prefix_cache.enabled {
+            BlockManager::with_prefix_cache(cfg.memory_budget,
+                                            cfg.block_size,
+                                            cfg.prefix_cache.cache_blocks)
+        } else {
+            BlockManager::new(cfg.memory_budget, cfg.block_size)
+        };
         let t_iter0 = cfg.cost.decode_iter_time(Tokens::ZERO).0 as f64;
         let c_other0 = cfg.memory_budget.0 as f64 / 2.0;
         Engine {
@@ -198,6 +206,30 @@ impl Engine {
         self.waiting.push(id);
     }
 
+    /// Is prefix caching in effect? Requires both the config switch and
+    /// a backend that can resume decode from KV state it never
+    /// materialized itself (the PJRT backend cannot — its per-request
+    /// state is built by its own `materialize` calls, so skipping
+    /// prefill there would decode against missing state).
+    fn prefix_cache_active(&self) -> bool {
+        self.cfg.prefix_cache.enabled
+            && self.backend.supports_prefix_reuse()
+    }
+
+    /// Tokens of a would-be recompute expected to come from prefix-cache
+    /// hits: the full blocks of `ctx`, registered at the API encounter
+    /// and retained (reclaimable) through the call. Optimistic about
+    /// retention — pressure eviction during the call makes the true
+    /// value smaller. Zero when the cache is disabled, so eqn (2) stays
+    /// byte-identical to the uncached engine.
+    fn cached_recompute_estimate(&self, ctx: Tokens) -> Tokens {
+        if !self.prefix_cache_active() {
+            return Tokens::ZERO;
+        }
+        let bs = self.kv.block_size();
+        Tokens(ctx.0 / bs * bs)
+    }
+
     /// Handling assignment at admission (LAMPS §4.2). For `MinWasteAtApi`
     /// (INFERCEPT) the real decision happens at encounter time; Preserve
     /// placeholders are stored until then.
@@ -222,6 +254,8 @@ impl Engine {
                             .api_duration
                             .unwrap_or(Micros::ZERO),
                         c_other: Tokens(self.c_other_ema as u64),
+                        cached: self
+                            .cached_recompute_estimate(Tokens(ctx as u64)),
                     };
                     out.push(select_strategy(&inp, &self.cfg.cost));
                     ctx += pred.response_tokens.0 as f64;
@@ -266,7 +300,17 @@ impl Engine {
                         livelock?");
             }
         }
+        self.sync_prefix_metrics();
         self.metrics.end_time = self.now();
+    }
+
+    /// Mirror the KV-layer prefix-cache counters into the metrics
+    /// collector (kv is the single source of truth for them).
+    fn sync_prefix_metrics(&mut self) {
+        self.metrics.prefix_hit_tokens = self.kv.prefix_hit_tokens();
+        self.metrics.prefix_evictions = self.kv.prefix_evictions();
+        self.metrics.prefix_cached_blocks = self.kv.cached_blocks();
+        self.metrics.blocks_allocated = self.kv.blocks_allocated();
     }
 
     /// One scheduling round. Returns false when fully idle with no
@@ -328,6 +372,7 @@ impl Engine {
         self.execute_and_commit(plan);
         self.iteration += 1;
         self.metrics.iterations = self.iteration;
+        self.sync_prefix_metrics();
         if self.record_timeline {
             let held = |ids: &[RequestId]| -> u64 {
                 ids.iter().map(|id| self.kv.tokens_of(*id).0).sum()
@@ -397,9 +442,14 @@ impl Engine {
                     req.pending_materialize = response;
                 }
                 HandlingStrategy::Discard => {
-                    // Everything must be recomputed.
+                    // Everything must be recomputed. Flag it here, not
+                    // only at chunk time: prefix-cache hits at admission
+                    // shrink `pending_materialize` below
+                    // `logical_context`, which would otherwise hide the
+                    // (smaller) recompute from the wasted-work metric.
                     req.pending_materialize = req.logical_context;
                     req.context = Tokens::ZERO;
+                    req.recomputing = true;
                 }
                 HandlingStrategy::Swap => {
                     // Swap-in restores the old context; the response is
@@ -486,9 +536,7 @@ impl Engine {
             // the request back to the client).
             if self.requests[&id].admission_memory() > self.kv.capacity() {
                 self.transfers.cancel(id);
-                if self.kv.contains(id) {
-                    self.kv.free(id).expect("drop free");
-                }
+                self.free_terminal(id);
                 self.swap.discard(id);
                 self.backend.release(id);
                 self.requests.get_mut(&id).unwrap().phase =
@@ -555,16 +603,36 @@ impl Engine {
             }
             let can_admit = resv_ok;
             if can_admit {
-                let req = self.requests.get_mut(&id).unwrap();
                 // Reserve context + 1 headroom slot (the token this
                 // iteration will append). All allocation happens here;
                 // decode itself never allocates.
                 let existing = self.kv.tokens_of(id);
-                let delta = (req.logical_context + Tokens(1))
-                    .saturating_sub(existing);
+                let logical = self.requests[&id].logical_context;
+                let delta =
+                    (logical + Tokens(1)).saturating_sub(existing);
                 if delta > Tokens::ZERO {
-                    self.kv.allocate(id, delta).expect("fits_memory held");
+                    // Fresh full materializations route through the
+                    // prefix cache: `cached` leading tokens are already
+                    // materialized in shared blocks, so prefill starts
+                    // at the first uncached token.
+                    let cached = self.allocate_admitted(id, delta);
+                    if cached > Tokens::ZERO {
+                        let req = self.requests.get_mut(&id).unwrap();
+                        req.pending_materialize = req
+                            .pending_materialize
+                            .saturating_sub(cached);
+                        req.context = req
+                            .logical_context
+                            .saturating_sub(req.pending_materialize);
+                        if req.pending_materialize == Tokens::ZERO {
+                            // Fully-cached recompute: no prefill chunk
+                            // will run, so clear the flag here (the
+                            // chunk-commit path can't).
+                            req.recomputing = false;
+                        }
+                    }
                 }
+                let req = self.requests.get_mut(&id).unwrap();
                 req.was_scheduled = true;
                 req.starvation_cnt = 0;
                 if req.first_scheduled_at.is_none() {
@@ -629,6 +697,77 @@ impl Engine {
         self.kv.can_fit(id, needed)
     }
 
+    /// Allocate `delta` tokens for a just-admitted request. A *fresh
+    /// full materialization* (no live blocks, the entire logical context
+    /// still owed — a new prompt, a post-Discard recompute, or a
+    /// post-preemption recompute) walks the prefix cache and returns the
+    /// leading tokens served by cache hits; every other shape (growth,
+    /// Preserve resume, swap-in restore) allocates plainly and returns
+    /// zero.
+    fn allocate_admitted(&mut self, id: RequestId, delta: Tokens)
+                         -> Tokens {
+        let req = &self.requests[&id];
+        let fresh_full = self.prefix_cache_active()
+            && self.kv.tokens_of(id) == Tokens::ZERO
+            && req.pending_materialize == req.logical_context
+            && req.logical_context.0 >= self.kv.block_size()
+            && !self.swap.contains(id);
+        if !fresh_full {
+            self.kv.allocate(id, delta).expect("fits_memory held");
+            return Tokens::ZERO;
+        }
+        let chain = prefix::content_chain(&req.spec,
+                                          self.kv.block_size(),
+                                          req.logical_context);
+        self.kv
+            .allocate_prefixed(id, delta, &chain)
+            .expect("fits_memory held")
+    }
+
+    /// Publish the materialized full blocks of `id`'s live context into
+    /// the prefix cache (no-op when disabled), making them hittable by
+    /// other requests with the same prompt and by this request's own
+    /// post-Discard/post-preemption recompute. Safe mid-materialization:
+    /// only content-complete blocks below `context` are registered.
+    /// Full blocks of `id`'s context holding cross-request-shareable
+    /// prompt content. Everything past the prompt (generated tokens,
+    /// API responses) — and all of a content-less synthetic prompt —
+    /// is keyed per-request and dies with the request, so terminal
+    /// frees purge it from the cache instead of retaining garbage.
+    fn shareable_prompt_blocks(&self, id: RequestId) -> u64 {
+        let req = &self.requests[&id];
+        if req.spec.prompt.is_empty() {
+            return 0;
+        }
+        req.spec.prompt_tokens.0.min(req.logical_context.0)
+            / self.kv.block_size()
+    }
+
+    /// Terminal free (finish / drop): retain only shareable prompt
+    /// blocks in the prefix cache.
+    fn free_terminal(&mut self, id: RequestId) {
+        if self.kv.contains(id) {
+            let retain = self.shareable_prompt_blocks(id);
+            self.kv
+                .free_discarding_private(id, retain)
+                .expect("terminal free");
+        }
+    }
+
+    fn register_prefix_of(&mut self, id: RequestId) {
+        if !self.prefix_cache_active() {
+            return;
+        }
+        let req = &self.requests[&id];
+        let ctx = req.context;
+        if ctx.0 < self.kv.block_size() {
+            return;
+        }
+        let chain = prefix::content_chain(&req.spec,
+                                          self.kv.block_size(), ctx);
+        self.kv.register_prefix(id, ctx, &chain);
+    }
+
     /// Clairvoyant reservation: every in-flight Preserve/Swap API request
     /// must be able to resume at its predicted return time.
     fn fits_reservation(&self, candidate: RequestId,
@@ -659,7 +798,7 @@ impl Engine {
             };
             let mut projected = resume_need;
             // Other preserve-held API waiters keep their memory.
-            for (&o_id, _) in &self.pred_return {
+            for &o_id in self.pred_return.keys() {
                 if o_id == p_id {
                     continue;
                 }
@@ -804,6 +943,7 @@ impl Engine {
                     .backend
                     .materialize(id, &prompt, total_after, chunk.tokens);
                 elapsed += t;
+                self.metrics.tokens_prefilled += chunk.tokens.0;
                 if self.requests[&id].recomputing {
                     self.metrics.tokens_recomputed += chunk.tokens.0;
                 }
@@ -822,6 +962,15 @@ impl Engine {
                 .saturating_sub(req.pending_materialize);
             if req.pending_materialize == Tokens::ZERO {
                 req.recomputing = false;
+            }
+            let finished_materialize = req.pending_materialize
+                == Tokens::ZERO
+                && chunk.tokens > Tokens::ZERO;
+            if finished_materialize {
+                // Freshly completed context: publish its full blocks
+                // for prefix reuse by identical prompts and by this
+                // request's own later recomputes.
+                self.register_prefix_of(id);
             }
         }
 
@@ -920,11 +1069,17 @@ impl Engine {
     fn preempt_state(&mut self, id: RequestId, now: Micros) {
         debug_assert!(!self.transfers.contains(id),
                       "{id} preempted mid-transfer");
+        // Keep the victim's full blocks hittable: its recompute on
+        // re-admission then skips the cached prefix.
+        self.register_prefix_of(id);
         let req = self.requests.get_mut(&id).unwrap();
         req.phase = Phase::Waiting;
         req.pending_materialize = req.logical_context;
         req.context = Tokens::ZERO;
-        req.recomputing = false;
+        // Same semantics the chunk-time heuristic derives (recompute
+        // accounting only past segment 0), but robust to the prefix
+        // cache discounting `pending_materialize` at re-admission.
+        req.recomputing = req.segment > 0;
         if self.cfg.requeue_as_new {
             req.queue_key = now;
         }
@@ -970,6 +1125,7 @@ impl Engine {
                     ctx: own_ctx,
                     api_duration: pred_duration,
                     c_other: Tokens(c_other),
+                    cached: self.cached_recompute_estimate(own_ctx),
                 };
                 select_strategy(&inp, &self.cfg.cost)
             }
@@ -987,6 +1143,11 @@ impl Engine {
             }
             HandlingStrategy::Discard => {
                 self.metrics.strategy_counts[1] += 1;
+                // Publish the full blocks before dropping them: the
+                // freed shared blocks stay reclaimable-cached, so the
+                // post-API recompute re-pins them instead of
+                // recomputing (the cache's headline saving).
+                self.register_prefix_of(id);
                 if self.kv.contains(id) {
                     self.kv.free(id).expect("discard free");
                 }
@@ -1048,9 +1209,7 @@ impl Engine {
         req.phase = Phase::Finished;
         req.finished_at = Some(now);
         self.transfers.cancel(id);
-        if self.kv.contains(id) {
-            self.kv.free(id).expect("finish free");
-        }
+        self.free_terminal(id);
         self.swap.discard(id);
         self.backend.release(id);
         self.metrics.on_finished(id, now);
@@ -1060,7 +1219,7 @@ impl Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{CostModel, SchedulerKind};
+    use crate::config::{CostModel, PrefixCacheConfig, SchedulerKind};
     use crate::core::request::{ApiCallSpec, ApiType};
 
     fn unit_cfg(scheduler: SchedulerKind, budget: u64) -> SystemConfig {
@@ -1346,6 +1505,97 @@ mod tests {
         assert_eq!(e.metrics.swap_stall_us, 0);
         assert_eq!(e.metrics.swap_overlap_us, 2_000_000);
         assert_eq!(e.kv_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn prefix_cache_makes_discard_recompute_cheap() {
+        // prompt 8, decode 2, API 3 s (forced Discard), decode 1; unit
+        // cost, block size 4. Uncached: 8 prefill + 2 decode + 3 API +
+        // 10 recompute + 1 decode = 24 s. Cached: the 2 full blocks
+        // (8 tokens) registered at the encounter survive the free, so
+        // the recompute materializes only the 2-token tail:
+        // 8 + 2 + 3 + 2 + 1 = 16 s.
+        let run = |enabled: bool| {
+            let mut cfg = unit_cfg(SchedulerKind::Fcfs, 100);
+            cfg.block_size = 4;
+            if enabled {
+                cfg.prefix_cache = PrefixCacheConfig::on();
+            }
+            let mut e = Engine::simulated(cfg);
+            e.submit_with_handling(
+                RequestSpec {
+                    prompt_tokens: Tokens(8),
+                    ..api_spec(0, 2, 3, 1)
+                },
+                vec![HandlingStrategy::Discard]);
+            e.run_until_idle(None);
+            assert!(e.request(RequestId(0)).unwrap().is_finished());
+            e
+        };
+        let cold = run(false);
+        assert_eq!(cold.request(RequestId(0)).unwrap().finished_at,
+                   Some(Micros(24_000_000)));
+        assert_eq!(cold.metrics.prefix_hit_tokens, 0);
+        assert_eq!(cold.metrics.tokens_prefilled, 18);
+        assert_eq!(cold.metrics.tokens_recomputed, 10);
+
+        let warm = run(true);
+        assert_eq!(warm.request(RequestId(0)).unwrap().finished_at,
+                   Some(Micros(16_000_000)));
+        assert_eq!(warm.metrics.prefix_hit_tokens, 8);
+        assert_eq!(warm.metrics.tokens_prefilled, 10);
+        // The uncached 2-token tail still counts as recompute waste.
+        assert_eq!(warm.metrics.tokens_recomputed, 2);
+        assert!(warm.metrics.blocks_allocated
+                    < cold.metrics.blocks_allocated);
+    }
+
+    #[test]
+    fn prefix_cache_shares_identical_prompts_across_requests() {
+        // Two requests with the same 12-char prompt, the second arriving
+        // after the first finished: its entire prompt is served from
+        // cached blocks and prefill is skipped outright.
+        let mut cfg = unit_cfg(SchedulerKind::Fcfs, 100);
+        cfg.block_size = 4;
+        cfg.prefix_cache = PrefixCacheConfig::on();
+        let mut e = Engine::simulated(cfg);
+        let spec = |id: u64, arrival: u64| RequestSpec {
+            prompt: "abcdabcdabcd".to_string(),
+            prompt_tokens: Tokens(12),
+            ..simple_spec(id, arrival, 2)
+        };
+        e.submit(spec(0, 0));
+        e.enqueue(spec(1, 20_000_000));
+        e.run_until_idle(None);
+        // r0: 12 prefill + 2 decode = 14 s.
+        assert_eq!(e.request(RequestId(0)).unwrap().finished_at,
+                   Some(Micros(14_000_000)));
+        // r1: all 3 full prompt blocks hit; decode starts immediately.
+        assert_eq!(e.request(RequestId(1)).unwrap().finished_at,
+                   Some(Micros(22_000_000)));
+        assert_eq!(e.metrics.prefix_hit_tokens, 12);
+        assert_eq!(e.metrics.tokens_prefilled, 12, "prompt prefilled once");
+    }
+
+    #[test]
+    fn prefix_cache_never_aliases_contentless_prompts() {
+        // Synthetic traces (empty prompt text) must not share blocks
+        // across requests no matter how similar their shapes are.
+        let mut cfg = unit_cfg(SchedulerKind::Fcfs, 100);
+        cfg.block_size = 4;
+        cfg.prefix_cache = PrefixCacheConfig::on();
+        let mut e = Engine::simulated(cfg);
+        for (id, arrival) in [(0u64, 0u64), (1, 20_000_000)] {
+            e.enqueue(RequestSpec {
+                prompt_tokens: Tokens(8),
+                ..simple_spec(id, arrival, 1)
+            });
+        }
+        e.run_until_idle(None);
+        assert_eq!(e.metrics.completed(), 2);
+        assert_eq!(e.metrics.prefix_hit_tokens, 0,
+                   "no fabricated cross-request sharing");
+        assert_eq!(e.metrics.tokens_prefilled, 16);
     }
 
     #[test]

@@ -96,6 +96,14 @@ impl Backend for PjrtBackend {
         Some(self.model.meta.max_seq as u64 - self.max_context_margin)
     }
 
+    /// Per-request state is created by `materialize` (fixed executable
+    /// slots, whole-history re-prefill); decoding a sequence this
+    /// backend never materialized would panic. The engine therefore
+    /// must not skip prefill on prefix-cache hits here.
+    fn supports_prefix_reuse(&self) -> bool {
+        false
+    }
+
     fn materialize(&mut self, id: RequestId, prompt: &str,
                    total_ctx: Tokens, _increment: Tokens) -> Micros {
         let ctx = total_ctx;

@@ -1,4 +1,5 @@
-//! vLLM-style paged KV-cache block manager.
+//! vLLM-style paged KV-cache block manager with optional refcounted
+//! prefix caching.
 //!
 //! The device KV budget is divided into fixed-size blocks of
 //! `block_size` token slots. Each live request owns an ordered list of
@@ -6,9 +7,20 @@
 //! engine exact token-granular admission accounting (what the paper's
 //! scheduler reasons about) plus the physical block indices the PJRT
 //! backend uses to place sequences into fixed-shape cache slots.
+//!
+//! With a [`PrefixCache`] attached (see [`BlockManager::with_prefix_cache`]
+//! and [`crate::kv::prefix`]), full blocks of identical context prefixes
+//! are hash-consed: [`BlockManager::allocate_prefixed`] pins
+//! already-materialized blocks instead of allocating fresh ones, frees
+//! retain zero-ref shared blocks in a reclaimable LRU, and OOM accounting
+//! distinguishes three physical states — **pinned** (held by at least one
+//! allocation, never reclaimable), **cached** (zero-ref, reclaimed under
+//! pressure before OOM is reported), and **free**. Without a cache every
+//! code path below reduces to the original manager exactly.
 
 use std::collections::HashMap;
 
+use super::prefix::{BlockHash, PrefixCache};
 use crate::core::types::{RequestId, Tokens};
 
 /// Physical block index.
@@ -18,10 +30,11 @@ pub type BlockId = u32;
 pub enum KvError {
     /// Not enough free blocks for the allocation. `free` is reported in
     /// the same unit the admission check uses: tokens the *requesting*
-    /// allocation could actually get right now — whole free blocks plus
-    /// the slack in the request's own partial last block (a bare
-    /// whole-block count under-reports exactly when the last block is
-    /// partial).
+    /// allocation could actually get right now — whole free blocks, plus
+    /// zero-ref cached blocks reclaimable under pressure, plus the slack
+    /// in the request's own partial last block. Blocks pinned by other
+    /// requests' refcounts are excluded: they are not available to
+    /// anyone until every holder frees them.
     OutOfMemory {
         requested: Tokens,
         free: Tokens,
@@ -48,7 +61,21 @@ impl std::error::Error for KvError {}
 #[derive(Debug, Clone)]
 struct Allocation {
     blocks: Vec<BlockId>,
+    /// Parallel to `blocks`: the prefix-cache chain hash for blocks this
+    /// allocation holds a refcount on (`None` for private blocks; always
+    /// all-`None` when the manager has no prefix cache).
+    hashes: Vec<Option<BlockHash>>,
     tokens: u64,
+}
+
+impl Allocation {
+    fn empty() -> Allocation {
+        Allocation {
+            blocks: Vec::new(),
+            hashes: Vec::new(),
+            tokens: 0,
+        }
+    }
 }
 
 /// Paged block manager.
@@ -58,10 +85,16 @@ pub struct BlockManager {
     free_blocks: Vec<BlockId>,
     total_blocks: u64,
     allocs: HashMap<RequestId, Allocation>,
-    /// Running sum of allocated tokens (logical).
+    /// Running sum of allocated tokens (logical; with prefix sharing the
+    /// sum over requests may exceed physical capacity).
     used_tokens: u64,
     /// High-water mark of block usage, for reporting.
     peak_blocks_used: u64,
+    /// Fresh physical-block materializations (free-list pops); cache
+    /// hits do not count — the before/after metric of prefix caching.
+    blocks_allocated: u64,
+    /// Refcounted prefix cache; `None` = disabled (legacy behavior).
+    prefix: Option<PrefixCache>,
 }
 
 impl BlockManager {
@@ -76,11 +109,27 @@ impl BlockManager {
             allocs: HashMap::new(),
             used_tokens: 0,
             peak_blocks_used: 0,
+            blocks_allocated: 0,
+            prefix: None,
         }
+    }
+
+    /// Manager with a refcounted prefix cache attached. `cache_blocks`
+    /// caps the zero-ref cached blocks retained after frees (`None` =
+    /// retain all; memory pressure still reclaims them before OOM).
+    pub fn with_prefix_cache(budget: Tokens, block_size: u64,
+                             cache_blocks: Option<u64>) -> BlockManager {
+        let mut m = BlockManager::new(budget, block_size);
+        m.prefix = Some(PrefixCache::new(cache_blocks));
+        m
     }
 
     pub fn block_size(&self) -> u64 {
         self.block_size
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
     }
 
     /// Token capacity (whole blocks).
@@ -93,19 +142,56 @@ impl BlockManager {
         Tokens(self.used_tokens)
     }
 
-    /// Tokens physically reserved (whole blocks), >= used_tokens.
+    /// Tokens physically reserved (whole non-free blocks, including
+    /// zero-ref cached blocks), >= used_tokens when nothing is shared.
     pub fn reserved_tokens(&self) -> Tokens {
         Tokens((self.total_blocks - self.free_blocks.len() as u64)
             * self.block_size)
     }
 
-    /// Tokens still allocatable (whole-block granularity, i.e. what a new
-    /// allocation can actually get).
+    /// Tokens on the free list (whole-block granularity). Does not count
+    /// reclaimable cached blocks; see [`BlockManager::available_for`]
+    /// for what an allocation can actually get.
     pub fn free_tokens(&self) -> Tokens {
         Tokens(self.free_blocks.len() as u64 * self.block_size)
     }
 
-    /// Fraction of capacity physically in use, in [0, 1].
+    /// Zero-ref cached blocks (reclaimable under memory pressure).
+    pub fn cached_blocks(&self) -> u64 {
+        self.prefix.as_ref().map_or(0, |p| p.zero_ref())
+    }
+
+    /// Blocks held by at least one allocation (never reclaimable).
+    pub fn pinned_blocks(&self) -> u64 {
+        self.total_blocks
+            - self.free_blocks.len() as u64
+            - self.cached_blocks()
+    }
+
+    /// Fresh physical-block materializations so far (cache hits do not
+    /// count).
+    pub fn blocks_allocated(&self) -> u64 {
+        self.blocks_allocated
+    }
+
+    /// Tokens served from prefix-cache hits instead of being prefilled.
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.prefix.as_ref().map_or(0, |p| p.hit_tokens())
+    }
+
+    /// Zero-ref cached blocks evicted (capacity or memory pressure).
+    pub fn prefix_evictions(&self) -> u64 {
+        self.prefix.as_ref().map_or(0, |p| p.evictions())
+    }
+
+    /// Refcount of a cached chain hash (`None` when absent or when the
+    /// cache is disabled) — introspection for tests and debugging.
+    pub fn prefix_refcount(&self, hash: BlockHash) -> Option<u32> {
+        self.prefix.as_ref().and_then(|p| p.refcount_of(hash))
+    }
+
+    /// Fraction of capacity physically in use (non-free blocks,
+    /// including reclaimable cached ones), in [0, 1].
     pub fn occupancy(&self) -> f64 {
         if self.total_blocks == 0 {
             return 0.0;
@@ -137,16 +223,24 @@ impl BlockManager {
         self.allocs.get(&req).map(|a| a.blocks.as_slice())
     }
 
-    /// Tokens `req` could grow by right now: whole free blocks plus the
-    /// slack in its own partial last block. This is the exact bound
-    /// `can_fit` enforces: `can_fit(req, t)` iff `t <= available_for(req)`.
+    /// Blocks usable by a new or growing allocation right now: the free
+    /// list plus zero-ref cached blocks reclaimable under pressure.
+    fn allocatable_blocks(&self) -> u64 {
+        self.free_blocks.len() as u64 + self.cached_blocks()
+    }
+
+    /// Tokens `req` could grow by right now: whole free blocks, plus
+    /// reclaimable zero-ref cached blocks, plus the slack in its own
+    /// partial last block — and *excluding* blocks pinned by other
+    /// requests. This is the exact bound `can_fit` enforces:
+    /// `can_fit(req, t)` iff `t <= available_for(req)`.
     pub fn available_for(&self, req: RequestId) -> Tokens {
         let slack = self
             .allocs
             .get(&req)
             .map(|a| a.blocks.len() as u64 * self.block_size - a.tokens)
             .unwrap_or(0);
-        Tokens(self.free_blocks.len() as u64 * self.block_size + slack)
+        Tokens(self.allocatable_blocks() * self.block_size + slack)
     }
 
     /// Would an allocation/growth of `tokens` for `req` succeed right now?
@@ -157,17 +251,35 @@ impl BlockManager {
         let needed_blocks =
             (cur_tokens + tokens.0).div_ceil(self.block_size);
         needed_blocks.saturating_sub(cur_blocks)
-            <= self.free_blocks.len() as u64
+            <= self.allocatable_blocks()
+    }
+
+    /// Pop one free block, reclaiming a zero-ref cached block first when
+    /// the free list is empty. The caller must have checked fit.
+    fn pop_free_block(&mut self) -> BlockId {
+        if self.free_blocks.is_empty() {
+            let reclaimed = self
+                .prefix
+                .as_mut()
+                .and_then(|p| p.reclaim_one())
+                .expect("fit check guaranteed a reclaimable block");
+            self.free_blocks.push(reclaimed);
+        }
+        self.blocks_allocated += 1;
+        self.free_blocks.pop().expect("free list non-empty")
+    }
+
+    fn note_peak(&mut self) {
+        self.peak_blocks_used = self
+            .peak_blocks_used
+            .max(self.total_blocks - self.free_blocks.len() as u64);
     }
 
     /// Allocate (or grow by) `tokens` for `req`.
     pub fn allocate(&mut self, req: RequestId, tokens: Tokens)
                     -> Result<(), KvError> {
         if tokens == Tokens::ZERO {
-            self.allocs.entry(req).or_insert(Allocation {
-                blocks: Vec::new(),
-                tokens: 0,
-            });
+            self.allocs.entry(req).or_insert_with(Allocation::empty);
             return Ok(());
         }
         if !self.can_fit(req, tokens) {
@@ -176,21 +288,126 @@ impl BlockManager {
                 free: self.available_for(req),
             });
         }
-        let alloc = self.allocs.entry(req).or_insert(Allocation {
-            blocks: Vec::new(),
-            tokens: 0,
-        });
-        let needed_blocks =
-            (alloc.tokens + tokens.0).div_ceil(self.block_size);
-        while (alloc.blocks.len() as u64) < needed_blocks {
-            alloc.blocks.push(self.free_blocks.pop().expect("can_fit held"));
+        let needed_blocks = {
+            let alloc = self.allocs.entry(req).or_insert_with(
+                Allocation::empty);
+            (alloc.tokens + tokens.0).div_ceil(self.block_size)
+        };
+        while (self.allocs[&req].blocks.len() as u64) < needed_blocks {
+            let block = self.pop_free_block();
+            let alloc = self.allocs.get_mut(&req).expect("entry above");
+            alloc.blocks.push(block);
+            alloc.hashes.push(None);
         }
+        let alloc = self.allocs.get_mut(&req).expect("entry above");
         alloc.tokens += tokens.0;
         self.used_tokens += tokens.0;
-        self.peak_blocks_used = self
-            .peak_blocks_used
-            .max(self.total_blocks - self.free_blocks.len() as u64);
+        self.note_peak();
         Ok(())
+    }
+
+    /// Allocate `tokens` for a *fresh* allocation of `req`, reusing
+    /// cached prefix blocks. `chain` gives the content chain hashes of
+    /// the leading full blocks (see [`crate::kv::prefix::content_chain`]);
+    /// every leading hash already in the cache is pinned instead of
+    /// materialized, and the returned token count (a multiple of
+    /// `block_size`) is how much context the caller may skip prefilling.
+    ///
+    /// Falls back to a plain [`BlockManager::allocate`] (returning zero
+    /// cached tokens) when the cache is disabled, the chain is empty, or
+    /// `req` already holds blocks (growth never re-walks the trie).
+    pub fn allocate_prefixed(&mut self, req: RequestId, tokens: Tokens,
+                             chain: &[BlockHash])
+                             -> Result<Tokens, KvError> {
+        let fresh_alloc = match self.allocs.get(&req) {
+            Some(a) => a.blocks.is_empty(),
+            None => true,
+        };
+        if self.prefix.is_none() || chain.is_empty() || !fresh_alloc
+            || tokens == Tokens::ZERO
+        {
+            self.allocate(req, tokens)?;
+            return Ok(Tokens::ZERO);
+        }
+
+        // Phase 1 (read-only): walk the chain for consecutive leading
+        // hits, then check the remainder fits without touching state —
+        // a failed allocation must leave everything unchanged.
+        let cache = self.prefix.as_ref().expect("checked above");
+        let full_blocks =
+            (tokens.0 / self.block_size).min(chain.len() as u64) as usize;
+        let mut hits = 0usize;
+        while hits < full_blocks && cache.contains(chain[hits]) {
+            hits += 1;
+        }
+        // Zero-ref blocks we are about to pin cannot also be reclaimed
+        // to satisfy the fresh remainder.
+        let zero_ref_hits = chain[..hits]
+            .iter()
+            .filter(|h| !cache.is_pinned(**h))
+            .count() as u64;
+        let needed_blocks = tokens.0.div_ceil(self.block_size);
+        let fresh = needed_blocks - hits as u64;
+        let usable = self.allocatable_blocks() - zero_ref_hits;
+        if fresh > usable {
+            return Err(KvError::OutOfMemory {
+                requested: tokens,
+                free: self.available_for(req),
+            });
+        }
+
+        // Phase 2: pin the hits, then materialize the remainder.
+        let mut blocks = Vec::with_capacity(needed_blocks as usize);
+        let mut hashes = Vec::with_capacity(needed_blocks as usize);
+        {
+            let cache = self.prefix.as_mut().expect("checked above");
+            for &hash in &chain[..hits] {
+                blocks.push(cache.pin(hash).expect("hit walk saw it"));
+                hashes.push(Some(hash));
+            }
+        }
+        for _ in 0..fresh {
+            blocks.push(self.pop_free_block());
+            hashes.push(None);
+        }
+        let cached_tokens = hits as u64 * self.block_size;
+        if let Some(cache) = self.prefix.as_mut() {
+            cache.note_hit_tokens(cached_tokens);
+        }
+        self.allocs.insert(req, Allocation {
+            blocks,
+            hashes,
+            tokens: tokens.0,
+        });
+        self.used_tokens += tokens.0;
+        self.note_peak();
+        Ok(Tokens(cached_tokens))
+    }
+
+    /// Publish `req`'s materialized full blocks into the prefix cache so
+    /// later allocations (other requests with the same prompt, or this
+    /// request's own post-Discard recompute) can hit them. `materialized`
+    /// is how many leading context tokens are content-complete; `chain`
+    /// their content hashes. Idempotent; no-op without a cache.
+    pub fn register_prefix(&mut self, req: RequestId,
+                           materialized: Tokens, chain: &[BlockHash]) {
+        if self.prefix.is_none() {
+            return;
+        }
+        let Some(alloc) = self.allocs.get_mut(&req) else {
+            return;
+        };
+        let full = (materialized.0 / self.block_size)
+            .min(chain.len() as u64)
+            .min(alloc.blocks.len() as u64) as usize;
+        let cache = self.prefix.as_mut().expect("checked above");
+        for i in 0..full {
+            if alloc.hashes[i].is_none()
+                && cache.register(chain[i], alloc.blocks[i])
+            {
+                alloc.hashes[i] = Some(chain[i]);
+            }
+        }
     }
 
     /// Grow `req` by one token (the per-iteration decode append).
@@ -202,12 +419,52 @@ impl BlockManager {
     }
 
     /// Release the entire allocation of `req`, returning its token count.
+    /// Shared blocks drop one refcount and are retained (reclaimable) in
+    /// the cache at zero refs; private blocks return to the free list.
     pub fn free(&mut self, req: RequestId) -> Result<Tokens, KvError> {
+        self.free_inner(req, u64::MAX)
+    }
+
+    /// Release `req` like [`BlockManager::free`], but hashed blocks at
+    /// index >= `retain_blocks` are *purged* from the cache (straight
+    /// back to the free list) once their refcount drains. The engine
+    /// passes the request's shareable-prompt block count at finish, so
+    /// request-private content (generated tokens, synthetic prompts)
+    /// never lingers as permanently-unhittable cached garbage while
+    /// shareable prompt blocks stay re-hittable.
+    pub fn free_discarding_private(&mut self, req: RequestId,
+                                   retain_blocks: u64)
+                                   -> Result<Tokens, KvError> {
+        self.free_inner(req, retain_blocks)
+    }
+
+    fn free_inner(&mut self, req: RequestId, retain_blocks: u64)
+                  -> Result<Tokens, KvError> {
         let alloc = self
             .allocs
             .remove(&req)
             .ok_or(KvError::UnknownRequest(req))?;
-        self.free_blocks.extend(alloc.blocks.iter().rev());
+        for i in (0..alloc.blocks.len()).rev() {
+            match alloc.hashes[i] {
+                Some(h) => {
+                    let cache = self
+                        .prefix
+                        .as_mut()
+                        .expect("hashed block implies cache");
+                    cache.release(h);
+                    if i as u64 >= retain_blocks {
+                        if let Some(freed) = cache.purge_zero_ref(h) {
+                            self.free_blocks.push(freed);
+                        }
+                    }
+                }
+                None => self.free_blocks.push(alloc.blocks[i]),
+            }
+        }
+        if let Some(cache) = self.prefix.as_mut() {
+            let evicted = cache.evict_over_capacity();
+            self.free_blocks.extend(evicted);
+        }
         self.used_tokens -= alloc.tokens;
         Ok(Tokens(alloc.tokens))
     }
@@ -320,5 +577,156 @@ mod tests {
         for b in &b1 {
             assert!(!b2.contains(b));
         }
+    }
+
+    // ---- prefix-cache behavior ----
+
+    fn cached_mgr(budget: u64, bs: u64) -> BlockManager {
+        BlockManager::with_prefix_cache(Tokens(budget), bs, None)
+    }
+
+    #[test]
+    fn prefixed_hit_shares_physical_blocks() {
+        let mut m = cached_mgr(16 * 8, 16);
+        let chain = [101, 102];
+        // First request materializes 40 tokens (2 full + 1 partial).
+        assert_eq!(m.allocate_prefixed(rid(1), Tokens(40), &chain)
+                       .unwrap(),
+                   Tokens::ZERO);
+        m.register_prefix(rid(1), Tokens(40), &chain);
+        let b1 = m.blocks_of(rid(1)).unwrap().to_vec();
+        // Second request with the same chain reuses both full blocks.
+        assert_eq!(m.allocate_prefixed(rid(2), Tokens(40), &chain)
+                       .unwrap(),
+                   Tokens(32));
+        let b2 = m.blocks_of(rid(2)).unwrap().to_vec();
+        assert_eq!(b1[..2], b2[..2], "full prefix blocks are shared");
+        assert_ne!(b1[2], b2[2], "partial tails stay private");
+        assert_eq!(m.prefix_hit_tokens(), 32);
+        // Physical usage: 2 shared + 2 private tails = 4 blocks.
+        assert_eq!(m.pinned_blocks(), 4);
+        assert_eq!(m.blocks_allocated(), 4, "hits are not materializations");
+    }
+
+    #[test]
+    fn free_retains_shared_blocks_for_rehits() {
+        let mut m = cached_mgr(16 * 4, 16);
+        let chain = [7];
+        m.allocate_prefixed(rid(1), Tokens(20), &chain).unwrap();
+        m.register_prefix(rid(1), Tokens(20), &chain);
+        m.free(rid(1)).unwrap();
+        assert_eq!(m.cached_blocks(), 1, "zero-ref block retained");
+        assert_eq!(m.pinned_blocks(), 0);
+        // A re-hit resurrects it without a fresh materialization.
+        let before = m.blocks_allocated();
+        assert_eq!(m.allocate_prefixed(rid(2), Tokens(16), &chain)
+                       .unwrap(),
+                   Tokens(16));
+        assert_eq!(m.blocks_allocated(), before);
+        assert_eq!(m.cached_blocks(), 0);
+        assert_eq!(m.pinned_blocks(), 1);
+    }
+
+    #[test]
+    fn pressure_reclaims_cached_but_never_pinned() {
+        // 4 blocks total. r1 pins 2 shared; r2 frees 2 cached.
+        let mut m = cached_mgr(16 * 4, 16);
+        m.allocate_prefixed(rid(1), Tokens(32), &[1, 2]).unwrap();
+        m.register_prefix(rid(1), Tokens(32), &[1, 2]);
+        m.allocate_prefixed(rid(2), Tokens(32), &[3, 4]).unwrap();
+        m.register_prefix(rid(2), Tokens(32), &[3, 4]);
+        m.free(rid(2)).unwrap();
+        assert_eq!(m.cached_blocks(), 2);
+        assert_eq!(m.free_tokens(), Tokens::ZERO);
+        // r3 needs 2 fresh blocks: both come from reclaiming r2's cached
+        // blocks; r1's pinned blocks are untouchable.
+        assert_eq!(m.available_for(rid(3)), Tokens(32));
+        m.allocate(rid(3), Tokens(32)).unwrap();
+        assert_eq!(m.prefix_evictions(), 2);
+        assert_eq!(m.tokens_of(rid(1)), Tokens(32));
+        // Now nothing is reclaimable: a further allocation OOMs and the
+        // report excludes the 4 pinned blocks.
+        let err = m.allocate(rid(4), Tokens(16)).unwrap_err();
+        assert_eq!(err, KvError::OutOfMemory {
+            requested: Tokens(16),
+            free: Tokens::ZERO,
+        });
+    }
+
+    #[test]
+    fn prefixed_oom_leaves_state_unchanged() {
+        let mut m = cached_mgr(16 * 2, 16);
+        m.allocate_prefixed(rid(1), Tokens(16), &[9]).unwrap();
+        m.register_prefix(rid(1), Tokens(16), &[9]);
+        // Chain hits 1 block, but the remaining 2 fresh blocks cannot
+        // fit (1 free block only).
+        let err = m
+            .allocate_prefixed(rid(2), Tokens(48), &[9, 10])
+            .unwrap_err();
+        assert!(matches!(err, KvError::OutOfMemory { .. }));
+        assert!(!m.contains(rid(2)));
+        assert_eq!(m.prefix_hit_tokens(), 0);
+        assert_eq!(m.pinned_blocks(), 1);
+    }
+
+    #[test]
+    fn cache_capacity_bounds_retained_blocks() {
+        let mut m = BlockManager::with_prefix_cache(Tokens(16 * 8), 16,
+                                                    Some(1));
+        m.allocate_prefixed(rid(1), Tokens(32), &[1, 2]).unwrap();
+        m.register_prefix(rid(1), Tokens(32), &[1, 2]);
+        m.free(rid(1)).unwrap();
+        assert_eq!(m.cached_blocks(), 1, "capacity 1 retains one block");
+        assert_eq!(m.prefix_evictions(), 1);
+        assert_eq!(m.free_tokens(), Tokens(16 * 7));
+    }
+
+    #[test]
+    fn terminal_free_purges_private_tail_keeps_prompt() {
+        let mut m = cached_mgr(16 * 8, 16);
+        // 3 full blocks: chain[0..2] = shareable prompt content,
+        // chain[2] = request-private (generated) content.
+        let chain = [1, 2, 3];
+        m.allocate_prefixed(rid(1), Tokens(48), &chain).unwrap();
+        m.register_prefix(rid(1), Tokens(48), &chain);
+        m.free_discarding_private(rid(1), 2).unwrap();
+        assert_eq!(m.cached_blocks(), 2, "prompt blocks stay hittable");
+        assert!(m.prefix_refcount(3).is_none(), "private hash purged");
+        assert_eq!(m.prefix_refcount(1), Some(0));
+        assert_eq!(m.free_tokens(), Tokens(16 * 6));
+    }
+
+    #[test]
+    fn terminal_free_never_purges_other_holders() {
+        let mut m = cached_mgr(16 * 8, 16);
+        m.allocate_prefixed(rid(1), Tokens(16), &[9]).unwrap();
+        m.register_prefix(rid(1), Tokens(16), &[9]);
+        assert_eq!(m.allocate_prefixed(rid(2), Tokens(16), &[9])
+                       .unwrap(),
+                   Tokens(16));
+        // r1 finishes with retain 0: hash 9 is still pinned by r2, so
+        // it must survive untouched.
+        m.free_discarding_private(rid(1), 0).unwrap();
+        assert_eq!(m.prefix_refcount(9), Some(1), "r2 still holds it");
+        assert_eq!(m.blocks_of(rid(2)).unwrap().len(), 1);
+        // Once the last holder terminally frees, it is purged outright.
+        m.free_discarding_private(rid(2), 0).unwrap();
+        assert!(m.prefix_refcount(9).is_none());
+        assert_eq!(m.cached_blocks(), 0);
+        assert_eq!(m.free_tokens(), Tokens(16 * 8));
+    }
+
+    #[test]
+    fn disabled_cache_is_legacy_behavior() {
+        let mut m = BlockManager::new(Tokens(64), 16);
+        assert!(!m.prefix_enabled());
+        // allocate_prefixed degrades to plain allocate.
+        assert_eq!(m.allocate_prefixed(rid(1), Tokens(20), &[1, 2])
+                       .unwrap(),
+                   Tokens::ZERO);
+        m.register_prefix(rid(1), Tokens(20), &[1, 2]);
+        m.free(rid(1)).unwrap();
+        assert_eq!(m.cached_blocks(), 0);
+        assert_eq!(m.free_tokens(), Tokens(64));
     }
 }

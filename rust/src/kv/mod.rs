@@ -1,7 +1,10 @@
-//! Paged KV-cache accounting (vLLM-style block manager) + CPU swap space.
+//! Paged KV-cache accounting (vLLM-style block manager), hash-consed
+//! refcounted prefix caching, and CPU swap space.
 
 pub mod block_manager;
+pub mod prefix;
 pub mod swap;
 
 pub use block_manager::{BlockManager, KvError};
+pub use prefix::{content_chain, BlockHash, PrefixCache};
 pub use swap::{SwapSpace, Transfer, TransferDir, TransferQueue};

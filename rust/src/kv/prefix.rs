@@ -1,0 +1,356 @@
+//! Hash-consed, refcounted prefix cache for the KV [`BlockManager`]
+//! (vLLM "automatic prefix caching" / SGLang RadixAttention, adapted to
+//! this stack's token-slot accounting).
+//!
+//! The unit of sharing is one **full block** of context. Every full
+//! block of a request's materialized context gets a *chain hash*: a
+//! rolling hash over all token content from position 0 through the end
+//! of that block, so equal hashes imply equal full prefixes (the
+//! hash-consing property — block `i` can only be shared by requests
+//! whose entire first `i+1` blocks of content agree). The cache maps
+//! chain hashes to physical blocks with a refcount:
+//!
+//! - **hit**: `BlockManager::allocate_prefixed` walks a request's chain
+//!   and pins (refcount++) every already-materialized leading block; the
+//!   request skips prefilling those tokens entirely.
+//! - **release**: freeing a request decrements refcounts; blocks reaching
+//!   zero are *retained* in an LRU of reclaimable cached blocks instead
+//!   of returning to the free list, so later requests (or the same
+//!   request's post-Discard recompute) can re-hit them.
+//! - **reclaim**: under memory pressure the manager evicts zero-ref
+//!   cached blocks (oldest first) back to the free list before reporting
+//!   OOM. Pinned (refcount > 0) blocks are never evicted.
+//!
+//! A partial tail block is never shared: divergence inside a block is
+//! resolved copy-on-write style by materializing the tail tokens into a
+//! fresh private block while the full-block prefix stays shared.
+//!
+//! **Content model.** The simulator has no real token ids, so token
+//! content is synthesized positionally: prompt positions hash the prompt
+//! *bytes* (equal prompt text ⇒ equal chains; a shared leading substring
+//! shares proportionally many blocks), positions past the prompt text
+//! hash an explicit pad marker (so "AB" padded to 10 tokens never
+//! collides with "ABB"), and generated/API-response positions hash
+//! `(request id, position)` — private to the request, which is exactly
+//! what makes its own discard-recompute re-hit the cache without ever
+//! aliasing another request's generations. Content-less synthetic
+//! prompts (empty text) are likewise keyed per-request rather than
+//! inventing cross-request sharing that the workload never specified.
+//!
+//! [`BlockManager`]: super::block_manager::BlockManager
+
+use std::collections::{HashMap, VecDeque};
+
+use super::block_manager::BlockId;
+use crate::core::request::RequestSpec;
+use crate::core::types::Tokens;
+
+/// Chain hash of one full block of context (position 0 through the end
+/// of the block), FNV-1a over the synthesized token content.
+pub type BlockHash = u64;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Marker mixed for prompt positions past the end of the prompt text
+/// (distinct from any byte value).
+const PAD_MARKER: u64 = 0x100;
+/// Marker mixed for per-request private content (generated tokens, API
+/// responses, content-less synthetic prompts).
+const PRIVATE_MARKER: u64 = 0x200;
+
+fn mix(h: &mut u64, value: u64) {
+    for byte in value.to_le_bytes() {
+        *h = (*h ^ u64::from(byte)).wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// Chain hashes for every full block of the first `upto` tokens of
+/// `spec`'s context (`floor(upto / block_size)` entries). Positions
+/// beyond the prompt are keyed per-request (see the module docs), so a
+/// chain is valid for any `upto` not exceeding the request's
+/// materialized context.
+pub fn content_chain(spec: &RequestSpec, block_size: u64, upto: Tokens)
+                     -> Vec<BlockHash> {
+    assert!(block_size > 0, "block_size must be positive");
+    let full_blocks = upto.0 / block_size;
+    let mut chain = Vec::with_capacity(full_blocks as usize);
+    let mut h = FNV_OFFSET;
+    mix(&mut h, block_size);
+    let bytes = spec.prompt.as_bytes();
+    for p in 0..full_blocks * block_size {
+        if p < spec.prompt_tokens.0 && !bytes.is_empty() {
+            if (p as usize) < bytes.len() {
+                mix(&mut h, u64::from(bytes[p as usize]));
+            } else {
+                mix(&mut h, PAD_MARKER);
+            }
+        } else {
+            mix(&mut h, PRIVATE_MARKER);
+            mix(&mut h, spec.id.0);
+            mix(&mut h, p);
+        }
+        if (p + 1) % block_size == 0 {
+            chain.push(h);
+        }
+    }
+    chain
+}
+
+#[derive(Debug, Clone, Copy)]
+struct CachedBlock {
+    block: BlockId,
+    /// Live allocations holding this block (0 = reclaimable, on the LRU).
+    refcount: u32,
+}
+
+/// The hash → physical-block map plus the LRU of zero-ref cached blocks.
+/// Owned by the [`BlockManager`]; all physical-block bookkeeping (free
+/// lists, token accounting) stays there.
+///
+/// [`BlockManager`]: super::block_manager::BlockManager
+#[derive(Debug, Clone, Default)]
+pub struct PrefixCache {
+    map: HashMap<BlockHash, CachedBlock>,
+    /// Zero-ref cached blocks, oldest (first to evict) at the front.
+    lru: VecDeque<BlockHash>,
+    /// Maximum zero-ref blocks retained after frees; `None` keeps every
+    /// reclaimable block until memory pressure evicts it.
+    capacity: Option<u64>,
+    /// Tokens served from cache hits instead of being prefilled.
+    hit_tokens: u64,
+    /// Zero-ref cached blocks evicted (capacity or memory pressure).
+    evictions: u64,
+}
+
+impl PrefixCache {
+    pub fn new(capacity: Option<u64>) -> PrefixCache {
+        PrefixCache {
+            capacity,
+            ..PrefixCache::default()
+        }
+    }
+
+    pub fn hit_tokens(&self) -> u64 {
+        self.hit_tokens
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Zero-ref cached blocks (reclaimable under pressure).
+    pub fn zero_ref(&self) -> u64 {
+        self.lru.len() as u64
+    }
+
+    pub fn contains(&self, hash: BlockHash) -> bool {
+        self.map.contains_key(&hash)
+    }
+
+    /// Is the cached block for `hash` held by at least one allocation?
+    pub fn is_pinned(&self, hash: BlockHash) -> bool {
+        self.map.get(&hash).is_some_and(|c| c.refcount > 0)
+    }
+
+    /// Refcount of `hash` (0 for zero-ref cached, `None` if absent).
+    pub fn refcount_of(&self, hash: BlockHash) -> Option<u32> {
+        self.map.get(&hash).map(|c| c.refcount)
+    }
+
+    pub(super) fn note_hit_tokens(&mut self, tokens: u64) {
+        self.hit_tokens += tokens;
+    }
+
+    /// Pin the cached block for `hash` (refcount++), resurrecting it
+    /// from the LRU if it was zero-ref. `None` if the hash is absent.
+    ///
+    /// Resurrection scans the LRU (O(zero-ref blocks)). Fine at
+    /// simulation scale; a production cache would keep a slot index or
+    /// tombstoned entries to make this O(1) — noted as a follow-on
+    /// alongside the multi-replica work in ROADMAP.
+    pub(super) fn pin(&mut self, hash: BlockHash) -> Option<BlockId> {
+        let cached = self.map.get_mut(&hash)?;
+        if cached.refcount == 0 {
+            self.lru.retain(|h| *h != hash);
+        }
+        cached.refcount += 1;
+        Some(cached.block)
+    }
+
+    /// Register a freshly materialized block under `hash` with refcount
+    /// 1. Returns false (and leaves the block private) when the hash is
+    /// already cached — duplicate content materialized concurrently
+    /// keeps exactly one canonical physical block.
+    pub(super) fn register(&mut self, hash: BlockHash, block: BlockId)
+                           -> bool {
+        if self.map.contains_key(&hash) {
+            return false;
+        }
+        self.map.insert(hash, CachedBlock { block, refcount: 1 });
+        true
+    }
+
+    /// Drop one holder of `hash`; at zero refs the block is retained on
+    /// the LRU (reclaimable), not freed.
+    pub(super) fn release(&mut self, hash: BlockHash) {
+        let cached = self
+            .map
+            .get_mut(&hash)
+            .expect("release of unregistered prefix block");
+        assert!(cached.refcount > 0, "prefix refcount underflow");
+        cached.refcount -= 1;
+        if cached.refcount == 0 {
+            self.lru.push_back(hash);
+        }
+    }
+
+    /// Remove `hash` from the cache if (and only if) it is zero-ref,
+    /// returning its physical block. Disposal hook for request-private
+    /// content that can never be re-hit once its request finished — a
+    /// pinned hash (another live holder) is left untouched.
+    pub(super) fn purge_zero_ref(&mut self, hash: BlockHash)
+                                 -> Option<BlockId> {
+        if self.refcount_of(hash) != Some(0) {
+            return None;
+        }
+        self.lru.retain(|h| *h != hash);
+        let cached = self.map.remove(&hash).expect("checked present");
+        Some(cached.block)
+    }
+
+    /// Evict the oldest zero-ref cached block, returning its physical
+    /// block to the caller's free list.
+    pub(super) fn reclaim_one(&mut self) -> Option<BlockId> {
+        let hash = self.lru.pop_front()?;
+        let cached = self.map.remove(&hash).expect("LRU entry not in map");
+        debug_assert_eq!(cached.refcount, 0, "LRU held a pinned block");
+        self.evictions += 1;
+        Some(cached.block)
+    }
+
+    /// Evict zero-ref blocks beyond the configured retention capacity
+    /// (oldest first), returning the freed physical blocks.
+    pub(super) fn evict_over_capacity(&mut self) -> Vec<BlockId> {
+        let Some(cap) = self.capacity else {
+            return Vec::new();
+        };
+        let mut freed = Vec::new();
+        while self.zero_ref() > cap {
+            freed.push(self.reclaim_one().expect("zero_ref > 0"));
+        }
+        freed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::types::{Micros, RequestId};
+
+    fn spec(id: u64, prompt: &str, prompt_tokens: u64) -> RequestSpec {
+        RequestSpec {
+            id: RequestId(id),
+            arrival: Micros::ZERO,
+            prompt: prompt.to_string(),
+            prompt_tokens: Tokens(prompt_tokens),
+            api_calls: vec![],
+            final_decode: Tokens(1),
+        }
+    }
+
+    #[test]
+    fn equal_prompts_share_whole_chain() {
+        let a = content_chain(&spec(1, "system: be nice", 15), 4,
+                              Tokens(12));
+        let b = content_chain(&spec(2, "system: be nice", 15), 4,
+                              Tokens(12));
+        assert_eq!(a.len(), 3);
+        assert_eq!(a, b, "identical prompt content must hash identically");
+    }
+
+    #[test]
+    fn shared_text_prefix_shares_leading_blocks_only() {
+        let a = content_chain(&spec(1, "SHAREDSHAREDxxxx", 16), 4,
+                              Tokens(16));
+        let b = content_chain(&spec(2, "SHAREDSHAREDyyyy", 16), 4,
+                              Tokens(16));
+        assert_eq!(a[..3], b[..3], "12 shared chars = 3 shared blocks");
+        assert_ne!(a[3], b[3], "divergent block must not collide");
+    }
+
+    #[test]
+    fn padding_does_not_alias_longer_prompts() {
+        // "AB" padded to 12 tokens vs "ABB...": chains diverge at the
+        // first padded position.
+        let a = content_chain(&spec(1, "AB", 12), 4, Tokens(12));
+        let b = content_chain(&spec(2, "ABBBBBBBBBBB", 12), 4, Tokens(12));
+        assert_ne!(a[0], b[0]);
+    }
+
+    #[test]
+    fn contentless_prompts_are_private_per_request() {
+        let a = content_chain(&spec(1, "", 8), 4, Tokens(8));
+        let b = content_chain(&spec(2, "", 8), 4, Tokens(8));
+        assert_ne!(a, b, "synthetic prompts must never cross-share");
+        // ...but are stable for the same request (self-recompute hits).
+        let a2 = content_chain(&spec(1, "", 8), 4, Tokens(8));
+        assert_eq!(a, a2);
+    }
+
+    #[test]
+    fn generated_region_is_private_and_stable() {
+        let s = spec(7, "abcdefgh", 8);
+        // Chain over prompt (8) + 8 generated tokens.
+        let c1 = content_chain(&s, 4, Tokens(16));
+        let c2 = content_chain(&s, 4, Tokens(16));
+        assert_eq!(c1, c2);
+        assert_eq!(c1.len(), 4);
+        // Prompt blocks agree with a prompt-only chain (prefix property).
+        let prompt_only = content_chain(&s, 4, Tokens(8));
+        assert_eq!(c1[..2], prompt_only[..]);
+    }
+
+    #[test]
+    fn chain_length_is_full_blocks_only() {
+        let s = spec(1, "abcdefghij", 10);
+        assert_eq!(content_chain(&s, 4, Tokens(10)).len(), 2);
+        assert_eq!(content_chain(&s, 4, Tokens(3)).len(), 0);
+        assert_eq!(content_chain(&s, 4, Tokens(0)).len(), 0);
+    }
+
+    #[test]
+    fn pin_release_reclaim_lifecycle() {
+        let mut c = PrefixCache::new(None);
+        assert!(c.register(42, 5));
+        assert!(!c.register(42, 6), "duplicate hash keeps one block");
+        assert_eq!(c.refcount_of(42), Some(1));
+        assert_eq!(c.pin(42), Some(5));
+        assert_eq!(c.refcount_of(42), Some(2));
+        c.release(42);
+        c.release(42);
+        assert_eq!(c.refcount_of(42), Some(0));
+        assert_eq!(c.zero_ref(), 1);
+        // Resurrection removes it from the LRU.
+        assert_eq!(c.pin(42), Some(5));
+        assert_eq!(c.zero_ref(), 0);
+        c.release(42);
+        assert_eq!(c.reclaim_one(), Some(5));
+        assert_eq!(c.evictions(), 1);
+        assert!(!c.contains(42));
+        assert_eq!(c.reclaim_one(), None);
+    }
+
+    #[test]
+    fn capacity_evicts_oldest_zero_ref() {
+        let mut c = PrefixCache::new(Some(1));
+        c.register(1, 10);
+        c.register(2, 20);
+        c.release(1);
+        assert!(c.evict_over_capacity().is_empty(), "1 zero-ref <= cap 1");
+        c.release(2);
+        assert_eq!(c.evict_over_capacity(), vec![10], "oldest goes first");
+        assert!(c.contains(2));
+        assert_eq!(c.evictions(), 1);
+    }
+}

@@ -40,6 +40,7 @@ pub mod engine;
 pub mod kv;
 pub mod metrics;
 pub mod predictor;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;
 pub mod util;

@@ -15,9 +15,12 @@ use anyhow::Result;
 use lamps::bench::{Dataset, ModelPreset};
 use lamps::config::SystemConfig;
 use lamps::core::types::Micros;
+#[cfg(feature = "pjrt")]
 use lamps::engine::pjrt_backend::PjrtBackend;
 use lamps::engine::Engine;
+#[cfg(feature = "pjrt")]
 use lamps::predictor::opt_classifier::PjrtPredictor;
+#[cfg(feature = "pjrt")]
 use lamps::runtime::{ArtifactMeta, ModelRuntime, PredictorRuntime,
                      RuntimeClient};
 use lamps::workload::Trace;
@@ -29,11 +32,13 @@ USAGE:
   lamps serve   [--addr 127.0.0.1:7070] [--model gptj-tiny]
                 [--system lamps] [--artifacts artifacts]
                 [--max-batch-tokens N] [--prefill-chunk N] [--async-swap]
+                [--prefix-cache] [--prefix-cache-blocks N]
   lamps run     [--dataset single-api|multi-api|toolbench|<trace.json>]
                 [--system vllm|infercept|lamps|lamps-no-sched|sjf|sjf-total]
                 [--model gptj-6b|vicuna-13b] [--rate 3.0]
                 [--requests 500] [--seed 42] [--time-cap-secs N]
                 [--max-batch-tokens N] [--prefill-chunk N] [--async-swap]
+                [--prefix-cache] [--prefix-cache-blocks N]
                 [--timeline]
   lamps gen-workload --out trace.json [--dataset single-api] [--rate 3.0]
                 [--requests 500] [--seed 42]
@@ -131,6 +136,27 @@ fn apply_compose_flags(cfg: &mut SystemConfig, args: &Args) {
     }
 }
 
+/// Apply the KV prefix-cache flags: `--prefix-cache` turns refcounted
+/// prefix block sharing on (off by default ⇒ legacy behavior);
+/// `--prefix-cache-blocks N` caps the zero-ref cached blocks retained
+/// after frees (default: retain all, reclaimed under memory pressure).
+fn apply_prefix_flags(cfg: &mut SystemConfig, args: &Args) {
+    if args.has("prefix-cache") {
+        cfg.prefix_cache.enabled = true;
+    }
+    if let Some(blocks) = args.flags.get("prefix-cache-blocks") {
+        match blocks.parse() {
+            Ok(n) => {
+                cfg.prefix_cache.enabled = true;
+                cfg.prefix_cache.cache_blocks = Some(n);
+            }
+            Err(_) => eprintln!(
+                "lamps: ignoring unparseable --prefix-cache-blocks \
+                 '{blocks}' (expected a block count)"),
+        }
+    }
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(command) = argv.first() else {
@@ -155,6 +181,14 @@ fn main() -> Result<()> {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn serve(_args: &Args) -> Result<()> {
+    anyhow::bail!("this binary was built without the `pjrt` feature; \
+                   `serve` needs the PJRT runtime (rebuild with default \
+                   features)")
+}
+
+#[cfg(feature = "pjrt")]
 fn serve(args: &Args) -> Result<()> {
     let addr = args.get("addr", "127.0.0.1:7070");
     let model = args.get("model", "gptj-tiny");
@@ -167,6 +201,7 @@ fn serve(args: &Args) -> Result<()> {
     let mut base_cfg = SystemConfig::preset(system)
         .ok_or_else(|| anyhow::anyhow!("unknown system preset {system}"))?;
     apply_compose_flags(&mut base_cfg, args);
+    apply_prefix_flags(&mut base_cfg, args);
 
     // PJRT handles are not Send: build them inside the engine thread.
     let model_name = model.to_string();
@@ -222,6 +257,7 @@ fn run(args: &Args) -> Result<()> {
         cfg.admission_lookahead = false;
     }
     apply_compose_flags(&mut cfg, args);
+    apply_prefix_flags(&mut cfg, args);
     let mut engine = Engine::simulated(cfg);
     engine.record_timeline = args.has("timeline");
     let cap = args
@@ -259,6 +295,13 @@ fn gen_workload(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn predict(_args: &Args) -> Result<()> {
+    anyhow::bail!("this binary was built without the `pjrt` feature; \
+                   `predict` needs the PJRT runtime")
+}
+
+#[cfg(feature = "pjrt")]
 fn predict(args: &Args) -> Result<()> {
     let prompt = args
         .positional
@@ -273,6 +316,13 @@ fn predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn info(_args: &Args) -> Result<()> {
+    anyhow::bail!("this binary was built without the `pjrt` feature; \
+                   `info` needs the PJRT runtime")
+}
+
+#[cfg(feature = "pjrt")]
 fn info(args: &Args) -> Result<()> {
     let artifacts = args.get("artifacts", "artifacts");
     let meta = ArtifactMeta::load(artifacts)?;

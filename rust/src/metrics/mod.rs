@@ -101,8 +101,21 @@ pub struct MetricsCollector {
     pub iterations: u64,
     /// Total tokens decoded.
     pub tokens_decoded: u64,
+    /// Total prefill/recompute tokens actually materialized (prefix-cache
+    /// hits are *not* counted — they skip materialization).
+    pub tokens_prefilled: u64,
     /// Total tokens recomputed after Discard (wasted work accounting).
     pub tokens_recomputed: u64,
+    /// Context tokens served from KV prefix-cache hits instead of being
+    /// prefilled.
+    pub prefix_hit_tokens: u64,
+    /// Zero-ref cached blocks evicted from the prefix cache (retention
+    /// capacity or memory pressure).
+    pub prefix_evictions: u64,
+    /// Zero-ref blocks currently retained in the prefix cache (gauge).
+    pub prefix_cached_blocks: u64,
+    /// Fresh physical KV blocks materialized (cache hits excluded).
+    pub blocks_allocated: u64,
     /// Total preemptions (admitted requests evicted under memory pressure).
     pub preemptions: u64,
     /// Strategy usage counts (preserve, discard, swap).
@@ -179,7 +192,12 @@ impl MetricsCollector {
             duration: self.end_time,
             iterations: self.iterations,
             tokens_decoded: self.tokens_decoded,
+            tokens_prefilled: self.tokens_prefilled,
             tokens_recomputed: self.tokens_recomputed,
+            prefix_hit_tokens: self.prefix_hit_tokens,
+            prefix_evictions: self.prefix_evictions,
+            prefix_cached_blocks: self.prefix_cached_blocks,
+            blocks_allocated: self.blocks_allocated,
             preemptions: self.preemptions,
             strategy_counts: self.strategy_counts,
             swap_stall_us: self.swap_stall_us,
@@ -205,7 +223,17 @@ pub struct RunReport {
     pub duration: Micros,
     pub iterations: u64,
     pub tokens_decoded: u64,
+    /// Prefill/recompute tokens actually materialized.
+    pub tokens_prefilled: u64,
     pub tokens_recomputed: u64,
+    /// Context tokens served from KV prefix-cache hits.
+    pub prefix_hit_tokens: u64,
+    /// Prefix-cache evictions (capacity or memory pressure).
+    pub prefix_evictions: u64,
+    /// Zero-ref cached blocks retained at end of run.
+    pub prefix_cached_blocks: u64,
+    /// Fresh physical KV blocks materialized (cache hits excluded).
+    pub blocks_allocated: u64,
     pub preemptions: u64,
     /// Strategy usage counts (preserve, discard, swap).
     pub strategy_counts: [u64; 3],
@@ -244,8 +272,18 @@ impl RunReport {
             ("duration_us", json::num(self.duration.0 as f64)),
             ("iterations", json::num(self.iterations as f64)),
             ("tokens_decoded", json::num(self.tokens_decoded as f64)),
+            ("tokens_prefilled",
+             json::num(self.tokens_prefilled as f64)),
             ("tokens_recomputed",
              json::num(self.tokens_recomputed as f64)),
+            ("prefix_hit_tokens",
+             json::num(self.prefix_hit_tokens as f64)),
+            ("prefix_evictions",
+             json::num(self.prefix_evictions as f64)),
+            ("prefix_cached_blocks",
+             json::num(self.prefix_cached_blocks as f64)),
+            ("blocks_allocated",
+             json::num(self.blocks_allocated as f64)),
             ("preemptions", json::num(self.preemptions as f64)),
             ("preserve_count", json::num(self.strategy_counts[0] as f64)),
             ("discard_count", json::num(self.strategy_counts[1] as f64)),

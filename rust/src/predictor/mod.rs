@@ -13,6 +13,7 @@
 //!   stand-in (embedding -> 50-bin classifier) executed via PJRT.
 
 pub mod api_stats;
+#[cfg(feature = "pjrt")]
 pub mod opt_classifier;
 pub mod oracle;
 

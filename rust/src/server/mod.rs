@@ -137,7 +137,7 @@ fn engine_thread(cfg: SystemConfig, backend: Box<dyn Backend>,
                  rx: mpsc::Receiver<Command>) {
     eprintln!(
         "lamps: engine up (scheduler {}, batch composer: budget {}, \
-         prefill chunk {}, async swap {})",
+         prefill chunk {}, async swap {}, prefix cache {})",
         cfg.scheduler.label(),
         cfg.compose
             .max_batch_tokens
@@ -145,7 +145,15 @@ fn engine_thread(cfg: SystemConfig, backend: Box<dyn Backend>,
         cfg.compose
             .prefill_chunk
             .map_or("whole-context".to_string(), |t| t.to_string()),
-        cfg.compose.async_swap);
+        cfg.compose.async_swap,
+        if cfg.prefix_cache.enabled {
+            match cfg.prefix_cache.cache_blocks {
+                Some(n) => format!("on (retain {n} blocks)"),
+                None => "on (retain all)".to_string(),
+            }
+        } else {
+            "off".to_string()
+        });
     let mut engine =
         Engine::new(cfg, backend, predictor, Clock::wall_clock());
     let mut watchers: Vec<(RequestId, mpsc::Sender<Completion>)> =
@@ -187,12 +195,15 @@ fn engine_thread(cfg: SystemConfig, backend: Box<dyn Backend>,
                 .unwrap_or(false);
             if finished {
                 let r = engine.request(id).unwrap();
+                #[cfg(feature = "pjrt")]
                 let generated = engine.backend_any().and_then(|any| {
                     any.downcast_ref::<crate::engine::pjrt_backend::PjrtBackend>()
                         .and_then(|b| {
                             b.generated_tokens(id).map(|t| t.to_vec())
                         })
                 });
+                #[cfg(not(feature = "pjrt"))]
+                let generated = None;
                 let completion = Completion {
                     id: id.0,
                     latency_us: (r.finished_at.unwrap()

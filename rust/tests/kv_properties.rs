@@ -6,11 +6,22 @@
 //! - `used_tokens` always equals the sum of live allocations,
 //! - a failed (OOM) allocation leaves all observable state unchanged and
 //!   reports `free` in requester-tokens (the unit `can_fit` checks).
+//!
+//! With the prefix cache attached, additionally:
+//!
+//! - block conservation: free + distinct-pinned + zero-ref-cached
+//!   always equals capacity,
+//! - refcounts never underflow and a shared block's refcount equals the
+//!   number of live allocations holding it,
+//! - a cache-hit allocation never materializes a duplicate physical
+//!   block for content that is already cached,
+//! - eviction (capacity or pressure) only ever touches zero-ref blocks:
+//!   a pinned block is never reclaimed out from under its holders.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet, HashSet};
 
 use lamps::core::types::{RequestId, Tokens};
-use lamps::kv::{BlockManager, KvError};
+use lamps::kv::{BlockHash, BlockManager, KvError};
 use lamps::util::Rng;
 
 /// Shadow model: per-request token counts tracked independently.
@@ -125,6 +136,180 @@ fn prop_random_op_sequences_hold_invariants() {
         assert_eq!(m.used_tokens(), Tokens::ZERO);
         assert_eq!(m.free_tokens(), capacity);
         assert_eq!(m.occupancy(), 0.0, "case {case}");
+    }
+}
+
+/// Shadow of one live prefixed allocation: logical tokens, the content
+/// chain it was allocated against, and the chain hashes it *holds* a
+/// refcount on (cache hits at allocation + registrations).
+struct PrefixShadow {
+    tokens: u64,
+    chain: Vec<BlockHash>,
+    held: BTreeSet<usize>,
+}
+
+/// Cross-checks every observable prefix-cache invariant against the
+/// shadow model. See the module docs for the list.
+fn check_prefix_invariants(m: &BlockManager,
+                           shadow: &BTreeMap<RequestId, PrefixShadow>,
+                           total_blocks: u64, block_size: u64) {
+    // Block conservation across the three physical states.
+    let free = m.free_tokens().0 / block_size;
+    assert_eq!(free + m.pinned_blocks() + m.cached_blocks(), total_blocks,
+               "free + pinned + cached must equal capacity");
+
+    // Distinct live blocks == pinned count: no pinned block was ever
+    // evicted/leaked (it would resurface under another request and
+    // shrink the distinct set), and cached/free blocks never appear in
+    // a live allocation.
+    let mut distinct: HashSet<u32> = HashSet::new();
+    let mut token_sum = 0u64;
+    for (&id, sh) in shadow {
+        assert_eq!(m.tokens_of(id), Tokens(sh.tokens));
+        distinct.extend(m.blocks_of(id).unwrap().iter().copied());
+        token_sum += sh.tokens;
+    }
+    assert_eq!(distinct.len() as u64, m.pinned_blocks(),
+               "pinned accounting must match the live allocations");
+    assert_eq!(m.used_tokens(), Tokens(token_sum));
+
+    // Refcounts equal the number of live holders; shared content maps
+    // to exactly one canonical physical block (never a duplicate).
+    let mut holders: BTreeMap<BlockHash, Vec<(RequestId, usize)>> =
+        BTreeMap::new();
+    for (&id, sh) in shadow {
+        for &i in &sh.held {
+            holders.entry(sh.chain[i]).or_default().push((id, i));
+        }
+    }
+    for (&hash, held_by) in &holders {
+        let rc = m.prefix_refcount(hash).unwrap_or_else(|| {
+            panic!("held hash {hash} missing from cache (evicted while \
+                    pinned?)")
+        });
+        assert_eq!(rc as usize, held_by.len(),
+                   "refcount of {hash} must equal its live holders");
+        let canonical = m.blocks_of(held_by[0].0).unwrap()[held_by[0].1];
+        for &(id, i) in held_by {
+            assert_eq!(m.blocks_of(id).unwrap()[i], canonical,
+                       "shared hash {hash} must map to one block");
+        }
+    }
+}
+
+#[test]
+fn prop_prefix_cache_invariants_hold() {
+    let mut rng = Rng::new(0xB10C_0003);
+    for case in 0..25u64 {
+        let block_size = rng.int_range(1, 12);
+        let total_blocks = rng.int_range(4, 48);
+        let cache_cap = if rng.f64() < 0.5 {
+            None
+        } else {
+            Some(rng.int_range(0, 6))
+        };
+        let mut m = BlockManager::with_prefix_cache(
+            Tokens(total_blocks * block_size), block_size, cache_cap);
+        // Four "prompt families" with disjoint chains: requests inside a
+        // family share content; across families nothing may alias.
+        let families: Vec<Vec<BlockHash>> = (0..4)
+            .map(|f| (0..8).map(|i| 0x5EED_0000 + f * 1000 + i).collect())
+            .collect();
+        let mut shadow: BTreeMap<RequestId, PrefixShadow> = BTreeMap::new();
+        let mut next_id = case * 1_000_000;
+
+        for _ in 0..400 {
+            let coin = rng.f64();
+            if coin < 0.40 {
+                // Fresh prefixed allocation from a random family.
+                next_id += 1;
+                let id = RequestId(next_id);
+                let family = (rng.next_u64() % 4) as usize;
+                let chain = families[family].clone();
+                let tokens = rng.int_range(1, 9 * block_size + 1);
+                let before_used = m.used_tokens();
+                let before_cached = m.cached_blocks();
+                match m.allocate_prefixed(id, Tokens(tokens), &chain) {
+                    Ok(cached) => {
+                        assert_eq!(cached.0 % block_size, 0,
+                                   "hits are whole blocks");
+                        assert!(cached.0 <= tokens,
+                                "cannot hit more than allocated");
+                        let hits = (cached.0 / block_size) as usize;
+                        shadow.insert(id, PrefixShadow {
+                            tokens,
+                            chain,
+                            held: (0..hits).collect(),
+                        });
+                    }
+                    Err(KvError::OutOfMemory { .. }) => {
+                        assert!(!m.contains(id));
+                        assert_eq!(m.used_tokens(), before_used);
+                        assert_eq!(m.cached_blocks(), before_cached,
+                                   "failed alloc must not disturb cache");
+                    }
+                    Err(e) => panic!("unexpected error {e}"),
+                }
+            } else if coin < 0.55 {
+                // Grow a live allocation (plain path; never re-walks).
+                if let Some((&id, _)) = shadow.iter().next() {
+                    let tokens = rng.int_range(0, 2 * block_size);
+                    if m.can_fit(id, Tokens(tokens)) {
+                        m.allocate(id, Tokens(tokens)).unwrap();
+                        shadow.get_mut(&id).unwrap().tokens += tokens;
+                    }
+                }
+            } else if coin < 0.75 {
+                // Register a live allocation's materialized content.
+                if !shadow.is_empty() {
+                    let idx =
+                        (rng.next_u64() % shadow.len() as u64) as usize;
+                    let id = *shadow.keys().nth(idx).unwrap();
+                    let sh = shadow.get_mut(&id).unwrap();
+                    let full = ((sh.tokens / block_size) as usize)
+                        .min(sh.chain.len());
+                    // Predict which indexes register: not yet held by
+                    // this request and content not cached by anyone.
+                    let newly: Vec<usize> = (0..full)
+                        .filter(|i| {
+                            !sh.held.contains(i)
+                                && m.prefix_refcount(sh.chain[*i])
+                                    .is_none()
+                        })
+                        .collect();
+                    m.register_prefix(id, Tokens(sh.tokens), &sh.chain);
+                    sh.held.extend(newly);
+                }
+            } else if coin < 0.95 {
+                // Free a random live allocation.
+                if !shadow.is_empty() {
+                    let idx =
+                        (rng.next_u64() % shadow.len() as u64) as usize;
+                    let id = *shadow.keys().nth(idx).unwrap();
+                    let sh = shadow.remove(&id).unwrap();
+                    assert_eq!(m.free(id).unwrap(), Tokens(sh.tokens));
+                }
+            } else {
+                // Retention cap honored at all times.
+                if let Some(cap) = cache_cap {
+                    assert!(m.cached_blocks() <= cap,
+                            "retained {} > cap {cap}",
+                            m.cached_blocks());
+                }
+            }
+            check_prefix_invariants(&m, &shadow, total_blocks, block_size);
+        }
+
+        // Drain and verify the cache alone owns what is left.
+        let ids: Vec<RequestId> = shadow.keys().copied().collect();
+        for id in ids {
+            let sh = shadow.remove(&id).unwrap();
+            assert_eq!(m.free(id).unwrap(), Tokens(sh.tokens));
+        }
+        assert_eq!(m.used_tokens(), Tokens::ZERO);
+        assert_eq!(m.pinned_blocks(), 0);
+        assert_eq!(m.free_tokens().0 / block_size + m.cached_blocks(),
+                   total_blocks, "case {case}");
     }
 }
 

@@ -4,7 +4,10 @@
 //!
 //! These tests need `make artifacts` to have run; they skip (pass with a
 //! notice) when artifacts are absent so plain `cargo test` stays green in
-//! a fresh checkout.
+//! a fresh checkout. The whole file is compiled out without the `pjrt`
+//! feature (`--no-default-features` builds have no runtime layer).
+
+#![cfg(feature = "pjrt")]
 
 use lamps::config::{SchedulerKind, SystemConfig};
 use lamps::core::request::{ApiCallSpec, ApiType, RequestSpec};

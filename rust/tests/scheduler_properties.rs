@@ -66,6 +66,7 @@ fn prop_selected_strategy_minimizes_waste() {
             ctx: Tokens(rng.int_range(0, 5_000)),
             api_duration: Micros(rng.int_range(0, 60_000_000)),
             c_other: Tokens(rng.int_range(0, 50_000)),
+            cached: Tokens::ZERO,
         };
         let chosen = select_strategy(&inp, &cost);
         let w_chosen = waste_of(chosen, &inp, &cost);
@@ -89,11 +90,13 @@ fn prop_waste_monotone_in_duration_for_preserve() {
             ctx,
             api_duration: Micros(d1),
             c_other,
+            cached: Tokens::ZERO,
         }, &cost);
         let w2 = waste_of(HandlingStrategy::Preserve, &WasteInputs {
             ctx,
             api_duration: Micros(d2),
             c_other,
+            cached: Tokens::ZERO,
         }, &cost);
         assert!(w2 >= w1);
     }
@@ -110,6 +113,7 @@ fn prop_long_enough_api_never_preserves() {
             ctx: Tokens(rng.int_range(1, 2_000)),
             api_duration: Micros(3_600_000_000), // one hour
             c_other: Tokens(rng.int_range(0, 20_000)),
+            cached: Tokens::ZERO,
         };
         assert_ne!(select_strategy(&inp, &cost),
                    HandlingStrategy::Preserve, "{inp:?}");
