@@ -5,18 +5,32 @@
 //!
 //! Runs with the chunked batch composer enabled (512-token prefill
 //! chunks + async swap) for every system; set `LAMPS_CHUNK=off` to
-//! reproduce the legacy whole-prompt, synchronous-swap grid.
-use lamps::bench::{print_cells, print_headline, run_cell_with, Cell,
+//! reproduce the legacy whole-prompt, synchronous-swap grid. Set
+//! `LAMPS_REPLICAS=N` (and optionally `LAMPS_PLACEMENT`) to run every
+//! cell across an N-replica `ReplicaSet`; `LAMPS_REPLICAS=1` (the
+//! default) is byte-identical to the single-engine grid.
+use lamps::bench::{print_cells, print_headline, run_cell_fleet, Cell,
                    Dataset, ModelPreset, SYSTEMS};
-use lamps::config::ComposeConfig;
+use lamps::config::{ComposeConfig, PlacementKind};
 
 fn main() {
     let compose = match std::env::var("LAMPS_CHUNK").as_deref() {
         Ok("off") | Ok("0") => ComposeConfig::default(),
         _ => ComposeConfig::chunked(),
     };
-    println!("batch composer: prefill chunk {:?}, async swap {}",
-             compose.prefill_chunk, compose.async_swap);
+    let replicas: usize = std::env::var("LAMPS_REPLICAS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+        .max(1);
+    let placement = std::env::var("LAMPS_PLACEMENT")
+        .ok()
+        .and_then(|v| PlacementKind::parse(&v))
+        .unwrap_or(PlacementKind::MemoryOverTime);
+    println!("batch composer: prefill chunk {:?}, async swap {} | \
+              replicas {replicas} ({} placement)",
+             compose.prefill_chunk, compose.async_swap,
+             placement.label());
     let rates = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
     // `LAMPS_REQUESTS` shrinks the grid for CI smoke runs (the full
     // 250-request grid is the paper-fidelity default).
@@ -29,9 +43,10 @@ fn main() {
             let mut cells: Vec<Cell> = Vec::new();
             for &rate in &rates {
                 for system in SYSTEMS {
-                    cells.push(run_cell_with(system, dataset, model,
-                                             rate, n, 42, None,
-                                             compose));
+                    cells.push(run_cell_fleet(system, dataset, model,
+                                              rate, n, 42, None,
+                                              compose, replicas,
+                                              placement));
                 }
             }
             print_cells(&format!("Fig 6 — {} / {}", dataset.label(),

@@ -50,6 +50,7 @@ fn main() {
         c_other_est: Tokens(6_000),
         iteration: 0,
         account_prefill: false,
+        prefix_cached_block: None,
     };
 
     let lamps_sched = make_scheduler(SchedulerKind::Lamps);
@@ -69,7 +70,8 @@ fn main() {
             &requests[1], &cost,
             &RankInputs { t_iter: Micros(12_000),
                           c_other_est: Tokens(6_000),
-                          account_prefill: false }));
+                          account_prefill: false,
+                          prefix_cached_block: None }));
     });
     bench("waste equations: select_strategy", 1_000_000, || {
         std::hint::black_box(select_strategy(

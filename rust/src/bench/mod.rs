@@ -2,7 +2,9 @@
 //! figure bench drives, plus table formatting. See DESIGN.md §4 for the
 //! experiment index.
 
-use crate::config::{ComposeConfig, CostModel, SystemConfig};
+use crate::cluster::ReplicaSet;
+use crate::config::{ComposeConfig, CostModel, PlacementKind,
+                    SystemConfig};
 use crate::core::types::Micros;
 use crate::engine::Engine;
 use crate::metrics::RunReport;
@@ -110,19 +112,42 @@ pub fn run_cell_with(system: &str, dataset: Dataset, model: ModelPreset,
                      rate: f64, n_requests: usize, seed: u64,
                      time_cap: Option<Micros>, compose: ComposeConfig)
                      -> Cell {
+    run_cell_fleet(system, dataset, model, rate, n_requests, seed,
+                   time_cap, compose, 1, PlacementKind::MemoryOverTime)
+}
+
+/// Run one cell across `replicas` engines behind a
+/// [`ReplicaSet`](crate::cluster::ReplicaSet). With `replicas = 1` the
+/// single-engine path runs unchanged (byte-identical — the replica
+/// refactor's safety rail); with more, the cell's report is the fleet
+/// aggregate. Each replica gets the full `FIGURE_BUDGET` (one modeled
+/// GPU each).
+#[allow(clippy::too_many_arguments)]
+pub fn run_cell_fleet(system: &str, dataset: Dataset, model: ModelPreset,
+                      rate: f64, n_requests: usize, seed: u64,
+                      time_cap: Option<Micros>, compose: ComposeConfig,
+                      replicas: usize, placement: PlacementKind)
+                      -> Cell {
     let mut cfg = SystemConfig::preset(system)
         .unwrap_or_else(|| panic!("unknown system preset {system}"));
     cfg.cost = model.cost();
     cfg.seed = seed;
     cfg.memory_budget = crate::core::types::Tokens(FIGURE_BUDGET);
     cfg.compose = compose;
+    cfg.replicas = replicas.max(1);
+    cfg.placement = placement;
     // ToolBench uses the score-update interval of 10 (§5).
     if dataset == Dataset::ToolBench {
         cfg.score_update_interval = 10;
     }
     let trace = dataset.generate(n_requests, rate, seed);
-    let mut engine = Engine::simulated(cfg);
-    let report = engine.run_trace_limited(&trace, time_cap);
+    let report = if cfg.replicas > 1 {
+        let mut set = ReplicaSet::simulated(cfg);
+        set.run_trace_limited(&trace, time_cap).fleet
+    } else {
+        let mut engine = Engine::simulated(cfg);
+        engine.run_trace_limited(&trace, time_cap)
+    };
     Cell {
         system: system.to_string(),
         dataset: dataset.label(),
@@ -212,6 +237,16 @@ mod tests {
     fn small_cell_runs() {
         let cell = run_cell("lamps", Dataset::SingleApi,
                             ModelPreset::GptJ6b, 2.0, 20, 42, None);
+        assert_eq!(cell.report.completed, 20);
+        assert!(cell.report.latency.mean_us > 0.0);
+    }
+
+    #[test]
+    fn small_fleet_cell_runs() {
+        let cell = run_cell_fleet("lamps", Dataset::SingleApi,
+                                  ModelPreset::GptJ6b, 2.0, 20, 42, None,
+                                  ComposeConfig::default(), 2,
+                                  PlacementKind::RoundRobin);
         assert_eq!(cell.report.completed, 20);
         assert!(cell.report.latency.mean_us > 0.0);
     }

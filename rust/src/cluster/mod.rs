@@ -1,0 +1,443 @@
+//! Multi-replica dispatch: a [`ReplicaSet`] owns N [`Engine`] replicas
+//! (one modeled GPU each, with its own KV budget, swap space, and API
+//! executor) behind one shared admission queue.
+//!
+//! **Placement.** Each arriving request is dispatched to exactly one
+//! replica by a pluggable [`PlacementKind`] policy — least outstanding
+//! memory-over-time (the LAMPS rank integral steering placement the same
+//! way it steers ordering), least-loaded, or round-robin — and never
+//! migrates: its KV blocks, swap traffic, and API returns all stay on
+//! the owning replica (InferCept's locality argument: swapped state must
+//! come back to the GPU that owns the KV layout).
+//!
+//! **Deterministic interleaving.** `ReplicaSet::step` always advances
+//! the most-lagging replica (minimum virtual clock, ties by index), so a
+//! fleet run is a deterministic discrete-event simulation no matter how
+//! replica clocks drift apart. Idle replicas' clocks trail the fleet so
+//! a parked replica never freezes the dispatch frontier, and every
+//! replica sees the shared queue's next arrival as an idle-jump target
+//! (`Engine::set_external_event`) — which is exactly what makes the
+//! `replicas = 1` fleet reproduce the single-engine path byte for byte,
+//! the refactor's safety rail (`tests/replica_properties.rs` asserts
+//! it).
+//!
+//! **Fan-in.** Per-replica [`RunReport`]s are aggregated into a
+//! fleet-wide report ([`RunReport::aggregate`]): counters sum, latency /
+//! TTFT percentiles are rebuilt from the merged per-request samples, and
+//! throughput is fleet completions over the latest replica end time.
+
+use std::collections::VecDeque;
+
+use crate::config::{PlacementKind, SystemConfig};
+use crate::core::request::RequestSpec;
+use crate::core::types::{Micros, RequestId};
+use crate::engine::Engine;
+use crate::metrics::RunReport;
+use crate::workload::Trace;
+
+/// Safety valve against scheduling livelock across the fleet (mirrors
+/// the engine's own guard).
+const MAX_FLEET_STEPS: u64 = 400_000_000;
+
+/// Choose a replica for the next arrival under `policy`. `rr_next` is
+/// the round-robin cursor (ignored by the other policies). Ties break
+/// toward the lowest replica index, keeping placement deterministic.
+/// Read-only over the replicas: probing a candidate never perturbs its
+/// state.
+///
+/// Shared by the simulation driver below and the serving frontend's
+/// wall-clock dispatch loop (`server::spawn_replicated`).
+pub fn pick_replica(replicas: &[Engine], policy: PlacementKind,
+                    rr_next: &mut usize) -> usize {
+    if replicas.len() <= 1 {
+        return 0;
+    }
+    match policy {
+        PlacementKind::RoundRobin => {
+            let r = *rr_next % replicas.len();
+            *rr_next += 1;
+            r
+        }
+        PlacementKind::LeastLoaded => replicas
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, e)| (e.live_load(), *i))
+            .map(|(i, _)| i)
+            .unwrap_or(0),
+        PlacementKind::MemoryOverTime => {
+            let mut best = 0usize;
+            let mut best_load = f64::INFINITY;
+            for (i, e) in replicas.iter().enumerate() {
+                let load = e.load_memory_over_time();
+                if load < best_load {
+                    best = i;
+                    best_load = load;
+                }
+            }
+            best
+        }
+    }
+}
+
+/// Fleet-wide result of a multi-replica run: the aggregate plus each
+/// replica's own report (per-replica stats are what expose placement
+/// skew).
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub fleet: RunReport,
+    pub per_replica: Vec<RunReport>,
+    pub placement: PlacementKind,
+}
+
+impl FleetReport {
+    /// JSON rendering: the fleet aggregate plus per-replica reports.
+    /// Timelines are per-replica gauges that do not compose into one
+    /// fleet series, so `with_timeline` emits them on the per-replica
+    /// reports (with one replica the fleet report *is* the replica's
+    /// and carries its timeline directly).
+    pub fn to_json(&self, with_timeline: bool) -> String {
+        use crate::util::json::{self, Value};
+        json::write(&json::obj(vec![
+            ("replicas", json::num(self.per_replica.len() as f64)),
+            ("placement", json::s(self.placement.label())),
+            ("fleet", self.fleet.to_value(with_timeline)),
+            ("per_replica",
+             Value::Arr(self
+                 .per_replica
+                 .iter()
+                 .map(|r| r.to_value(with_timeline))
+                 .collect())),
+        ]))
+    }
+}
+
+/// N engines, one shared admission queue, a placement policy.
+pub struct ReplicaSet {
+    replicas: Vec<Engine>,
+    policy: PlacementKind,
+    /// Shared admission queue: arrival-sorted, not yet placed.
+    pending: VecDeque<RequestSpec>,
+    /// Dispatch log: every placed request and its owning replica.
+    assignments: Vec<(RequestId, usize)>,
+    rr_next: usize,
+    steps: u64,
+}
+
+impl ReplicaSet {
+    /// Simulated fleet: `cfg.replicas` copies of [`Engine::simulated`],
+    /// each with the full per-GPU `memory_budget` and the same seed (the
+    /// workload seed, not a per-replica identity).
+    pub fn simulated(cfg: SystemConfig) -> ReplicaSet {
+        assert!(cfg.replicas >= 1, "a fleet needs at least one replica");
+        let policy = cfg.placement;
+        let replicas = (0..cfg.replicas)
+            .map(|_| Engine::simulated(cfg.clone()))
+            .collect();
+        ReplicaSet {
+            replicas,
+            policy,
+            pending: VecDeque::new(),
+            assignments: Vec::new(),
+            rr_next: 0,
+            steps: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    pub fn replica(&self, i: usize) -> &Engine {
+        &self.replicas[i]
+    }
+
+    /// Every placed request with its owning replica, in dispatch order.
+    pub fn assignments(&self) -> &[(RequestId, usize)] {
+        &self.assignments
+    }
+
+    /// Fleet frontier: the minimum replica clock (the time up to which
+    /// every replica's history is final).
+    pub fn now(&self) -> Micros {
+        self.replicas
+            .iter()
+            .map(|e| e.now())
+            .min()
+            .expect("non-empty fleet")
+    }
+
+    /// Record Fig 2 timeline points on every replica.
+    pub fn set_record_timeline(&mut self, on: bool) {
+        for e in &mut self.replicas {
+            e.record_timeline = on;
+        }
+    }
+
+    /// Queue a spec for arrival-time placement. Keeps the shared queue
+    /// arrival-sorted (traces already are; the scan is O(1) for the
+    /// common in-order append).
+    pub fn enqueue(&mut self, spec: RequestSpec) {
+        let key = (spec.arrival, spec.id);
+        let mut idx = self.pending.len();
+        while idx > 0 {
+            let prev = &self.pending[idx - 1];
+            if (prev.arrival, prev.id) <= key {
+                break;
+            }
+            idx -= 1;
+        }
+        self.pending.insert(idx, spec);
+    }
+
+    /// Place every pending arrival that the fleet frontier has reached.
+    fn dispatch_due(&mut self, frontier: Micros) {
+        while self
+            .pending
+            .front()
+            .is_some_and(|s| s.arrival <= frontier)
+        {
+            let spec = self.pending.pop_front().unwrap();
+            let r = pick_replica(&self.replicas, self.policy,
+                                 &mut self.rr_next);
+            self.assignments.push((spec.id, r));
+            self.replicas[r].enqueue(spec);
+        }
+    }
+
+    /// One fleet round: dispatch due arrivals, then advance the
+    /// most-lagging replica that can make progress (deterministic
+    /// interleaving). Returns false when the whole fleet is idle with
+    /// nothing pending.
+    pub fn step(&mut self) -> bool {
+        let next_arrival = self.pending.front().map(|s| s.arrival);
+        let busy_min = self
+            .replicas
+            .iter()
+            .filter(|e| e.has_live_work())
+            .map(|e| e.now())
+            .min();
+        let Some(busy_now) = busy_min else {
+            // Fully idle fleet: one jump round to the next arrival —
+            // mirroring the single engine's idle jump exactly
+            // (including time-cap semantics: the jump is its own round).
+            let Some(t) = next_arrival else {
+                return false;
+            };
+            for e in &mut self.replicas {
+                e.advance_clock_to(t);
+            }
+            self.dispatch_due(t);
+            return true;
+        };
+        // Idle replicas trail the fleet (toward the next arrival, but
+        // never past the busy frontier) so a parked replica neither
+        // freezes dispatch nor runs ahead of time it could still be
+        // handed work for.
+        let follow = match next_arrival {
+            Some(t) => t.min(busy_now),
+            None => busy_now,
+        };
+        for e in &mut self.replicas {
+            if !e.has_live_work() {
+                e.advance_clock_to(follow);
+            }
+        }
+        let frontier = self.now();
+        self.dispatch_due(frontier);
+        // Every replica sees the next shared arrival as an idle-jump
+        // target — the single-engine parity trick for the corner where
+        // a replica has stuck waiters and no events of its own.
+        let hint = self.pending.front().map(|s| s.arrival);
+        for e in &mut self.replicas {
+            e.set_external_event(hint);
+        }
+        let mut order: Vec<usize> = (0..self.replicas.len()).collect();
+        order.sort_by_key(|&i| (self.replicas[i].now(), i));
+        for i in order {
+            if self.replicas[i].has_live_work() && self.replicas[i].step()
+            {
+                return true;
+            }
+        }
+        // No replica progressed and (therefore) no arrivals remain: the
+        // stuck remainder can never run (same termination the single
+        // engine reaches).
+        false
+    }
+
+    /// Drive the fleet until idle (or `time_cap` on the fleet frontier).
+    pub fn run_until_idle(&mut self, time_cap: Option<Micros>) {
+        while self.step() {
+            if let Some(cap) = time_cap {
+                if self.now() >= cap {
+                    break;
+                }
+            }
+            self.steps += 1;
+            if self.steps >= MAX_FLEET_STEPS {
+                panic!("fleet exceeded MAX_FLEET_STEPS — scheduling \
+                        livelock?");
+            }
+        }
+        for e in &mut self.replicas {
+            e.finish_run();
+        }
+    }
+
+    /// Run a trace to completion across the fleet and report.
+    pub fn run_trace(&mut self, trace: &Trace) -> FleetReport {
+        self.run_trace_limited(trace, None)
+    }
+
+    /// Run a trace, stopping at `time_cap` (fleet frontier) if given.
+    pub fn run_trace_limited(&mut self, trace: &Trace,
+                             time_cap: Option<Micros>) -> FleetReport {
+        for spec in &trace.requests {
+            self.enqueue(spec.clone());
+        }
+        self.run_until_idle(time_cap);
+        self.fleet_report()
+    }
+
+    /// Per-replica reports plus the fleet aggregate. With one replica
+    /// the fleet report *is* that replica's report — byte-identical to
+    /// the single-engine path.
+    pub fn fleet_report(&mut self) -> FleetReport {
+        for e in &mut self.replicas {
+            e.finish_run();
+        }
+        let per_replica: Vec<RunReport> = self
+            .replicas
+            .iter()
+            .map(|e| e.metrics.report())
+            .collect();
+        let fleet = if per_replica.len() == 1 {
+            per_replica[0].clone()
+        } else {
+            let mut latencies: Vec<Micros> = Vec::new();
+            let mut ttfts: Vec<Micros> = Vec::new();
+            for e in &self.replicas {
+                for rec in e.metrics.records() {
+                    if let Some(l) = rec.latency() {
+                        latencies.push(l);
+                    }
+                    if let Some(t) = rec.ttft() {
+                        ttfts.push(t);
+                    }
+                }
+            }
+            RunReport::aggregate(&per_replica, &latencies, &ttfts)
+        };
+        FleetReport {
+            fleet,
+            per_replica,
+            placement: self.policy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CostModel, SchedulerKind};
+    use crate::core::types::Tokens;
+
+    fn unit_cfg(replicas: usize, placement: PlacementKind)
+                -> SystemConfig {
+        SystemConfig {
+            scheduler: SchedulerKind::Fcfs,
+            memory_budget: Tokens(100),
+            max_batch: 4,
+            block_size: 1,
+            starvation_threshold: None,
+            cost: CostModel::unit(),
+            replicas,
+            placement,
+            ..SystemConfig::default()
+        }
+    }
+
+    fn simple_spec(id: u64, arrival: u64, decode: u64) -> RequestSpec {
+        RequestSpec {
+            id: RequestId(id),
+            arrival: Micros(arrival),
+            prompt: String::new(),
+            prompt_tokens: Tokens(0),
+            api_calls: vec![],
+            final_decode: Tokens(decode),
+        }
+    }
+
+    #[test]
+    fn round_robin_rotates_in_arrival_order() {
+        let mut set =
+            ReplicaSet::simulated(unit_cfg(3, PlacementKind::RoundRobin));
+        let trace = Trace::new("t", 1.0, (0..7)
+            .map(|i| simple_spec(i, i * 1000, 2))
+            .collect());
+        let report = set.run_trace(&trace);
+        assert_eq!(report.fleet.completed, 7);
+        let replicas: Vec<usize> =
+            set.assignments().iter().map(|(_, r)| *r).collect();
+        assert_eq!(replicas, vec![0, 1, 2, 0, 1, 2, 0]);
+        assert_eq!(report.per_replica.len(), 3);
+        let per: usize =
+            report.per_replica.iter().map(|r| r.completed).sum();
+        assert_eq!(per, 7);
+    }
+
+    #[test]
+    fn single_replica_matches_engine_run() {
+        let trace = Trace::new("t", 1.0, vec![
+            simple_spec(0, 0, 3),
+            simple_spec(1, 500_000, 4),
+            simple_spec(2, 9_000_000, 2),
+        ]);
+        let cfg = unit_cfg(1, PlacementKind::MemoryOverTime);
+        let mut engine = Engine::simulated(cfg.clone());
+        let solo = engine.run_trace(&trace);
+        let mut set = ReplicaSet::simulated(cfg);
+        let fleet = set.run_trace(&trace);
+        assert_eq!(solo.to_json(true), fleet.fleet.to_json(true),
+                   "replicas = 1 must be byte-identical");
+    }
+
+    #[test]
+    fn memory_over_time_spreads_simultaneous_arrivals() {
+        // Four equal simultaneous requests, four replicas: placement
+        // load must include enqueued-but-unsubmitted arrivals, so each
+        // replica gets exactly one (not all four piling onto replica 0).
+        let mut set = ReplicaSet::simulated(
+            unit_cfg(4, PlacementKind::MemoryOverTime));
+        let trace = Trace::new("t", 1.0, (0..4)
+            .map(|i| simple_spec(i, 0, 5))
+            .collect());
+        let report = set.run_trace(&trace);
+        assert_eq!(report.fleet.completed, 4);
+        let mut replicas: Vec<usize> =
+            set.assignments().iter().map(|(_, r)| *r).collect();
+        replicas.sort_unstable();
+        assert_eq!(replicas, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn fleet_json_shape() {
+        let mut set =
+            ReplicaSet::simulated(unit_cfg(2, PlacementKind::LeastLoaded));
+        let trace = Trace::new("t", 1.0, (0..4)
+            .map(|i| simple_spec(i, i * 250_000, 2))
+            .collect());
+        let report = set.run_trace(&trace);
+        let v = crate::util::json::parse(&report.to_json(false)).unwrap();
+        assert_eq!(v.u64_field("replicas").unwrap(), 2);
+        assert_eq!(v.str_field("placement").unwrap(), "least-loaded");
+        assert_eq!(v.field("fleet").unwrap()
+                       .u64_field("completed").unwrap(), 4);
+        assert_eq!(v.field("per_replica").unwrap()
+                       .as_arr().unwrap().len(), 2);
+    }
+}

@@ -115,13 +115,53 @@ impl CostModel {
         Micros((self.prefill_per_token_us * ctx.0 as f64) as u64)
     }
 
-    /// One direction (out or in) of a swap — eqn (3) charges 2x this.
+    /// One direction (out or in) of a swap. Eqn (3) charges one of
+    /// these per direction: 2x with the cache off; with the prefix
+    /// cache on, the inbound leg covers only the non-resident tail
+    /// (see `coordinator::handling::waste_swap`).
     pub fn swap_time(&self, ctx: Tokens) -> Micros {
         if ctx == Tokens::ZERO {
             return Micros::ZERO;
         }
         Micros((self.swap_base_us
             + self.swap_per_token_us * ctx.0 as f64) as u64)
+    }
+}
+
+/// Cross-replica placement policy of the
+/// [`ReplicaSet`](crate::cluster::ReplicaSet): which replica an arriving
+/// request is dispatched to. Once placed, a request never migrates — its
+/// KV state, swap traffic, and API returns all stay on the owning
+/// replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// Least total outstanding memory-over-time: the LAMPS rank integral
+    /// (§4.3) summed over a replica's live requests steers placement the
+    /// same way it steers ordering.
+    MemoryOverTime,
+    /// Fewest live (unfinished) requests.
+    LeastLoaded,
+    /// Rotate through replicas in arrival order.
+    RoundRobin,
+}
+
+impl PlacementKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlacementKind::MemoryOverTime => "memory-over-time",
+            PlacementKind::LeastLoaded => "least-loaded",
+            PlacementKind::RoundRobin => "round-robin",
+        }
+    }
+
+    /// Parse a CLI name (`--placement`).
+    pub fn parse(name: &str) -> Option<PlacementKind> {
+        Some(match name {
+            "memory-over-time" | "mot" => PlacementKind::MemoryOverTime,
+            "least-loaded" => PlacementKind::LeastLoaded,
+            "round-robin" => PlacementKind::RoundRobin,
+            _ => return None,
+        })
     }
 }
 
@@ -245,6 +285,14 @@ pub struct SystemConfig {
     /// Refcounted prefix caching in the KV block manager (off by
     /// default ⇒ byte-identical to the uncached engine).
     pub prefix_cache: PrefixCacheConfig,
+    /// Engine replicas a [`ReplicaSet`](crate::cluster::ReplicaSet)
+    /// composes over (`--replicas`). Each replica models one GPU with
+    /// its own full `memory_budget`, swap space, and API executor. With
+    /// `1` (the default) the single-engine path is used unchanged.
+    pub replicas: usize,
+    /// Cross-replica placement policy (`--placement`); only consulted
+    /// when `replicas > 1`.
+    pub placement: PlacementKind,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -264,6 +312,8 @@ impl Default for SystemConfig {
             requeue_as_new: false,
             compose: ComposeConfig::default(),
             prefix_cache: PrefixCacheConfig::default(),
+            replicas: 1,
+            placement: PlacementKind::MemoryOverTime,
             cost: CostModel::paper_scale(),
             seed: 0,
         }
@@ -363,6 +413,30 @@ mod tests {
             assert!(!SystemConfig::preset(name).unwrap()
                         .prefix_cache.enabled, "{name}");
         }
+    }
+
+    #[test]
+    fn replica_defaults_are_single_engine() {
+        let c = SystemConfig::default();
+        assert_eq!(c.replicas, 1);
+        assert_eq!(c.placement, PlacementKind::MemoryOverTime);
+        // Presets must not silently enable multi-replica dispatch.
+        for name in ["vllm", "infercept", "lamps"] {
+            assert_eq!(SystemConfig::preset(name).unwrap().replicas, 1,
+                       "{name}");
+        }
+    }
+
+    #[test]
+    fn placement_parse_roundtrip() {
+        for kind in [PlacementKind::MemoryOverTime,
+                     PlacementKind::LeastLoaded,
+                     PlacementKind::RoundRobin] {
+            assert_eq!(PlacementKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(PlacementKind::parse("mot"),
+                   Some(PlacementKind::MemoryOverTime));
+        assert_eq!(PlacementKind::parse("nope"), None);
     }
 
     #[test]

@@ -61,8 +61,16 @@ pub fn waste_discard(inp: &WasteInputs, cost: &CostModel) -> f64 {
 }
 
 /// Eqn (3): two transfers (out + in), each stalling the whole batch.
+/// With prefix caching, the blocks registered at the swap encounter are
+/// expected to still be on-device at the return, so the inbound
+/// transfer only moves the uncached tail (`ctx - cached`) — the same
+/// optimistic-retention estimate eqn (2) gets — while the outbound
+/// transfer still parks everything.
 pub fn waste_swap(inp: &WasteInputs, cost: &CostModel) -> f64 {
-    2.0 * cost.swap_time(inp.ctx).0 as f64 * inp.c_batch().0 as f64
+    let restore = inp.ctx.saturating_sub(inp.cached);
+    (cost.swap_time(inp.ctx).0 as f64
+        + cost.swap_time(restore).0 as f64)
+        * inp.c_batch().0 as f64
 }
 
 pub fn waste_of(strategy: HandlingStrategy, inp: &WasteInputs,
@@ -176,10 +184,12 @@ mod tests {
     }
 
     #[test]
-    fn cached_prefix_discounts_discard_only() {
+    fn cached_prefix_discounts_discard_and_swap_restore() {
         // 80 of 100 context tokens sit in cached full blocks: the
         // recompute forward pass covers 20 tokens, not 100, so eqn (2)
-        // shrinks 5x while eqns (1) and (3) are unchanged.
+        // shrinks 5x; eqn (3)'s inbound transfer likewise covers only
+        // the 20-token tail (the outbound still parks all 100); eqn (1)
+        // is unchanged.
         let cold = WasteInputs {
             ctx: Tokens(100),
             api_duration: Micros(1_000_000),
@@ -194,14 +204,19 @@ mod tests {
         assert_eq!(waste_discard(&warm, &c),
                    waste_discard(&cold, &c) / 5.0);
         assert_eq!(waste_preserve(&warm), waste_preserve(&cold));
-        assert_eq!(waste_swap(&warm, &c), waste_swap(&cold, &c));
-        // A fully-cached recompute is free; saturation guards cached >
-        // ctx (stale estimate after the context shrank).
+        // T_swap(100) = 4000 us out both ways; in: 4000 cold vs
+        // T_swap(20) = 1600 warm; C_batch = 150.
+        assert_eq!(waste_swap(&cold, &c), (4000.0 + 4000.0) * 150.0);
+        assert_eq!(waste_swap(&warm, &c), (4000.0 + 1600.0) * 150.0);
+        // A fully-cached recompute is free — and a fully-resident
+        // restore skips even the transfer base; saturation guards
+        // cached > ctx (stale estimate after the context shrank).
         let full = WasteInputs {
             cached: Tokens(200),
             ..cold
         };
         assert_eq!(waste_discard(&full, &c), 0.0);
+        assert_eq!(waste_swap(&full, &c), 4000.0 * 150.0);
     }
 
     #[test]

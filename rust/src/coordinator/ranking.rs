@@ -13,7 +13,8 @@
 
 use crate::config::CostModel;
 use crate::coordinator::handling::{waste_of, WasteInputs};
-use crate::core::request::Request;
+use crate::core::request::{HandlingStrategy, Request, RequestSpec,
+                           SegmentPrediction};
 use crate::core::types::{Micros, Tokens};
 
 /// Live quantities the score depends on (profiled by the engine).
@@ -30,14 +31,21 @@ pub struct RankInputs {
     /// Off (the legacy engine), that state never exists and the integral
     /// is bit-identical to the original formula.
     pub account_prefill: bool,
+    /// Block size of an *active* KV prefix cache, `None` when caching is
+    /// off. When set, the discard waste term is discounted by the
+    /// expected cached prefix — the full blocks of the context at the
+    /// API call, which the engine registers at the encounter and the
+    /// recompute re-pins instead of recomputing (the same optimistic
+    /// retention estimate `Engine::cached_recompute_estimate` feeds the
+    /// handling-strategy choice). `None` keeps every score byte-identical
+    /// to the uncached engine.
+    pub prefix_cached_block: Option<u64>,
 }
 
 /// Memory-over-time integral of the *remaining* predicted lifetime of `r`.
 pub fn memory_over_time(r: &Request, cost: &CostModel,
                         inputs: &RankInputs) -> f64 {
-    let t_iter = inputs.t_iter.0.max(1) as f64;
     let mut total = 0.0;
-    let mut ctx = r.logical_context.0 as f64;
 
     // Chunked prefill can pause a request mid-materialization (context
     // partially live, `pending_materialize` still owed). The live part
@@ -52,31 +60,67 @@ pub fn memory_over_time(r: &Request, cost: &CostModel,
         total += t_mat * r.context.0 as f64;
     }
 
-    for seg in r.segment..r.spec.num_segments() {
-        let pred = &r.predictions[seg];
+    total + segments_integral(r.segment, r.segment_generated.0,
+                              r.logical_context.0 as f64,
+                              r.spec.num_segments(), &r.predictions,
+                              &r.handling, cost, inputs)
+}
+
+/// Integral for a *not-yet-started* request, scored straight from its
+/// spec — what the memory-over-time placement policy uses to weigh
+/// enqueued-but-unsubmitted arrivals without materializing a throwaway
+/// [`Request`] (and its prompt `String` clone) per probe. Exactly
+/// equals `memory_over_time` of a freshly constructed request.
+pub fn memory_over_time_fresh(spec: &RequestSpec,
+                              predictions: &[SegmentPrediction],
+                              handling: &[HandlingStrategy],
+                              cost: &CostModel,
+                              inputs: &RankInputs) -> f64 {
+    segments_integral(0, 0, spec.prompt_tokens.0 as f64,
+                      spec.num_segments(), predictions, handling, cost,
+                      inputs)
+}
+
+/// Shared core: decode ramps + per-API waste terms from `start_seg`
+/// onward, starting at context `ctx` with `done_in_first` tokens of the
+/// first segment already generated.
+#[allow(clippy::too_many_arguments)]
+fn segments_integral(start_seg: usize, done_in_first: u64, mut ctx: f64,
+                     num_segments: usize,
+                     predictions: &[SegmentPrediction],
+                     handling: &[HandlingStrategy], cost: &CostModel,
+                     inputs: &RankInputs) -> f64 {
+    let t_iter = inputs.t_iter.0.max(1) as f64;
+    let mut total = 0.0;
+    for seg in start_seg..num_segments {
+        let pred = &predictions[seg];
         // Remaining decode tokens in this segment.
-        let done = if seg == r.segment {
-            r.segment_generated.0
-        } else {
-            0
-        };
+        let done = if seg == start_seg { done_in_first } else { 0 };
         let d = pred.decode_tokens.0.saturating_sub(done) as f64;
         // Decode ramp: sum_{k=1..d} (ctx + k) * t_iter.
         total += t_iter * (d * ctx + d * (d + 1.0) / 2.0);
         ctx += d;
 
         if let Some(api_duration) = pred.api_duration {
-            let strategy = r.handling[seg];
-            // `cached` stays zero here: the rank integral is computed
-            // at admission, before any of this request's blocks exist
-            // in the prefix cache, and scores must stay byte-identical
-            // with the cache disabled. (Discount follow-on tracked in
-            // ROADMAP.)
+            let strategy = handling[seg];
+            // Expected cached recompute on a post-Discard return: the
+            // full blocks of the context at the API call, registered at
+            // the encounter and re-pinned by the recompute. Only a live
+            // prefix cache sets `prefix_cached_block`, so with caching
+            // off the term is zero and eqn (2) — hence the whole score —
+            // stays byte-identical to the uncached engine.
+            let cached = match inputs.prefix_cached_block {
+                Some(bs) if bs > 0 => {
+                    let c = ctx as u64;
+                    Tokens(c / bs * bs)
+                }
+                _ => Tokens::ZERO,
+            };
             let inp = WasteInputs {
                 ctx: Tokens(ctx as u64),
                 api_duration,
                 c_other: inputs.c_other_est,
-                cached: Tokens::ZERO,
+                cached,
             };
             total += waste_of(strategy, &inp, cost);
             ctx += pred.response_tokens.0 as f64;
@@ -103,6 +147,7 @@ mod tests {
             t_iter: Micros(1_000_000),
             c_other_est: Tokens(c_other),
             account_prefill: false,
+            prefix_cached_block: None,
         }
     }
 
@@ -229,6 +274,58 @@ mod tests {
             ..unit_inputs(3)
         });
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fresh_integral_matches_request_integral() {
+        // The spec-level probe entry point must agree exactly with the
+        // full request scorer for a not-yet-started request.
+        for strategy in [HandlingStrategy::Preserve,
+                         HandlingStrategy::Discard,
+                         HandlingStrategy::Swap] {
+            let r = fig3_request(2, 1, 7, 1, strategy);
+            let fresh = memory_over_time_fresh(
+                &r.spec, &r.predictions, &r.handling, &unit_cost(),
+                &unit_inputs(3));
+            assert_eq!(fresh,
+                       memory_over_time(&r, &unit_cost(),
+                                        &unit_inputs(3)));
+        }
+    }
+
+    #[test]
+    fn cached_block_discount_in_fig3_unit_world() {
+        // R2 from Fig 3 (Discard at ctx 1): with block size 1 the whole
+        // context at the API call is expected cached, so the discard
+        // waste term T_fwd(1)*(1+3) = 4 vanishes: 7 -> 3. R1 (Preserve)
+        // is never discounted; R3 (Swap) is discounted only in its
+        // transfer term, which is zero in the unit-cost world — both
+        // keep their Fig 3 scores.
+        let r2 = fig3_request(2, 1, 7, 1, HandlingStrategy::Discard);
+        let discounted = RankInputs {
+            prefix_cached_block: Some(1),
+            ..unit_inputs(3)
+        };
+        let off = memory_over_time(&r2, &unit_cost(), &unit_inputs(3));
+        let on = memory_over_time(&r2, &unit_cost(), &discounted);
+        assert!((off / 1e6 - 7.0).abs() < 1e-9, "off {off}");
+        assert!((on / 1e6 - 3.0).abs() < 1e-9, "on {on}");
+
+        let r1 = fig3_request(1, 5, 2, 1, HandlingStrategy::Preserve);
+        let r3 = fig3_request(3, 2, 1, 1, HandlingStrategy::Swap);
+        for r in [&r1, &r3] {
+            assert_eq!(memory_over_time(r, &unit_cost(), &unit_inputs(3)),
+                       memory_over_time(r, &unit_cost(), &discounted));
+        }
+
+        // A coarser block (4 tokens) covers no full block of ctx 1:
+        // nothing is expected cached and the score is unchanged.
+        let coarse = RankInputs {
+            prefix_cached_block: Some(4),
+            ..unit_inputs(3)
+        };
+        assert_eq!(memory_over_time(&r2, &unit_cost(), &unit_inputs(3)),
+                   memory_over_time(&r2, &unit_cost(), &coarse));
     }
 
     #[test]

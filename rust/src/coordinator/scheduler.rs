@@ -85,6 +85,10 @@ pub struct ScheduleContext {
     /// context of partially-materialized requests (a state that only
     /// exists when materialization can pause mid-way).
     pub account_prefill: bool,
+    /// Block size of an active KV prefix cache (`None` = caching off):
+    /// discounts the rank integral's discard term by the expected cached
+    /// prefix (see [`RankInputs::prefix_cached_block`]).
+    pub prefix_cached_block: Option<u64>,
 }
 
 impl ScheduleContext {
@@ -93,6 +97,7 @@ impl ScheduleContext {
             t_iter: self.t_iter_est,
             c_other_est: self.c_other_est,
             account_prefill: self.account_prefill,
+            prefix_cached_block: self.prefix_cached_block,
         }
     }
 }
@@ -241,6 +246,7 @@ mod tests {
             c_other_est: Tokens(3),
             iteration: 0,
             account_prefill: false,
+            prefix_cached_block: None,
         }
     }
 

@@ -216,6 +216,11 @@ pub struct Request {
     /// (wasted-work accounting); set when it starts, cleared when
     /// `pending_materialize` drains.
     pub recomputing: bool,
+    /// Leading tokens of a pending swap-in restore already served by
+    /// prefix-cache blocks attached to the re-admission allocation (no
+    /// PCIe transfer needed for them). Set when the restore's blocks
+    /// are allocated, consumed when the transfer is booked.
+    pub restore_resident: Tokens,
     /// FCFS ordering key. Starts at `spec.arrival`; vLLM-style systems
     /// treat a request returning from an API as a *new* job (paper §1,
     /// §6.2), so the engine bumps this to the return time whenever the
@@ -259,6 +264,7 @@ impl Request {
             logical_context: prompt_tokens,
             pending_materialize: prompt_tokens,
             recomputing: false,
+            restore_resident: Tokens::ZERO,
             was_scheduled: false,
             starvation_cnt: 0,
             starving: false,

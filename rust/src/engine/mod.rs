@@ -37,12 +37,14 @@ pub mod clock;
 #[cfg(feature = "pjrt")]
 pub mod pjrt_backend;
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 use crate::config::{HandlingPolicy, PredictorKind, SchedulerKind,
                     SystemConfig};
 use crate::coordinator::batch::{self, ComposeItem, IterationPlan};
 use crate::coordinator::handling::{select_strategy, WasteInputs};
+use crate::coordinator::ranking::{memory_over_time,
+                                  memory_over_time_fresh};
 use crate::coordinator::scheduler::{make_scheduler, ScheduleContext,
                                     Scheduler};
 use crate::core::request::{HandlingStrategy, Phase, Request, RequestSpec};
@@ -74,6 +76,12 @@ pub struct Engine {
     api: ApiExecutor,
 
     requests: HashMap<RequestId, Request>,
+    /// Ids of unfinished requests (submitted, not yet finished/dropped).
+    /// `requests` keeps finished entries for result queries, so load
+    /// probes iterate this set instead: O(live) per probe, and the
+    /// BTreeSet's sorted order keeps f64 summation deterministic across
+    /// runs (HashMap order is per-process random).
+    live: BTreeSet<RequestId>,
     waiting: Vec<RequestId>,
     running: Vec<RequestId>,
     /// Arrival-sorted, not-yet-submitted specs (drained by time).
@@ -94,6 +102,13 @@ pub struct Engine {
     pub record_timeline: bool,
     /// Requests dropped because they can never fit the memory budget.
     pub dropped: Vec<RequestId>,
+    /// External wake-up hint folded into the idle-jump event calculation.
+    /// A [`ReplicaSet`](crate::cluster::ReplicaSet) points this at its
+    /// shared queue's next arrival so a replica's idle jump (and its
+    /// no-event preemption fallback) behave exactly like the
+    /// single-engine path, where that arrival would sit in the engine's
+    /// own pending queue. `None` (the default) changes nothing.
+    external_event: Option<Micros>,
 }
 
 impl Engine {
@@ -118,6 +133,7 @@ impl Engine {
             transfers: TransferQueue::new(),
             api: ApiExecutor::new(),
             requests: HashMap::new(),
+            live: BTreeSet::new(),
             waiting: Vec::new(),
             running: Vec::new(),
             pending: std::collections::VecDeque::new(),
@@ -128,6 +144,7 @@ impl Engine {
             c_other_ema: c_other0,
             record_timeline: false,
             dropped: Vec::new(),
+            external_event: None,
             cfg,
         }
     }
@@ -159,6 +176,102 @@ impl Engine {
 
     pub fn kv_occupancy(&self) -> f64 {
         self.kv.occupancy()
+    }
+
+    // ------------------------------------------------------------------
+    // Replica-addressable stepping interface (cluster::ReplicaSet)
+    // ------------------------------------------------------------------
+
+    /// Earliest future event this engine can jump to when idle (next
+    /// arrival, API return, transfer landing, external hint).
+    pub fn next_event_time(&self) -> Option<Micros> {
+        self.next_event()
+    }
+
+    /// Point the idle-jump calculation at an external future event (the
+    /// replica set's next shared-queue arrival). Pass `None` to clear.
+    pub fn set_external_event(&mut self, t: Option<Micros>) {
+        self.external_event = t;
+    }
+
+    /// Jump (virtual clock) or sleep (wall clock) to `t`; into the past
+    /// it is a no-op. Lets a multi-replica driver keep idle replicas'
+    /// clocks in lockstep with the fleet.
+    pub fn advance_clock_to(&mut self, t: Micros) {
+        self.clock.wait_until(t);
+    }
+
+    /// Is there anything left for this engine to do — now or at a future
+    /// event it knows about? (External hints do not count: an engine
+    /// with no work of its own is idle from the fleet's perspective.)
+    pub fn has_live_work(&self) -> bool {
+        !self.running.is_empty()
+            || !self.waiting.is_empty()
+            || !self.pending.is_empty()
+            || self.api.in_flight() > 0
+            || !self.transfers.is_empty()
+    }
+
+    /// Does this engine have work a [`Engine::step`] could act on
+    /// immediately — a batch to run or queued requests to admit — as
+    /// opposed to only future events (API returns, transfers) it would
+    /// wall-clock-sleep for? The serving frontend skips stepping
+    /// engines without it so idle replicas don't serialize sleeps.
+    pub fn has_runnable_work(&self) -> bool {
+        !self.running.is_empty() || !self.waiting.is_empty()
+    }
+
+    /// `run_until_idle`'s epilogue for external drivers that call
+    /// [`Engine::step`] directly: sync the KV-layer counters and stamp
+    /// the end time. Idempotent.
+    pub fn finish_run(&mut self) {
+        self.sync_prefix_metrics();
+        self.metrics.end_time = self.now();
+    }
+
+    // ------------------------------------------------------------------
+    // Placement load signals (cluster placement policies)
+    // ------------------------------------------------------------------
+
+    /// Unfinished requests this engine is responsible for, including
+    /// enqueued-but-not-yet-submitted arrivals (the least-loaded
+    /// placement signal).
+    pub fn live_load(&self) -> usize {
+        self.pending.len() + self.live.len()
+    }
+
+    /// Total outstanding memory-over-time (the LAMPS rank integral,
+    /// §4.3) across this engine's live requests — the signal the
+    /// memory-over-time placement policy minimizes, so the integral
+    /// steers cross-replica placement the same way it steers ordering.
+    /// Enqueued-but-unsubmitted arrivals count too, so simultaneous
+    /// arrivals dispatched back-to-back see each other's load; they are
+    /// scored with a stateless complete-information oracle rather than
+    /// the engine's own predictor, keeping this probe side-effect-free
+    /// (a noisy predictor's RNG is never advanced, and a PJRT predictor
+    /// never runs inference, just because a replica was *considered*
+    /// for placement).
+    pub fn load_memory_over_time(&self) -> f64 {
+        let inputs = self.schedule_context().rank_inputs();
+        let cost = self.cfg.cost;
+        // The sorted `live` index makes this O(live requests) — the
+        // engine keeps finished entries around for result queries — and
+        // its deterministic order keeps the f64 sum (and therefore
+        // placement tie behavior) reproducible across runs.
+        let mut total: f64 = self
+            .live
+            .iter()
+            .map(|id| memory_over_time(&self.requests[id], &cost,
+                                       &inputs))
+            .sum();
+        let mut oracle = OraclePredictor;
+        for spec in &self.pending {
+            let predictions = oracle.predict(spec);
+            let handling = self.assign_handling(spec, &predictions);
+            total += memory_over_time_fresh(spec, &predictions,
+                                            &handling, &cost, &inputs);
+        }
+        total
     }
 
     /// Downcast access to backend-specific state (e.g. PJRT generated
@@ -203,6 +316,7 @@ impl Engine {
             return;
         }
         self.requests.insert(id, req);
+        self.live.insert(id);
         self.waiting.push(id);
     }
 
@@ -228,6 +342,34 @@ impl Engine {
         }
         let bs = self.kv.block_size();
         Tokens(ctx.0 / bs * bs)
+    }
+
+    /// Consume `id`'s pending restore-residency credit (set when the
+    /// re-admission allocation walked the prefix cache): the leading
+    /// parked tokens whose blocks are attached to the allocation and
+    /// therefore need no PCIe transfer.
+    fn take_restore_resident(&mut self, id: RequestId) -> Tokens {
+        let req = self.requests.get_mut(&id).expect("restoring request");
+        std::mem::replace(&mut req.restore_resident, Tokens::ZERO)
+    }
+
+    /// Book `id`'s swap-in restore — the shared core of the sync and
+    /// async paths: consume the residency credit, un-park the context,
+    /// charge bookkeeping + backend time for the non-resident remainder
+    /// only, and count the skipped tokens. Returns the restored token
+    /// count and the transfer time (`None` if nothing was parked); the
+    /// caller decides whether that time stalls the batch (sync) or
+    /// overlaps it (async).
+    fn book_swap_in(&mut self, id: RequestId) -> Option<(Tokens, Micros)> {
+        let resident = self.take_restore_resident(id);
+        let (tokens, t_in) = self
+            .swap
+            .swap_in_with_resident(id, &self.cfg.cost, resident)?;
+        let t_backend = self
+            .backend
+            .swap_in(id, tokens.saturating_sub(resident));
+        self.metrics.swap_restore_cached_tokens += resident.0;
+        Some((tokens, t_in.max(t_backend)))
     }
 
     /// Handling assignment at admission (LAMPS §4.2). For `MinWasteAtApi`
@@ -300,8 +442,7 @@ impl Engine {
                         livelock?");
             }
         }
-        self.sync_prefix_metrics();
-        self.metrics.end_time = self.now();
+        self.finish_run();
     }
 
     /// Mirror the KV-layer prefix-cache counters into the metrics
@@ -398,13 +539,14 @@ impl Engine {
     }
 
     /// Earliest future event the engine can jump to when nothing is
-    /// runnable: the next arrival, API return, or background swap
-    /// transfer completion.
+    /// runnable: the next arrival, API return, background swap transfer
+    /// completion, or the external hint a replica-set driver supplied.
     fn next_event(&self) -> Option<Micros> {
         [
             self.pending.front().map(|s| s.arrival),
             self.api.next_return(),
             self.transfers.next_completion(),
+            self.external_event,
         ]
         .into_iter()
         .flatten()
@@ -476,6 +618,15 @@ impl Engine {
             c_other_est: Tokens(self.c_other_ema as u64),
             iteration: self.iteration,
             account_prefill: self.cfg.compose.is_chunked(),
+            // Live cache: the rank integral discounts its discard term
+            // by the expected cached prefix (the same estimate the
+            // handling choice uses). None keeps scores byte-identical
+            // to the uncached engine.
+            prefix_cached_block: if self.prefix_cache_active() {
+                Some(self.kv.block_size())
+            } else {
+                None
+            },
         }
     }
 
@@ -541,6 +692,7 @@ impl Engine {
                 self.backend.release(id);
                 self.requests.get_mut(&id).unwrap().phase =
                     Phase::Finished;
+                self.live.remove(&id);
                 self.dropped.push(id);
                 continue;
             }
@@ -642,12 +794,11 @@ impl Engine {
                     // Begin the background swap-in: device blocks are
                     // charged from now, the batch keeps decoding, and
                     // the request rejoins once the transfer lands.
-                    let (tokens, t_in) = self
-                        .swap
-                        .swap_in(id, &self.cfg.cost)
+                    // Parked context whose cached blocks the allocation
+                    // above re-attached skips the transfer outright.
+                    let (tokens, stall) = self
+                        .book_swap_in(id)
                         .expect("parked context");
-                    let t_backend = self.backend.swap_in(id, tokens);
-                    let stall = t_in.max(t_backend);
                     self.metrics.swap_overlap_us += stall.0;
                     self.transfers.begin(id, TransferDir::SwapIn, tokens,
                                          now + stall);
@@ -701,12 +852,37 @@ impl Engine {
     /// full materialization* (no live blocks, the entire logical context
     /// still owed — a new prompt, a post-Discard recompute, or a
     /// post-preemption recompute) walks the prefix cache and returns the
-    /// leading tokens served by cache hits; every other shape (growth,
-    /// Preserve resume, swap-in restore) allocates plainly and returns
-    /// zero.
+    /// leading tokens served by cache hits. A *swap-in restore* also
+    /// walks the cache, but its hits stash a residency credit
+    /// (`Request::restore_resident`) instead: they shrink the PCIe
+    /// transfer, not the prefill — the shared blocks *are* the leading
+    /// part of the allocation, so nothing is held twice, memory
+    /// pressure cannot reclaim them mid-restore, and the terminal free
+    /// purges them like any other attached private content. Every other
+    /// shape (growth, Preserve resume) allocates plainly; both returns
+    /// are zero there.
     fn allocate_admitted(&mut self, id: RequestId, delta: Tokens)
                          -> Tokens {
         let req = &self.requests[&id];
+        if self.prefix_cache_active()
+            && self.swap.contains(id)
+            && self.kv.tokens_of(id) == Tokens::ZERO
+        {
+            let parked = self
+                .swap
+                .parked_tokens(id)
+                .expect("checked contains");
+            let chain = prefix::content_chain(&req.spec,
+                                              self.kv.block_size(),
+                                              parked);
+            let cached = self
+                .kv
+                .allocate_prefixed(id, delta, &chain)
+                .expect("fits_memory held");
+            let req = self.requests.get_mut(&id).expect("checked above");
+            req.restore_resident = cached.min(parked);
+            return Tokens::ZERO;
+        }
         let fresh_full = self.prefix_cache_active()
             && self.kv.tokens_of(id) == Tokens::ZERO
             && req.pending_materialize == req.logical_context
@@ -744,13 +920,25 @@ impl Engine {
     }
 
     /// Terminal free (finish / drop): retain only shareable prompt
-    /// blocks in the prefix cache.
+    /// blocks in the prefix cache. Registered content no longer attached
+    /// to the live allocation — e.g. blocks published at a Swap
+    /// encounter whose request then dropped before restoring — would
+    /// survive the allocation-walk purge as permanently-unhittable
+    /// garbage, so the request's private chain tail is purged explicitly
+    /// as well (a no-op for anything pinned by another holder).
     fn free_terminal(&mut self, id: RequestId) {
+        let retain = self.shareable_prompt_blocks(id);
         if self.kv.contains(id) {
-            let retain = self.shareable_prompt_blocks(id);
             self.kv
                 .free_discarding_private(id, retain)
                 .expect("terminal free");
+        }
+        if self.prefix_cache_active() {
+            let req = &self.requests[&id];
+            let chain = prefix::content_chain(&req.spec,
+                                              self.kv.block_size(),
+                                              req.logical_context);
+            self.kv.purge_chain_tail(&chain, retain);
         }
     }
 
@@ -913,11 +1101,10 @@ impl Engine {
             let id = chunk.id;
             let mut elapsed = Micros::ZERO;
             if chunk.swap_in {
-                if let Some((tokens, t_in)) =
-                    self.swap.swap_in(id, &self.cfg.cost)
-                {
-                    let t_backend = self.backend.swap_in(id, tokens);
-                    let stall = t_in.max(t_backend);
+                // Parked context whose cached blocks the admission
+                // allocation re-attached skips the synchronous transfer
+                // (and its batch stall) too.
+                if let Some((tokens, stall)) = self.book_swap_in(id) {
                     self.metrics.swap_stall_us += stall.0;
                     elapsed += stall;
                     self.requests.get_mut(&id).unwrap().context = tokens;
@@ -1155,6 +1342,11 @@ impl Engine {
             }
             HandlingStrategy::Swap => {
                 self.metrics.strategy_counts[2] += 1;
+                // Publish the full blocks before parking: the freed
+                // device blocks stay reclaimable-cached, so the swap-in
+                // restore can skip the PCIe transfer for whatever is
+                // still resident when the call returns.
+                self.register_prefix_of(id);
                 let ctx = self.requests[&id].context;
                 if self.cfg.compose.async_swap {
                     // Background transfer: the batch keeps decoding;
@@ -1209,6 +1401,7 @@ impl Engine {
         req.phase = Phase::Finished;
         req.finished_at = Some(now);
         self.transfers.cancel(id);
+        self.live.remove(&id);
         self.free_terminal(id);
         self.swap.discard(id);
         self.backend.release(id);
@@ -1548,6 +1741,85 @@ mod tests {
         assert_eq!(warm.metrics.tokens_recomputed, 2);
         assert!(warm.metrics.blocks_allocated
                     < cold.metrics.blocks_allocated);
+    }
+
+    #[test]
+    fn prefix_cache_serves_swap_restore_without_transfer() {
+        // prompt 8, 2 pre-API decodes, 3 s API under forced Swap, 1
+        // final decode; block size 4, swap cost 0.5 s/token. Cold: 8
+        // prefill + 2 decode + 5 swap-out (10 tok) + 3 API + 5 swap-in
+        // + 1 decode = 24 s. Warm: the 2 full blocks registered at the
+        // swap encounter stay resident through the call, so the restore
+        // transfers only the 2-token tail (1 s): 20 s total.
+        let run = |enabled: bool| {
+            let mut cfg = unit_cfg(SchedulerKind::Fcfs, 100);
+            cfg.block_size = 4;
+            cfg.cost.swap_per_token_us = 500_000.0;
+            if enabled {
+                cfg.prefix_cache = PrefixCacheConfig::on();
+            }
+            let mut e = Engine::simulated(cfg);
+            e.submit_with_handling(
+                RequestSpec {
+                    prompt_tokens: Tokens(8),
+                    ..api_spec(0, 2, 3, 1)
+                },
+                vec![HandlingStrategy::Swap]);
+            e.run_until_idle(None);
+            assert!(e.request(RequestId(0)).unwrap().is_finished());
+            e
+        };
+        let cold = run(false);
+        assert_eq!(cold.request(RequestId(0)).unwrap().finished_at,
+                   Some(Micros(24_000_000)));
+        assert_eq!(cold.metrics.swap_restore_cached_tokens, 0);
+        assert_eq!(cold.metrics.swap_stall_us, 10_000_000);
+
+        let warm = run(true);
+        assert_eq!(warm.request(RequestId(0)).unwrap().finished_at,
+                   Some(Micros(20_000_000)));
+        assert_eq!(warm.metrics.swap_restore_cached_tokens, 8);
+        assert_eq!(warm.metrics.swap_stall_us, 6_000_000);
+    }
+
+    #[test]
+    fn prefix_cache_discounts_async_swap_restore() {
+        // Same shape as the sync test but with background transfers
+        // (async_swap): cold, the swap-out (5 s) outlives the 3 s API
+        // and the restore moves all 10 tokens (5 s): 8 prefill + 2
+        // decode + 5 out + 5 in + 1 decode = 21 s. Warm, the 2 full
+        // blocks registered at the encounter are pinned through the
+        // restore window and only the 2-token tail transfers (1 s):
+        // 17 s, with zero batch stall either way.
+        let run = |enabled: bool| {
+            let mut cfg = unit_cfg(SchedulerKind::Fcfs, 100);
+            cfg.block_size = 4;
+            cfg.cost.swap_per_token_us = 500_000.0;
+            cfg.compose.async_swap = true;
+            if enabled {
+                cfg.prefix_cache = PrefixCacheConfig::on();
+            }
+            let mut e = Engine::simulated(cfg);
+            e.submit_with_handling(
+                RequestSpec {
+                    prompt_tokens: Tokens(8),
+                    ..api_spec(0, 2, 3, 1)
+                },
+                vec![HandlingStrategy::Swap]);
+            e.run_until_idle(None);
+            assert!(e.request(RequestId(0)).unwrap().is_finished());
+            assert_eq!(e.metrics.swap_stall_us, 0);
+            e
+        };
+        let cold = run(false);
+        assert_eq!(cold.request(RequestId(0)).unwrap().finished_at,
+                   Some(Micros(21_000_000)));
+        assert_eq!(cold.metrics.swap_restore_cached_tokens, 0);
+
+        let warm = run(true);
+        assert_eq!(warm.request(RequestId(0)).unwrap().finished_at,
+                   Some(Micros(17_000_000)));
+        assert_eq!(warm.metrics.swap_restore_cached_tokens, 8);
     }
 
     #[test]

@@ -32,9 +32,10 @@ pub enum KvError {
     /// the same unit the admission check uses: tokens the *requesting*
     /// allocation could actually get right now — whole free blocks, plus
     /// zero-ref cached blocks reclaimable under pressure, plus the slack
-    /// in the request's own partial last block. Blocks pinned by other
-    /// requests' refcounts are excluded: they are not available to
-    /// anyone until every holder frees them.
+    /// in the request's own partial last block (and, on the prefixed
+    /// path, the leading cached chain hits it could share). Blocks
+    /// pinned by other requests' refcounts are otherwise excluded: they
+    /// are not available to anyone until every holder frees them.
     OutOfMemory {
         requested: Tokens,
         free: Tokens,
@@ -352,7 +353,11 @@ impl BlockManager {
         if fresh > usable {
             return Err(KvError::OutOfMemory {
                 requested: tokens,
-                free: self.available_for(req),
+                // The prefixed-path bound, not `available_for`: the
+                // leading cached hits come on top of the fresh blocks
+                // this chain leaves usable, so this is exactly what a
+                // smaller prefixed allocation could still get.
+                free: Tokens((hits as u64 + usable) * self.block_size),
             });
         }
 
@@ -382,6 +387,25 @@ impl BlockManager {
         self.used_tokens += tokens.0;
         self.note_peak();
         Ok(Tokens(cached_tokens))
+    }
+
+    /// Purge the zero-ref cached blocks of `chain` beyond the first
+    /// `retain` entries — a request's private content (generated
+    /// tokens, synthetic prompts) that can never be re-hit once the
+    /// request is gone, including blocks registered at a Swap encounter
+    /// that were never re-attached to an allocation. Entries pinned by
+    /// another holder or already absent are left untouched. No-op when
+    /// the cache is disabled.
+    pub fn purge_chain_tail(&mut self, chain: &[BlockHash],
+                            retain: u64) {
+        let Some(cache) = self.prefix.as_mut() else {
+            return;
+        };
+        for &hash in chain.iter().skip(retain as usize) {
+            if let Some(freed) = cache.purge_zero_ref(hash) {
+                self.free_blocks.push(freed);
+            }
+        }
     }
 
     /// Publish `req`'s materialized full blocks into the prefix cache so
@@ -659,14 +683,51 @@ mod tests {
         m.allocate_prefixed(rid(1), Tokens(16), &[9]).unwrap();
         m.register_prefix(rid(1), Tokens(16), &[9]);
         // Chain hits 1 block, but the remaining 2 fresh blocks cannot
-        // fit (1 free block only).
+        // fit (1 free block only). The reported `free` is the
+        // prefixed-path bound: 1 shared hit + 1 fresh block = 32
+        // tokens, which a smaller prefixed allocation could still get.
         let err = m
             .allocate_prefixed(rid(2), Tokens(48), &[9, 10])
             .unwrap_err();
-        assert!(matches!(err, KvError::OutOfMemory { .. }));
+        assert_eq!(err, KvError::OutOfMemory {
+            requested: Tokens(48),
+            free: Tokens(32),
+        });
         assert!(!m.contains(rid(2)));
         assert_eq!(m.prefix_hit_tokens(), 0);
         assert_eq!(m.pinned_blocks(), 1);
+        // The reported free is exactly satisfiable on the same chain.
+        assert_eq!(m.allocate_prefixed(rid(2), Tokens(32), &[9, 10])
+                       .unwrap(),
+                   Tokens(16));
+        m.free(rid(2)).unwrap();
+    }
+
+    #[test]
+    fn purge_chain_tail_drops_detached_private_blocks() {
+        // Blocks registered but no longer attached to any allocation
+        // (the swap-out shape): a terminal purge reclaims the private
+        // tail outright while the retained prefix and pinned entries
+        // survive.
+        let mut m = cached_mgr(16 * 8, 16);
+        m.allocate_prefixed(rid(1), Tokens(48), &[1, 2, 3]).unwrap();
+        m.register_prefix(rid(1), Tokens(48), &[1, 2, 3]);
+        m.free(rid(1)).unwrap(); // swap-out: all three zero-ref cached
+        assert_eq!(m.cached_blocks(), 3);
+        // Another request still shares the first block.
+        assert_eq!(m.allocate_prefixed(rid(2), Tokens(16), &[1])
+                       .unwrap(),
+                   Tokens(16));
+        m.purge_chain_tail(&[1, 2, 3], 1);
+        assert_eq!(m.prefix_refcount(1), Some(1), "pinned by r2");
+        assert!(m.prefix_refcount(2).is_none(), "tail purged");
+        assert!(m.prefix_refcount(3).is_none(), "tail purged");
+        assert_eq!(m.cached_blocks(), 0);
+        // 8 blocks total: r2 pins one shared block, the rest are free.
+        assert_eq!(m.free_tokens(), Tokens(16 * 7));
+        // Idempotent and safe on absent hashes.
+        m.purge_chain_tail(&[1, 2, 3], 0);
+        assert_eq!(m.prefix_refcount(1), Some(1));
     }
 
     #[test]

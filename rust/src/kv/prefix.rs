@@ -102,6 +102,10 @@ struct CachedBlock {
     block: BlockId,
     /// Live allocations holding this block (0 = reclaimable, on the LRU).
     refcount: u32,
+    /// Stamp of this block's live LRU entry — meaningful only while
+    /// `refcount == 0`. A deque entry whose stamp disagrees is a
+    /// tombstone left behind by resurrection or purge.
+    lru_stamp: u64,
 }
 
 /// The hash → physical-block map plus the LRU of zero-ref cached blocks.
@@ -112,8 +116,18 @@ struct CachedBlock {
 #[derive(Debug, Clone, Default)]
 pub struct PrefixCache {
     map: HashMap<BlockHash, CachedBlock>,
-    /// Zero-ref cached blocks, oldest (first to evict) at the front.
-    lru: VecDeque<BlockHash>,
+    /// Zero-ref eviction queue, oldest (first to evict) at the front.
+    /// Entries are `(hash, stamp)` and lazily invalidated: one is live
+    /// iff the map still holds `hash` at refcount 0 with the same stamp.
+    /// Resurrection ([`PrefixCache::pin`]) used to scan-remove its entry
+    /// here — O(zero-ref blocks) per pin; tombstoning instead makes pin
+    /// O(1), with stale entries skipped (amortized O(1)) whenever the
+    /// queue is popped and swept out when they outnumber live ones.
+    lru: VecDeque<(BlockHash, u64)>,
+    /// Count of *live* entries in `lru` (the zero-ref gauge).
+    zero_ref: u64,
+    /// Monotonic stamp source for LRU entries.
+    next_stamp: u64,
     /// Maximum zero-ref blocks retained after frees; `None` keeps every
     /// reclaimable block until memory pressure evicts it.
     capacity: Option<u64>,
@@ -141,7 +155,7 @@ impl PrefixCache {
 
     /// Zero-ref cached blocks (reclaimable under pressure).
     pub fn zero_ref(&self) -> u64 {
-        self.lru.len() as u64
+        self.zero_ref
     }
 
     pub fn contains(&self, hash: BlockHash) -> bool {
@@ -162,17 +176,24 @@ impl PrefixCache {
         self.hit_tokens += tokens;
     }
 
+    /// Is `(hash, stamp)` a live LRU entry (vs a tombstone)?
+    fn lru_entry_live(map: &HashMap<BlockHash, CachedBlock>,
+                      hash: BlockHash, stamp: u64) -> bool {
+        map.get(&hash)
+            .is_some_and(|c| c.refcount == 0 && c.lru_stamp == stamp)
+    }
+
     /// Pin the cached block for `hash` (refcount++), resurrecting it
     /// from the LRU if it was zero-ref. `None` if the hash is absent.
     ///
-    /// Resurrection scans the LRU (O(zero-ref blocks)). Fine at
-    /// simulation scale; a production cache would keep a slot index or
-    /// tombstoned entries to make this O(1) — noted as a follow-on
-    /// alongside the multi-replica work in ROADMAP.
+    /// O(1): resurrection only bumps the refcount, turning the block's
+    /// deque entry into a tombstone that later pops skip (the slot-index
+    /// alternative to the old O(zero-ref) scan).
     pub(super) fn pin(&mut self, hash: BlockHash) -> Option<BlockId> {
         let cached = self.map.get_mut(&hash)?;
         if cached.refcount == 0 {
-            self.lru.retain(|h| *h != hash);
+            debug_assert!(self.zero_ref > 0, "zero-ref gauge underflow");
+            self.zero_ref -= 1;
         }
         cached.refcount += 1;
         Some(cached.block)
@@ -187,13 +208,18 @@ impl PrefixCache {
         if self.map.contains_key(&hash) {
             return false;
         }
-        self.map.insert(hash, CachedBlock { block, refcount: 1 });
+        self.map.insert(hash, CachedBlock {
+            block,
+            refcount: 1,
+            lru_stamp: 0,
+        });
         true
     }
 
     /// Drop one holder of `hash`; at zero refs the block is retained on
     /// the LRU (reclaimable), not freed.
     pub(super) fn release(&mut self, hash: BlockHash) {
+        let stamp = self.next_stamp;
         let cached = self
             .map
             .get_mut(&hash)
@@ -201,8 +227,24 @@ impl PrefixCache {
         assert!(cached.refcount > 0, "prefix refcount underflow");
         cached.refcount -= 1;
         if cached.refcount == 0 {
-            self.lru.push_back(hash);
+            self.next_stamp += 1;
+            cached.lru_stamp = stamp;
+            self.lru.push_back((hash, stamp));
+            self.zero_ref += 1;
+            self.compact_if_stale();
         }
+    }
+
+    /// Sweep tombstones once they dominate the deque, bounding its
+    /// length to O(zero-ref) without breaking amortized-O(1) release.
+    fn compact_if_stale(&mut self) {
+        if (self.lru.len() as u64) <= 32 + 2 * self.zero_ref {
+            return;
+        }
+        let map = &self.map;
+        self.lru
+            .retain(|&(h, s)| PrefixCache::lru_entry_live(map, h, s));
+        debug_assert_eq!(self.lru.len() as u64, self.zero_ref);
     }
 
     /// Remove `hash` from the cache if (and only if) it is zero-ref,
@@ -214,19 +256,29 @@ impl PrefixCache {
         if self.refcount_of(hash) != Some(0) {
             return None;
         }
-        self.lru.retain(|h| *h != hash);
+        // The deque entry becomes a tombstone (the map lookup fails).
         let cached = self.map.remove(&hash).expect("checked present");
+        debug_assert!(self.zero_ref > 0, "zero-ref gauge underflow");
+        self.zero_ref -= 1;
         Some(cached.block)
     }
 
     /// Evict the oldest zero-ref cached block, returning its physical
-    /// block to the caller's free list.
+    /// block to the caller's free list. Skips tombstones (amortized
+    /// O(1): each deque entry is popped at most once).
     pub(super) fn reclaim_one(&mut self) -> Option<BlockId> {
-        let hash = self.lru.pop_front()?;
-        let cached = self.map.remove(&hash).expect("LRU entry not in map");
-        debug_assert_eq!(cached.refcount, 0, "LRU held a pinned block");
-        self.evictions += 1;
-        Some(cached.block)
+        while let Some((hash, stamp)) = self.lru.pop_front() {
+            if !PrefixCache::lru_entry_live(&self.map, hash, stamp) {
+                continue; // tombstone from a resurrection or purge
+            }
+            let cached =
+                self.map.remove(&hash).expect("live entry is mapped");
+            debug_assert_eq!(cached.refcount, 0, "LRU held a pinned block");
+            self.zero_ref -= 1;
+            self.evictions += 1;
+            return Some(cached.block);
+        }
+        None
     }
 
     /// Evict zero-ref blocks beyond the configured retention capacity
@@ -338,6 +390,51 @@ mod tests {
         assert_eq!(c.reclaim_one(), Some(5));
         assert_eq!(c.evictions(), 1);
         assert!(!c.contains(42));
+        assert_eq!(c.reclaim_one(), None);
+    }
+
+    #[test]
+    fn resurrection_preserves_eviction_order() {
+        // Pin/release cycles must leave the LRU order exactly as the
+        // scan-based implementation did: a resurrected block re-enters
+        // at the tail when it is next released.
+        let mut c = PrefixCache::new(None);
+        c.register(1, 10);
+        c.register(2, 20);
+        c.register(3, 30);
+        c.release(1);
+        c.release(2);
+        c.release(3); // LRU: 1, 2, 3
+        assert_eq!(c.pin(2), Some(20), "resurrect the middle entry");
+        assert_eq!(c.zero_ref(), 2);
+        c.release(2); // LRU: 1, 3, 2
+        assert_eq!(c.reclaim_one(), Some(10));
+        assert_eq!(c.reclaim_one(), Some(30));
+        assert_eq!(c.reclaim_one(), Some(20));
+        assert_eq!(c.reclaim_one(), None);
+        assert_eq!(c.evictions(), 3);
+        assert_eq!(c.zero_ref(), 0);
+    }
+
+    #[test]
+    fn tombstones_never_distort_gauge_or_order() {
+        // Heavy pin/release/purge churn: the zero-ref gauge, capacity
+        // eviction, and reclaim order must all ignore stale deque
+        // entries (and the deque itself must stay bounded).
+        let mut c = PrefixCache::new(None);
+        c.register(7, 70);
+        c.register(8, 80);
+        for _ in 0..200 {
+            c.release(7);
+            assert_eq!(c.pin(7), Some(70));
+        }
+        assert_eq!(c.zero_ref(), 0);
+        c.release(8);
+        c.release(7); // LRU: 8, 7
+        assert_eq!(c.zero_ref(), 2);
+        assert_eq!(c.purge_zero_ref(8), Some(80));
+        assert_eq!(c.zero_ref(), 1);
+        assert_eq!(c.reclaim_one(), Some(70), "purged 8 is a tombstone");
         assert_eq!(c.reclaim_one(), None);
     }
 

@@ -48,6 +48,11 @@ impl SwapSpace {
         self.parked.contains_key(&req)
     }
 
+    /// Tokens parked for `req` (`None` if nothing is parked).
+    pub fn parked_tokens(&self, req: RequestId) -> Option<Tokens> {
+        self.parked.get(&req).copied()
+    }
+
     /// Park `tokens` of context for `req`; returns the transfer time.
     pub fn swap_out(&mut self, req: RequestId, tokens: Tokens,
                     cost: &CostModel) -> Option<Micros> {
@@ -63,10 +68,24 @@ impl SwapSpace {
     /// Reload `req`'s context; returns (tokens, transfer time).
     pub fn swap_in(&mut self, req: RequestId, cost: &CostModel)
                    -> Option<(Tokens, Micros)> {
+        self.swap_in_with_resident(req, cost, Tokens::ZERO)
+    }
+
+    /// Reload `req`'s context when `resident` leading tokens of it are
+    /// still materialized on the device (resident prefix-cache blocks):
+    /// the whole parked context becomes live again, but only the
+    /// non-resident remainder crosses PCIe — it alone is charged
+    /// transfer time and counted as swap-in traffic. With `resident` at
+    /// zero this is exactly [`SwapSpace::swap_in`]; a fully-resident
+    /// restore is free (not even the transfer's base latency).
+    pub fn swap_in_with_resident(&mut self, req: RequestId,
+                                 cost: &CostModel, resident: Tokens)
+                                 -> Option<(Tokens, Micros)> {
         let tokens = self.parked.remove(&req)?;
         self.used -= tokens.0;
-        self.total_swapped_in += tokens.0;
-        Some((tokens, cost.swap_time(tokens)))
+        let transferred = tokens.saturating_sub(resident);
+        self.total_swapped_in += transferred.0;
+        Some((tokens, cost.swap_time(transferred)))
     }
 
     /// Drop a parked context without reloading (request aborted).
@@ -192,6 +211,28 @@ mod tests {
         assert_eq!(s.used(), Tokens::ZERO);
         assert_eq!(s.total_swapped_out, 50);
         assert_eq!(s.total_swapped_in, 50);
+    }
+
+    #[test]
+    fn resident_tokens_skip_transfer_and_traffic() {
+        let mut s = SwapSpace::new(Tokens(100));
+        s.swap_out(RequestId(1), Tokens(50), &cost()).unwrap();
+        assert_eq!(s.parked_tokens(RequestId(1)), Some(Tokens(50)));
+        // 40 of 50 tokens resident: only 10 cross PCIe.
+        let (tokens, t) = s
+            .swap_in_with_resident(RequestId(1), &cost(), Tokens(40))
+            .unwrap();
+        assert_eq!(tokens, Tokens(50), "full context becomes live");
+        assert_eq!(t, Micros(1300)); // 1000 base + 10 x 30
+        assert_eq!(s.total_swapped_in, 10);
+        assert_eq!(s.parked_tokens(RequestId(1)), None);
+        // Fully resident: free, no base latency either.
+        s.swap_out(RequestId(2), Tokens(20), &cost()).unwrap();
+        let (tokens, t) = s
+            .swap_in_with_resident(RequestId(2), &cost(), Tokens(20))
+            .unwrap();
+        assert_eq!((tokens, t), (Tokens(20), Micros::ZERO));
+        assert_eq!(s.total_swapped_in, 10);
     }
 
     #[test]

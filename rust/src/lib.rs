@@ -9,6 +9,9 @@
 //! (2) assigns the memory-handling strategy (Preserve / Discard / Swap)
 //! minimizing memory waste *before* the request runs, and (3) ranks requests
 //! by their **memory-over-time integral** — lives in [`coordinator`].
+//! [`cluster`] scales it out: a `ReplicaSet` dispatches requests across
+//! N engine replicas, with the same memory-over-time integral steering
+//! cross-replica placement.
 //!
 //! Layer map (see `DESIGN.md`):
 //! - **L3 (this crate)**: scheduler, batcher, KV-cache manager, API
@@ -33,6 +36,7 @@
 //! ```
 
 pub mod bench;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod core;

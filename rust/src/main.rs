@@ -13,7 +13,8 @@
 use anyhow::Result;
 
 use lamps::bench::{Dataset, ModelPreset};
-use lamps::config::SystemConfig;
+use lamps::cluster::ReplicaSet;
+use lamps::config::{PlacementKind, SystemConfig};
 use lamps::core::types::Micros;
 #[cfg(feature = "pjrt")]
 use lamps::engine::pjrt_backend::PjrtBackend;
@@ -31,12 +32,16 @@ lamps — LAMPS: predictive scheduling for augmented-LLM serving
 USAGE:
   lamps serve   [--addr 127.0.0.1:7070] [--model gptj-tiny]
                 [--system lamps] [--artifacts artifacts]
+                [--replicas N]
+                [--placement memory-over-time|least-loaded|round-robin]
                 [--max-batch-tokens N] [--prefill-chunk N] [--async-swap]
                 [--prefix-cache] [--prefix-cache-blocks N]
   lamps run     [--dataset single-api|multi-api|toolbench|<trace.json>]
                 [--system vllm|infercept|lamps|lamps-no-sched|sjf|sjf-total]
                 [--model gptj-6b|vicuna-13b] [--rate 3.0]
                 [--requests 500] [--seed 42] [--time-cap-secs N]
+                [--replicas N]
+                [--placement memory-over-time|least-loaded|round-robin]
                 [--max-batch-tokens N] [--prefill-chunk N] [--async-swap]
                 [--prefix-cache] [--prefix-cache-blocks N]
                 [--timeline]
@@ -44,6 +49,11 @@ USAGE:
                 [--requests 500] [--seed 42]
   lamps predict <prompt> [--artifacts artifacts]
   lamps info    [--artifacts artifacts]
+
+  --replicas N dispatches across N engine replicas (one modeled GPU
+  each); --placement picks how arrivals are placed: memory-over-time
+  (default; the LAMPS rank integral steers placement), least-loaded, or
+  round-robin. With --replicas 1 the single-engine path runs unchanged.
 ";
 
 /// Tiny `--key value` argument map (no clap in the offline vendor set).
@@ -136,6 +146,22 @@ fn apply_compose_flags(cfg: &mut SystemConfig, args: &Args) {
     }
 }
 
+/// Apply the multi-replica flags: `--replicas N` sizes the
+/// [`ReplicaSet`]; `--placement` picks the cross-replica placement
+/// policy (memory-over-time by default).
+fn apply_replica_flags(cfg: &mut SystemConfig, args: &Args)
+                       -> Result<()> {
+    cfg.replicas = args.get_usize("replicas", cfg.replicas).max(1);
+    if let Some(name) = args.flags.get("placement") {
+        cfg.placement = PlacementKind::parse(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown placement '{name}' (expected memory-over-time, \
+                 least-loaded, or round-robin)")
+        })?;
+    }
+    Ok(())
+}
+
 /// Apply the KV prefix-cache flags: `--prefix-cache` turns refcounted
 /// prefix block sharing on (off by default ⇒ legacy behavior);
 /// `--prefix-cache-blocks N` caps the zero-ref cached blocks retained
@@ -202,27 +228,36 @@ fn serve(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown system preset {system}"))?;
     apply_compose_flags(&mut base_cfg, args);
     apply_prefix_flags(&mut base_cfg, args);
+    apply_replica_flags(&mut base_cfg, args)?;
 
     // PJRT handles are not Send: build them inside the engine thread.
+    // Each replica loads its own model runtime (one modeled device).
     let model_name = model.to_string();
     let artifacts_dir = artifacts.to_string();
-    let (handle, _join) = lamps::server::spawn(move || {
+    let (handle, _join) = lamps::server::spawn_replicated(move || {
         let meta = ArtifactMeta::load(&artifacts_dir).expect("artifacts");
         let client = RuntimeClient::cpu().expect("PJRT client");
-        let model_rt = ModelRuntime::load(&client, &meta, &model_name)
-            .expect("model artifacts");
-        let pred_rt =
-            PredictorRuntime::load(&client, &meta).expect("predictor");
         let mut cfg = base_cfg;
-        // Real backend: budget = what the fixed-shape executables hold.
-        cfg.memory_budget = lamps::core::types::Tokens(
-            (model_rt.meta.batch * model_rt.meta.max_seq) as u64);
-        cfg.max_batch = model_rt.meta.batch;
-        cfg.block_size = 16;
-        let backend = Box::new(PjrtBackend::new(model_rt));
-        let predictor = Box::new(PjrtPredictor::new(pred_rt));
-        (cfg, backend as Box<dyn lamps::engine::backend::Backend>,
-         predictor as Box<dyn lamps::predictor::Predictor>)
+        let mut parts: Vec<lamps::server::ReplicaParts> = Vec::new();
+        for _ in 0..cfg.replicas.max(1) {
+            let model_rt = ModelRuntime::load(&client, &meta, &model_name)
+                .expect("model artifacts");
+            let pred_rt =
+                PredictorRuntime::load(&client, &meta).expect("predictor");
+            // Real backend: budget = what the fixed-shape executables
+            // hold (per replica).
+            cfg.memory_budget = lamps::core::types::Tokens(
+                (model_rt.meta.batch * model_rt.meta.max_seq) as u64);
+            cfg.max_batch = model_rt.meta.batch;
+            cfg.block_size = 16;
+            let backend = Box::new(PjrtBackend::new(model_rt));
+            let predictor = Box::new(PjrtPredictor::new(pred_rt));
+            parts.push((
+                backend as Box<dyn lamps::engine::backend::Backend>,
+                predictor as Box<dyn lamps::predictor::Predictor>,
+            ));
+        }
+        (cfg, parts)
     });
     lamps::server::serve_tcp(handle, addr)
 }
@@ -258,20 +293,34 @@ fn run(args: &Args) -> Result<()> {
     }
     apply_compose_flags(&mut cfg, args);
     apply_prefix_flags(&mut cfg, args);
-    let mut engine = Engine::simulated(cfg);
-    engine.record_timeline = args.has("timeline");
+    apply_replica_flags(&mut cfg, args)?;
     let cap = args
         .flags
         .get("time-cap-secs")
         .and_then(|s| s.parse::<f64>().ok())
         .map(Micros::from_secs_f64);
-    let report = engine.run_trace_limited(&trace, cap);
-    println!("{}", report.to_json(args.has("timeline")));
+    let replicas = cfg.replicas;
+    let placement = cfg.placement;
+    let report = if replicas > 1 {
+        let mut set = ReplicaSet::simulated(cfg);
+        set.set_record_timeline(args.has("timeline"));
+        let fleet = set.run_trace_limited(&trace, cap);
+        println!("{}", fleet.to_json(args.has("timeline")));
+        fleet.fleet
+    } else {
+        let mut engine = Engine::simulated(cfg);
+        engine.record_timeline = args.has("timeline");
+        let report = engine.run_trace_limited(&trace, cap);
+        println!("{}", report.to_json(args.has("timeline")));
+        report
+    };
     eprintln!(
-        "\n{} on {} ({} reqs @ {}/s): latency mean {:.3}s p99 {:.3}s | \
+        "\n{} on {} ({} reqs @ {}/s, {} replica(s), {} placement): \
+         latency mean {:.3}s p99 {:.3}s | \
          ttft mean {:.3}s p99 {:.3}s | throughput {:.3} r/s | \
          {} completed, {} preemptions",
         system, trace.name, trace.len(), trace.rate,
+        replicas, placement.label(),
         report.latency.mean_secs(), report.latency.p99_secs(),
         report.ttft.mean_secs(), report.ttft.p99_secs(),
         report.throughput_rps, report.completed, report.preemptions);

@@ -125,6 +125,9 @@ pub struct MetricsCollector {
     /// Swap transfer time that ran as background transfers overlapping
     /// decode (async swap) instead of stalling the batch.
     pub swap_overlap_us: u64,
+    /// Swap-in tokens restored from still-resident prefix-cache blocks
+    /// instead of crossing PCIe (the transfer bytes the cache saved).
+    pub swap_restore_cached_tokens: u64,
     /// Engine time spent on prefill/recompute materialization.
     pub materialize_us: u64,
     /// Admission rejections by cause (per request-round).
@@ -202,6 +205,7 @@ impl MetricsCollector {
             strategy_counts: self.strategy_counts,
             swap_stall_us: self.swap_stall_us,
             swap_overlap_us: self.swap_overlap_us,
+            swap_restore_cached_tokens: self.swap_restore_cached_tokens,
             materialize_us: self.materialize_us,
             rejected_slot: self.rejected_slot,
             rejected_memory: self.rejected_memory,
@@ -241,6 +245,9 @@ pub struct RunReport {
     pub swap_stall_us: u64,
     /// Swap transfer time overlapped with decode (async swap).
     pub swap_overlap_us: u64,
+    /// Swap-in tokens served from resident prefix-cache blocks (PCIe
+    /// transfer skipped).
+    pub swap_restore_cached_tokens: u64,
     /// Engine time spent on prefill/recompute materialization.
     pub materialize_us: u64,
     /// Admission rejections by cause (per request-round).
@@ -251,8 +258,77 @@ pub struct RunReport {
 }
 
 impl RunReport {
+    /// Fleet-wide aggregate of per-replica reports (the
+    /// [`ReplicaSet`](crate::cluster::ReplicaSet) fan-in). Counters sum;
+    /// the latency/TTFT summaries are rebuilt from the merged
+    /// per-request samples (percentiles cannot be merged from
+    /// summaries); the duration is the latest replica end time and
+    /// throughput is fleet completions over that span.
+    pub fn aggregate(per_replica: &[RunReport], latencies: &[Micros],
+                     ttfts: &[Micros]) -> RunReport {
+        let sum = |f: fn(&RunReport) -> u64| -> u64 {
+            per_replica.iter().map(f).sum()
+        };
+        let duration = per_replica
+            .iter()
+            .map(|r| r.duration)
+            .max()
+            .unwrap_or(Micros::ZERO);
+        let completed: usize =
+            per_replica.iter().map(|r| r.completed).sum();
+        let span = duration.as_secs_f64().max(1e-9);
+        let mut strategy_counts = [0u64; 3];
+        for r in per_replica {
+            for (total, c) in
+                strategy_counts.iter_mut().zip(r.strategy_counts)
+            {
+                *total += c;
+            }
+        }
+        // Timeline points carry per-replica gauges (kv_occupancy,
+        // cumulative completed, running) that do not compose into one
+        // fleet series — an interleaved merge would oscillate between
+        // replicas' values and misrepresent fleet state. The fleet
+        // aggregate therefore carries no timeline; the per-replica
+        // reports keep theirs (FleetReport renders them).
+        RunReport {
+            submitted: per_replica.iter().map(|r| r.submitted).sum(),
+            completed,
+            latency: Summary::from_samples(latencies),
+            ttft: Summary::from_samples(ttfts),
+            throughput_rps: completed as f64 / span,
+            duration,
+            iterations: sum(|r| r.iterations),
+            tokens_decoded: sum(|r| r.tokens_decoded),
+            tokens_prefilled: sum(|r| r.tokens_prefilled),
+            tokens_recomputed: sum(|r| r.tokens_recomputed),
+            prefix_hit_tokens: sum(|r| r.prefix_hit_tokens),
+            prefix_evictions: sum(|r| r.prefix_evictions),
+            prefix_cached_blocks: sum(|r| r.prefix_cached_blocks),
+            blocks_allocated: sum(|r| r.blocks_allocated),
+            preemptions: sum(|r| r.preemptions),
+            strategy_counts,
+            swap_stall_us: sum(|r| r.swap_stall_us),
+            swap_overlap_us: sum(|r| r.swap_overlap_us),
+            swap_restore_cached_tokens:
+                sum(|r| r.swap_restore_cached_tokens),
+            materialize_us: sum(|r| r.materialize_us),
+            rejected_slot: sum(|r| r.rejected_slot),
+            rejected_memory: sum(|r| r.rejected_memory),
+            rejected_reservation: sum(|r| r.rejected_reservation),
+            timeline: Vec::new(),
+        }
+    }
+
     /// JSON rendering (timeline omitted unless `with_timeline`).
     pub fn to_json(&self, with_timeline: bool) -> String {
+        crate::util::json::write(&self.to_value(with_timeline))
+    }
+
+    /// JSON value form, composable into larger documents (the
+    /// fleet-report JSON embeds one per replica).
+    pub fn to_value(&self, with_timeline: bool)
+                    -> crate::util::json::Value {
         use crate::util::json::{self, Value};
         let summary = |s: &Summary| {
             json::obj(vec![
@@ -290,6 +366,8 @@ impl RunReport {
             ("swap_count", json::num(self.strategy_counts[2] as f64)),
             ("swap_stall_us", json::num(self.swap_stall_us as f64)),
             ("swap_overlap_us", json::num(self.swap_overlap_us as f64)),
+            ("swap_restore_cached_tokens",
+             json::num(self.swap_restore_cached_tokens as f64)),
             ("materialize_us", json::num(self.materialize_us as f64)),
             ("rejected_slot", json::num(self.rejected_slot as f64)),
             ("rejected_memory", json::num(self.rejected_memory as f64)),
@@ -313,7 +391,7 @@ impl RunReport {
                     ]))
                     .collect())));
         }
-        json::write(&json::obj(pairs))
+        json::obj(pairs)
     }
 }
 
@@ -359,6 +437,36 @@ mod tests {
         assert_eq!(rep.latency.mean_us, 200.0);
         assert_eq!(rep.ttft.mean_us, 50.0);
         assert!((rep.throughput_rps - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggregate_sums_counters_and_rebuilds_summaries() {
+        let mk = |end: u64, lat: u64| {
+            let mut m = MetricsCollector::new();
+            m.on_arrival(RequestId(1), Micros(0));
+            m.on_finished(RequestId(1), Micros(lat));
+            m.end_time = Micros(end);
+            m.tokens_decoded = 10;
+            m.preemptions = 2;
+            m.strategy_counts = [1, 2, 3];
+            m.report()
+        };
+        let a = mk(1_000_000, 100);
+        let b = mk(3_000_000, 300);
+        let fleet = RunReport::aggregate(&[a, b],
+                                         &[Micros(100), Micros(300)],
+                                         &[]);
+        assert_eq!(fleet.submitted, 2);
+        assert_eq!(fleet.completed, 2);
+        assert_eq!(fleet.duration, Micros(3_000_000), "latest end");
+        assert_eq!(fleet.tokens_decoded, 20);
+        assert_eq!(fleet.preemptions, 4);
+        assert_eq!(fleet.strategy_counts, [2, 4, 6]);
+        assert_eq!(fleet.latency.mean_us, 200.0);
+        assert_eq!(fleet.latency.max_us, 300.0);
+        assert_eq!(fleet.ttft.n, 0);
+        // Fleet throughput: 2 completions over the 3 s fleet span.
+        assert!((fleet.throughput_rps - 2.0 / 3.0).abs() < 1e-9);
     }
 
     #[test]

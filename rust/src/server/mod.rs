@@ -23,6 +23,10 @@ use crate::engine::Engine;
 use crate::predictor::Predictor;
 use crate::util::json::{self, Value};
 
+/// Idle poll period of the engine thread — also the cap on how long one
+/// replica's in-step wall-clock wait may stall the shared loop.
+const POLL_TICK: Micros = Micros(200);
+
 /// What the client receives when its request finishes.
 #[derive(Debug, Clone)]
 pub struct Completion {
@@ -62,6 +66,20 @@ enum Command {
     Shutdown,
 }
 
+/// Completion for a request the engine refused or abandoned (it can
+/// never fit its replica's memory budget): zero `tokens_decoded` marks
+/// it unserved, and the client's blocking recv is released instead of
+/// hanging forever.
+fn dropped_completion(id: RequestId) -> Completion {
+    Completion {
+        id: id.0,
+        latency_us: 0,
+        ttft_us: None,
+        tokens_decoded: 0,
+        generated: None,
+    }
+}
+
 /// Handle to a running engine thread.
 #[derive(Clone)]
 pub struct ServerHandle {
@@ -94,31 +112,55 @@ impl ServerHandle {
     }
 }
 
+/// Backend + predictor pair for one engine replica (built inside the
+/// engine thread — PJRT handles are not `Send`).
+pub type ReplicaParts = (Box<dyn Backend>, Box<dyn Predictor>);
+
 /// Spawn a simulated-backend server from a config alone — the frontend
 /// counterpart of [`Engine::simulated`]. All engine knobs, including the
-/// batch-composer settings (`cfg.compose`: per-iteration token budget,
-/// chunked prefill, async swap), take effect as-is.
+/// batch-composer settings (`cfg.compose`) and multi-replica dispatch
+/// (`cfg.replicas` + `cfg.placement`), take effect as-is.
 pub fn spawn_sim(cfg: SystemConfig)
                  -> (ServerHandle, std::thread::JoinHandle<()>) {
-    spawn(move || {
-        let backend = Box::new(
-            crate::engine::backend::SimBackend::new(cfg.cost));
-        let predictor =
-            Box::new(crate::predictor::oracle::OraclePredictor);
-        (cfg, backend as Box<dyn Backend>,
-         predictor as Box<dyn Predictor>)
+    spawn_replicated(move || {
+        let n = cfg.replicas.max(1);
+        let parts: Vec<ReplicaParts> = (0..n)
+            .map(|_| {
+                (Box::new(crate::engine::backend::SimBackend::new(
+                     cfg.cost)) as Box<dyn Backend>,
+                 Box::new(crate::predictor::oracle::OraclePredictor)
+                     as Box<dyn Predictor>)
+            })
+            .collect();
+        (cfg, parts)
     })
 }
 
-/// Spawn the engine thread. PJRT handles are not `Send`, so the caller
-/// provides a *factory* that constructs (config, backend, predictor)
-/// inside the engine thread; both the sim and PJRT paths share this
-/// frontend.
+/// Spawn a single-replica engine thread. PJRT handles are not `Send`,
+/// so the caller provides a *factory* that constructs (config, backend,
+/// predictor) inside the engine thread; both the sim and PJRT paths
+/// share this frontend.
 pub fn spawn<F>(factory: F) -> (ServerHandle, std::thread::JoinHandle<()>)
 where
     F: FnOnce() -> (SystemConfig, Box<dyn Backend>, Box<dyn Predictor>)
         + Send
         + 'static,
+{
+    spawn_replicated(move || {
+        let (cfg, backend, predictor) = factory();
+        (cfg, vec![(backend, predictor)])
+    })
+}
+
+/// Spawn the engine thread with one engine per replica part. Arriving
+/// requests are routed through the configured placement policy
+/// (`cfg.placement`); completions fan back in from whichever replica
+/// owns the request. A request's KV state, swap traffic, and API return
+/// all stay on its owning replica.
+pub fn spawn_replicated<F>(factory: F)
+                           -> (ServerHandle, std::thread::JoinHandle<()>)
+where
+    F: FnOnce() -> (SystemConfig, Vec<ReplicaParts>) + Send + 'static,
 {
     let (tx, rx) = mpsc::channel::<Command>();
     let handle = ServerHandle {
@@ -126,19 +168,22 @@ where
         next_id: Arc::new(AtomicU64::new(0)),
     };
     let join = std::thread::spawn(move || {
-        let (cfg, backend, predictor) = factory();
-        engine_thread(cfg, backend, predictor, rx);
+        let (cfg, parts) = factory();
+        engine_thread(cfg, parts, rx);
     });
     (handle, join)
 }
 
-fn engine_thread(cfg: SystemConfig, backend: Box<dyn Backend>,
-                 predictor: Box<dyn Predictor>,
+fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
                  rx: mpsc::Receiver<Command>) {
+    assert!(!parts.is_empty(), "at least one replica required");
     eprintln!(
-        "lamps: engine up (scheduler {}, batch composer: budget {}, \
-         prefill chunk {}, async swap {}, prefix cache {})",
+        "lamps: engine up (scheduler {}, replicas {} [{} placement], \
+         batch composer: budget {}, prefill chunk {}, async swap {}, \
+         prefix cache {})",
         cfg.scheduler.label(),
+        parts.len(),
+        cfg.placement.label(),
         cfg.compose
             .max_batch_tokens
             .map_or("unbounded".to_string(), |t| t.to_string()),
@@ -154,9 +199,17 @@ fn engine_thread(cfg: SystemConfig, backend: Box<dyn Backend>,
         } else {
             "off".to_string()
         });
-    let mut engine =
-        Engine::new(cfg, backend, predictor, Clock::wall_clock());
-    let mut watchers: Vec<(RequestId, mpsc::Sender<Completion>)> =
+    let placement = cfg.placement;
+    let mut engines: Vec<Engine> = parts
+        .into_iter()
+        .map(|(backend, predictor)| {
+            Engine::new(cfg.clone(), backend, predictor,
+                        Clock::wall_clock())
+        })
+        .collect();
+    let mut rr_next = 0usize;
+    // (request, owning replica, completion channel)
+    let mut watchers: Vec<(RequestId, usize, mpsc::Sender<Completion>)> =
         Vec::new();
     let mut shutdown = false;
 
@@ -165,10 +218,12 @@ fn engine_thread(cfg: SystemConfig, backend: Box<dyn Backend>,
         loop {
             match rx.try_recv() {
                 Ok(Command::Submit { mut spec, done }) => {
-                    spec.arrival = engine.now();
+                    let r = crate::cluster::pick_replica(
+                        &engines, placement, &mut rr_next);
+                    spec.arrival = engines[r].now();
                     let id = spec.id;
-                    engine.submit(spec);
-                    watchers.push((id, done));
+                    engines[r].submit(spec);
+                    watchers.push((id, r, done));
                 }
                 Ok(Command::Shutdown) => shutdown = true,
                 Err(mpsc::TryRecvError::Empty) => break,
@@ -179,45 +234,81 @@ fn engine_thread(cfg: SystemConfig, backend: Box<dyn Backend>,
             }
         }
 
-        let progressed = if watchers.is_empty() {
-            false
-        } else {
-            engine.step()
-        };
-
-        // Notify completions.
-        let mut still: Vec<(RequestId, mpsc::Sender<Completion>)> =
-            Vec::new();
-        for (id, done) in watchers.drain(..) {
-            let finished = engine
-                .request(id)
-                .map(|r| r.is_finished())
-                .unwrap_or(false);
-            if finished {
-                let r = engine.request(id).unwrap();
-                #[cfg(feature = "pjrt")]
-                let generated = engine.backend_any().and_then(|any| {
-                    any.downcast_ref::<crate::engine::pjrt_backend::PjrtBackend>()
-                        .and_then(|b| {
-                            b.generated_tokens(id).map(|t| t.to_vec())
-                        })
-                });
-                #[cfg(not(feature = "pjrt"))]
-                let generated = None;
-                let completion = Completion {
-                    id: id.0,
-                    latency_us: (r.finished_at.unwrap()
-                        - r.spec.arrival).0,
-                    ttft_us: r
-                        .first_token_at
-                        .map(|t| (t - r.spec.arrival).0),
-                    tokens_decoded: r.spec.total_decode().0,
-                    generated,
-                };
-                let _ = done.send(completion);
-            } else {
-                still.push((id, done));
+        let mut progressed = false;
+        if !watchers.is_empty() {
+            for engine in &mut engines {
+                if !engine.has_live_work() {
+                    continue;
+                }
+                engine.set_external_event(None);
+                let next = engine.next_event_time();
+                // An engine with nothing runnable and only a future
+                // event is left alone entirely — the single poll sleep
+                // at the bottom of the loop covers it; stepping it
+                // would add one serialized in-step sleep per idle
+                // replica per pass.
+                let due = next.is_some_and(|t| t <= engine.now());
+                if !due && !engine.has_runnable_work() {
+                    continue;
+                }
+                // Runnable engines can still hit the idle branch
+                // (waiting requests blocked on memory held through an
+                // API call): bound that wall-clock wait to one poll
+                // tick so it cannot stall sibling replicas or command
+                // draining. The hint never delays a due event (the
+                // idle jump takes the earliest), and no synthetic
+                // event is injected when the engine has none at all,
+                // so the idle-path preemption fallback stays
+                // reachable.
+                let hint =
+                    next.map(|t| t.min(engine.now() + POLL_TICK));
+                engine.set_external_event(hint);
+                progressed |= engine.step();
             }
+        }
+
+        // Notify completions from each request's owning replica.
+        let mut still: Vec<(RequestId, usize,
+                            mpsc::Sender<Completion>)> = Vec::new();
+        for (id, owner, done) in watchers.drain(..) {
+            let engine = &engines[owner];
+            let Some(r) = engine.request(id) else {
+                // Fail-fast drop at submit (the spec can never fit this
+                // replica's memory budget): unblock the client with an
+                // empty completion — zero tokens marks it unserved —
+                // instead of hanging its recv forever.
+                let _ = done.send(dropped_completion(id));
+                continue;
+            };
+            if !r.is_finished() {
+                still.push((id, owner, done));
+                continue;
+            }
+            let Some(finished_at) = r.finished_at else {
+                // Dropped mid-run (context outgrew the budget): the
+                // request is terminal but was never served.
+                let _ = done.send(dropped_completion(id));
+                continue;
+            };
+            #[cfg(feature = "pjrt")]
+            let generated = engine.backend_any().and_then(|any| {
+                any.downcast_ref::<crate::engine::pjrt_backend::PjrtBackend>()
+                    .and_then(|b| {
+                        b.generated_tokens(id).map(|t| t.to_vec())
+                    })
+            });
+            #[cfg(not(feature = "pjrt"))]
+            let generated = None;
+            let completion = Completion {
+                id: id.0,
+                latency_us: (finished_at - r.spec.arrival).0,
+                ttft_us: r
+                    .first_token_at
+                    .map(|t| (t - r.spec.arrival).0),
+                tokens_decoded: r.spec.total_decode().0,
+                generated,
+            };
+            let _ = done.send(completion);
         }
         watchers = still;
 
@@ -225,7 +316,7 @@ fn engine_thread(cfg: SystemConfig, backend: Box<dyn Backend>,
             return;
         }
         if !progressed {
-            std::thread::sleep(Duration::from_micros(200));
+            std::thread::sleep(Duration::from_micros(POLL_TICK.0));
         }
     }
 }

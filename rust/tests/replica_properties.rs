@@ -1,0 +1,186 @@
+//! Randomized property tests of multi-replica dispatch
+//! (`cluster::ReplicaSet`), driven by the crate's deterministic
+//! `util::Rng` (fixed seeds — every failure is exactly reproducible):
+//!
+//! - every request is placed on exactly one replica, exists only there,
+//!   and completes there (no migration, no loss, no duplication),
+//! - per-replica KV conservation: every replica's block manager drains
+//!   back to zero occupancy once its requests finish,
+//! - a `replicas = 1` fleet reproduces the single-`Engine` run of the
+//!   same trace/seed **byte-identically** (the refactor's safety rail),
+//!   including with the chunked composer and the prefix cache enabled,
+//! - round-robin placement is a pure rotation in arrival order.
+
+use std::collections::BTreeMap;
+
+use lamps::cluster::ReplicaSet;
+use lamps::config::{PlacementKind, SystemConfig};
+use lamps::core::request::{ApiCallSpec, ApiType, RequestSpec};
+use lamps::core::types::{Micros, RequestId, Tokens};
+use lamps::engine::Engine;
+use lamps::util::Rng;
+use lamps::workload::{infercept, Trace};
+
+/// Mixed augmented/plain trace with random arrivals, prompts, API
+/// durations, and decode lengths.
+fn random_trace(rng: &mut Rng, n: u64) -> Trace {
+    let mut t = 0u64;
+    let specs = (0..n)
+        .map(|i| {
+            t += rng.int_range(0, 400_000);
+            let api_calls = if rng.f64() < 0.5 {
+                vec![ApiCallSpec {
+                    decode_before: Tokens(rng.int_range(1, 30)),
+                    api_type: ApiType::Qa,
+                    duration: Micros(rng.int_range(100_000, 5_000_000)),
+                    response_tokens: Tokens(rng.int_range(0, 8)),
+                }]
+            } else {
+                vec![]
+            };
+            RequestSpec {
+                id: RequestId(i),
+                arrival: Micros(t),
+                prompt: String::new(),
+                prompt_tokens: Tokens(rng.int_range(0, 200)),
+                api_calls,
+                final_decode: Tokens(rng.int_range(1, 40)),
+            }
+        })
+        .collect();
+    Trace::new("random", 1.0, specs)
+}
+
+#[test]
+fn prop_each_request_lands_on_exactly_one_replica() {
+    let mut rng = Rng::new(0x5E7_0001);
+    let policies = [PlacementKind::MemoryOverTime,
+                    PlacementKind::LeastLoaded,
+                    PlacementKind::RoundRobin];
+    for case in 0..6u64 {
+        let n = 30 + case * 5;
+        let trace = random_trace(&mut rng, n);
+        let replicas = 2 + (case % 3) as usize;
+        for policy in policies {
+            let mut cfg = SystemConfig::preset("lamps").unwrap();
+            cfg.memory_budget = Tokens(10_000);
+            cfg.replicas = replicas;
+            cfg.placement = policy;
+            let mut set = ReplicaSet::simulated(cfg);
+            let report = set.run_trace(&trace);
+
+            // Exactly one placement per request, on a real replica.
+            let mut owner: BTreeMap<RequestId, usize> = BTreeMap::new();
+            for &(id, r) in set.assignments() {
+                assert!(r < replicas, "replica index out of range");
+                assert!(owner.insert(id, r).is_none(),
+                        "{id} placed twice ({policy:?})");
+            }
+            assert_eq!(owner.len() as u64, n,
+                       "every request must be placed ({policy:?})");
+
+            // The request lives (and finished) on its owner — and on no
+            // other replica.
+            for (&id, &r) in &owner {
+                for other in 0..replicas {
+                    let found = set.replica(other).request(id);
+                    if other == r {
+                        let req = found.unwrap_or_else(|| {
+                            panic!("{id} missing from its owner")
+                        });
+                        assert!(req.is_finished(),
+                                "{id} unfinished on replica {r}");
+                    } else {
+                        assert!(found.is_none(),
+                                "{id} leaked onto replica {other}");
+                    }
+                }
+            }
+
+            // Fan-in accounting: per-replica submissions/completions
+            // partition the trace.
+            let submitted: usize =
+                report.per_replica.iter().map(|p| p.submitted).sum();
+            let completed: usize =
+                report.per_replica.iter().map(|p| p.completed).sum();
+            assert_eq!(submitted as u64, n);
+            assert_eq!(completed as u64, n);
+            assert_eq!(report.fleet.completed as u64, n);
+
+            // Per-replica KV conservation: every block manager drains.
+            for i in 0..replicas {
+                assert_eq!(set.replica(i).kv_occupancy(), 0.0,
+                           "replica {i} leaked KV ({policy:?})");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_round_robin_is_pure_rotation() {
+    let mut rng = Rng::new(0x5E7_0002);
+    let trace = random_trace(&mut rng, 25);
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.memory_budget = Tokens(10_000);
+    cfg.replicas = 4;
+    cfg.placement = PlacementKind::RoundRobin;
+    let mut set = ReplicaSet::simulated(cfg);
+    set.run_trace(&trace);
+    // Arrivals are strictly increasing in id here, so dispatch order is
+    // id order and the rotation is exact.
+    for (i, &(_, r)) in set.assignments().iter().enumerate() {
+        assert_eq!(r, i % 4);
+    }
+}
+
+/// `replicas = 1` must reproduce the single-engine run byte for byte —
+/// same JSON report (all counters, timings, and summaries), across
+/// schedulers and with the composer/prefix-cache features on.
+#[test]
+fn prop_single_replica_fleet_is_byte_identical_to_engine() {
+    for (system, seed) in [("lamps", 42u64), ("vllm", 7), ("infercept", 3)]
+    {
+        for chunked in [false, true] {
+            let mut cfg = SystemConfig::preset(system).unwrap();
+            cfg.memory_budget = Tokens(9_000);
+            cfg.seed = seed;
+            if chunked {
+                cfg.compose = lamps::config::ComposeConfig::chunked();
+                cfg.prefix_cache =
+                    lamps::config::PrefixCacheConfig::on();
+            }
+            let trace = infercept::single_api_dataset(40, 4.0, seed);
+
+            let mut engine = Engine::simulated(cfg.clone());
+            let solo = engine.run_trace(&trace);
+
+            cfg.replicas = 1;
+            let mut set = ReplicaSet::simulated(cfg);
+            let fleet = set.run_trace(&trace);
+
+            assert_eq!(solo.to_json(true), fleet.fleet.to_json(true),
+                       "{system} seed {seed} chunked {chunked}: \
+                        replicas = 1 diverged from the single engine");
+            assert_eq!(fleet.per_replica.len(), 1);
+        }
+    }
+}
+
+/// Same check on a multi-API dataset, both uncapped and through the
+/// fleet driver's frontier-based time-cap semantics.
+#[test]
+fn prop_single_replica_fleet_matches_engine_multi_api() {
+    for cap in [None, Some(Micros(20_000_000))] {
+        let mut cfg = SystemConfig::preset("lamps").unwrap();
+        cfg.memory_budget = Tokens(9_000);
+        let trace = infercept::multi_api_dataset(30, 3.0, 11);
+
+        let mut engine = Engine::simulated(cfg.clone());
+        let solo = engine.run_trace_limited(&trace, cap);
+
+        let mut set = ReplicaSet::simulated(cfg);
+        let fleet = set.run_trace_limited(&trace, cap);
+        assert_eq!(solo.to_json(true), fleet.fleet.to_json(true),
+                   "cap {cap:?}");
+    }
+}

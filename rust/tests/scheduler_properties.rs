@@ -132,6 +132,7 @@ fn prop_rank_nonnegative_and_finite() {
         t_iter: Micros(10_000),
         c_other_est: Tokens(1_000),
         account_prefill: false,
+        prefix_cached_block: None,
     };
     for i in 0..CASES as u64 {
         for strategy in HandlingStrategy::ALL {
@@ -151,6 +152,7 @@ fn prop_rank_monotone_in_progress() {
         t_iter: Micros(10_000),
         c_other_est: Tokens(1_000),
         account_prefill: false,
+        prefix_cached_block: None,
     };
     for i in 0..CASES as u64 {
         let spec = random_spec(&mut rng, i);

@@ -122,6 +122,34 @@ fn spawn_sim_serves_with_composer_knobs() {
 }
 
 #[test]
+fn spawn_sim_replicated_serves_all() {
+    // Multi-replica dispatch end-to-end: submissions are placed across
+    // three engines and completions fan back in from their owners.
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.cost = fast_cost();
+    cfg.replicas = 3;
+    cfg.placement = lamps::config::PlacementKind::RoundRobin;
+    let (handle, _join) = server::spawn_sim(cfg);
+    let mut joins = Vec::new();
+    for i in 0..9u64 {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            h.submit_blocking(simple_spec(4 + i)).unwrap()
+        }));
+    }
+    let mut ids = Vec::new();
+    for j in joins {
+        let c = j.join().unwrap();
+        assert!(c.tokens_decoded >= 4);
+        ids.push(c.id);
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 9, "ids must be unique across replicas");
+    handle.shutdown();
+}
+
+#[test]
 fn tcp_json_lines_roundtrip() {
     let handle = spawn_sim_server();
     let addr = "127.0.0.1:17071";
