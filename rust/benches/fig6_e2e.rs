@@ -8,10 +8,18 @@
 //! reproduce the legacy whole-prompt, synchronous-swap grid. Set
 //! `LAMPS_REPLICAS=N` (and optionally `LAMPS_PLACEMENT`) to run every
 //! cell across an N-replica `ReplicaSet`; `LAMPS_REPLICAS=1` (the
-//! default) is byte-identical to the single-engine grid.
-use lamps::bench::{print_cells, print_headline, run_cell_fleet, Cell,
-                   Dataset, ModelPreset, SYSTEMS};
-use lamps::config::{ComposeConfig, PlacementKind};
+//! default) is byte-identical to the single-engine grid. Set
+//! `LAMPS_PREFIX_CACHE=on` for per-replica prefix caching and
+//! `LAMPS_SHARED_PREFIX=on` for the cross-replica shared prefix index
+//! (pair the latter with `LAMPS_PLACEMENT=prefix-affinity`).
+use lamps::bench::{print_cells, print_headline, run_cell_fleet_shared,
+                   Cell, Dataset, ModelPreset, SYSTEMS};
+use lamps::config::{ComposeConfig, PlacementKind, PrefixCacheConfig};
+
+fn env_on(name: &str) -> bool {
+    matches!(std::env::var(name).as_deref(),
+             Ok("1") | Ok("on") | Ok("true"))
+}
 
 fn main() {
     let compose = match std::env::var("LAMPS_CHUNK").as_deref() {
@@ -27,10 +35,17 @@ fn main() {
         .ok()
         .and_then(|v| PlacementKind::parse(&v))
         .unwrap_or(PlacementKind::MemoryOverTime);
+    let prefix = if env_on("LAMPS_PREFIX_CACHE") {
+        PrefixCacheConfig::on()
+    } else {
+        PrefixCacheConfig::default()
+    };
+    let shared_prefix = env_on("LAMPS_SHARED_PREFIX");
     println!("batch composer: prefill chunk {:?}, async swap {} | \
-              replicas {replicas} ({} placement)",
+              replicas {replicas} ({} placement) | prefix cache {} | \
+              shared prefix index {}",
              compose.prefill_chunk, compose.async_swap,
-             placement.label());
+             placement.label(), prefix.enabled, shared_prefix);
     let rates = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
     // `LAMPS_REQUESTS` shrinks the grid for CI smoke runs (the full
     // 250-request grid is the paper-fidelity default).
@@ -43,10 +58,10 @@ fn main() {
             let mut cells: Vec<Cell> = Vec::new();
             for &rate in &rates {
                 for system in SYSTEMS {
-                    cells.push(run_cell_fleet(system, dataset, model,
-                                              rate, n, 42, None,
-                                              compose, replicas,
-                                              placement));
+                    cells.push(run_cell_fleet_shared(
+                        system, dataset, model, rate, n, 42, None,
+                        compose, replicas, placement, prefix,
+                        shared_prefix));
                 }
             }
             print_cells(&format!("Fig 6 — {} / {}", dataset.label(),

@@ -62,6 +62,10 @@ fn run(placement: PlacementKind) -> (FleetReport, Vec<usize>) {
     cfg.memory_budget = Tokens(BUDGET);
     cfg.replicas = REPLICAS;
     cfg.placement = placement;
+    // This bench isolates what each *placement policy* does with the
+    // skewed trace; the admission re-queue would quietly fix
+    // round-robin's pile-up after the fact and blur the comparison.
+    cfg.admission_requeue = false;
     let mut set = ReplicaSet::simulated(cfg);
     let report = set.run_trace(&workload());
     let mut heavy = vec![0usize; REPLICAS];

@@ -4,7 +4,7 @@
 
 use crate::cluster::ReplicaSet;
 use crate::config::{ComposeConfig, CostModel, PlacementKind,
-                    SystemConfig};
+                    PrefixCacheConfig, SystemConfig};
 use crate::core::types::Micros;
 use crate::engine::Engine;
 use crate::metrics::RunReport;
@@ -128,6 +128,24 @@ pub fn run_cell_fleet(system: &str, dataset: Dataset, model: ModelPreset,
                       time_cap: Option<Micros>, compose: ComposeConfig,
                       replicas: usize, placement: PlacementKind)
                       -> Cell {
+    run_cell_fleet_shared(system, dataset, model, rate, n_requests,
+                          seed, time_cap, compose, replicas, placement,
+                          PrefixCacheConfig::default(), false)
+}
+
+/// [`run_cell_fleet`] with explicit prefix-cache settings and the
+/// cross-replica shared prefix index switch — the fig6
+/// `LAMPS_PREFIX_CACHE` / `LAMPS_SHARED_PREFIX` axis and the
+/// `micro_shared_prefix` bench's comparison knob.
+#[allow(clippy::too_many_arguments)]
+pub fn run_cell_fleet_shared(system: &str, dataset: Dataset,
+                             model: ModelPreset, rate: f64,
+                             n_requests: usize, seed: u64,
+                             time_cap: Option<Micros>,
+                             compose: ComposeConfig, replicas: usize,
+                             placement: PlacementKind,
+                             prefix: PrefixCacheConfig,
+                             shared_prefix: bool) -> Cell {
     let mut cfg = SystemConfig::preset(system)
         .unwrap_or_else(|| panic!("unknown system preset {system}"));
     cfg.cost = model.cost();
@@ -136,6 +154,8 @@ pub fn run_cell_fleet(system: &str, dataset: Dataset, model: ModelPreset,
     cfg.compose = compose;
     cfg.replicas = replicas.max(1);
     cfg.placement = placement;
+    cfg.prefix_cache = prefix;
+    cfg.shared_prefix = shared_prefix;
     // ToolBench uses the score-update interval of 10 (§5).
     if dataset == Dataset::ToolBench {
         cfg.score_update_interval = 10;

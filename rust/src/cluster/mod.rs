@@ -25,22 +25,41 @@
 //! fleet-wide report ([`RunReport::aggregate`]): counters sum, latency /
 //! TTFT percentiles are rebuilt from the merged per-request samples, and
 //! throughput is fleet completions over the latest replica end time.
+//!
+//! **Cross-replica prefix sharing** (`--shared-prefix`, see
+//! [`shared_prefix`]): replicas journal their prefix-cache resident-set
+//! deltas, the fleet mirrors them into a [`SharedPrefixIndex`], and
+//! `--placement prefix-affinity` discounts the prefill leg of the
+//! arrival's rank integral on replicas that already hold its prefix.
+//!
+//! **Placement-aware admission re-queue**
+//! (`SystemConfig::admission_requeue`): a request memory-rejected by
+//! its owner before it ever ran is re-queued once to the best sibling
+//! with free KV instead of waiting out the owner's pressure.
 
-use std::collections::VecDeque;
+pub mod shared_prefix;
+
+use std::collections::{HashMap, HashSet, VecDeque};
 
 use crate::config::{PlacementKind, SystemConfig};
 use crate::core::request::RequestSpec;
-use crate::core::types::{Micros, RequestId};
+use crate::core::types::{Micros, RequestId, Tokens};
 use crate::engine::Engine;
-use crate::metrics::RunReport;
+use crate::kv::prefix;
+use crate::metrics::{RunReport, SharedPrefixStats};
 use crate::workload::Trace;
+
+pub use shared_prefix::{PrefixDeltaSink, SharedPrefixIndex};
 
 /// Safety valve against scheduling livelock across the fleet (mirrors
 /// the engine's own guard).
 const MAX_FLEET_STEPS: u64 = 400_000_000;
 
-/// Choose a replica for the next arrival under `policy`. `rr_next` is
-/// the round-robin cursor (ignored by the other policies). Ties break
+/// Choose a replica for the next arrival under `policy`, returning the
+/// chosen index and — for prefix-affinity placement — the cached-token
+/// credit the choice was steered by (zero for every other policy, or
+/// when no [`SharedPrefixIndex`] is supplied). `rr_next` is the
+/// round-robin cursor (ignored by the other policies). Ties break
 /// toward the lowest replica index, keeping placement deterministic.
 /// Read-only over the replicas: probing a candidate never perturbs its
 /// state.
@@ -48,22 +67,27 @@ const MAX_FLEET_STEPS: u64 = 400_000_000;
 /// Shared by the simulation driver below and the serving frontend's
 /// wall-clock dispatch loop (`server::spawn_replicated`).
 pub fn pick_replica(replicas: &[Engine], policy: PlacementKind,
-                    rr_next: &mut usize) -> usize {
+                    rr_next: &mut usize, spec: &RequestSpec,
+                    shared: Option<&SharedPrefixIndex>)
+                    -> (usize, Tokens) {
     if replicas.len() <= 1 {
-        return 0;
+        return (0, Tokens::ZERO);
     }
     match policy {
         PlacementKind::RoundRobin => {
             let r = *rr_next % replicas.len();
             *rr_next += 1;
-            r
+            (r, Tokens::ZERO)
         }
-        PlacementKind::LeastLoaded => replicas
-            .iter()
-            .enumerate()
-            .min_by_key(|(i, e)| (e.live_load(), *i))
-            .map(|(i, _)| i)
-            .unwrap_or(0),
+        PlacementKind::LeastLoaded => (
+            replicas
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, e)| (e.live_load(), *i))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+            Tokens::ZERO,
+        ),
         PlacementKind::MemoryOverTime => {
             let mut best = 0usize;
             let mut best_load = f64::INFINITY;
@@ -74,9 +98,167 @@ pub fn pick_replica(replicas: &[Engine], policy: PlacementKind,
                     best_load = load;
                 }
             }
-            best
+            (best, Tokens::ZERO)
+        }
+        PlacementKind::PrefixAffinity => {
+            // Probe the arrival's content chain against the fleet
+            // index: each replica's consecutive leading resident blocks
+            // become a cached-token credit that discounts the prefill
+            // leg of the arrival's own rank integral on that replica —
+            // the same memory-over-time objective, now seeing what each
+            // replica already holds.
+            let credits = prefix_credits(replicas, spec, shared);
+            let mut best = 0usize;
+            let mut best_score = f64::INFINITY;
+            for (i, e) in replicas.iter().enumerate() {
+                let score =
+                    e.placement_score_prefixed(spec, Tokens(credits[i]));
+                if score < best_score {
+                    best = i;
+                    best_score = score;
+                }
+            }
+            (best, Tokens(credits[best]))
         }
     }
+}
+
+/// Best sibling able to admit `spec` right now, excluding `owner` —
+/// the admission re-queue's target choice. Scored like placement:
+/// under prefix-affinity with a live index the sibling's score carries
+/// the same prefill-leg discount for resident prefixes (so a rescue
+/// never silently defeats steering — the request's prefix home wins
+/// whenever it can admit); every other policy takes the least
+/// outstanding memory-over-time. Ties to the lowest index. Siblings
+/// that cannot admit the spec are skipped *before* any scoring, so in
+/// the saturated-fleet case (everyone full) a call costs O(replicas)
+/// cheap arithmetic, and the O(live) load probes run only when a
+/// rescue is actually about to happen — at most once per request,
+/// thanks to the caller's once-only guard.
+///
+/// `reserved[j]` tokens are already promised to replica `j` by earlier
+/// moves of the same sweep (block-rounded), so one sweep cannot
+/// overcommit a sibling whose adoptees hold no KV yet.
+///
+/// Returns the chosen sibling and its cached-token credit (zero
+/// outside prefix-affinity).
+pub fn pick_rescue_sibling(replicas: &[Engine], owner: usize,
+                           spec: &RequestSpec, policy: PlacementKind,
+                           shared: Option<&SharedPrefixIndex>,
+                           reserved: &[u64])
+                           -> Option<(usize, Tokens)> {
+    // Admissibility first: in the saturated case nothing below runs —
+    // no prompt hashing, no load sums.
+    let fitting: Vec<usize> = (0..replicas.len())
+        .filter(|&j| {
+            j != owner
+                && replicas[j].can_fit_fresh_with(
+                    spec,
+                    Tokens(reserved.get(j).copied().unwrap_or(0)))
+        })
+        .collect();
+    if fitting.is_empty() {
+        return None;
+    }
+    let affinity = policy == PlacementKind::PrefixAffinity;
+    let credits: Vec<u64> = if affinity {
+        prefix_credits(replicas, spec, shared)
+    } else {
+        vec![0; replicas.len()]
+    };
+    let mut best: Option<(f64, usize)> = None;
+    for &j in &fitting {
+        let score = if affinity {
+            replicas[j].placement_score_prefixed(spec,
+                                                 Tokens(credits[j]))
+        } else {
+            replicas[j].load_memory_over_time()
+        };
+        // Ascending j: strict < keeps the lowest index on ties.
+        let better = match best {
+            None => true,
+            Some((bs, _)) => score < bs,
+        };
+        if better {
+            best = Some((score, j));
+        }
+    }
+    best.map(|(_, j)| (j, Tokens(credits[j])))
+}
+
+/// Per-replica cached-token credits of `spec`'s prompt chain against
+/// the shared index — the probe shared by prefix-affinity placement
+/// and the rescue target choice. All zeros when no index is supplied
+/// or it is empty (nothing is hashed in that case).
+fn prefix_credits(replicas: &[Engine], spec: &RequestSpec,
+                  shared: Option<&SharedPrefixIndex>) -> Vec<u64> {
+    match shared {
+        Some(index) if !index.is_empty() => {
+            let block_size = replicas[0].cfg.block_size;
+            let chain = prefix::content_chain(spec, block_size,
+                                              spec.prompt_tokens);
+            index.cached_tokens_per_replica(&chain, block_size,
+                                            replicas.len())
+        }
+        _ => vec![0; replicas.len()],
+    }
+}
+
+/// One admission re-queue sweep over `owner`'s stranded requests — the
+/// protocol core shared by the simulated fleet
+/// ([`ReplicaSet::rescue_stranded`]) and the serving frontend: skip
+/// ids already moved once (`requeued`), pick the target via
+/// [`pick_rescue_sibling`], withdraw from the owner, adopt on the
+/// target. Returns the moves made as `(id, target, credit)` so each
+/// driver applies its own side effects (dispatch-log rewrite and
+/// steering-stats re-booking vs. completion-watcher re-pointing).
+pub fn rescue_stranded_on(replicas: &mut [Engine], owner: usize,
+                          policy: PlacementKind,
+                          shared: Option<&SharedPrefixIndex>,
+                          requeued: &mut HashSet<RequestId>)
+                          -> Vec<(RequestId, usize, Tokens)> {
+    let stranded = replicas[owner].stranded_waiting();
+    if stranded.is_empty() {
+        return Vec::new();
+    }
+    let block_size = replicas[0].cfg.block_size.max(1);
+    // Tokens promised to each sibling: its own owed-but-unadmitted
+    // backlog (covering adoptees of *previous* sweeps, which hold no
+    // KV until admitted and are invisible to the block manager) plus
+    // this sweep's earlier moves. Without the reservation, sweeps
+    // could overcommit one sibling and burn later victims' once-only
+    // guards on moves that leave them worse off. Block-rounded,
+    // matching what admission will allocate.
+    let mut promised: Vec<u64> = replicas
+        .iter()
+        .map(|e| e.owed_admission_tokens().0)
+        .collect();
+    let mut moves = Vec::new();
+    for id in stranded {
+        if requeued.contains(&id) {
+            continue;
+        }
+        let target = {
+            let Some(req) = replicas[owner].request(id) else {
+                continue;
+            };
+            pick_rescue_sibling(replicas, owner, &req.spec, policy,
+                                shared, &promised)
+        };
+        let Some((j, credit)) = target else {
+            continue; // no sibling can admit it either — leave it
+        };
+        let Some(w) = replicas[owner].withdraw_waiting(id) else {
+            continue;
+        };
+        promised[j] +=
+            (w.spec.prompt_tokens.0 + 1).div_ceil(block_size)
+                * block_size;
+        requeued.insert(id);
+        replicas[j].adopt(w);
+        moves.push((id, j, credit));
+    }
+    moves
 }
 
 /// Fleet-wide result of a multi-replica run: the aggregate plus each
@@ -87,6 +269,10 @@ pub struct FleetReport {
     pub fleet: RunReport,
     pub per_replica: Vec<RunReport>,
     pub placement: PlacementKind,
+    /// Shared prefix index stats — `Some` only when `--shared-prefix`
+    /// was active, so the index-less fleet JSON (the PR 3 shape) stays
+    /// byte-identical with the feature off.
+    pub shared_prefix: Option<SharedPrefixStats>,
 }
 
 impl FleetReport {
@@ -97,7 +283,7 @@ impl FleetReport {
     /// and carries its timeline directly).
     pub fn to_json(&self, with_timeline: bool) -> String {
         use crate::util::json::{self, Value};
-        json::write(&json::obj(vec![
+        let mut pairs = vec![
             ("replicas", json::num(self.per_replica.len() as f64)),
             ("placement", json::s(self.placement.label())),
             ("fleet", self.fleet.to_value(with_timeline)),
@@ -107,20 +293,43 @@ impl FleetReport {
                  .iter()
                  .map(|r| r.to_value(with_timeline))
                  .collect())),
-        ]))
+        ];
+        if let Some(stats) = &self.shared_prefix {
+            pairs.push(("shared_prefix", stats.to_value()));
+        }
+        json::write(&json::obj(pairs))
     }
 }
 
-/// N engines, one shared admission queue, a placement policy.
+/// N engines, one shared admission queue, a placement policy — plus,
+/// under `--shared-prefix`, the fleet-level [`SharedPrefixIndex`] the
+/// prefix-affinity placement probes.
 pub struct ReplicaSet {
     replicas: Vec<Engine>,
     policy: PlacementKind,
     /// Shared admission queue: arrival-sorted, not yet placed.
     pending: VecDeque<RequestSpec>,
-    /// Dispatch log: every placed request and its owning replica.
+    /// Dispatch log: every placed request and its owning replica (a
+    /// re-queued request's entry is rewritten to its final owner).
     assignments: Vec<(RequestId, usize)>,
     rr_next: usize,
     steps: u64,
+    /// Fleet-wide hash → replica-set mirror of the per-replica prefix
+    /// caches (`--shared-prefix`); `None` keeps the PR 3 path intact.
+    shared: Option<SharedPrefixIndex>,
+    /// Steering stats reported alongside the fleet report; `Some` iff
+    /// `shared` is.
+    shared_stats: Option<SharedPrefixStats>,
+    /// Placement-aware admission re-queue enabled
+    /// (`cfg.admission_requeue`, replicas > 1).
+    requeue: bool,
+    /// Requests already re-queued once — a second strandedness is
+    /// genuine fleet-wide pressure, and bouncing would thrash.
+    requeued: HashSet<RequestId>,
+    /// Which replica each steered request was credited to (and for how
+    /// many tokens), so a later rescue can re-book the stats against
+    /// where the request actually ended up.
+    steered_log: HashMap<RequestId, (usize, u64)>,
 }
 
 impl ReplicaSet {
@@ -130,7 +339,11 @@ impl ReplicaSet {
     pub fn simulated(cfg: SystemConfig) -> ReplicaSet {
         assert!(cfg.replicas >= 1, "a fleet needs at least one replica");
         let policy = cfg.placement;
-        let replicas = (0..cfg.replicas)
+        let track_shared = cfg.shared_prefix && cfg.prefix_cache.enabled
+            && cfg.replicas > 1;
+        let requeue = cfg.admission_requeue && cfg.replicas > 1;
+        let n = cfg.replicas;
+        let replicas = (0..n)
             .map(|_| Engine::simulated(cfg.clone()))
             .collect();
         ReplicaSet {
@@ -140,6 +353,12 @@ impl ReplicaSet {
             assignments: Vec::new(),
             rr_next: 0,
             steps: 0,
+            shared: track_shared.then(SharedPrefixIndex::new),
+            shared_stats: track_shared
+                .then(|| SharedPrefixStats::new(n)),
+            requeue,
+            requeued: HashSet::new(),
+            steered_log: HashMap::new(),
         }
     }
 
@@ -156,8 +375,21 @@ impl ReplicaSet {
     }
 
     /// Every placed request with its owning replica, in dispatch order.
+    /// A request the admission re-queue moved appears once, under its
+    /// final owner.
     pub fn assignments(&self) -> &[(RequestId, usize)] {
         &self.assignments
+    }
+
+    /// The fleet-level shared prefix index, when `--shared-prefix` (and
+    /// the per-replica prefix cache) is active.
+    pub fn shared_index(&self) -> Option<&SharedPrefixIndex> {
+        self.shared.as_ref()
+    }
+
+    /// Steering stats of the shared index (`Some` iff it is active).
+    pub fn shared_stats(&self) -> Option<&SharedPrefixStats> {
+        self.shared_stats.as_ref()
     }
 
     /// Fleet frontier: the minimum replica clock (the time up to which
@@ -177,19 +409,18 @@ impl ReplicaSet {
         }
     }
 
-    /// Queue a spec for arrival-time placement. Keeps the shared queue
-    /// arrival-sorted (traces already are; the scan is O(1) for the
-    /// common in-order append).
+    /// Queue a spec for arrival-time placement, keeping the shared
+    /// queue arrival-sorted. `partition_point` binary search: O(log n)
+    /// comparisons per insert even for the serve frontend's
+    /// out-of-order submissions (the old backward scan degenerated to
+    /// O(n²) total there), and equal keys land *after* their peers —
+    /// the same stable order the scan produced. In-order trace appends
+    /// still cost one comparison plus a tail push.
     pub fn enqueue(&mut self, spec: RequestSpec) {
         let key = (spec.arrival, spec.id);
-        let mut idx = self.pending.len();
-        while idx > 0 {
-            let prev = &self.pending[idx - 1];
-            if (prev.arrival, prev.id) <= key {
-                break;
-            }
-            idx -= 1;
-        }
+        let idx = self
+            .pending
+            .partition_point(|s| (s.arrival, s.id) <= key);
         self.pending.insert(idx, spec);
     }
 
@@ -201,11 +432,79 @@ impl ReplicaSet {
             .is_some_and(|s| s.arrival <= frontier)
         {
             let spec = self.pending.pop_front().unwrap();
-            let r = pick_replica(&self.replicas, self.policy,
-                                 &mut self.rr_next);
+            let (r, credit) = pick_replica(&self.replicas, self.policy,
+                                           &mut self.rr_next, &spec,
+                                           self.shared.as_ref());
+            // A spec submit would fail-fast drop (it can never fit an
+            // empty replica) must not count as steering — the credit
+            // will never be served.
+            if self.replicas[r].fits_capacity(&spec) {
+                if let Some(stats) = self.shared_stats.as_mut() {
+                    stats.note(r, credit.0);
+                    if credit > Tokens::ZERO {
+                        self.steered_log.insert(spec.id, (r, credit.0));
+                    }
+                }
+            }
             self.assignments.push((spec.id, r));
             self.replicas[r].enqueue(spec);
         }
+    }
+
+    /// Mirror replica `i`'s journaled prefix-cache resident-set deltas
+    /// into the fleet index through the [`PrefixDeltaSink`] observer
+    /// seam (no-op unless `--shared-prefix` armed the journals).
+    fn absorb_prefix_deltas(&mut self, i: usize) {
+        let Some(index) = self.shared.as_mut() else {
+            return;
+        };
+        for delta in self.replicas[i].drain_prefix_deltas() {
+            index.on_delta(i, &delta);
+        }
+    }
+
+    /// Placement-aware admission re-queue (the ROADMAP follow-on to
+    /// multi-replica dispatch): a request OOM-rejected by replica
+    /// `owner` before it ever ran — holding nothing there — is
+    /// withdrawn and re-queued **once** to the best sibling that can
+    /// admit it right now ([`pick_rescue_sibling`]: owner excluded,
+    /// scored like placement — prefix-affinity keeps its discount — and
+    /// ties to the lowest index). Its starvation state moves with it,
+    /// its dispatch-log entry is rewritten so every request still has
+    /// exactly one owner, and any dispatch-time steering claim is
+    /// re-booked against the rescue target. Returns whether any request
+    /// moved (fleet-level progress).
+    fn rescue_stranded(&mut self, owner: usize) -> bool {
+        if !self.requeue {
+            return false;
+        }
+        let moves = rescue_stranded_on(&mut self.replicas, owner,
+                                       self.policy, self.shared.as_ref(),
+                                       &mut self.requeued);
+        for &(id, j, credit) in &moves {
+            // The dispatch-time steering claim no longer holds once the
+            // request leaves the replica it was steered to: re-book the
+            // stats against the rescue target's actual credit.
+            if let Some(stats) = self.shared_stats.as_mut() {
+                if let Some((r0, tokens)) = self.steered_log.remove(&id)
+                {
+                    stats.unnote(r0, tokens);
+                }
+                stats.note(j, credit.0);
+                if credit > Tokens::ZERO {
+                    self.steered_log.insert(id, (j, credit.0));
+                }
+            }
+            if let Some(entry) = self
+                .assignments
+                .iter_mut()
+                .rev()
+                .find(|(rid, _)| *rid == id)
+            {
+                entry.1 = j;
+            }
+        }
+        !moves.is_empty()
     }
 
     /// One fleet round: dispatch due arrivals, then advance the
@@ -258,8 +557,22 @@ impl ReplicaSet {
         let mut order: Vec<usize> = (0..self.replicas.len()).collect();
         order.sort_by_key(|&i| (self.replicas[i].now(), i));
         for i in order {
-            if self.replicas[i].has_live_work() && self.replicas[i].step()
-            {
+            if !self.replicas[i].has_live_work() {
+                continue;
+            }
+            let progressed = self.replicas[i].step();
+            // A step mutates only the stepped replica — mirror its
+            // prefix-cache resident-set deltas into the shared index
+            // even when it reported no progress (a no-progress step can
+            // still have purged cache entries while dropping an
+            // oversized request), then give any request it
+            // memory-rejected before first run a one-time chance on a
+            // sibling with free KV. A rescue is fleet progress in its
+            // own right: the moved request must get its turn even if
+            // every replica's own step stalled this round.
+            self.absorb_prefix_deltas(i);
+            let rescued = self.rescue_stranded(i);
+            if progressed || rescued {
                 return true;
             }
         }
@@ -336,6 +649,7 @@ impl ReplicaSet {
             fleet,
             per_replica,
             placement: self.policy,
+            shared_prefix: self.shared_stats.clone(),
         }
     }
 }
@@ -343,7 +657,8 @@ impl ReplicaSet {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{CostModel, SchedulerKind};
+    use crate::config::{CostModel, HandlingPolicy, SchedulerKind};
+    use crate::core::request::{ApiCallSpec, ApiType, HandlingStrategy};
     use crate::core::types::Tokens;
 
     fn unit_cfg(replicas: usize, placement: PlacementKind)
@@ -422,6 +737,93 @@ mod tests {
             set.assignments().iter().map(|(_, r)| *r).collect();
         replicas.sort_unstable();
         assert_eq!(replicas, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn enqueue_keeps_reversed_arrivals_sorted() {
+        // Regression for the O(n²) backward-scan insert: reversed
+        // arrival order is its worst case and the serve frontend's
+        // realistic one. The queue must stay (arrival, id)-sorted.
+        let mut set =
+            ReplicaSet::simulated(unit_cfg(2, PlacementKind::RoundRobin));
+        for i in (0..64u64).rev() {
+            set.enqueue(simple_spec(i, i * 1_000, 1));
+        }
+        // Equal-arrival duplicates pin the id tie-break too.
+        set.enqueue(simple_spec(90, 10_000, 1));
+        set.enqueue(simple_spec(70, 10_000, 1));
+        let keys: Vec<(Micros, RequestId)> =
+            set.pending.iter().map(|s| (s.arrival, s.id)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted, "queue must stay arrival-sorted");
+        assert_eq!(set.pending.len(), 66);
+    }
+
+    #[test]
+    fn requeue_rescues_stranded_request_to_idle_sibling() {
+        // Regression (placement-aware admission): round-robin puts X on
+        // replica 0, whose memory request H holds through a 100 000 s
+        // Preserve API call, while replica 1 goes idle after its short
+        // job. PR 3 stranded X on replica 0 until the API returned; the
+        // re-queue must move it to the idle sibling and serve it now.
+        let h = RequestSpec {
+            id: RequestId(0),
+            arrival: Micros(0),
+            prompt: String::new(),
+            prompt_tokens: Tokens(25),
+            api_calls: vec![ApiCallSpec {
+                decode_before: Tokens(2),
+                api_type: ApiType::Qa,
+                duration: Micros(100_000 * 1_000_000),
+                response_tokens: Tokens(0),
+            }],
+            final_decode: Tokens(1),
+        };
+        let run = |requeue: bool| {
+            let mut cfg = unit_cfg(2, PlacementKind::RoundRobin);
+            cfg.memory_budget = Tokens(30);
+            cfg.handling =
+                HandlingPolicy::Forced(HandlingStrategy::Preserve);
+            cfg.admission_requeue = requeue;
+            let mut set = ReplicaSet::simulated(cfg);
+            let trace = Trace::new("t", 1.0, vec![
+                h.clone(),
+                simple_spec(1, 0, 2),
+                RequestSpec {
+                    prompt_tokens: Tokens(4),
+                    ..simple_spec(2, 1_000_000, 2)
+                },
+            ]);
+            let report = set.run_trace(&trace);
+            assert_eq!(report.fleet.completed, 3,
+                       "every request completes either way");
+            set
+        };
+
+        let rescued = run(true);
+        let owner: Vec<usize> = rescued
+            .assignments()
+            .iter()
+            .filter(|(id, _)| *id == RequestId(2))
+            .map(|(_, r)| *r)
+            .collect();
+        assert_eq!(owner, vec![1],
+                   "X must be re-homed (once) to the idle sibling");
+        assert!(rescued.replica(0).request(RequestId(2)).is_none(),
+                "no trace of X may remain on the rejecting owner");
+        let x = rescued.replica(1).request(RequestId(2)).unwrap();
+        assert!(x.is_finished());
+        assert!(x.finished_at.unwrap() < Micros(60_000_000),
+                "rescued X must finish long before the API returns \
+                 (got {})", x.finished_at.unwrap());
+
+        // Without the re-queue, X is stranded behind the full owner
+        // until the 100 000 s call returns — the PR 3 failure mode.
+        let stranded = run(false);
+        let x = stranded.replica(0).request(RequestId(2)).unwrap();
+        assert!(x.finished_at.unwrap() > Micros(100_000 * 1_000_000),
+                "control run must reproduce the stranding");
     }
 
     #[test]

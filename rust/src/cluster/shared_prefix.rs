@@ -1,0 +1,247 @@
+//! Fleet-level shared prefix index (`--shared-prefix`): a cross-replica
+//! map from content-chain [`BlockHash`] (the same hashes
+//! [`crate::kv::prefix::content_chain`] gives the per-replica
+//! `PrefixCache`) to the set of replicas whose *local* cache currently
+//! holds that block resident.
+//!
+//! PR 3's fleet kept every replica's prefix cache private, so identical
+//! prompts placed on different replicas re-prefilled from scratch —
+//! exactly the memory-over-time waste the LAMPS rank integral is meant
+//! to minimize, leaking at the placement layer. The index closes that
+//! gap the way SGLang's RadixAttention motivates and Preble extends to
+//! distributed placement: `--placement prefix-affinity` probes an
+//! arrival's chain here, converts per-replica *consecutive leading*
+//! hits into a cached-token credit, and discounts the prefill leg of
+//! the arrival's fresh rank integral on the replicas that already hold
+//! its prefix (see
+//! [`crate::coordinator::ranking::memory_over_time_fresh_prefixed`]).
+//!
+//! **Synchronization.** Each replica's `PrefixCache` journals its
+//! resident-set deltas ([`PrefixDelta`]: register / evict / purge); the
+//! [`ReplicaSet`](super::ReplicaSet) drains the stepped replica's
+//! journal after every step and feeds it through the
+//! [`PrefixDeltaSink`] observer seam. Because the fleet simulation is a
+//! sequential discrete-event loop, the mirror is exact at every step
+//! boundary; the wall-clock serving frontend drains on the same
+//! schedule and may lag a step.
+//!
+//! **Advisory only.** Nothing correctness-bearing reads the index: a
+//! stale *present* entry merely places a request whose blocks were
+//! evicted meanwhile (its admission walks the replica-local cache and
+//! re-prefills the miss), and a stale *absent* entry merely misses a
+//! steering opportunity. Disabled, the fleet is byte-identical to the
+//! index-less PR 3 path (`tests/replica_properties.rs` pins both
+//! properties).
+
+use std::collections::HashMap;
+
+use crate::kv::prefix::{BlockHash, PrefixDelta};
+
+/// Replicas beyond this index are not tracked (the per-hash replica set
+/// is a `u64` bitset). Untracked replicas simply never attract
+/// prefix-affinity steering — advisory, not a correctness limit.
+pub const MAX_TRACKED_REPLICAS: usize = 64;
+
+/// Observer of one replica's prefix-cache resident-set deltas — the
+/// seam through which [`ReplicaSet`](super::ReplicaSet) (or a test
+/// double) mirrors per-replica journals into fleet-level state.
+pub trait PrefixDeltaSink {
+    fn on_delta(&mut self, replica: usize, delta: &PrefixDelta);
+}
+
+/// The fleet-wide hash → replica-set map. See the module docs.
+#[derive(Debug, Clone, Default)]
+pub struct SharedPrefixIndex {
+    /// Bit `i` set ⇔ replica `i` reported the hash resident.
+    map: HashMap<BlockHash, u64>,
+}
+
+impl SharedPrefixIndex {
+    pub fn new() -> SharedPrefixIndex {
+        SharedPrefixIndex::default()
+    }
+
+    /// Distinct hashes currently tracked.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Mark `hash` resident on `replica`.
+    pub fn insert(&mut self, hash: BlockHash, replica: usize) {
+        if replica >= MAX_TRACKED_REPLICAS {
+            return;
+        }
+        *self.map.entry(hash).or_insert(0) |= 1 << replica;
+    }
+
+    /// Mark `hash` no longer resident on `replica`; the entry vanishes
+    /// with its last holder (no entry survives a replica-local purge).
+    pub fn remove(&mut self, hash: BlockHash, replica: usize) {
+        if replica >= MAX_TRACKED_REPLICAS {
+            return;
+        }
+        if let Some(mask) = self.map.get_mut(&hash) {
+            *mask &= !(1u64 << replica);
+            if *mask == 0 {
+                self.map.remove(&hash);
+            }
+        }
+    }
+
+    /// Is `hash` recorded resident on `replica`?
+    pub fn holds(&self, hash: BlockHash, replica: usize) -> bool {
+        if replica >= MAX_TRACKED_REPLICAS {
+            return false;
+        }
+        self.map
+            .get(&hash)
+            .is_some_and(|mask| mask & (1u64 << replica) != 0)
+    }
+
+    /// Replicas recorded holding `hash`, ascending.
+    pub fn replicas_of(&self, hash: BlockHash) -> Vec<usize> {
+        let Some(&mask) = self.map.get(&hash) else {
+            return Vec::new();
+        };
+        (0..MAX_TRACKED_REPLICAS)
+            .filter(|i| mask & (1u64 << i) != 0)
+            .collect()
+    }
+
+    /// Every tracked hash, sorted (test/debug introspection).
+    pub fn hashes(&self) -> Vec<BlockHash> {
+        let mut hashes: Vec<BlockHash> = self.map.keys().copied().collect();
+        hashes.sort_unstable();
+        hashes
+    }
+
+    /// Per-replica cached-token credit of `chain`: for each of the
+    /// first `replicas` replicas, how many **consecutive leading**
+    /// chain blocks it holds resident, in tokens. Consecutive-only
+    /// matches what `BlockManager::allocate_prefixed` can actually
+    /// serve — the hash-consing property makes an interior hit behind a
+    /// missing block unusable.
+    pub fn cached_tokens_per_replica(&self, chain: &[BlockHash],
+                                     block_size: u64, replicas: usize)
+                                     -> Vec<u64> {
+        let mut credit = vec![0u64; replicas];
+        let tracked = replicas.min(MAX_TRACKED_REPLICAS);
+        if tracked == 0 {
+            return credit;
+        }
+        let mut alive: u64 = if tracked >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << tracked) - 1
+        };
+        for hash in chain {
+            let Some(&mask) = self.map.get(hash) else {
+                break;
+            };
+            alive &= mask;
+            if alive == 0 {
+                break;
+            }
+            for (i, c) in credit.iter_mut().enumerate().take(tracked) {
+                if alive & (1u64 << i) != 0 {
+                    *c += block_size;
+                }
+            }
+        }
+        credit
+    }
+}
+
+impl PrefixDeltaSink for SharedPrefixIndex {
+    fn on_delta(&mut self, replica: usize, delta: &PrefixDelta) {
+        match *delta {
+            PrefixDelta::Registered(hash) => self.insert(hash, replica),
+            PrefixDelta::Removed(hash) => self.remove(hash, replica),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_lifecycle() {
+        let mut idx = SharedPrefixIndex::new();
+        assert!(idx.is_empty());
+        idx.insert(7, 0);
+        idx.insert(7, 2);
+        idx.insert(9, 1);
+        assert_eq!(idx.len(), 2);
+        assert!(idx.holds(7, 0) && idx.holds(7, 2) && !idx.holds(7, 1));
+        assert_eq!(idx.replicas_of(7), vec![0, 2]);
+        assert_eq!(idx.hashes(), vec![7, 9]);
+        idx.remove(7, 0);
+        assert_eq!(idx.replicas_of(7), vec![2]);
+        // The entry vanishes with its last holder.
+        idx.remove(7, 2);
+        assert!(!idx.holds(7, 2));
+        assert_eq!(idx.hashes(), vec![9]);
+        // Removing an absent pair is a no-op.
+        idx.remove(7, 2);
+        idx.remove(42, 0);
+        assert_eq!(idx.len(), 1);
+    }
+
+    #[test]
+    fn sink_applies_journal_deltas() {
+        let mut idx = SharedPrefixIndex::new();
+        idx.on_delta(1, &PrefixDelta::Registered(5));
+        idx.on_delta(3, &PrefixDelta::Registered(5));
+        assert_eq!(idx.replicas_of(5), vec![1, 3]);
+        idx.on_delta(1, &PrefixDelta::Removed(5));
+        assert_eq!(idx.replicas_of(5), vec![3]);
+        idx.on_delta(3, &PrefixDelta::Removed(5));
+        assert!(idx.is_empty(), "no entry survives its last purge");
+    }
+
+    #[test]
+    fn credit_counts_consecutive_leading_blocks_only() {
+        let mut idx = SharedPrefixIndex::new();
+        // Replica 0 holds blocks 0,1,2; replica 1 holds 0 and 2 (gap at
+        // 1); replica 2 holds nothing of this chain.
+        for h in [10, 11, 12] {
+            idx.insert(h, 0);
+        }
+        idx.insert(10, 1);
+        idx.insert(12, 1);
+        let credit = idx.cached_tokens_per_replica(&[10, 11, 12], 16, 3);
+        assert_eq!(credit, vec![48, 16, 0],
+                   "an interior hit behind a gap is unusable");
+        // A chain whose first block is unknown anywhere credits no one.
+        assert_eq!(idx.cached_tokens_per_replica(&[99, 10], 16, 3),
+                   vec![0, 0, 0]);
+        // Empty chain, empty fleet: degenerate shapes stay sane.
+        assert_eq!(idx.cached_tokens_per_replica(&[], 16, 3),
+                   vec![0, 0, 0]);
+        assert!(idx.cached_tokens_per_replica(&[10], 16, 0).is_empty());
+    }
+
+    #[test]
+    fn untracked_replicas_are_ignored_not_errors() {
+        let mut idx = SharedPrefixIndex::new();
+        idx.insert(1, MAX_TRACKED_REPLICAS); // silently dropped
+        assert!(idx.is_empty());
+        idx.insert(1, 0);
+        idx.remove(1, MAX_TRACKED_REPLICAS + 5); // no-op
+        assert!(idx.holds(1, 0));
+        assert!(!idx.holds(1, MAX_TRACKED_REPLICAS));
+        // Credit for a fleet wider than the bitset: the tracked prefix
+        // of replicas still gets credit, the rest get zero.
+        let credit =
+            idx.cached_tokens_per_replica(&[1], 4,
+                                          MAX_TRACKED_REPLICAS + 2);
+        assert_eq!(credit.len(), MAX_TRACKED_REPLICAS + 2);
+        assert_eq!(credit[0], 4);
+        assert_eq!(credit[MAX_TRACKED_REPLICAS], 0);
+    }
+}

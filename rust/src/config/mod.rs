@@ -139,6 +139,20 @@ pub enum PlacementKind {
     /// (§4.3) summed over a replica's live requests steers placement the
     /// same way it steers ordering.
     MemoryOverTime,
+    /// Memory-over-time plus prefix affinity: the arrival's own fresh
+    /// rank integral — including its *prefill leg*, discounted by the
+    /// leading prompt blocks already resident in a replica's prefix
+    /// cache per the fleet [`SharedPrefixIndex`] — is added to each
+    /// replica's outstanding load, so shared-prefix requests steer
+    /// toward the replica that already holds their prefix (Preble-style
+    /// distributed prefix-sharing-aware placement, expressed through
+    /// the existing integral rather than a bolted-on heuristic).
+    /// Without `--shared-prefix` the discount is zero everywhere and
+    /// only the per-replica profiled inputs differentiate it from
+    /// `MemoryOverTime`.
+    ///
+    /// [`SharedPrefixIndex`]: crate::cluster::SharedPrefixIndex
+    PrefixAffinity,
     /// Fewest live (unfinished) requests.
     LeastLoaded,
     /// Rotate through replicas in arrival order.
@@ -149,6 +163,7 @@ impl PlacementKind {
     pub fn label(&self) -> &'static str {
         match self {
             PlacementKind::MemoryOverTime => "memory-over-time",
+            PlacementKind::PrefixAffinity => "prefix-affinity",
             PlacementKind::LeastLoaded => "least-loaded",
             PlacementKind::RoundRobin => "round-robin",
         }
@@ -158,6 +173,9 @@ impl PlacementKind {
     pub fn parse(name: &str) -> Option<PlacementKind> {
         Some(match name {
             "memory-over-time" | "mot" => PlacementKind::MemoryOverTime,
+            "prefix-affinity" | "affinity" => {
+                PlacementKind::PrefixAffinity
+            }
             "least-loaded" => PlacementKind::LeastLoaded,
             "round-robin" => PlacementKind::RoundRobin,
             _ => return None,
@@ -293,6 +311,21 @@ pub struct SystemConfig {
     /// Cross-replica placement policy (`--placement`); only consulted
     /// when `replicas > 1`.
     pub placement: PlacementKind,
+    /// Fleet-level shared prefix index (`--shared-prefix`): replicas
+    /// journal their prefix-cache resident-set deltas and the
+    /// [`ReplicaSet`](crate::cluster::ReplicaSet) mirrors them into a
+    /// cross-replica hash→replicas map that prefix-affinity placement
+    /// probes. Strictly advisory — a stale entry costs a re-prefill,
+    /// never a correctness error — and off by default ⇒ byte-identical
+    /// to the index-less fleet. Only meaningful alongside
+    /// `prefix_cache.enabled` and `replicas > 1`.
+    pub shared_prefix: bool,
+    /// Placement-aware admission re-queue: a request OOM-rejected by
+    /// its owner replica before it ever ran may be re-queued *once* to
+    /// the best sibling with free KV instead of waiting out the
+    /// owner's pressure (ROADMAP follow-on to multi-replica dispatch).
+    /// Only applies with `replicas > 1`.
+    pub admission_requeue: bool,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -314,6 +347,8 @@ impl Default for SystemConfig {
             prefix_cache: PrefixCacheConfig::default(),
             replicas: 1,
             placement: PlacementKind::MemoryOverTime,
+            shared_prefix: false,
+            admission_requeue: true,
             cost: CostModel::paper_scale(),
             seed: 0,
         }
@@ -420,22 +455,30 @@ mod tests {
         let c = SystemConfig::default();
         assert_eq!(c.replicas, 1);
         assert_eq!(c.placement, PlacementKind::MemoryOverTime);
-        // Presets must not silently enable multi-replica dispatch.
+        assert!(!c.shared_prefix, "shared index must default off");
+        assert!(c.admission_requeue,
+                "admission re-queue is a bugfix, on by default");
+        // Presets must not silently enable multi-replica dispatch or
+        // the shared prefix index.
         for name in ["vllm", "infercept", "lamps"] {
-            assert_eq!(SystemConfig::preset(name).unwrap().replicas, 1,
-                       "{name}");
+            let p = SystemConfig::preset(name).unwrap();
+            assert_eq!(p.replicas, 1, "{name}");
+            assert!(!p.shared_prefix, "{name}");
         }
     }
 
     #[test]
     fn placement_parse_roundtrip() {
         for kind in [PlacementKind::MemoryOverTime,
+                     PlacementKind::PrefixAffinity,
                      PlacementKind::LeastLoaded,
                      PlacementKind::RoundRobin] {
             assert_eq!(PlacementKind::parse(kind.label()), Some(kind));
         }
         assert_eq!(PlacementKind::parse("mot"),
                    Some(PlacementKind::MemoryOverTime));
+        assert_eq!(PlacementKind::parse("affinity"),
+                   Some(PlacementKind::PrefixAffinity));
         assert_eq!(PlacementKind::parse("nope"), None);
     }
 

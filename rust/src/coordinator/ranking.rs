@@ -81,6 +81,31 @@ pub fn memory_over_time_fresh(spec: &RequestSpec,
                       inputs)
 }
 
+/// Placement-probe variant of [`memory_over_time_fresh`] that also
+/// charges the arrival's **prefill leg**: the materialized context sits
+/// in device memory for the remaining prefill time before the decode
+/// ramp even starts, and with `cached` leading tokens already resident
+/// in the target replica's prefix cache only the remainder must be
+/// materialized. Prefix-affinity placement discounts exactly this leg,
+/// so the rank integral itself — not a bolted-on heuristic — steers
+/// shared-prefix arrivals toward the replica that holds their prefix.
+///
+/// With `cached = 0` the leg is the full prompt's; it is then the same
+/// on every replica and cancels out of any cross-replica comparison,
+/// which is why the plain memory-over-time placement never needed it.
+pub fn memory_over_time_fresh_prefixed(spec: &RequestSpec,
+                                       predictions: &[SegmentPrediction],
+                                       handling: &[HandlingStrategy],
+                                       cost: &CostModel,
+                                       inputs: &RankInputs,
+                                       cached: Tokens) -> f64 {
+    let pending = spec.prompt_tokens.saturating_sub(cached);
+    let t_mat = cost.prefill_time(pending).0 as f64;
+    t_mat * spec.prompt_tokens.0 as f64
+        + memory_over_time_fresh(spec, predictions, handling, cost,
+                                 inputs)
+}
+
 /// Shared core: decode ramps + per-API waste terms from `start_seg`
 /// onward, starting at context `ctx` with `done_in_first` tokens of the
 /// first segment already generated.
@@ -326,6 +351,33 @@ mod tests {
         };
         assert_eq!(memory_over_time(&r2, &unit_cost(), &unit_inputs(3)),
                    memory_over_time(&r2, &unit_cost(), &coarse));
+    }
+
+    #[test]
+    fn prefixed_fresh_integral_discounts_prefill_leg_only() {
+        // Unit world: prefill is 1 s/token, so a 6-token prompt's
+        // uncached prefill leg holds 6 tokens for 6 s = 36 token-units
+        // on top of the plain fresh integral; 4 cached tokens shrink the
+        // leg to 2 s x 6 = 12; a fully cached prompt drops it entirely.
+        let mut r = fig3_request(2, 1, 7, 1, HandlingStrategy::Discard);
+        r.spec.prompt_tokens = Tokens(6);
+        let base = memory_over_time_fresh(&r.spec, &r.predictions,
+                                          &r.handling, &unit_cost(),
+                                          &unit_inputs(3));
+        let leg = |cached: u64| {
+            memory_over_time_fresh_prefixed(&r.spec, &r.predictions,
+                                            &r.handling, &unit_cost(),
+                                            &unit_inputs(3),
+                                            Tokens(cached))
+                - base
+        };
+        assert!((leg(0) - 36.0 * 1e6).abs() < 1e-3, "uncached {}", leg(0));
+        assert!((leg(4) - 12.0 * 1e6).abs() < 1e-3, "partial {}", leg(4));
+        assert_eq!(leg(6), 0.0, "fully cached prompt skips the leg");
+        // Over-credit (stale index optimism) saturates, never negative.
+        assert_eq!(leg(99), 0.0);
+        // More cached tokens never rank a replica worse.
+        assert!(leg(4) < leg(1));
     }
 
     #[test]

@@ -44,10 +44,12 @@ use crate::config::{HandlingPolicy, PredictorKind, SchedulerKind,
 use crate::coordinator::batch::{self, ComposeItem, IterationPlan};
 use crate::coordinator::handling::{select_strategy, WasteInputs};
 use crate::coordinator::ranking::{memory_over_time,
-                                  memory_over_time_fresh};
+                                  memory_over_time_fresh,
+                                  memory_over_time_fresh_prefixed};
 use crate::coordinator::scheduler::{make_scheduler, ScheduleContext,
                                     Scheduler};
-use crate::core::request::{HandlingStrategy, Phase, Request, RequestSpec};
+use crate::core::request::{HandlingStrategy, Phase, Request, RequestSpec,
+                           SegmentPrediction};
 use crate::core::types::{Micros, RequestId, Tokens};
 use crate::kv::{prefix, BlockManager, SwapSpace, TransferDir,
                 TransferQueue};
@@ -62,6 +64,22 @@ use clock::Clock;
 
 /// Safety valve against scheduling livelock in buggy configs.
 const MAX_ITERATIONS: u64 = 200_000_000;
+
+/// A request pulled off a replica by [`Engine::withdraw_waiting`] for
+/// the admission re-queue: everything the adopting sibling needs to
+/// resume it **without re-predicting** — the spec, the exact
+/// predictions and handling strategies it was admitted with (a second
+/// predictor pass would be real inference under PJRT, and a noisy
+/// predictor would silently change the handling choice mid-move), and
+/// its accrued §4.4 starvation state.
+#[derive(Debug, Clone)]
+pub struct WithdrawnRequest {
+    pub spec: RequestSpec,
+    pub predictions: Vec<SegmentPrediction>,
+    pub handling: Vec<HandlingStrategy>,
+    pub starvation_cnt: u32,
+    pub starving: bool,
+}
 
 pub struct Engine {
     pub cfg: SystemConfig,
@@ -114,13 +132,23 @@ pub struct Engine {
 impl Engine {
     pub fn new(cfg: SystemConfig, backend: Box<dyn Backend>,
                predictor: Box<dyn Predictor>, clock: Clock) -> Engine {
-        let kv = if cfg.prefix_cache.enabled {
+        let mut kv = if cfg.prefix_cache.enabled {
             BlockManager::with_prefix_cache(cfg.memory_budget,
                                             cfg.block_size,
                                             cfg.prefix_cache.cache_blocks)
         } else {
             BlockManager::new(cfg.memory_budget, cfg.block_size)
         };
+        if cfg.shared_prefix && cfg.prefix_cache.enabled
+            && cfg.replicas > 1
+        {
+            // Journal resident-set deltas for the fleet's shared prefix
+            // index (the ReplicaSet drains them after every step).
+            // Purely observational: nothing engine-side reads it back,
+            // which is what keeps `--shared-prefix` behavior-identical
+            // for every replica in isolation.
+            kv.enable_prefix_journal();
+        }
         let t_iter0 = cfg.cost.decode_iter_time(Tokens::ZERO).0 as f64;
         let c_other0 = cfg.memory_budget.0 as f64 / 2.0;
         Engine {
@@ -252,7 +280,15 @@ impl Engine {
     /// never runs inference, just because a replica was *considered*
     /// for placement).
     pub fn load_memory_over_time(&self) -> f64 {
-        let inputs = self.schedule_context().rank_inputs();
+        self.load_memory_over_time_with(
+            &self.schedule_context().rank_inputs())
+    }
+
+    /// [`Engine::load_memory_over_time`] against already-built rank
+    /// inputs, so a probe that needs the inputs for its own terms
+    /// ([`Engine::placement_score_prefixed`]) builds them once.
+    fn load_memory_over_time_with(
+        &self, inputs: &crate::coordinator::ranking::RankInputs) -> f64 {
         let cost = self.cfg.cost;
         // The sorted `live` index makes this O(live requests) — the
         // engine keeps finished entries around for result queries — and
@@ -262,16 +298,53 @@ impl Engine {
             .live
             .iter()
             .map(|id| memory_over_time(&self.requests[id], &cost,
-                                       &inputs))
+                                       inputs))
             .sum();
         let mut oracle = OraclePredictor;
         for spec in &self.pending {
             let predictions = oracle.predict(spec);
             let handling = self.assign_handling(spec, &predictions);
             total += memory_over_time_fresh(spec, &predictions,
-                                            &handling, &cost, &inputs);
+                                            &handling, &cost, inputs);
         }
         total
+    }
+
+    /// Prefix-affinity placement probe: this replica's outstanding
+    /// memory-over-time load plus the arrival's own fresh rank integral
+    /// *including its prefill leg*, with `cached` leading tokens of the
+    /// prompt already resident in this replica's prefix cache (per the
+    /// fleet's shared index) discounted from that leg. Like
+    /// [`Engine::load_memory_over_time`], the candidate is scored with
+    /// the stateless complete-information oracle so considering a
+    /// replica never perturbs it.
+    pub fn placement_score_prefixed(&self, spec: &RequestSpec,
+                                    cached: Tokens) -> f64 {
+        let inputs = self.schedule_context().rank_inputs();
+        let mut oracle = OraclePredictor;
+        let predictions = oracle.predict(spec);
+        let handling = self.assign_handling(spec, &predictions);
+        self.load_memory_over_time_with(&inputs)
+            + memory_over_time_fresh_prefixed(spec, &predictions,
+                                              &handling, &self.cfg.cost,
+                                              &inputs, cached)
+    }
+
+    // ------------------------------------------------------------------
+    // Fleet shared-prefix observation (cluster::SharedPrefixIndex)
+    // ------------------------------------------------------------------
+
+    /// Take the prefix-cache resident-set deltas journaled since the
+    /// last drain (empty unless `--shared-prefix` armed the journal).
+    /// The ReplicaSet feeds these to its fleet-level index observer.
+    pub fn drain_prefix_deltas(&mut self) -> Vec<crate::kv::PrefixDelta> {
+        self.kv.drain_prefix_deltas()
+    }
+
+    /// Every hash resident in this replica's prefix cache — the ground
+    /// truth the fleet index must stay a subset of (test invariant).
+    pub fn resident_prefix_hashes(&self) -> Vec<prefix::BlockHash> {
+        self.kv.resident_prefix_hashes()
     }
 
     /// Downcast access to backend-specific state (e.g. PJRT generated
@@ -318,6 +391,125 @@ impl Engine {
         self.requests.insert(id, req);
         self.live.insert(id);
         self.waiting.push(id);
+    }
+
+    // ------------------------------------------------------------------
+    // Placement-aware admission re-queue (cluster::ReplicaSet)
+    // ------------------------------------------------------------------
+
+    // (See [`WithdrawnRequest`] for what crosses a re-queue move.)
+
+    /// Never ran and holds no replica-local state (KV blocks, parked
+    /// swap context, in-flight transfer) — the shared eligibility gate
+    /// of [`Engine::stranded_waiting`] and [`Engine::withdraw_waiting`]:
+    /// only such a request may leave this replica.
+    fn relocatable(&self, id: RequestId) -> bool {
+        let Some(req) = self.requests.get(&id) else {
+            return false;
+        };
+        !req.was_scheduled
+            && !self.kv.contains(id)
+            && !self.swap.contains(id)
+            && !self.transfers.contains(id)
+    }
+
+    /// Waiting requests that have never run, hold no device/swap/
+    /// transfer state, and cannot currently fit this replica's memory —
+    /// the candidates a fleet may re-queue to a sibling with free KV
+    /// instead of leaving them to wait out this replica's pressure.
+    pub fn stranded_waiting(&self) -> Vec<RequestId> {
+        self.waiting
+            .iter()
+            .copied()
+            .filter(|id| self.relocatable(*id) && !self.fits_memory(*id))
+            .collect()
+    }
+
+    /// Could a not-yet-submitted spec be admitted here right now
+    /// (context plus one headroom token)? The sibling-side check of the
+    /// admission re-queue.
+    pub fn can_fit_fresh(&self, spec: &RequestSpec) -> bool {
+        self.can_fit_fresh_with(spec, Tokens::ZERO)
+    }
+
+    /// [`Engine::can_fit_fresh`] with `reserved` further tokens already
+    /// promised to other not-yet-admitted requests (a rescue sweep's
+    /// earlier adoptees, which hold no KV yet and are invisible to the
+    /// block manager) — so one sweep cannot overcommit a sibling.
+    pub fn can_fit_fresh_with(&self, spec: &RequestSpec,
+                              reserved: Tokens) -> bool {
+        self.kv
+            .can_fit(spec.id, spec.prompt_tokens + Tokens(1) + reserved)
+    }
+
+    /// Would a fresh spec pass submit's fail-fast capacity check (its
+    /// admission memory fits an *empty* replica)? Steering stats skip
+    /// specs that submission would immediately drop.
+    pub fn fits_capacity(&self, spec: &RequestSpec) -> bool {
+        spec.prompt_tokens + Tokens(1) <= self.kv.capacity()
+    }
+
+    /// Tokens this replica already owes to requests it has accepted
+    /// but not yet given KV (queued arrivals and zero-KV waiters),
+    /// block-rounded the way admission will allocate them. The rescue
+    /// sweep seeds its sibling reservations with this, so successive
+    /// sweeps cannot overcommit a sibling whose earlier adoptees (or
+    /// own backlog) simply have not been admitted yet.
+    pub fn owed_admission_tokens(&self) -> Tokens {
+        let bs = self.cfg.block_size.max(1);
+        let round = |t: u64| t.div_ceil(bs) * bs;
+        let waiting: u64 = self
+            .waiting
+            .iter()
+            .filter(|id| !self.kv.contains(**id))
+            .map(|id| round(self.requests[id].admission_memory().0))
+            .sum();
+        let pending: u64 = self
+            .pending
+            .iter()
+            .map(|s| round(s.prompt_tokens.0 + 1))
+            .sum();
+        Tokens(waiting + pending)
+    }
+
+    /// Withdraw a never-scheduled waiting request from this engine
+    /// entirely (queue, request table, lifecycle record) so the fleet
+    /// can re-queue it on a sibling. Refuses (`None`) if the request
+    /// already ran or holds any device, swap, or transfer state — that
+    /// state is replica-local and must stay so.
+    pub fn withdraw_waiting(&mut self, id: RequestId)
+                            -> Option<WithdrawnRequest> {
+        let pos = self.waiting.iter().position(|w| *w == id)?;
+        if !self.relocatable(id) {
+            return None;
+        }
+        self.waiting.remove(pos);
+        self.live.remove(&id);
+        self.pred_return.remove(&id);
+        let req = self.requests.remove(&id).expect("checked above");
+        self.metrics.forget(id);
+        Some(WithdrawnRequest {
+            spec: req.spec,
+            predictions: req.predictions,
+            handling: req.handling,
+            starvation_cnt: req.starvation_cnt,
+            starving: req.starving,
+        })
+    }
+
+    /// Re-home a request rescued from a sibling (placement-aware
+    /// admission re-queue): submit it immediately with the predictions
+    /// and handling it already carried, restoring the starvation state
+    /// it accrued on the rejecting owner — a §4.4 promotion (or
+    /// progress toward one) survives the move instead of the transfer
+    /// silently demoting it, and the sibling's predictor never re-runs.
+    pub fn adopt(&mut self, w: WithdrawnRequest) {
+        let id = w.spec.id;
+        self.submit_prepared(w.spec, w.predictions, w.handling);
+        if let Some(req) = self.requests.get_mut(&id) {
+            req.starvation_cnt = w.starvation_cnt;
+            req.starving = w.starving;
+        }
     }
 
     /// Is prefix caching in effect? Requires both the config switch and
@@ -1868,6 +2060,100 @@ mod tests {
         assert_eq!(e.metrics.prefix_hit_tokens, 0,
                    "no fabricated cross-request sharing");
         assert_eq!(e.metrics.tokens_prefilled, 16);
+    }
+
+    #[test]
+    fn starving_promotion_survives_api_return() {
+        // §4.4 parity: the `starving` promotion is sticky until
+        // completion. A request promoted while queued behind a hog,
+        // which then hits its API under Discard or Swap, must come back
+        // from the call still promoted (an API return never demotes)
+        // with its starvation counter sitting at the encounter-time
+        // reset — regression for the fleet runs where the re-admission
+        // happens on a replica mid-run.
+        for strategy in [HandlingStrategy::Discard,
+                         HandlingStrategy::Swap] {
+            let mut cfg = unit_cfg(SchedulerKind::Fcfs, 100);
+            cfg.starvation_threshold = Some(2);
+            let mut e = Engine::simulated(cfg);
+            e.submit(simple_spec(0, 0, 8)); // hog: FCFS runs id 0 first
+            e.submit_with_handling(api_spec(1, 2, 3, 1),
+                                   vec![strategy]);
+            // Drive manually to pin the mid-run state at the API call.
+            while !e.request(RequestId(1)).unwrap().in_api_wait() {
+                assert!(e.step(), "B must reach its API call");
+            }
+            let b = e.request(RequestId(1)).unwrap();
+            assert!(b.starving,
+                    "B must have been promoted before its API \
+                     ({strategy:?})");
+            assert_eq!(b.starvation_cnt, 0,
+                       "§4.4 reset at the encounter ({strategy:?})");
+            e.run_until_idle(None);
+            let b = e.request(RequestId(1)).unwrap();
+            assert!(b.is_finished(), "{strategy:?}");
+            assert!(b.starving,
+                    "the promotion must survive the {strategy:?} \
+                     re-admission");
+            assert_eq!(b.starvation_cnt, 0, "{strategy:?}");
+            assert!(e.request(RequestId(0)).unwrap().is_finished());
+            assert_eq!(e.metrics.completed(), 2, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn adopt_restores_starvation_state_and_serves() {
+        // The admission re-queue hands a withdrawn request to a sibling
+        // via `adopt`: a §4.4 promotion (or partial progress toward
+        // one) must survive the move instead of restarting from zero.
+        let mut cfg = unit_cfg(SchedulerKind::Fcfs, 100);
+        cfg.starvation_threshold = Some(50);
+        let mut e = Engine::simulated(cfg);
+        e.adopt(WithdrawnRequest {
+            spec: simple_spec(3, 0, 2),
+            predictions: vec![SegmentPrediction {
+                decode_tokens: Tokens(2),
+                api_duration: None,
+                response_tokens: Tokens(0),
+            }],
+            handling: vec![],
+            starvation_cnt: 7,
+            starving: true,
+        });
+        {
+            let r = e.request(RequestId(3)).unwrap();
+            assert!(r.starving, "promotion carried over");
+            assert_eq!(r.starvation_cnt, 7, "counter carried over");
+        }
+        e.run_until_idle(None);
+        let r = e.request(RequestId(3)).unwrap();
+        assert!(r.is_finished());
+        assert!(r.starving, "sticky until completion");
+    }
+
+    #[test]
+    fn withdraw_waiting_removes_all_trace_and_refuses_ran() {
+        // Withdrawal (the owner side of the admission re-queue) must
+        // erase the request everywhere — queue, table, metrics — and
+        // refuse requests that ever ran or hold replica-local state.
+        let mut e = Engine::simulated(unit_cfg(SchedulerKind::Fcfs, 100));
+        e.submit(simple_spec(0, 0, 3));
+        e.submit(simple_spec(1, 0, 3));
+        let w =
+            e.withdraw_waiting(RequestId(1)).expect("never scheduled");
+        assert_eq!(w.spec.id, RequestId(1));
+        assert_eq!((w.starvation_cnt, w.starving), (0, false));
+        assert_eq!(w.predictions.len(), w.spec.num_segments(),
+                   "admission-time predictions cross the move");
+        assert!(e.request(RequestId(1)).is_none(), "no table entry left");
+        assert!(e.withdraw_waiting(RequestId(1)).is_none(), "gone");
+        e.run_until_idle(None);
+        // Only request 0 remains anywhere in the report.
+        assert_eq!(e.metrics.report().submitted, 1);
+        assert_eq!(e.metrics.completed(), 1);
+        // A request that ran is not withdrawable (its KV and progress
+        // are replica-local).
+        assert!(e.withdraw_waiting(RequestId(0)).is_none());
     }
 
     #[test]

@@ -20,7 +20,7 @@
 
 use std::collections::HashMap;
 
-use super::prefix::{BlockHash, PrefixCache};
+use super::prefix::{BlockHash, PrefixCache, PrefixDelta};
 use crate::core::types::{RequestId, Tokens};
 
 /// Physical block index.
@@ -189,6 +189,34 @@ impl BlockManager {
     /// cache is disabled) — introspection for tests and debugging.
     pub fn prefix_refcount(&self, hash: BlockHash) -> Option<u32> {
         self.prefix.as_ref().and_then(|p| p.refcount_of(hash))
+    }
+
+    /// Start journaling the prefix cache's resident-set deltas (see
+    /// [`PrefixDelta`]); no-op without a cache. A fleet driver drains
+    /// them via [`BlockManager::drain_prefix_deltas`] to mirror this
+    /// replica's resident hashes into a cross-replica index.
+    pub fn enable_prefix_journal(&mut self) {
+        if let Some(p) = self.prefix.as_mut() {
+            p.enable_journal();
+        }
+    }
+
+    /// Take the resident-set deltas journaled since the last drain
+    /// (empty without a cache or with the journal unarmed).
+    pub fn drain_prefix_deltas(&mut self) -> Vec<PrefixDelta> {
+        self.prefix
+            .as_mut()
+            .map(|p| p.drain_journal())
+            .unwrap_or_default()
+    }
+
+    /// Every hash resident in the prefix cache (any refcount), sorted —
+    /// ground truth for fleet-level index invariants.
+    pub fn resident_prefix_hashes(&self) -> Vec<BlockHash> {
+        self.prefix
+            .as_ref()
+            .map(|p| p.resident_hashes())
+            .unwrap_or_default()
     }
 
     /// Fraction of capacity physically in use (non-free blocks,

@@ -6,5 +6,5 @@ pub mod prefix;
 pub mod swap;
 
 pub use block_manager::{BlockManager, KvError};
-pub use prefix::{content_chain, BlockHash, PrefixCache};
+pub use prefix::{content_chain, BlockHash, PrefixCache, PrefixDelta};
 pub use swap::{SwapSpace, Transfer, TransferDir, TransferQueue};

@@ -97,6 +97,24 @@ pub fn content_chain(spec: &RequestSpec, block_size: u64, upto: Tokens)
     chain
 }
 
+/// One resident-set change of a replica-local prefix cache, journaled
+/// (when armed by [`PrefixCache::enable_journal`]) for a fleet-level
+/// observer: the cross-replica
+/// [`SharedPrefixIndex`](crate::cluster::SharedPrefixIndex) mirrors
+/// each replica's resident hashes from these deltas. Pins and releases
+/// are *not* deltas — a block stays resident (hittable) across its
+/// whole refcount lifecycle; only registration and physical removal
+/// (pressure/capacity eviction, purge) change residency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefixDelta {
+    /// `hash` became resident: a freshly materialized full block was
+    /// registered under it.
+    Registered(BlockHash),
+    /// `hash` left the cache: its physical block was evicted under
+    /// pressure/capacity or purged as request-private garbage.
+    Removed(BlockHash),
+}
+
 #[derive(Debug, Clone, Copy)]
 struct CachedBlock {
     block: BlockId,
@@ -135,6 +153,13 @@ pub struct PrefixCache {
     hit_tokens: u64,
     /// Zero-ref cached blocks evicted (capacity or memory pressure).
     evictions: u64,
+    /// Resident-set delta journal for a fleet-level observer (see
+    /// [`PrefixDelta`]); records only while `journal_on`. Purely
+    /// observational — nothing in the cache reads it back.
+    journal: Vec<PrefixDelta>,
+    /// Armed by [`PrefixCache::enable_journal`] (a `ReplicaSet` with
+    /// `--shared-prefix` drains the journal after every replica step).
+    journal_on: bool,
 }
 
 impl PrefixCache {
@@ -176,6 +201,30 @@ impl PrefixCache {
         self.hit_tokens += tokens;
     }
 
+    /// Start journaling resident-set deltas (see [`PrefixDelta`]).
+    pub(super) fn enable_journal(&mut self) {
+        self.journal_on = true;
+    }
+
+    /// Take the journaled deltas accumulated since the last drain.
+    pub(super) fn drain_journal(&mut self) -> Vec<PrefixDelta> {
+        std::mem::take(&mut self.journal)
+    }
+
+    fn note_delta(&mut self, delta: PrefixDelta) {
+        if self.journal_on {
+            self.journal.push(delta);
+        }
+    }
+
+    /// Every hash currently resident (any refcount), sorted — the
+    /// ground truth the fleet-level index must stay a subset of.
+    pub fn resident_hashes(&self) -> Vec<BlockHash> {
+        let mut hashes: Vec<BlockHash> = self.map.keys().copied().collect();
+        hashes.sort_unstable();
+        hashes
+    }
+
     /// Is `(hash, stamp)` a live LRU entry (vs a tombstone)?
     fn lru_entry_live(map: &HashMap<BlockHash, CachedBlock>,
                       hash: BlockHash, stamp: u64) -> bool {
@@ -213,6 +262,7 @@ impl PrefixCache {
             refcount: 1,
             lru_stamp: 0,
         });
+        self.note_delta(PrefixDelta::Registered(hash));
         true
     }
 
@@ -260,6 +310,7 @@ impl PrefixCache {
         let cached = self.map.remove(&hash).expect("checked present");
         debug_assert!(self.zero_ref > 0, "zero-ref gauge underflow");
         self.zero_ref -= 1;
+        self.note_delta(PrefixDelta::Removed(hash));
         Some(cached.block)
     }
 
@@ -276,6 +327,7 @@ impl PrefixCache {
             debug_assert_eq!(cached.refcount, 0, "LRU held a pinned block");
             self.zero_ref -= 1;
             self.evictions += 1;
+            self.note_delta(PrefixDelta::Removed(hash));
             return Some(cached.block);
         }
         None
@@ -436,6 +488,41 @@ mod tests {
         assert_eq!(c.zero_ref(), 1);
         assert_eq!(c.reclaim_one(), Some(70), "purged 8 is a tombstone");
         assert_eq!(c.reclaim_one(), None);
+    }
+
+    #[test]
+    fn journal_records_residency_changes_only() {
+        let mut c = PrefixCache::new(None);
+        c.register(1, 10);
+        assert!(c.drain_journal().is_empty(), "journal off by default");
+        c.enable_journal();
+        c.register(2, 20);
+        assert_eq!(c.pin(2), Some(20), "pins are not residency changes");
+        c.release(2);
+        c.release(2);
+        assert_eq!(c.purge_zero_ref(2), Some(20));
+        c.release(1);
+        assert_eq!(c.reclaim_one(), Some(10));
+        assert_eq!(c.drain_journal(), vec![
+            PrefixDelta::Registered(2),
+            PrefixDelta::Removed(2),
+            PrefixDelta::Removed(1),
+        ]);
+        assert!(c.drain_journal().is_empty(), "drain empties the journal");
+        assert!(c.resident_hashes().is_empty());
+    }
+
+    #[test]
+    fn resident_hashes_are_sorted_ground_truth() {
+        let mut c = PrefixCache::new(None);
+        c.register(9, 90);
+        c.register(3, 30);
+        c.register(7, 70);
+        c.release(7);
+        assert_eq!(c.resident_hashes(), vec![3, 7, 9],
+                   "zero-ref blocks are still resident");
+        c.purge_zero_ref(7);
+        assert_eq!(c.resident_hashes(), vec![3, 9]);
     }
 
     #[test]

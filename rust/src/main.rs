@@ -33,17 +33,21 @@ USAGE:
   lamps serve   [--addr 127.0.0.1:7070] [--model gptj-tiny]
                 [--system lamps] [--artifacts artifacts]
                 [--replicas N]
-                [--placement memory-over-time|least-loaded|round-robin]
+                [--placement memory-over-time|prefix-affinity|
+                             least-loaded|round-robin]
                 [--max-batch-tokens N] [--prefill-chunk N] [--async-swap]
                 [--prefix-cache] [--prefix-cache-blocks N]
+                [--shared-prefix] [--no-admission-requeue]
   lamps run     [--dataset single-api|multi-api|toolbench|<trace.json>]
                 [--system vllm|infercept|lamps|lamps-no-sched|sjf|sjf-total]
                 [--model gptj-6b|vicuna-13b] [--rate 3.0]
                 [--requests 500] [--seed 42] [--time-cap-secs N]
                 [--replicas N]
-                [--placement memory-over-time|least-loaded|round-robin]
+                [--placement memory-over-time|prefix-affinity|
+                             least-loaded|round-robin]
                 [--max-batch-tokens N] [--prefill-chunk N] [--async-swap]
                 [--prefix-cache] [--prefix-cache-blocks N]
+                [--shared-prefix] [--no-admission-requeue]
                 [--timeline]
   lamps gen-workload --out trace.json [--dataset single-api] [--rate 3.0]
                 [--requests 500] [--seed 42]
@@ -52,8 +56,14 @@ USAGE:
 
   --replicas N dispatches across N engine replicas (one modeled GPU
   each); --placement picks how arrivals are placed: memory-over-time
-  (default; the LAMPS rank integral steers placement), least-loaded, or
-  round-robin. With --replicas 1 the single-engine path runs unchanged.
+  (default; the LAMPS rank integral steers placement), prefix-affinity
+  (the integral with its prefill leg discounted on replicas already
+  holding the arrival's prompt prefix — pair with --prefix-cache and
+  --shared-prefix), least-loaded, or round-robin. --shared-prefix
+  maintains the fleet-level hash→replica prefix index those discounts
+  come from. A request memory-rejected by its owner before first run is
+  re-queued once to the best sibling unless --no-admission-requeue.
+  With --replicas 1 the single-engine path runs unchanged.
 ";
 
 /// Tiny `--key value` argument map (no clap in the offline vendor set).
@@ -148,7 +158,10 @@ fn apply_compose_flags(cfg: &mut SystemConfig, args: &Args) {
 
 /// Apply the multi-replica flags: `--replicas N` sizes the
 /// [`ReplicaSet`]; `--placement` picks the cross-replica placement
-/// policy (memory-over-time by default).
+/// policy (memory-over-time by default); `--shared-prefix` maintains
+/// the fleet-level prefix index prefix-affinity placement probes;
+/// `--no-admission-requeue` disables the one-shot sibling re-queue of
+/// memory-rejected arrivals.
 fn apply_replica_flags(cfg: &mut SystemConfig, args: &Args)
                        -> Result<()> {
     cfg.replicas = args.get_usize("replicas", cfg.replicas).max(1);
@@ -156,8 +169,14 @@ fn apply_replica_flags(cfg: &mut SystemConfig, args: &Args)
         cfg.placement = PlacementKind::parse(name).ok_or_else(|| {
             anyhow::anyhow!(
                 "unknown placement '{name}' (expected memory-over-time, \
-                 least-loaded, or round-robin)")
+                 prefix-affinity, least-loaded, or round-robin)")
         })?;
+    }
+    if args.has("shared-prefix") {
+        cfg.shared_prefix = true;
+    }
+    if args.has("no-admission-requeue") {
+        cfg.admission_requeue = false;
     }
     Ok(())
 }

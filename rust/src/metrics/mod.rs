@@ -50,6 +50,80 @@ fn percentile(sorted: &[u64], q: f64) -> f64 {
     sorted[rank - 1] as f64
 }
 
+/// Fleet-level stats of the cross-replica shared prefix index
+/// (`--shared-prefix`): how much context the prefix-affinity placement
+/// steered onto replicas that already held it. Carried by
+/// [`FleetReport`](crate::cluster::FleetReport) only when the index is
+/// active, so the index-less fleet JSON stays byte-identical.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SharedPrefixStats {
+    /// Arrivals placed with a non-zero cached-prefix credit.
+    pub steered_requests: u64,
+    /// Total cached-token credit of those placements — the tokens the
+    /// placement expected to be served from the owning replica's
+    /// resident prefix blocks instead of being re-prefilled. Advisory
+    /// (an optimistic upper bound): eviction between placement and
+    /// admission turns credit back into prefill, never into an error.
+    pub steered_tokens: u64,
+    /// Per-replica split of `steered_tokens` (the hit-delta view of
+    /// where the index concentrated shared prefixes).
+    pub per_replica_steered_tokens: Vec<u64>,
+}
+
+impl SharedPrefixStats {
+    pub fn new(replicas: usize) -> SharedPrefixStats {
+        SharedPrefixStats {
+            steered_requests: 0,
+            steered_tokens: 0,
+            per_replica_steered_tokens: vec![0; replicas],
+        }
+    }
+
+    /// Record one placement of `tokens` expected-cached credit onto
+    /// `replica`; zero-credit placements are not steering.
+    pub fn note(&mut self, replica: usize, tokens: u64) {
+        if tokens == 0 {
+            return;
+        }
+        self.steered_requests += 1;
+        self.steered_tokens += tokens;
+        if let Some(t) = self.per_replica_steered_tokens.get_mut(replica) {
+            *t += tokens;
+        }
+    }
+
+    /// Reverse one [`SharedPrefixStats::note`]: the request was moved
+    /// off `replica` (admission re-queue) before it could use the
+    /// credit, so the dispatch-time claim is withdrawn. Saturating —
+    /// the stats are advisory and must never panic a run.
+    pub fn unnote(&mut self, replica: usize, tokens: u64) {
+        if tokens == 0 {
+            return;
+        }
+        self.steered_requests = self.steered_requests.saturating_sub(1);
+        self.steered_tokens = self.steered_tokens.saturating_sub(tokens);
+        if let Some(t) = self.per_replica_steered_tokens.get_mut(replica) {
+            *t = t.saturating_sub(tokens);
+        }
+    }
+
+    /// JSON value form (embedded in the fleet report).
+    pub fn to_value(&self) -> crate::util::json::Value {
+        use crate::util::json::{self, Value};
+        json::obj(vec![
+            ("steered_requests",
+             json::num(self.steered_requests as f64)),
+            ("steered_tokens", json::num(self.steered_tokens as f64)),
+            ("per_replica_steered_tokens",
+             Value::Arr(self
+                 .per_replica_steered_tokens
+                 .iter()
+                 .map(|&t| json::num(t as f64))
+                 .collect())),
+        ])
+    }
+}
+
 /// Per-request lifecycle record.
 #[derive(Debug, Clone, Copy)]
 pub struct RequestRecord {
@@ -164,6 +238,24 @@ impl MetricsCollector {
     pub fn on_finished(&mut self, id: RequestId, at: Micros) {
         if let Some(&idx) = self.index.get(&id) {
             self.records[idx].finished = Some(at);
+        }
+    }
+
+    /// Remove `id`'s lifecycle record entirely — a request withdrawn
+    /// before it ever ran, re-queued to a sibling replica (its new
+    /// owner records the arrival instead, so fleet-wide counts stay a
+    /// partition of the trace). O(1) swap-remove: record order is not
+    /// load-bearing — every consumer either counts records or sorts
+    /// the extracted samples ([`Summary::from_samples`]) — so only the
+    /// displaced record's index needs re-pointing.
+    pub fn forget(&mut self, id: RequestId) {
+        let Some(idx) = self.index.remove(&id) else {
+            return;
+        };
+        self.records.swap_remove(idx);
+        if idx < self.records.len() {
+            let moved = self.records[idx].id;
+            self.index.insert(moved, idx);
         }
     }
 
@@ -467,6 +559,47 @@ mod tests {
         assert_eq!(fleet.ttft.n, 0);
         // Fleet throughput: 2 completions over the 3 s fleet span.
         assert!((fleet.throughput_rps - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn forget_removes_record_and_keeps_index_consistent() {
+        let mut m = MetricsCollector::new();
+        m.on_arrival(RequestId(1), Micros(0));
+        m.on_arrival(RequestId(2), Micros(10));
+        m.on_arrival(RequestId(3), Micros(20));
+        m.forget(RequestId(2));
+        m.forget(RequestId(9)); // absent: no-op
+        assert_eq!(m.records().len(), 2);
+        m.on_finished(RequestId(3), Micros(120));
+        let rep = m.report();
+        assert_eq!(rep.submitted, 2);
+        assert_eq!(rep.completed, 1);
+        assert_eq!(rep.latency.mean_us, 100.0,
+                   "record 3 must still resolve after the removal");
+    }
+
+    #[test]
+    fn shared_prefix_stats_note_and_json() {
+        let mut s = SharedPrefixStats::new(3);
+        s.note(1, 0); // zero credit is not steering
+        s.note(1, 32);
+        s.note(2, 16);
+        s.note(1, 16);
+        assert_eq!(s.steered_requests, 3);
+        assert_eq!(s.steered_tokens, 64);
+        assert_eq!(s.per_replica_steered_tokens, vec![0, 48, 16]);
+        let v = crate::util::json::parse(
+            &crate::util::json::write(&s.to_value())).unwrap();
+        assert_eq!(v.u64_field("steered_tokens").unwrap(), 64);
+        assert_eq!(v.field("per_replica_steered_tokens").unwrap()
+                       .as_arr().unwrap().len(), 3);
+        // A rescue re-books a steering claim: unnote reverses one note.
+        s.unnote(1, 32);
+        assert_eq!(s.steered_requests, 2);
+        assert_eq!(s.steered_tokens, 32);
+        assert_eq!(s.per_replica_steered_tokens, vec![0, 16, 16]);
+        s.unnote(2, 0); // zero credit was never a claim
+        assert_eq!(s.steered_requests, 2);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::cluster::PrefixDeltaSink;
 use crate::config::SystemConfig;
 use crate::core::request::RequestSpec;
 use crate::core::types::{Micros, RequestId};
@@ -177,10 +178,17 @@ where
 fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
                  rx: mpsc::Receiver<Command>) {
     assert!(!parts.is_empty(), "at least one replica required");
+    // The index is useful only when the per-replica journals feed it:
+    // Engine::new arms them on `cfg.replicas > 1`, so require that AND
+    // a real multi-part fleet — the two can disagree through the public
+    // `spawn_replicated` API, and a half-armed setup must read as "off"
+    // (banner included) rather than silently never populating.
+    let shared_on = cfg.shared_prefix && cfg.prefix_cache.enabled
+        && cfg.replicas > 1 && parts.len() > 1;
     eprintln!(
         "lamps: engine up (scheduler {}, replicas {} [{} placement], \
          batch composer: budget {}, prefill chunk {}, async swap {}, \
-         prefix cache {})",
+         prefix cache {}, shared prefix index {})",
         cfg.scheduler.label(),
         parts.len(),
         cfg.placement.label(),
@@ -198,8 +206,14 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
             }
         } else {
             "off".to_string()
-        });
+        },
+        if shared_on { "on" } else { "off" });
     let placement = cfg.placement;
+    // Fleet-level shared prefix index, mirrored from the per-replica
+    // journals on the same cadence as the simulation driver (after each
+    // engine step). Advisory only — the wall-clock loop may lag a step.
+    let mut shared: Option<crate::cluster::SharedPrefixIndex> =
+        shared_on.then(crate::cluster::SharedPrefixIndex::new);
     let mut engines: Vec<Engine> = parts
         .into_iter()
         .map(|(backend, predictor)| {
@@ -211,6 +225,9 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
     // (request, owning replica, completion channel)
     let mut watchers: Vec<(RequestId, usize, mpsc::Sender<Completion>)> =
         Vec::new();
+    // Requests the admission re-queue already moved once (see below).
+    let mut requeued: std::collections::HashSet<RequestId> =
+        std::collections::HashSet::new();
     let mut shutdown = false;
 
     loop {
@@ -218,8 +235,9 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
         loop {
             match rx.try_recv() {
                 Ok(Command::Submit { mut spec, done }) => {
-                    let r = crate::cluster::pick_replica(
-                        &engines, placement, &mut rr_next);
+                    let (r, _credit) = crate::cluster::pick_replica(
+                        &engines, placement, &mut rr_next, &spec,
+                        shared.as_ref());
                     spec.arrival = engines[r].now();
                     let id = spec.id;
                     engines[r].submit(spec);
@@ -236,7 +254,7 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
 
         let mut progressed = false;
         if !watchers.is_empty() {
-            for engine in &mut engines {
+            for (i, engine) in engines.iter_mut().enumerate() {
                 if !engine.has_live_work() {
                     continue;
                 }
@@ -264,6 +282,36 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
                     next.map(|t| t.min(engine.now() + POLL_TICK));
                 engine.set_external_event(hint);
                 progressed |= engine.step();
+                // Mirror this replica's prefix-cache deltas into the
+                // fleet index. Drained unconditionally so an armed
+                // journal can never grow without bound.
+                let deltas = engine.drain_prefix_deltas();
+                if let Some(index) = shared.as_mut() {
+                    for delta in &deltas {
+                        index.on_delta(i, delta);
+                    }
+                }
+            }
+            // Placement-aware admission re-queue, sharing the
+            // simulated fleet's protocol core
+            // (`cluster::rescue_stranded_on`): a request
+            // memory-rejected by its owner before first run moves once
+            // to the best sibling that can admit it now; its watcher
+            // follows so the completion fans in from the new owner.
+            if cfg.admission_requeue && engines.len() > 1 {
+                for owner in 0..engines.len() {
+                    let moves = crate::cluster::rescue_stranded_on(
+                        &mut engines, owner, placement,
+                        shared.as_ref(), &mut requeued);
+                    for (id, j, _credit) in moves {
+                        for w in watchers.iter_mut() {
+                            if w.0 == id {
+                                w.1 = j;
+                            }
+                        }
+                        progressed = true;
+                    }
+                }
             }
         }
 
@@ -278,12 +326,17 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
                 // empty completion — zero tokens marks it unserved —
                 // instead of hanging its recv forever.
                 let _ = done.send(dropped_completion(id));
+                requeued.remove(&id);
                 continue;
             };
             if !r.is_finished() {
                 still.push((id, owner, done));
                 continue;
             }
+            // Terminal either way below: the once-only re-queue guard
+            // entry is dead weight from here on (a long-running server
+            // must not accumulate one per rescued request forever).
+            requeued.remove(&id);
             let Some(finished_at) = r.finished_at else {
                 // Dropped mid-run (context outgrew the budget): the
                 // request is terminal but was never served.

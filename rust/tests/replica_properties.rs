@@ -11,11 +11,13 @@
 //!   including with the chunked composer and the prefix cache enabled,
 //! - round-robin placement is a pure rotation in arrival order.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
 
 use lamps::cluster::ReplicaSet;
-use lamps::config::{PlacementKind, SystemConfig};
-use lamps::core::request::{ApiCallSpec, ApiType, RequestSpec};
+use lamps::config::{CostModel, HandlingPolicy, PlacementKind,
+                    PrefixCacheConfig, SchedulerKind, SystemConfig};
+use lamps::core::request::{ApiCallSpec, ApiType, HandlingStrategy,
+                           RequestSpec};
 use lamps::core::types::{Micros, RequestId, Tokens};
 use lamps::engine::Engine;
 use lamps::util::Rng;
@@ -49,6 +51,235 @@ fn random_trace(rng: &mut Rng, n: u64) -> Trace {
         })
         .collect();
     Trace::new("random", 1.0, specs)
+}
+
+/// Trace whose prompts draw from a small pool of shared prefixes plus a
+/// unique tail, so the cross-replica shared prefix index has real
+/// content-chain sharing to track (empty prompts hash per-request and
+/// never cross-share).
+fn random_shared_trace(rng: &mut Rng, n: u64) -> Trace {
+    const PREFIXES: [&str; 3] = [
+        "System: answer in one short paragraph and cite your sources \
+         whenever external facts are referenced here. ",
+        "System: you are a strict JSON transformer; never add prose or \
+         commentary around the emitted document body. ",
+        "System: translate the user's message to French, preserving \
+         code spans and inline markup fragments verbatim. ",
+    ];
+    let mut t = 0u64;
+    let specs = (0..n)
+        .map(|i| {
+            t += rng.int_range(0, 300_000);
+            let prefix = PREFIXES[rng.int_range(0, 2) as usize];
+            let prompt = format!("{prefix}tail-{i:05}");
+            let prompt_tokens = Tokens(prompt.len() as u64);
+            let api_calls = if rng.f64() < 0.4 {
+                vec![ApiCallSpec {
+                    decode_before: Tokens(rng.int_range(1, 10)),
+                    api_type: ApiType::Qa,
+                    duration: Micros(rng.int_range(100_000, 2_000_000)),
+                    response_tokens: Tokens(rng.int_range(0, 6)),
+                }]
+            } else {
+                vec![]
+            };
+            RequestSpec {
+                id: RequestId(i),
+                arrival: Micros(t),
+                prompt,
+                prompt_tokens,
+                api_calls,
+                final_decode: Tokens(rng.int_range(1, 20)),
+            }
+        })
+        .collect();
+    Trace::new("shared-random", 1.0, specs)
+}
+
+/// Every (hash, replica) entry of the fleet index must be backed by an
+/// actually-resident block in that replica's local prefix cache — the
+/// advisory index may *under*-promise, never point at purged state.
+fn assert_index_subset_of_resident(set: &ReplicaSet) {
+    let index = set.shared_index().expect("shared index active");
+    let resident: Vec<HashSet<u64>> = (0..set.len())
+        .map(|i| {
+            set.replica(i)
+                .resident_prefix_hashes()
+                .into_iter()
+                .collect()
+        })
+        .collect();
+    for hash in index.hashes() {
+        for r in index.replicas_of(hash) {
+            assert!(resident[r].contains(&hash),
+                    "index holds {hash:#x} for replica {r} but the \
+                     block is gone — no entry may survive a \
+                     replica-local purge/eviction");
+        }
+    }
+}
+
+#[test]
+fn prop_shared_index_mirrors_resident_blocks_at_every_step() {
+    let mut rng = Rng::new(0x5E7_0010);
+    for (replicas, cache_blocks, placement) in [
+        (2usize, None, PlacementKind::PrefixAffinity),
+        (3, Some(8u64), PlacementKind::PrefixAffinity),
+        (4, None, PlacementKind::MemoryOverTime),
+    ] {
+        let trace = random_shared_trace(&mut rng, 40);
+        let mut cfg = SystemConfig::preset("lamps").unwrap();
+        // Small budget: memory pressure reclaims cached blocks, so the
+        // Removed delta path is exercised, not just registration.
+        cfg.memory_budget = Tokens(1_500);
+        cfg.replicas = replicas;
+        cfg.placement = placement;
+        cfg.prefix_cache = PrefixCacheConfig {
+            enabled: true,
+            cache_blocks,
+        };
+        cfg.shared_prefix = true;
+        let mut set = ReplicaSet::simulated(cfg);
+        for spec in &trace.requests {
+            set.enqueue(spec.clone());
+        }
+        let mut steps = 0u64;
+        while set.step() {
+            steps += 1;
+            assert!(steps < 5_000_000, "fleet failed to drain");
+            assert_index_subset_of_resident(&set);
+        }
+        // The sequential fleet drains the stepped replica's journal
+        // every step, so by the end the mirror is exact — residency
+        // missing from the index would mean a lost Registered delta.
+        let index = set.shared_index().unwrap();
+        assert!(!index.is_empty(),
+                "shared prompts must populate the index");
+        for i in 0..set.len() {
+            for hash in set.replica(i).resident_prefix_hashes() {
+                assert!(index.holds(hash, i),
+                        "resident {hash:#x} on replica {i} missing from \
+                         the index ({placement:?})");
+            }
+        }
+        let report = set.fleet_report();
+        assert_eq!(report.fleet.completed as u64, 40,
+                   "{placement:?} fleet must drain");
+    }
+}
+
+#[test]
+fn shared_prefix_off_keeps_the_pr3_fleet_json_shape() {
+    // `--shared-prefix` off must reproduce the PR 3 fleet JSON: the
+    // exact top-level key set, with no shared_prefix block anywhere.
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.memory_budget = Tokens(9_000);
+    cfg.replicas = 3;
+    cfg.prefix_cache = PrefixCacheConfig::on();
+    let trace = infercept::single_api_dataset(30, 4.0, 9);
+    let mut set = ReplicaSet::simulated(cfg);
+    let json = set.run_trace(&trace).to_json(false);
+    assert!(!json.contains("shared_prefix"),
+            "index-off JSON must carry no trace of the feature");
+    let v = lamps::util::json::parse(&json).unwrap();
+    let keys: Vec<&str> = v
+        .as_obj()
+        .unwrap()
+        .keys()
+        .map(|k| k.as_str())
+        .collect();
+    assert_eq!(keys, ["fleet", "per_replica", "placement", "replicas"],
+               "exactly the PR 3 top-level shape");
+}
+
+#[test]
+fn prop_shared_index_is_purely_observational_under_pr3_placements() {
+    // With a PR 3 placement policy the index is maintained but never
+    // consulted: every per-replica report, the fleet aggregate, and the
+    // dispatch log must be byte-identical to the run without it (the
+    // executable form of "--shared-prefix off reproduces the PR 3
+    // path" — the journals may not perturb replica behavior).
+    for placement in [PlacementKind::MemoryOverTime,
+                      PlacementKind::LeastLoaded,
+                      PlacementKind::RoundRobin] {
+        let mut rng = Rng::new(0x5E7_0020);
+        let trace = random_shared_trace(&mut rng, 35);
+        let run = |shared: bool| {
+            let mut cfg = SystemConfig::preset("lamps").unwrap();
+            cfg.memory_budget = Tokens(3_000);
+            cfg.replicas = 3;
+            cfg.placement = placement;
+            cfg.prefix_cache = PrefixCacheConfig::on();
+            cfg.shared_prefix = shared;
+            let mut set = ReplicaSet::simulated(cfg);
+            let report = set.run_trace(&trace);
+            (report, set.assignments().to_vec())
+        };
+        let (off, assigned_off) = run(false);
+        let (on, assigned_on) = run(true);
+        assert_eq!(assigned_off, assigned_on, "{placement:?}");
+        assert_eq!(off.fleet.to_json(true), on.fleet.to_json(true),
+                   "{placement:?}: fleet aggregate diverged");
+        for (i, (l, r)) in
+            off.per_replica.iter().zip(&on.per_replica).enumerate()
+        {
+            assert_eq!(l.to_json(true), r.to_json(true),
+                       "{placement:?}: replica {i} diverged");
+        }
+        assert!(off.shared_prefix.is_none());
+        let stats = on.shared_prefix.expect("stats when index active");
+        assert_eq!(stats.steered_tokens, 0,
+                   "{placement:?} never consults the index");
+    }
+}
+
+#[test]
+fn fleet_promotion_survives_api_return_on_replica() {
+    // §4.4 parity across the fleet: ids 0 and 2 land on replica 0 under
+    // round-robin (1 goes to replica 1). Request 2 is promoted while
+    // queued behind the hog, Discards at its API mid-fleet-run, and
+    // must come back from the return still promoted — an API return
+    // never demotes a starving request.
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.scheduler = SchedulerKind::Fcfs;
+    cfg.handling = HandlingPolicy::Forced(HandlingStrategy::Discard);
+    cfg.memory_budget = Tokens(100);
+    cfg.block_size = 1;
+    cfg.max_batch = 1;
+    cfg.starvation_threshold = Some(2);
+    cfg.cost = CostModel::unit();
+    cfg.replicas = 2;
+    cfg.placement = PlacementKind::RoundRobin;
+    let plain = |id: u64, decode: u64| RequestSpec {
+        id: RequestId(id),
+        arrival: Micros::ZERO,
+        prompt: String::new(),
+        prompt_tokens: Tokens(0),
+        api_calls: vec![],
+        final_decode: Tokens(decode),
+    };
+    let trace = Trace::new("t", 1.0, vec![
+        plain(0, 8), // hog -> replica 0
+        plain(1, 1), // filler -> replica 1
+        RequestSpec {
+            api_calls: vec![ApiCallSpec {
+                decode_before: Tokens(2),
+                api_type: ApiType::Qa,
+                duration: Micros(3_000_000),
+                response_tokens: Tokens(0),
+            }],
+            ..plain(2, 1) // -> replica 0, behind the hog
+        },
+    ]);
+    let mut set = ReplicaSet::simulated(cfg);
+    let report = set.run_trace(&trace);
+    assert_eq!(report.fleet.completed, 3);
+    let b = set.replica(0).request(RequestId(2)).unwrap();
+    assert!(b.is_finished());
+    assert!(b.starving,
+            "promotion must survive the Discard re-admission on its \
+             replica");
+    assert_eq!(b.starvation_cnt, 0, "counter rests at the §4.4 reset");
 }
 
 #[test]
@@ -148,6 +379,11 @@ fn prop_single_replica_fleet_is_byte_identical_to_engine() {
                 cfg.compose = lamps::config::ComposeConfig::chunked();
                 cfg.prefix_cache =
                     lamps::config::PrefixCacheConfig::on();
+                // With one replica the shared index and affinity
+                // placement must leave the single-engine path
+                // untouched too.
+                cfg.shared_prefix = true;
+                cfg.placement = PlacementKind::PrefixAffinity;
             }
             let trace = infercept::single_api_dataset(40, 4.0, seed);
 
