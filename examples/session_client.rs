@@ -1,0 +1,115 @@
+//! External-tool serving round-trip — the protocol v2 "hello world".
+//!
+//! Spins up a simulated-backend server with `--api-source external`
+//! semantics, serves the JSON-lines wire protocol on a local TCP port,
+//! and then plays the client side end to end: open a session with one
+//! API call, stream event frames until `api_call_started`, run the
+//! "tool" (a sleep standing in for the real calculator), post the
+//! `tool_result`, and stream to the `finished` frame.
+//!
+//! The printed transcript is the same NDJSON exchange documented in
+//! `examples/protocol_v2.ndjson`. Run with:
+//!
+//! ```sh
+//! cargo run --example session_client
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use lamps::config::{ApiSourceKind, CostModel, SystemConfig};
+use lamps::core::types::Micros;
+use lamps::server;
+use lamps::util::json;
+
+fn main() -> anyhow::Result<()> {
+    // A fast cost model so the demo finishes in milliseconds of model
+    // time; API waits are real wall time either way.
+    let mut cfg = SystemConfig::preset("lamps")
+        .ok_or_else(|| anyhow::anyhow!("unknown preset"))?;
+    cfg.cost = CostModel {
+        decode_base: Micros(200),
+        decode_per_ctx_token_us: 0.0,
+        prefill_per_token_us: 5.0,
+        swap_base_us: 0.0,
+        swap_per_token_us: 0.0,
+        rank_overhead_per_request_us: 0.0,
+    };
+    cfg.api_source = ApiSourceKind::External;
+    let (handle, _join) = server::spawn_sim(cfg);
+
+    let addr = "127.0.0.1:17093";
+    let server_handle = handle.clone();
+    std::thread::spawn(move || {
+        let _ = server::serve_tcp(server_handle, addr);
+    });
+
+    // Wait for the listener.
+    let mut stream = None;
+    for _ in 0..100 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    let stream =
+        stream.ok_or_else(|| anyhow::anyhow!("server did not come up"))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+
+    let request = "{\"type\":\"request\",\
+                    \"prompt\":\"what is 6 times 7?\",\
+                    \"output_tokens\":4,\
+                    \"api_calls\":[{\"decode_before\":2,\
+                    \"api_type\":\"math\",\"response_tokens\":2}]}";
+    println!("-> {request}");
+    writer.write_all(request.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+
+    let mut line = String::new();
+    let mut session_id = None;
+    let mut finished = false;
+    while !finished {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("server closed the connection early");
+        }
+        print!("<- {line}");
+        let frame = json::parse(&line)?;
+        match frame.str_field("type")?.as_str() {
+            "queued" => session_id = Some(frame.u64_field("id")?),
+            "api_call_started" => {
+                let id = session_id
+                    .ok_or_else(|| anyhow::anyhow!("no session id"))?;
+                let index = frame.u64_field("index")?;
+                // "Run the tool" — the whole point: the server cannot
+                // know when (or with how many tokens) this returns.
+                std::thread::sleep(Duration::from_millis(25));
+                let result = format!(
+                    "{{\"type\":\"tool_result\",\"id\":{id},\
+                     \"index\":{index},\"response_tokens\":2}}");
+                println!("-> {result}");
+                writer.write_all(result.as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+            }
+            "finished" => {
+                assert_eq!(frame.u64_field("tokens_decoded")?, 6,
+                           "2 pre-API + 4 final decode tokens");
+                finished = true;
+            }
+            "dropped" | "error" => {
+                anyhow::bail!("unexpected frame: {line}");
+            }
+            _ => {}
+        }
+    }
+    handle.shutdown();
+    println!("ok: external tool call served end to end");
+    Ok(())
+}

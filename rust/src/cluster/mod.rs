@@ -409,6 +409,30 @@ impl ReplicaSet {
         }
     }
 
+    /// The replica currently responsible for `id` — consulted so
+    /// externally-resolved API returns route to the request's *current*
+    /// owner (the admission re-queue may have moved it after
+    /// placement; a parked request itself never moves, because only
+    /// never-scheduled requests are relocatable).
+    pub fn owner_of(&self, id: RequestId) -> Option<usize> {
+        self.replicas
+            .iter()
+            .position(|e| e.request(id).is_some())
+    }
+
+    /// Resolve an externally-held API call (`--api-source external`)
+    /// on whichever replica owns the request — the fleet-level twin of
+    /// [`Engine::complete_api_call`].
+    pub fn complete_api_call(&mut self, id: RequestId, index: usize,
+                             response_tokens: Tokens)
+                             -> anyhow::Result<()> {
+        let Some(owner) = self.owner_of(id) else {
+            anyhow::bail!("unknown request {id}");
+        };
+        self.replicas[owner].complete_api_call(id, index,
+                                               response_tokens)
+    }
+
     /// Queue a spec for arrival-time placement, keeping the shared
     /// queue arrival-sorted. `partition_point` binary search: O(log n)
     /// comparisons per insert even for the serve frontend's
@@ -824,6 +848,48 @@ mod tests {
         let x = stranded.replica(0).request(RequestId(2)).unwrap();
         assert!(x.finished_at.unwrap() > Micros(100_000 * 1_000_000),
                 "control run must reproduce the stranding");
+    }
+
+    #[test]
+    fn external_api_returns_route_to_owner_replica() {
+        // `--api-source external` at fleet level: the parked request's
+        // return must route to the replica that owns it, the fleet must
+        // go idle (not livelock) while the call is unresolved, and a
+        // misdirected result must be refused.
+        let mut cfg = unit_cfg(2, PlacementKind::RoundRobin);
+        cfg.api_source = crate::config::ApiSourceKind::External;
+        cfg.handling =
+            HandlingPolicy::Forced(HandlingStrategy::Preserve);
+        let mut set = ReplicaSet::simulated(cfg);
+        set.enqueue(RequestSpec {
+            api_calls: vec![ApiCallSpec {
+                decode_before: Tokens(2),
+                api_type: ApiType::Qa,
+                duration: Micros(5_000_000),
+                response_tokens: Tokens(0),
+            }],
+            final_decode: Tokens(1),
+            ..simple_spec(0, 0, 0)
+        });
+        set.enqueue(simple_spec(1, 0, 2));
+        set.run_until_idle(None);
+        // Round-robin: id 0 on replica 0 (parked), id 1 on replica 1
+        // (finished); the fleet idles with the call outstanding.
+        assert_eq!(set.owner_of(RequestId(0)), Some(0));
+        assert!(set.replica(0).request(RequestId(0)).unwrap()
+                    .in_api_wait());
+        assert!(set.replica(1).request(RequestId(1)).unwrap()
+                    .is_finished());
+        assert!(set.complete_api_call(RequestId(9), 0, Tokens(0))
+                    .is_err(), "unknown request refused");
+        set.complete_api_call(RequestId(0), 0, Tokens(3)).unwrap();
+        set.run_until_idle(None);
+        let r0 = set.replica(0).request(RequestId(0)).unwrap();
+        assert!(r0.is_finished());
+        assert_eq!(r0.logical_context, Tokens(6),
+                   "2 decoded + 3 tool-result tokens + 1 final");
+        assert_eq!(set.replica(0).metrics.api_calls_completed, 1,
+                   "the predicted-vs-actual gap is observable");
     }
 
     #[test]

@@ -183,6 +183,44 @@ impl PlacementKind {
     }
 }
 
+/// Where API-call returns come from (`--api-source`): the substrate
+/// behind the engine's [`ApiExecutor`](crate::engine::api_executor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ApiSourceKind {
+    /// The call's true duration is known up front (sampled by the
+    /// workload generator and carried in the spec); returns fire from
+    /// the executor's deadline heap. Byte-identical to the pre-seam
+    /// engine — the default.
+    #[default]
+    Simulated,
+    /// The *client* runs the tool: `ApiCallStarted` is pushed over the
+    /// session event stream, the engine parks the request under the
+    /// strategy chosen from the **predicted** duration, and the return
+    /// fires only when a `tool_result` frame arrives
+    /// (`SessionHandle::complete_api_call`). Return times are unknown
+    /// to the scheduler — the predicted-vs-actual duration gap becomes
+    /// observable end to end (`api_pred_err_hist` in the metrics).
+    External,
+}
+
+impl ApiSourceKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ApiSourceKind::Simulated => "sim",
+            ApiSourceKind::External => "external",
+        }
+    }
+
+    /// Parse a CLI name (`--api-source`).
+    pub fn parse(name: &str) -> Option<ApiSourceKind> {
+        Some(match name {
+            "sim" | "simulated" => ApiSourceKind::Simulated,
+            "external" => ApiSourceKind::External,
+            _ => return None,
+        })
+    }
+}
+
 /// Which predictor feeds the scheduler.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum PredictorKind {
@@ -217,6 +255,11 @@ pub struct ComposeConfig {
     /// charging the whole batch synchronously (INFERCEPT eqn (3)'s stall
     /// term becomes overlap).
     pub async_swap: bool,
+    /// `--prefill-chunk auto`: derive the chunk size from the profiled
+    /// decode-iteration EMA each iteration (target: one chunk's forward
+    /// time ≈ one decode iteration), instead of the static
+    /// `prefill_chunk`. When set, `prefill_chunk` is ignored.
+    pub auto_chunk: bool,
 }
 
 impl ComposeConfig {
@@ -229,11 +272,12 @@ impl ComposeConfig {
             max_batch_tokens: None,
             prefill_chunk: Some(512),
             async_swap: true,
+            auto_chunk: false,
         }
     }
 
     pub fn is_chunked(&self) -> bool {
-        self.prefill_chunk.is_some()
+        self.prefill_chunk.is_some() || self.auto_chunk
     }
 }
 
@@ -326,6 +370,11 @@ pub struct SystemConfig {
     /// owner's pressure (ROADMAP follow-on to multi-replica dispatch).
     /// Only applies with `replicas > 1`.
     pub admission_requeue: bool,
+    /// Where API returns come from (`--api-source`): the simulated
+    /// deadline heap (default; byte-identical to the pre-seam engine)
+    /// or externally-resolved tool calls driven by the client over the
+    /// session event stream.
+    pub api_source: ApiSourceKind,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -349,6 +398,7 @@ impl Default for SystemConfig {
             placement: PlacementKind::MemoryOverTime,
             shared_prefix: false,
             admission_requeue: true,
+            api_source: ApiSourceKind::default(),
             cost: CostModel::paper_scale(),
             seed: 0,
         }
@@ -431,10 +481,39 @@ mod tests {
         assert_eq!(c.max_batch_tokens, None);
         assert_eq!(c.prefill_chunk, None);
         assert!(!c.async_swap);
+        assert!(!c.auto_chunk, "autotuning is opt-in");
         assert!(!c.is_chunked());
         assert!(ComposeConfig::chunked().is_chunked());
+        // The chunked preset keeps the static 512 default; `auto` is a
+        // separate opt-in.
+        assert_eq!(ComposeConfig::chunked().prefill_chunk, Some(512));
+        // Auto counts as chunked (the scheduler must account prefill).
+        let auto = ComposeConfig {
+            auto_chunk: true,
+            ..ComposeConfig::default()
+        };
+        assert!(auto.is_chunked());
         // Presets must not silently enable the composer features.
         assert_eq!(SystemConfig::preset("lamps").unwrap().compose, c);
+    }
+
+    #[test]
+    fn api_source_defaults_simulated_and_parses() {
+        // `--api-source sim` (the default) must leave every preset on
+        // the simulated deadline heap — the byte-identical-to-PR-4
+        // path.
+        assert_eq!(ApiSourceKind::default(), ApiSourceKind::Simulated);
+        for name in ["vllm", "infercept", "lamps", "lamps-no-sched",
+                     "sjf", "sjf-total"] {
+            assert_eq!(SystemConfig::preset(name).unwrap().api_source,
+                       ApiSourceKind::Simulated, "{name}");
+        }
+        for kind in [ApiSourceKind::Simulated, ApiSourceKind::External] {
+            assert_eq!(ApiSourceKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(ApiSourceKind::parse("simulated"),
+                   Some(ApiSourceKind::Simulated));
+        assert_eq!(ApiSourceKind::parse("nope"), None);
     }
 
     #[test]

@@ -214,7 +214,7 @@ mod tests {
         let cfg = ComposeConfig {
             max_batch_tokens: Some(20),
             prefill_chunk: Some(64),
-            async_swap: false,
+            ..ComposeConfig::default()
         };
         let items = [item(1, 0, 5), item(2, 0, 5), item(3, 100, 100),
                      item(4, 100, 100)];
@@ -235,7 +235,7 @@ mod tests {
         let cfg = ComposeConfig {
             max_batch_tokens: Some(1),
             prefill_chunk: Some(8),
-            async_swap: false,
+            ..ComposeConfig::default()
         };
         let items = [item(1, 0, 5), item(2, 0, 5), item(3, 30, 30)];
         let plan = compose(&cfg, &items);

@@ -43,6 +43,21 @@ impl ApiType {
             ApiType::Tool(_) => "tool",
         }
     }
+
+    /// Parse a wire/CLI label back into a class (`Tool` collapses to
+    /// category 0 — the wire protocol does not carry the category).
+    pub fn parse(label: &str) -> Option<ApiType> {
+        Some(match label {
+            "math" => ApiType::Math,
+            "qa" => ApiType::Qa,
+            "ve" => ApiType::Ve,
+            "chatbot" => ApiType::Chatbot,
+            "image" => ApiType::Image,
+            "tts" => ApiType::Tts,
+            "tool" => ApiType::Tool(0),
+            _ => return None,
+        })
+    }
 }
 
 /// How a request's KV cache is handled while it waits on an API call
@@ -172,10 +187,14 @@ pub enum Phase {
     Waiting,
     /// Member of the current running batch.
     Running,
-    /// Blocked on an API call until `return_at`, held under `strategy`.
+    /// Blocked on an API call, held under `strategy`. `return_at` is
+    /// the simulated source's known deadline; `None` marks an
+    /// externally-resolved call whose return time nobody knows — it
+    /// fires only when the client posts a `tool_result`
+    /// (`Engine::complete_api_call`).
     ApiWait {
         strategy: HandlingStrategy,
-        return_at: Micros,
+        return_at: Option<Micros>,
     },
     Finished,
 }
@@ -232,6 +251,10 @@ pub struct Request {
     pub starvation_cnt: u32,
     /// Promoted-to-head flag; sticky until completion (paper §4.4).
     pub starving: bool,
+    /// When the in-flight API call started (set at the encounter,
+    /// cleared when the return is routed) — what an externally-resolved
+    /// call's *actual* duration is measured from.
+    pub api_started_at: Option<Micros>,
 
     // ---- metrics ----
     pub first_scheduled_at: Option<Micros>,
@@ -268,6 +291,7 @@ impl Request {
             was_scheduled: false,
             starvation_cnt: 0,
             starving: false,
+            api_started_at: None,
             first_scheduled_at: None,
             first_token_at: None,
             finished_at: None,
@@ -416,19 +440,30 @@ mod tests {
         assert_eq!(r.held_memory(), Tokens(15));
         r.phase = Phase::ApiWait {
             strategy: HandlingStrategy::Preserve,
-            return_at: Micros(10),
+            return_at: Some(Micros(10)),
         };
         assert_eq!(r.held_memory(), Tokens(15));
         r.phase = Phase::ApiWait {
             strategy: HandlingStrategy::Discard,
-            return_at: Micros(10),
+            return_at: Some(Micros(10)),
         };
         assert_eq!(r.held_memory(), Tokens::ZERO);
         r.phase = Phase::ApiWait {
             strategy: HandlingStrategy::Swap,
-            return_at: Micros(10),
+            return_at: None, // externally-resolved calls hold the same
         };
         assert_eq!(r.held_memory(), Tokens::ZERO);
+    }
+
+    #[test]
+    fn api_type_label_parse_roundtrip() {
+        for t in [ApiType::Math, ApiType::Qa, ApiType::Ve,
+                  ApiType::Chatbot, ApiType::Image, ApiType::Tts,
+                  ApiType::Tool(0)] {
+            assert_eq!(ApiType::parse(t.label()), Some(t));
+        }
+        assert_eq!(ApiType::parse("tool"), Some(ApiType::Tool(0)));
+        assert_eq!(ApiType::parse("nope"), None);
     }
 
     #[test]

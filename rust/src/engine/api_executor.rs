@@ -1,13 +1,23 @@
-//! In-flight API call tracking: the simulated external-API substrate
-//! (DESIGN.md §2 — real augmentation services are replaced by their
-//! published latency distributions; the true per-call duration is sampled
-//! by the workload generator and carried in the spec).
+//! In-flight API call tracking — the engine-side half of the
+//! [`ApiSource`](crate::config::ApiSourceKind) seam.
 //!
-//! Keeps a min-heap of (return_at, request) plus per-strategy membership
-//! (Algorithm 1's PQueue / DQueue / SQueue).
+//! Two kinds of call coexist:
+//! - **Simulated** (DESIGN.md §2 — real augmentation services replaced
+//!   by their published latency distributions): the true per-call
+//!   duration is sampled by the workload generator, so the call carries
+//!   a known deadline and sits in a min-heap of `(return_at, request)`.
+//! - **External**: the *client* runs the tool, so nobody knows the
+//!   return time. The call sits in an externally-resolvable set until
+//!   [`ApiExecutor::resolve_external`] fires it (driven by a
+//!   `tool_result` wire frame). `next_return` never covers these —
+//!   idle-jump logic must not assume the earliest heap deadline bounds
+//!   the wait.
+//!
+//! Per-strategy membership counts (Algorithm 1's PQueue / DQueue /
+//! SQueue) span both kinds.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 
 use crate::core::request::HandlingStrategy;
 use crate::core::types::{Micros, RequestId};
@@ -15,6 +25,9 @@ use crate::core::types::{Micros, RequestId};
 #[derive(Debug, Default)]
 pub struct ApiExecutor {
     heap: BinaryHeap<Reverse<(Micros, RequestId)>>,
+    /// Calls with no known deadline, resolved only by the client
+    /// (`--api-source external`).
+    external: HashSet<RequestId>,
     /// Counts per strategy (PQueue/DQueue/SQueue sizes, for metrics).
     preserve: usize,
     discard: usize,
@@ -26,11 +39,20 @@ impl ApiExecutor {
         ApiExecutor::default()
     }
 
-    /// Begin an API call for `id`, returning at `return_at`, held under
-    /// `strategy`.
-    pub fn begin(&mut self, id: RequestId, return_at: Micros,
+    /// Begin an API call for `id`, held under `strategy`. A
+    /// `Some(return_at)` deadline is a simulated call (heap); `None`
+    /// parks it in the externally-resolvable set until
+    /// [`ApiExecutor::resolve_external`].
+    pub fn begin(&mut self, id: RequestId, return_at: Option<Micros>,
                  strategy: HandlingStrategy) {
-        self.heap.push(Reverse((return_at, id)));
+        match return_at {
+            Some(t) => {
+                self.heap.push(Reverse((t, id)));
+            }
+            None => {
+                self.external.insert(id);
+            }
+        }
         match strategy {
             HandlingStrategy::Preserve => self.preserve += 1,
             HandlingStrategy::Discard => self.discard += 1,
@@ -38,12 +60,15 @@ impl ApiExecutor {
         }
     }
 
-    /// Earliest pending return time.
+    /// Earliest pending *simulated* return time. Externally-resolved
+    /// calls have no deadline and never surface here — with
+    /// `external_in_flight() > 0` this being `None` (or far off) does
+    /// **not** bound how soon work may arrive.
     pub fn next_return(&self) -> Option<Micros> {
         self.heap.peek().map(|Reverse((t, _))| *t)
     }
 
-    /// Pop every call that has returned by `now`.
+    /// Pop every simulated call that has returned by `now`.
     pub fn drain_returned(&mut self, now: Micros,
                           mut on_return: impl FnMut(RequestId)) {
         while let Some(Reverse((t, _))) = self.heap.peek() {
@@ -53,6 +78,27 @@ impl ApiExecutor {
             let Reverse((_, id)) = self.heap.pop().unwrap();
             on_return(id);
         }
+    }
+
+    /// Fire an externally-resolved call's return (the client's
+    /// `tool_result` arrived). Returns false if `id` has no pending
+    /// external call — the caller must treat that as a protocol error,
+    /// not route a return.
+    pub fn resolve_external(&mut self, id: RequestId) -> bool {
+        self.external.remove(&id)
+    }
+
+    /// Is `id` parked as an externally-resolved call?
+    pub fn is_external(&self, id: RequestId) -> bool {
+        self.external.contains(&id)
+    }
+
+    /// Every call currently parked in the externally-resolvable set
+    /// (the timeout sweep's scan list — it must see orphaned requests
+    /// whose session is already gone, so it cannot be driven off any
+    /// session map).
+    pub fn external_ids(&self) -> Vec<RequestId> {
+        self.external.iter().copied().collect()
     }
 
     /// Caller must tell us which strategy the drained request was held
@@ -66,7 +112,12 @@ impl ApiExecutor {
     }
 
     pub fn in_flight(&self) -> usize {
-        self.heap.len()
+        self.heap.len() + self.external.len()
+    }
+
+    /// Externally-resolvable calls currently parked.
+    pub fn external_in_flight(&self) -> usize {
+        self.external.len()
     }
 
     pub fn queue_sizes(&self) -> (usize, usize, usize) {
@@ -81,9 +132,11 @@ mod tests {
     #[test]
     fn returns_in_time_order() {
         let mut ex = ApiExecutor::new();
-        ex.begin(RequestId(1), Micros(300), HandlingStrategy::Preserve);
-        ex.begin(RequestId(2), Micros(100), HandlingStrategy::Discard);
-        ex.begin(RequestId(3), Micros(200), HandlingStrategy::Swap);
+        ex.begin(RequestId(1), Some(Micros(300)),
+                 HandlingStrategy::Preserve);
+        ex.begin(RequestId(2), Some(Micros(100)),
+                 HandlingStrategy::Discard);
+        ex.begin(RequestId(3), Some(Micros(200)), HandlingStrategy::Swap);
         assert_eq!(ex.next_return(), Some(Micros(100)));
         let mut order = Vec::new();
         ex.drain_returned(Micros(250), |id| order.push(id));
@@ -95,9 +148,11 @@ mod tests {
     #[test]
     fn queue_counts() {
         let mut ex = ApiExecutor::new();
-        ex.begin(RequestId(1), Micros(10), HandlingStrategy::Preserve);
-        ex.begin(RequestId(2), Micros(20), HandlingStrategy::Preserve);
-        ex.begin(RequestId(3), Micros(30), HandlingStrategy::Swap);
+        ex.begin(RequestId(1), Some(Micros(10)),
+                 HandlingStrategy::Preserve);
+        ex.begin(RequestId(2), Some(Micros(20)),
+                 HandlingStrategy::Preserve);
+        ex.begin(RequestId(3), Some(Micros(30)), HandlingStrategy::Swap);
         assert_eq!(ex.queue_sizes(), (2, 0, 1));
         ex.drain_returned(Micros(15), |_| {});
         ex.note_returned(HandlingStrategy::Preserve);
@@ -111,5 +166,40 @@ mod tests {
         let mut called = false;
         ex.drain_returned(Micros(1_000_000), |_| called = true);
         assert!(!called);
+    }
+
+    #[test]
+    fn external_calls_have_no_deadline_and_resolve_once() {
+        let mut ex = ApiExecutor::new();
+        ex.begin(RequestId(7), None, HandlingStrategy::Swap);
+        ex.begin(RequestId(8), Some(Micros(500)),
+                 HandlingStrategy::Preserve);
+        // The heap deadline does not cover the external call.
+        assert_eq!(ex.next_return(), Some(Micros(500)));
+        assert_eq!(ex.in_flight(), 2);
+        assert_eq!(ex.external_in_flight(), 1);
+        assert!(ex.is_external(RequestId(7)));
+        assert!(!ex.is_external(RequestId(8)));
+        // Time passing never fires it...
+        let mut fired = Vec::new();
+        ex.drain_returned(Micros(1_000_000_000), |id| fired.push(id));
+        assert_eq!(fired, vec![RequestId(8)]);
+        // ...only resolution does, and exactly once.
+        assert!(ex.resolve_external(RequestId(7)));
+        ex.note_returned(HandlingStrategy::Swap);
+        assert!(!ex.resolve_external(RequestId(7)), "second fire refused");
+        assert_eq!(ex.in_flight(), 0);
+        assert_eq!(ex.external_in_flight(), 0);
+    }
+
+    #[test]
+    fn resolve_unknown_id_refused() {
+        let mut ex = ApiExecutor::new();
+        ex.begin(RequestId(1), Some(Micros(10)),
+                 HandlingStrategy::Preserve);
+        // A simulated call is not externally resolvable.
+        assert!(!ex.resolve_external(RequestId(1)));
+        assert!(!ex.resolve_external(RequestId(99)));
+        assert_eq!(ex.in_flight(), 1);
     }
 }

@@ -39,8 +39,8 @@ pub mod pjrt_backend;
 
 use std::collections::{BTreeSet, HashMap};
 
-use crate::config::{HandlingPolicy, PredictorKind, SchedulerKind,
-                    SystemConfig};
+use crate::config::{ApiSourceKind, ComposeConfig, HandlingPolicy,
+                    PredictorKind, SchedulerKind, SystemConfig};
 use crate::coordinator::batch::{self, ComposeItem, IterationPlan};
 use crate::coordinator::handling::{select_strategy, WasteInputs};
 use crate::coordinator::ranking::{memory_over_time,
@@ -79,6 +79,46 @@ pub struct WithdrawnRequest {
     pub handling: Vec<HandlingStrategy>,
     pub starvation_cnt: u32,
     pub starving: bool,
+}
+
+/// Observational per-request lifecycle event, journaled by the engine
+/// when a driver armed the journal ([`Engine::enable_events`]) and
+/// drained through [`Engine::drain_events`]. The serving frontend maps
+/// these onto the typed session event stream
+/// (`server::RequestEvent`); simulation runs leave the journal off and
+/// pay nothing. Emission never feeds back into scheduling — an engine
+/// with events on behaves byte-identically to one without.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineEvent {
+    /// The request's first token was decoded at `at`.
+    FirstToken { id: RequestId, at: Micros },
+    /// `chunk` further tokens were decoded (consecutive per-iteration
+    /// singles are coalesced between drains).
+    Tokens { id: RequestId, chunk: u64 },
+    /// The request hit API call `index` and was parked under
+    /// `strategy`; `predicted` is the scheduler's duration estimate
+    /// (what the handling choice and the reservation lookahead used).
+    /// `external` marks a call the client must resolve via
+    /// [`Engine::complete_api_call`].
+    ApiStarted {
+        id: RequestId,
+        index: usize,
+        strategy: HandlingStrategy,
+        predicted: Micros,
+        external: bool,
+    },
+    /// API call `index` returned after `actual` — the true sampled
+    /// duration for simulated calls, the measured park time for
+    /// externally-resolved ones.
+    ApiCompleted {
+        id: RequestId,
+        index: usize,
+        actual: Micros,
+    },
+    /// The request finished (served to completion) at `at`.
+    Finished { id: RequestId, at: Micros },
+    /// The request was dropped unserved.
+    Dropped { id: RequestId, reason: String },
 }
 
 pub struct Engine {
@@ -127,6 +167,10 @@ pub struct Engine {
     /// single-engine path, where that arrival would sit in the engine's
     /// own pending queue. `None` (the default) changes nothing.
     external_event: Option<Micros>,
+    /// Lifecycle event journal (see [`EngineEvent`]); populated only
+    /// when a driver armed it via [`Engine::enable_events`].
+    events: Vec<EngineEvent>,
+    events_on: bool,
 }
 
 impl Engine {
@@ -173,6 +217,8 @@ impl Engine {
             record_timeline: false,
             dropped: Vec::new(),
             external_event: None,
+            events: Vec::new(),
+            events_on: false,
             cfg,
         }
     }
@@ -354,6 +400,130 @@ impl Engine {
     }
 
     // ------------------------------------------------------------------
+    // Lifecycle event journal (server session streams)
+    // ------------------------------------------------------------------
+
+    /// Arm the [`EngineEvent`] journal. Purely observational: nothing
+    /// engine-side reads it back, so an armed engine schedules
+    /// byte-identically to an unarmed one. The driver that armed it
+    /// must drain it ([`Engine::drain_events`]) or it grows without
+    /// bound.
+    pub fn enable_events(&mut self) {
+        self.events_on = true;
+    }
+
+    /// Take every event journaled since the last drain (always empty
+    /// unless [`Engine::enable_events`] armed the journal).
+    pub fn drain_events(&mut self) -> Vec<EngineEvent> {
+        if self.events.is_empty() {
+            return Vec::new();
+        }
+        std::mem::take(&mut self.events)
+    }
+
+    fn push_event(&mut self, ev: EngineEvent) {
+        if !self.events_on {
+            return;
+        }
+        // Coalesce consecutive per-iteration token singles for the same
+        // request so a long decode segment is one frame per drain, not
+        // one per token.
+        if let EngineEvent::Tokens { id, chunk } = ev {
+            if let Some(EngineEvent::Tokens { id: last, chunk: c }) =
+                self.events.last_mut()
+            {
+                if *last == id {
+                    *c += chunk;
+                    return;
+                }
+            }
+        }
+        self.events.push(ev);
+    }
+
+    // ------------------------------------------------------------------
+    // Externally-resolved API calls (`--api-source external`)
+    // ------------------------------------------------------------------
+
+    /// Resolve an externally-held API call: the client ran the tool
+    /// and posted its result (a `tool_result` wire frame, routed here
+    /// by the serving frontend). Validates that the request is parked
+    /// on exactly call `index`, overrides the call's response length
+    /// with what the tool actually returned, and routes the return
+    /// like any simulated one — the request re-enters the waiting
+    /// queue and its next admission materializes the response tokens.
+    /// The predicted-vs-actual duration error is recorded in the
+    /// metrics (`api_pred_err_hist`).
+    pub fn complete_api_call(&mut self, id: RequestId, index: usize,
+                             response_tokens: Tokens)
+                             -> anyhow::Result<()> {
+        let now = self.now();
+        let Some(req) = self.requests.get_mut(&id) else {
+            anyhow::bail!("unknown request {id}");
+        };
+        let Phase::ApiWait { return_at, .. } = req.phase else {
+            anyhow::bail!("{id} is not waiting on an API call");
+        };
+        if return_at.is_some() {
+            anyhow::bail!("{id}'s API call is simulated, not externally \
+                           resolvable");
+        }
+        if req.segment != index {
+            anyhow::bail!("{id} is parked on call {}, not {index}",
+                          req.segment);
+        }
+        if !self.api.resolve_external(id) {
+            anyhow::bail!("{id} has no pending external call");
+        }
+        req.spec.api_calls[index].response_tokens = response_tokens;
+        self.route_api_return(id, now);
+        Ok(())
+    }
+
+    /// Every request currently parked on an externally-held API call
+    /// (the serving frontend's timeout-sweep scan list).
+    pub fn external_api_ids(&self) -> Vec<RequestId> {
+        self.api.external_ids()
+    }
+
+    /// Abort an externally-held API call whose client will never
+    /// answer (the serving frontend's disconnect/timeout backstop): a
+    /// parked external call emits no events, so a vanished client is
+    /// undetectable by failed sends, and without this the request
+    /// would hold its strategy's state — Preserve pins KV blocks —
+    /// forever. The request is dropped terminally, every holding
+    /// freed, and a `Dropped` event journaled with `reason`. Returns
+    /// false (and does nothing) unless `id` is parked on an external
+    /// call.
+    pub fn abort_external_call(&mut self, id: RequestId,
+                               reason: String) -> bool {
+        let Some(req) = self.requests.get(&id) else {
+            return false;
+        };
+        let Phase::ApiWait { strategy, return_at: None } = req.phase
+        else {
+            return false;
+        };
+        if !self.api.resolve_external(id) {
+            return false;
+        }
+        self.api.note_returned(strategy);
+        self.pred_return.remove(&id);
+        // Same teardown order as the mid-run drop in `admit`.
+        self.transfers.cancel(id);
+        self.free_terminal(id);
+        self.swap.discard(id);
+        self.backend.release(id);
+        let req = self.requests.get_mut(&id).expect("checked above");
+        req.phase = Phase::Finished;
+        req.api_started_at = None;
+        self.live.remove(&id);
+        self.dropped.push(id);
+        self.push_event(EngineEvent::Dropped { id, reason });
+        true
+    }
+
+    // ------------------------------------------------------------------
     // Submission
     // ------------------------------------------------------------------
 
@@ -386,6 +556,14 @@ impl Engine {
         if req.admission_memory() > self.kv.capacity() {
             // Can never fit; fail fast instead of livelocking.
             self.dropped.push(id);
+            self.push_event(EngineEvent::Dropped {
+                id,
+                reason: format!(
+                    "admission memory {} tokens exceeds replica KV \
+                     capacity {}",
+                    req.admission_memory().0,
+                    self.kv.capacity().0),
+            });
             return;
         }
         self.requests.insert(id, req);
@@ -759,48 +937,80 @@ impl Engine {
         let mut returned = Vec::new();
         self.api.drain_returned(now, |id| returned.push(id));
         for id in returned {
-            let req = self.requests.get_mut(&id).expect("api return");
-            let Phase::ApiWait { strategy, .. } = req.phase else {
-                panic!("{id} returned but not in ApiWait");
-            };
-            self.api.note_returned(strategy);
-            self.pred_return.remove(&id);
-            let seg = req.segment;
-            let response = req.spec.api_calls[seg].response_tokens;
-            req.segment += 1;
-            req.segment_generated = Tokens::ZERO;
-            req.logical_context += response;
-            match strategy {
-                HandlingStrategy::Preserve => {
-                    // KV retained; only the response must be materialized.
-                    req.pending_materialize = response;
-                }
-                HandlingStrategy::Discard => {
-                    // Everything must be recomputed. Flag it here, not
-                    // only at chunk time: prefix-cache hits at admission
-                    // shrink `pending_materialize` below
-                    // `logical_context`, which would otherwise hide the
-                    // (smaller) recompute from the wasted-work metric.
-                    req.pending_materialize = req.logical_context;
-                    req.context = Tokens::ZERO;
-                    req.recomputing = true;
-                }
-                HandlingStrategy::Swap => {
-                    // Swap-in restores the old context; the response is
-                    // new. Nothing is live until the restore runs.
-                    req.pending_materialize = response;
-                    req.context = Tokens::ZERO;
-                }
-            }
-            req.phase = Phase::Waiting;
-            if self.cfg.requeue_as_new {
-                // vLLM treats the continuation as a brand-new job.
-                req.queue_key = now;
-            }
-            // Segment changed: invalidate the cached score.
-            req.score_iteration = u64::MAX;
-            self.waiting.push(id);
+            self.route_api_return(id, now);
         }
+    }
+
+    /// Route one API return back into the waiting queue — the shared
+    /// core of the simulated drain (deadline heap) and the external
+    /// resolution path ([`Engine::complete_api_call`]).
+    fn route_api_return(&mut self, id: RequestId, now: Micros) {
+        let req = self.requests.get_mut(&id).expect("api return");
+        let Phase::ApiWait { strategy, return_at } = req.phase else {
+            panic!("{id} returned but not in ApiWait");
+        };
+        self.api.note_returned(strategy);
+        self.pred_return.remove(&id);
+        let seg = req.segment;
+        let call = &req.spec.api_calls[seg];
+        let response = call.response_tokens;
+        // Actual duration: the sampled truth for simulated calls, the
+        // measured park time for externally-resolved ones.
+        let external = return_at.is_none();
+        let actual = if external {
+            req.api_started_at.map_or(Micros::ZERO, |t| now - t)
+        } else {
+            call.duration
+        };
+        let predicted = req.predictions[seg]
+            .api_duration
+            .unwrap_or(call.duration);
+        req.api_started_at = None;
+        req.segment += 1;
+        req.segment_generated = Tokens::ZERO;
+        req.logical_context += response;
+        match strategy {
+            HandlingStrategy::Preserve => {
+                // KV retained; only the response must be materialized.
+                req.pending_materialize = response;
+            }
+            HandlingStrategy::Discard => {
+                // Everything must be recomputed. Flag it here, not
+                // only at chunk time: prefix-cache hits at admission
+                // shrink `pending_materialize` below
+                // `logical_context`, which would otherwise hide the
+                // (smaller) recompute from the wasted-work metric.
+                req.pending_materialize = req.logical_context;
+                req.context = Tokens::ZERO;
+                req.recomputing = true;
+            }
+            HandlingStrategy::Swap => {
+                // Swap-in restores the old context; the response is
+                // new. Nothing is live until the restore runs.
+                req.pending_materialize = response;
+                req.context = Tokens::ZERO;
+            }
+        }
+        req.phase = Phase::Waiting;
+        if self.cfg.requeue_as_new {
+            // vLLM treats the continuation as a brand-new job.
+            req.queue_key = now;
+        }
+        // Segment changed: invalidate the cached score.
+        req.score_iteration = u64::MAX;
+        self.waiting.push(id);
+        if external {
+            // The predicted-vs-actual duration gap is observable only
+            // for externally-resolved calls; recording nothing for
+            // simulated ones keeps sim reports byte-identical to the
+            // pre-seam engine.
+            self.metrics.record_api_outcome(predicted, actual);
+        }
+        self.push_event(EngineEvent::ApiCompleted {
+            id,
+            index: seg,
+            actual,
+        });
     }
 
     fn schedule_context(&self) -> ScheduleContext {
@@ -886,6 +1096,12 @@ impl Engine {
                     Phase::Finished;
                 self.live.remove(&id);
                 self.dropped.push(id);
+                self.push_event(EngineEvent::Dropped {
+                    id,
+                    reason: "context outgrew the replica KV budget \
+                             mid-run"
+                        .to_string(),
+                });
                 continue;
             }
             let slot_ok =
@@ -1278,7 +1494,33 @@ impl Engine {
                 }
             })
             .collect();
-        batch::compose(&self.cfg.compose, &items)
+        batch::compose(&self.effective_compose(), &items)
+    }
+
+    /// The composer knobs for this iteration: the static config, with
+    /// the chunk size derived from the profiled t_iter EMA when
+    /// autotuning (`--prefill-chunk auto`) is on.
+    fn effective_compose(&self) -> ComposeConfig {
+        let mut compose = self.cfg.compose;
+        if compose.auto_chunk {
+            compose.prefill_chunk = self.auto_prefill_chunk();
+        }
+        compose
+    }
+
+    /// Chunk-size autotuning target: one chunk's forward time ≈ one
+    /// decode iteration (the t_iter EMA), so a co-batched recompute
+    /// never stalls decodes for more than about twice an iteration.
+    /// Clamped to [16, 8192] tokens (a sub-16-token chunk is all
+    /// per-chunk overhead); a free-prefill cost model falls back to
+    /// whole-context materialization, where chunking cannot matter.
+    fn auto_prefill_chunk(&self) -> Option<u64> {
+        let per_token = self.cfg.cost.prefill_per_token_us;
+        if per_token <= 0.0 {
+            return None;
+        }
+        Some(((self.t_iter_ema / per_token).round() as u64)
+            .clamp(16, 8192))
     }
 
     /// Phases 2+3 — **execute** the plan on the backend and **commit**
@@ -1379,19 +1621,31 @@ impl Engine {
         let decode_ids: Vec<RequestId> =
             plan.decode.iter().map(|s| s.id).collect();
         for id in &decode_ids {
-            let req = self.requests.get_mut(id).unwrap();
-            debug_assert!(self.kv.tokens_of(*id) >= req.context + Tokens(1),
-                          "admission must have reserved the headroom \
-                           ({id}: tokens_of={}, context={})",
-                          self.kv.tokens_of(*id).0, req.context.0);
-            req.context += Tokens(1);
-            req.logical_context += Tokens(1);
-            req.segment_generated += Tokens(1);
+            let first = {
+                let req = self.requests.get_mut(id).unwrap();
+                debug_assert!(self.kv.tokens_of(*id)
+                                  >= req.context + Tokens(1),
+                              "admission must have reserved the headroom \
+                               ({id}: tokens_of={}, context={})",
+                              self.kv.tokens_of(*id).0, req.context.0);
+                req.context += Tokens(1);
+                req.logical_context += Tokens(1);
+                req.segment_generated += Tokens(1);
+                let first = req.first_token_at.is_none();
+                if first {
+                    req.first_token_at = Some(now);
+                }
+                first
+            };
             self.metrics.tokens_decoded += 1;
-            if req.first_token_at.is_none() {
-                req.first_token_at = Some(now);
+            if first {
                 self.metrics.on_first_token(*id, now);
+                self.push_event(EngineEvent::FirstToken {
+                    id: *id,
+                    at: now,
+                });
             }
+            self.push_event(EngineEvent::Tokens { id: *id, chunk: 1 });
         }
 
         // Route segment boundaries: API encounters and completions.
@@ -1578,14 +1832,30 @@ impl Engine {
             }
         }
 
-        let return_at = self.clock.now() + duration;
+        // The simulated source knows the true return time (the sampled
+        // duration); an external source parks the call with no deadline
+        // — it fires only when the client posts a `tool_result`
+        // ([`Engine::complete_api_call`]). Either way the request is
+        // held under the strategy chosen from the *predicted* duration,
+        // and the reservation lookahead plans with the prediction.
+        let external = self.cfg.api_source == ApiSourceKind::External;
+        let started = self.clock.now();
+        let return_at = (!external).then(|| started + duration);
         let req = self.requests.get_mut(&id).unwrap();
         req.phase = Phase::ApiWait {
             strategy,
             return_at,
         };
+        req.api_started_at = Some(started);
         self.api.begin(id, return_at, strategy);
         self.pred_return.insert(id, now + pred_duration);
+        self.push_event(EngineEvent::ApiStarted {
+            id,
+            index: seg,
+            strategy,
+            predicted: pred_duration,
+            external,
+        });
     }
 
     fn finish(&mut self, id: RequestId, now: Micros) {
@@ -1598,6 +1868,7 @@ impl Engine {
         self.swap.discard(id);
         self.backend.release(id);
         self.metrics.on_finished(id, now);
+        self.push_event(EngineEvent::Finished { id, at: now });
     }
 }
 
@@ -2154,6 +2425,242 @@ mod tests {
         // A request that ran is not withdrawable (its KV and progress
         // are replica-local).
         assert!(e.withdraw_waiting(RequestId(0)).is_none());
+    }
+
+    #[test]
+    fn external_api_call_parks_until_client_resolves() {
+        // `--api-source external`: the engine parks the request with no
+        // deadline — time alone can never finish it — until the client
+        // posts the tool result, which also carries the true response
+        // length. The predicted duration (oracle: the spec's 3 s) is
+        // what the strategy choice and reservation planned with; the
+        // actual park time (7 s) only becomes known at resolution, and
+        // the gap lands in the error histogram.
+        let mut cfg = unit_cfg(SchedulerKind::Fcfs, 100);
+        cfg.api_source = crate::config::ApiSourceKind::External;
+        let mut e = Engine::simulated(cfg);
+        e.submit_with_handling(api_spec(0, 2, 3, 1),
+                               vec![HandlingStrategy::Swap]);
+        while !e.request(RequestId(0)).unwrap().in_api_wait() {
+            assert!(e.step(), "must reach the API call");
+        }
+        assert_eq!(e.now(), Micros(2_000_000));
+        assert_eq!(e.api.external_in_flight(), 1);
+        // No deadline anywhere: stepping reports idle, not progress.
+        assert!(!e.step(),
+                "an unresolved external call is not a steppable event");
+        assert!(e.has_live_work(),
+                "...but the engine still owes the request");
+        // The client answers 7 s later with a 2-token tool result
+        // (the spec said 0 — the client's answer wins).
+        e.advance_clock_to(Micros(9_000_000));
+        e.complete_api_call(RequestId(0), 0, Tokens(2)).unwrap();
+        e.run_until_idle(None);
+        let r = e.request(RequestId(0)).unwrap();
+        assert!(r.is_finished());
+        // 2 decode + 7 parked + 2 response materialize + 1 decode.
+        assert_eq!(r.finished_at, Some(Micros(12_000_000)));
+        assert_eq!(r.logical_context, Tokens(5),
+                   "2 decoded + 2 response + 1 final");
+        // Predicted 3 s vs actual 7 s: relative error 4/3 → the
+        // (100%, 200%] bucket.
+        assert_eq!(e.metrics.api_calls_completed, 1);
+        assert_eq!(e.metrics.api_pred_err_hist[4], 1);
+        assert_eq!(e.metrics.api_pred_err_hist.iter().sum::<u64>(), 1);
+        assert_eq!(e.metrics.api_pred_abs_err_us, 4_000_000);
+    }
+
+    #[test]
+    fn complete_api_call_validates_target() {
+        // Unknown ids, simulated calls, and wrong indices are protocol
+        // errors, never routed returns.
+        let mut e = Engine::simulated(unit_cfg(SchedulerKind::Fcfs, 100));
+        e.submit_with_handling(api_spec(0, 2, 3, 1),
+                               vec![HandlingStrategy::Preserve]);
+        while !e.request(RequestId(0)).unwrap().in_api_wait() {
+            assert!(e.step());
+        }
+        assert!(e.complete_api_call(RequestId(9), 0, Tokens(1)).is_err(),
+                "unknown request");
+        assert!(e.complete_api_call(RequestId(0), 0, Tokens(1)).is_err(),
+                "a simulated call is not externally resolvable");
+        e.run_until_idle(None);
+        assert!(e.request(RequestId(0)).unwrap().is_finished(),
+                "the simulated return still fires normally");
+        assert!(e.complete_api_call(RequestId(0), 0, Tokens(1)).is_err(),
+                "finished request is not in ApiWait");
+
+        let mut cfg = unit_cfg(SchedulerKind::Fcfs, 100);
+        cfg.api_source = crate::config::ApiSourceKind::External;
+        let mut e = Engine::simulated(cfg);
+        e.submit_with_handling(api_spec(1, 1, 3, 1),
+                               vec![HandlingStrategy::Preserve]);
+        while !e.request(RequestId(1)).unwrap().in_api_wait() {
+            assert!(e.step());
+        }
+        assert!(e.complete_api_call(RequestId(1), 1, Tokens(0)).is_err(),
+                "parked on call 0, not 1");
+        e.complete_api_call(RequestId(1), 0, Tokens(0)).unwrap();
+        assert!(e.complete_api_call(RequestId(1), 0, Tokens(0)).is_err(),
+                "a return fires exactly once");
+        e.run_until_idle(None);
+        assert!(e.request(RequestId(1)).unwrap().is_finished());
+    }
+
+    #[test]
+    fn abort_external_call_frees_everything() {
+        // The disconnect/timeout backstop: a Preserve-parked external
+        // call pins KV blocks that only the client's answer would
+        // release; aborting it must drop the request terminally, free
+        // the memory for siblings, and journal the reason.
+        let mut cfg = unit_cfg(SchedulerKind::Fcfs, 100);
+        cfg.api_source = crate::config::ApiSourceKind::External;
+        let mut e = Engine::simulated(cfg);
+        e.enable_events();
+        e.submit_with_handling(
+            RequestSpec {
+                prompt_tokens: Tokens(8),
+                ..api_spec(0, 2, 3, 1)
+            },
+            vec![HandlingStrategy::Preserve]);
+        while !e.request(RequestId(0)).unwrap().in_api_wait() {
+            assert!(e.step());
+        }
+        assert!(e.kv_occupancy() > 0.0, "Preserve holds KV while parked");
+        // Not abortable: wrong id, and (below) non-external calls.
+        assert!(!e.abort_external_call(RequestId(9), "x".to_string()));
+        assert!(e.abort_external_call(
+            RequestId(0), "client disconnected".to_string()));
+        assert!(!e.abort_external_call(RequestId(0), "x".to_string()),
+                "an abort fires exactly once");
+        assert_eq!(e.kv_occupancy(), 0.0, "all holdings freed");
+        assert_eq!(e.dropped, vec![RequestId(0)]);
+        assert!(!e.has_live_work(), "nothing left in flight");
+        assert!(e.drain_events().iter().any(|ev| matches!(
+            ev,
+            EngineEvent::Dropped { id, reason }
+                if *id == RequestId(0)
+                    && reason.contains("disconnected"))));
+        // A simulated call is never abortable this way.
+        let mut e = Engine::simulated(unit_cfg(SchedulerKind::Fcfs, 100));
+        e.submit_with_handling(api_spec(1, 1, 3, 1),
+                               vec![HandlingStrategy::Preserve]);
+        while !e.request(RequestId(1)).unwrap().in_api_wait() {
+            assert!(e.step());
+        }
+        assert!(!e.abort_external_call(RequestId(1), "x".to_string()));
+        e.run_until_idle(None);
+        assert!(e.request(RequestId(1)).unwrap().is_finished());
+    }
+
+    #[test]
+    fn event_journal_records_lifecycle_in_causal_order() {
+        use EngineEvent as E;
+        let mut e = Engine::simulated(unit_cfg(SchedulerKind::Fcfs, 100));
+        e.enable_events();
+        e.submit_with_handling(api_spec(0, 2, 3, 1),
+                               vec![HandlingStrategy::Preserve]);
+        e.run_until_idle(None);
+        let id = RequestId(0);
+        assert_eq!(e.drain_events(), vec![
+            E::FirstToken { id, at: Micros(1_000_000) },
+            E::Tokens { id, chunk: 2 },
+            E::ApiStarted {
+                id,
+                index: 0,
+                strategy: HandlingStrategy::Preserve,
+                predicted: Micros(3_000_000),
+                external: false,
+            },
+            E::ApiCompleted {
+                id,
+                index: 0,
+                actual: Micros(3_000_000),
+            },
+            E::Tokens { id, chunk: 1 },
+            E::Finished { id, at: Micros(6_000_000) },
+        ]);
+        assert!(e.drain_events().is_empty(), "drain takes everything");
+    }
+
+    #[test]
+    fn events_are_off_by_default_and_observation_free() {
+        let run = |events: bool| {
+            let mut e =
+                Engine::simulated(unit_cfg(SchedulerKind::Lamps, 50));
+            if events {
+                e.enable_events();
+            }
+            for i in 0..5 {
+                e.submit(api_spec(i, 2, 2, 2));
+            }
+            e.run_until_idle(None);
+            (e.drain_events().len(), e.metrics.report().to_json(true))
+        };
+        let (n_off, off) = run(false);
+        let (n_on, on) = run(true);
+        assert_eq!(n_off, 0, "journal must stay empty unless armed");
+        assert!(n_on > 0, "armed journal must record");
+        assert_eq!(off, on, "observation must not perturb the run");
+    }
+
+    #[test]
+    fn fail_fast_drop_journals_a_reason() {
+        let mut e = Engine::simulated(unit_cfg(SchedulerKind::Fcfs, 4));
+        e.enable_events();
+        e.submit(RequestSpec {
+            prompt_tokens: Tokens(10),
+            ..simple_spec(0, 0, 1)
+        });
+        let evs = e.drain_events();
+        assert_eq!(evs.len(), 1);
+        let EngineEvent::Dropped { id, reason } = &evs[0] else {
+            panic!("expected Dropped, got {evs:?}");
+        };
+        assert_eq!(*id, RequestId(0));
+        assert!(reason.contains("capacity"), "{reason}");
+    }
+
+    #[test]
+    fn auto_chunk_bounds_stall_from_t_iter_ema() {
+        // Same shape as chunked_prefill_bounds_co_batched_stall, but
+        // the chunk is derived from the profiled t_iter EMA: 1 ms
+        // iterations over 1 ms-per-token prefill target a 1-token
+        // chunk, clamped to the 16-token floor — so no round may
+        // exceed one decode (1 ms) plus one 16-token chunk (16 ms),
+        // against 65 ms unchunked.
+        let mut cfg = unit_cfg(SchedulerKind::Fcfs, 1000);
+        cfg.max_batch = 4;
+        cfg.cost = CostModel {
+            decode_base: Micros(1_000),
+            decode_per_ctx_token_us: 0.0,
+            prefill_per_token_us: 1_000.0,
+            swap_base_us: 0.0,
+            swap_per_token_us: 0.0,
+            rank_overhead_per_request_us: 0.0,
+        };
+        cfg.compose.auto_chunk = true;
+        let mut e = Engine::simulated(cfg);
+        e.submit(simple_spec(0, 0, 100));
+        e.submit(RequestSpec {
+            prompt_tokens: Tokens(64),
+            ..simple_spec(1, 0, 1)
+        });
+        let mut max_step = Micros::ZERO;
+        loop {
+            let before = e.now();
+            if !e.step() {
+                break;
+            }
+            let d = e.now() - before;
+            if d > max_step {
+                max_step = d;
+            }
+        }
+        assert!(e.request(RequestId(0)).unwrap().is_finished());
+        assert!(e.request(RequestId(1)).unwrap().is_finished());
+        assert!(max_step <= Micros(17_000),
+                "auto-chunked worst round was {max_step}");
     }
 
     #[test]

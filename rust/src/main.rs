@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use lamps::bench::{Dataset, ModelPreset};
 use lamps::cluster::ReplicaSet;
-use lamps::config::{PlacementKind, SystemConfig};
+use lamps::config::{ApiSourceKind, PlacementKind, SystemConfig};
 use lamps::core::types::Micros;
 #[cfg(feature = "pjrt")]
 use lamps::engine::pjrt_backend::PjrtBackend;
@@ -32,10 +32,12 @@ lamps — LAMPS: predictive scheduling for augmented-LLM serving
 USAGE:
   lamps serve   [--addr 127.0.0.1:7070] [--model gptj-tiny]
                 [--system lamps] [--artifacts artifacts]
+                [--api-source sim|external]
                 [--replicas N]
                 [--placement memory-over-time|prefix-affinity|
                              least-loaded|round-robin]
-                [--max-batch-tokens N] [--prefill-chunk N] [--async-swap]
+                [--max-batch-tokens N] [--prefill-chunk N|auto]
+                [--async-swap]
                 [--prefix-cache] [--prefix-cache-blocks N]
                 [--shared-prefix] [--no-admission-requeue]
   lamps run     [--dataset single-api|multi-api|toolbench|<trace.json>]
@@ -45,7 +47,8 @@ USAGE:
                 [--replicas N]
                 [--placement memory-over-time|prefix-affinity|
                              least-loaded|round-robin]
-                [--max-batch-tokens N] [--prefill-chunk N] [--async-swap]
+                [--max-batch-tokens N] [--prefill-chunk N|auto]
+                [--async-swap]
                 [--prefix-cache] [--prefix-cache-blocks N]
                 [--shared-prefix] [--no-admission-requeue]
                 [--timeline]
@@ -54,16 +57,42 @@ USAGE:
   lamps predict <prompt> [--artifacts artifacts]
   lamps info    [--artifacts artifacts]
 
-  --replicas N dispatches across N engine replicas (one modeled GPU
-  each); --placement picks how arrivals are placed: memory-over-time
-  (default; the LAMPS rank integral steers placement), prefix-affinity
-  (the integral with its prefill leg discounted on replicas already
-  holding the arrival's prompt prefix — pair with --prefix-cache and
-  --shared-prefix), least-loaded, or round-robin. --shared-prefix
-  maintains the fleet-level hash→replica prefix index those discounts
-  come from. A request memory-rejected by its owner before first run is
-  re-queued once to the best sibling unless --no-admission-requeue.
-  With --replicas 1 the single-engine path runs unchanged.
+WIRE PROTOCOL (serve; JSON lines over TCP, one frame per line):
+  -> {\"type\":\"request\", \"prompt\":\"...\", \"output_tokens\":N,
+      \"api_calls\":[{\"decode_before\":N, \"api_type\":\"qa\",
+                      \"api_ms\":N, \"response_tokens\":N}, ...]}
+     opens an event-streaming session; api_type is one of
+     math|qa|ve|chatbot|image|tts|tool, api_ms defaults to the class's
+     Table 2 mean, response_tokens to 4. A line with no \"type\" field
+     is a legacy v1 one-shot request ({\"prompt\", \"output_tokens\",
+     \"pre_api_tokens\", \"api_ms\"}) answered by one completion line.
+  <- event frames, each with \"type\" and the session \"id\": queued,
+     placed{replica}, rescued{from,to}, first_token, tokens{chunk},
+     api_call_started{index,strategy,predicted_us,external},
+     api_call_completed{index,actual_us}, finished{...completion...},
+     dropped{reason}, error{error}.
+  -> {\"type\":\"tool_result\", \"id\":N, \"index\":N,
+      \"response_tokens\":N}
+     resolves an externally-held call (--api-source external: the
+     client runs the tool; the engine parks the request under the
+     strategy chosen from the predicted duration until this arrives).
+  See examples/protocol_v2.ndjson for a worked transcript.
+
+  --api-source sim (default) simulates API durations server-side and
+  is byte-identical to the pre-session engine; external hands every
+  API call to the client. --prefill-chunk auto derives the chunk size
+  from the profiled decode-iteration time (target: chunk forward time
+  = one decode iteration). --replicas N dispatches across N engine
+  replicas (one modeled GPU each); --placement picks how arrivals are
+  placed: memory-over-time (default; the LAMPS rank integral steers
+  placement), prefix-affinity (the integral with its prefill leg
+  discounted on replicas already holding the arrival's prompt prefix —
+  pair with --prefix-cache and --shared-prefix), least-loaded, or
+  round-robin. --shared-prefix maintains the fleet-level hash→replica
+  prefix index those discounts come from. A request memory-rejected by
+  its owner before first run is re-queued once to the best sibling
+  unless --no-admission-requeue. With --replicas 1 the single-engine
+  path runs unchanged.
 ";
 
 /// Tiny `--key value` argument map (no clap in the offline vendor set).
@@ -143,17 +172,49 @@ fn parse_model(name: &str) -> ModelPreset {
 }
 
 /// Apply the batch-composer flags (`--max-batch-tokens`,
-/// `--prefill-chunk`, `--async-swap`) to a config.
+/// `--prefill-chunk [N|auto]`, `--async-swap`) to a config.
 fn apply_compose_flags(cfg: &mut SystemConfig, args: &Args) {
     if let Some(budget) = args.flags.get("max-batch-tokens") {
         cfg.compose.max_batch_tokens = budget.parse().ok();
     }
     if let Some(chunk) = args.flags.get("prefill-chunk") {
-        cfg.compose.prefill_chunk = chunk.parse().ok();
+        if chunk == "auto" {
+            // Derive the chunk from the profiled t_iter EMA each
+            // iteration (chunk forward time ≈ one decode iteration).
+            cfg.compose.auto_chunk = true;
+        } else {
+            match chunk.parse() {
+                Ok(n) => cfg.compose.prefill_chunk = Some(n),
+                Err(_) => eprintln!(
+                    "lamps: ignoring unparseable --prefill-chunk \
+                     '{chunk}' (expected a token count or 'auto')"),
+            }
+        }
     }
     if args.has("async-swap") {
         cfg.compose.async_swap = true;
     }
+}
+
+/// Apply `--api-source sim|external`. External means the client runs
+/// every API call and posts `tool_result` frames back, so it is only
+/// meaningful under `serve` — `run` has no client to resolve the calls
+/// and rejects it.
+fn apply_api_source_flag(cfg: &mut SystemConfig, args: &Args,
+                         serving: bool) -> Result<()> {
+    if let Some(name) = args.flags.get("api-source") {
+        let kind = ApiSourceKind::parse(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown api source '{name}' (expected sim or external)")
+        })?;
+        if kind == ApiSourceKind::External && !serving {
+            anyhow::bail!(
+                "--api-source external needs a client to resolve tool \
+                 calls; it is only available under `lamps serve`");
+        }
+        cfg.api_source = kind;
+    }
+    Ok(())
 }
 
 /// Apply the multi-replica flags: `--replicas N` sizes the
@@ -248,6 +309,7 @@ fn serve(args: &Args) -> Result<()> {
     apply_compose_flags(&mut base_cfg, args);
     apply_prefix_flags(&mut base_cfg, args);
     apply_replica_flags(&mut base_cfg, args)?;
+    apply_api_source_flag(&mut base_cfg, args, true)?;
 
     // PJRT handles are not Send: build them inside the engine thread.
     // Each replica loads its own model runtime (one modeled device).
@@ -313,6 +375,7 @@ fn run(args: &Args) -> Result<()> {
     apply_compose_flags(&mut cfg, args);
     apply_prefix_flags(&mut cfg, args);
     apply_replica_flags(&mut cfg, args)?;
+    apply_api_source_flag(&mut cfg, args, false)?;
     let cap = args
         .flags
         .get("time-cap-secs")

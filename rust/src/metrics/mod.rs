@@ -4,6 +4,15 @@
 
 use crate::core::types::{Micros, RequestId};
 
+/// Buckets of the per-call predicted-vs-actual API-duration error
+/// histogram (`--api-source external`), over the relative error
+/// `|actual - predicted| / max(predicted, 1 us)`. Upper bounds:
+/// ≤10%, ≤25%, ≤50%, ≤100%, ≤200%, and a >200% overflow bucket.
+pub const API_ERR_BUCKET_BOUNDS: [f64; 5] = [0.10, 0.25, 0.50, 1.0, 2.0];
+
+/// Number of histogram buckets (the bounds plus the overflow bucket).
+pub const API_ERR_BUCKETS: usize = API_ERR_BUCKET_BOUNDS.len() + 1;
+
 /// Summary statistics over a set of duration samples.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Summary {
@@ -208,6 +217,16 @@ pub struct MetricsCollector {
     pub rejected_slot: u64,
     pub rejected_memory: u64,
     pub rejected_reservation: u64,
+    /// Externally-resolved API calls completed (`--api-source
+    /// external`). Zero on simulated runs — the predicted-vs-actual
+    /// gap is unobservable when the "actual" was sampled up front —
+    /// which also keeps their report JSON free of the fields below.
+    pub api_calls_completed: u64,
+    /// Histogram of per-call relative duration error (see
+    /// [`API_ERR_BUCKET_BOUNDS`]).
+    pub api_pred_err_hist: [u64; API_ERR_BUCKETS],
+    /// Sum of absolute predicted-vs-actual duration error, µs.
+    pub api_pred_abs_err_us: u64,
 }
 
 impl MetricsCollector {
@@ -259,6 +278,22 @@ impl MetricsCollector {
         }
     }
 
+    /// Record one externally-resolved API call's predicted-vs-actual
+    /// duration outcome (the §3 gap LAMPS's strategy choice rides on,
+    /// finally measured end to end).
+    pub fn record_api_outcome(&mut self, predicted: Micros,
+                              actual: Micros) {
+        self.api_calls_completed += 1;
+        let err = actual.0.abs_diff(predicted.0);
+        self.api_pred_abs_err_us += err;
+        let rel = err as f64 / predicted.0.max(1) as f64;
+        let bucket = API_ERR_BUCKET_BOUNDS
+            .iter()
+            .position(|&b| rel <= b)
+            .unwrap_or(API_ERR_BUCKETS - 1);
+        self.api_pred_err_hist[bucket] += 1;
+    }
+
     pub fn sample_timeline(&mut self, point: TimelinePoint) {
         self.timeline.push(point);
     }
@@ -302,6 +337,9 @@ impl MetricsCollector {
             rejected_slot: self.rejected_slot,
             rejected_memory: self.rejected_memory,
             rejected_reservation: self.rejected_reservation,
+            api_calls_completed: self.api_calls_completed,
+            api_pred_err_hist: self.api_pred_err_hist,
+            api_pred_abs_err_us: self.api_pred_abs_err_us,
             timeline: self.timeline.clone(),
         }
     }
@@ -346,6 +384,15 @@ pub struct RunReport {
     pub rejected_slot: u64,
     pub rejected_memory: u64,
     pub rejected_reservation: u64,
+    /// Externally-resolved API calls completed; zero on simulated
+    /// runs, which also omits the histogram fields from the JSON so
+    /// the sim report shape stays byte-identical to the pre-seam one.
+    pub api_calls_completed: u64,
+    /// Per-call predicted-vs-actual relative-error histogram (see
+    /// [`API_ERR_BUCKET_BOUNDS`]).
+    pub api_pred_err_hist: [u64; API_ERR_BUCKETS],
+    /// Sum of absolute predicted-vs-actual duration error, µs.
+    pub api_pred_abs_err_us: u64,
     pub timeline: Vec<TimelinePoint>,
 }
 
@@ -373,6 +420,14 @@ impl RunReport {
         for r in per_replica {
             for (total, c) in
                 strategy_counts.iter_mut().zip(r.strategy_counts)
+            {
+                *total += c;
+            }
+        }
+        let mut api_pred_err_hist = [0u64; API_ERR_BUCKETS];
+        for r in per_replica {
+            for (total, c) in
+                api_pred_err_hist.iter_mut().zip(r.api_pred_err_hist)
             {
                 *total += c;
             }
@@ -408,6 +463,9 @@ impl RunReport {
             rejected_slot: sum(|r| r.rejected_slot),
             rejected_memory: sum(|r| r.rejected_memory),
             rejected_reservation: sum(|r| r.rejected_reservation),
+            api_calls_completed: sum(|r| r.api_calls_completed),
+            api_pred_err_hist,
+            api_pred_abs_err_us: sum(|r| r.api_pred_abs_err_us),
             timeline: Vec::new(),
         }
     }
@@ -466,6 +524,20 @@ impl RunReport {
             ("rejected_reservation",
              json::num(self.rejected_reservation as f64)),
         ];
+        if self.api_calls_completed > 0 {
+            // Only externally-resolved calls populate these; omitting
+            // them otherwise keeps the simulated report JSON
+            // byte-identical to the pre-`--api-source` shape.
+            pairs.push(("api_calls_completed",
+                        json::num(self.api_calls_completed as f64)));
+            pairs.push(("api_pred_abs_err_us",
+                        json::num(self.api_pred_abs_err_us as f64)));
+            pairs.push(("api_pred_err_hist", Value::Arr(
+                self.api_pred_err_hist
+                    .iter()
+                    .map(|&c| json::num(c as f64))
+                    .collect())));
+        }
         if with_timeline {
             pairs.push(("timeline", Value::Arr(
                 self.timeline
@@ -600,6 +672,44 @@ mod tests {
         assert_eq!(s.per_replica_steered_tokens, vec![0, 16, 16]);
         s.unnote(2, 0); // zero credit was never a claim
         assert_eq!(s.steered_requests, 2);
+    }
+
+    #[test]
+    fn api_outcome_histogram_buckets_and_json_gating() {
+        let mut m = MetricsCollector::new();
+        m.on_arrival(RequestId(1), Micros(0));
+        m.end_time = Micros(1);
+        // No external calls: the histogram keys must be absent so the
+        // simulated report shape is untouched.
+        let v = crate::util::json::parse(&m.report().to_json(false))
+            .unwrap();
+        assert!(v.get("api_calls_completed").is_none());
+        assert!(v.get("api_pred_err_hist").is_none());
+        assert!(v.get("api_pred_abs_err_us").is_none());
+
+        m.record_api_outcome(Micros(1_000_000), Micros(1_050_000)); // 5%
+        m.record_api_outcome(Micros(1_000_000), Micros(800_000)); // 20%
+        m.record_api_outcome(Micros(1_000_000), Micros(1_400_000)); // 40%
+        m.record_api_outcome(Micros(1_000_000), Micros(2_000_000)); // 100%
+        m.record_api_outcome(Micros(1_000_000), Micros(2_500_000)); // 150%
+        m.record_api_outcome(Micros(1_000_000), Micros(9_000_000)); // 800%
+        m.record_api_outcome(Micros(0), Micros(0)); // degenerate: 0%
+        assert_eq!(m.api_calls_completed, 7);
+        assert_eq!(m.api_pred_err_hist, [2, 1, 1, 1, 1, 1]);
+        assert_eq!(m.api_pred_abs_err_us,
+                   50_000 + 200_000 + 400_000 + 1_000_000 + 1_500_000
+                       + 8_000_000);
+        let v = crate::util::json::parse(&m.report().to_json(false))
+            .unwrap();
+        assert_eq!(v.u64_field("api_calls_completed").unwrap(), 7);
+        assert_eq!(v.field("api_pred_err_hist").unwrap()
+                       .as_arr().unwrap().len(), API_ERR_BUCKETS);
+
+        // Aggregation sums the buckets.
+        let a = m.report();
+        let fleet = RunReport::aggregate(&[a.clone(), a], &[], &[]);
+        assert_eq!(fleet.api_calls_completed, 14);
+        assert_eq!(fleet.api_pred_err_hist, [4, 2, 2, 2, 2, 2]);
     }
 
     #[test]

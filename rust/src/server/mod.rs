@@ -1,11 +1,52 @@
 //! Serving frontend: a dedicated engine thread in wall-clock mode, fed
-//! through a channel; clients block on a per-request completion channel.
-//! A JSON-lines TCP listener (`serve_tcp`) exposes the same API over the
-//! network for the quickstart example.
+//! through a channel, exposing a **session API** — every submission is
+//! an event-streaming session ([`ServerHandle::open_session`] →
+//! [`SessionHandle`]) delivering typed [`RequestEvent`]s from `Queued`
+//! through exactly one terminal `Finished`/`Dropped`.
+//! [`ServerHandle::submit_blocking`] is a thin drain-to-terminal
+//! wrapper over a session, so one-shot callers keep working unchanged.
 //!
-//! (The offline vendor set has no tokio; the frontend is std-thread based.
-//! Each TCP connection gets its own handler thread — adequate for the
-//! demo-scale deployments this CPU image can serve.)
+//! With `--api-source external` the engine does not simulate API
+//! durations: `ApiCallStarted` is pushed to the client, the request is
+//! parked under the strategy chosen from the *predicted* duration, and
+//! the call completes only when the client posts the tool result back
+//! ([`SessionHandle::complete_api_call`], or a `tool_result` wire
+//! frame).
+//!
+//! # Wire protocol v2 (JSON lines over TCP, [`serve_tcp`])
+//!
+//! Client → server, one JSON object per line:
+//!
+//! - `{"type": "request", "prompt": "...", "output_tokens": N,
+//!    "api_calls": [{"decode_before": N, "api_type": "qa",
+//!    "api_ms": N, "response_tokens": N}, ...]}`
+//!   opens a session. `api_calls` may name any Table 2 class
+//!   (`math|qa|ve|chatbot|image|tts|tool`); `api_ms` is the simulated
+//!   duration — under an external source it is only a prediction hint,
+//!   and omitted it defaults to the class's historical mean
+//!   (`predictor::api_stats`). `response_tokens` defaults to 4.
+//! - `{"type": "tool_result", "id": N, "index": N,
+//!    "response_tokens": N}`
+//!   resolves session `N`'s externally-held API call `index`; the
+//!   response length the tool actually produced replaces the spec's.
+//! - A line with **no** `type` field is a legacy v1 request
+//!   (`{"prompt", "output_tokens", "pre_api_tokens", "api_ms"}`): the
+//!   server replies with a single [`Completion`] object and no event
+//!   frames — existing clients keep working.
+//!
+//! Server → client, one JSON frame per line, each carrying `type` and
+//! the session `id`: `queued`, `placed` (`replica`), `rescued`
+//! (`from`, `to`), `first_token`, `tokens` (`chunk`),
+//! `api_call_started` (`index`, `strategy`, `predicted_us`,
+//! `external`), `api_call_completed` (`index`, `actual_us`),
+//! `finished` (the completion fields), `dropped` (`reason`), and
+//! `error` (`error`). See `examples/protocol_v2.ndjson` for a worked
+//! transcript.
+//!
+//! (The offline vendor set has no tokio; the frontend is std-thread
+//! based. Each TCP connection gets its own reader thread plus one
+//! writer pump serializing all of its sessions' event frames —
+//! adequate for the demo-scale deployments this CPU image can serve.)
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -15,18 +56,29 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::cluster::PrefixDeltaSink;
-use crate::config::SystemConfig;
-use crate::core::request::RequestSpec;
-use crate::core::types::{Micros, RequestId};
+use crate::config::{ApiSourceKind, SystemConfig};
+use crate::core::request::{ApiType, HandlingStrategy, RequestSpec};
+use crate::core::types::{Micros, RequestId, Tokens};
 use crate::engine::backend::Backend;
 use crate::engine::clock::Clock;
-use crate::engine::Engine;
+use crate::engine::{Engine, EngineEvent};
 use crate::predictor::Predictor;
 use crate::util::json::{self, Value};
 
 /// Idle poll period of the engine thread — also the cap on how long one
 /// replica's in-step wall-clock wait may stall the shared loop.
 const POLL_TICK: Micros = Micros(200);
+
+/// Backstop for clients that vanish mid-tool-call: an externally-held
+/// API call parked longer than this is aborted
+/// ([`Engine::abort_external_call`]) so a dead client cannot pin a
+/// replica's KV blocks — or its session and pump thread — forever. A
+/// parked external call emits no events, so a dropped connection is
+/// undetectable by failed sends until this fires.
+const EXTERNAL_CALL_TIMEOUT: Micros = Micros(600_000_000); // 10 min
+
+/// Cadence of the timeout sweep (it scans every open session).
+const TIMEOUT_SWEEP_PERIOD: Duration = Duration::from_secs(1);
 
 /// What the client receives when its request finishes.
 #[derive(Debug, Clone)]
@@ -37,10 +89,15 @@ pub struct Completion {
     pub tokens_decoded: u64,
     /// Real model outputs when the engine runs on the PJRT backend.
     pub generated: Option<Vec<i32>>,
+    /// `Some(reason)` when the request was dropped unserved (it could
+    /// never fit, or its context outgrew the budget mid-run) — what
+    /// distinguishes a drop from a legitimately zero-token serve. The
+    /// key is omitted from the JSON for served completions.
+    pub dropped: Option<String>,
 }
 
 impl Completion {
-    pub fn to_json(&self) -> String {
+    pub fn to_value(&self) -> Value {
         let mut pairs = vec![
             ("id", json::num(self.id as f64)),
             ("latency_us", json::num(self.latency_us as f64)),
@@ -55,29 +112,172 @@ impl Completion {
                 toks.iter().map(|t| json::num(*t as f64)).collect()),
             None => Value::Null,
         }));
-        json::write(&json::obj(pairs))
+        if let Some(reason) = &self.dropped {
+            pairs.push(("dropped", json::s(reason)));
+        }
+        json::obj(pairs)
+    }
+
+    pub fn to_json(&self) -> String {
+        json::write(&self.to_value())
     }
 }
 
+/// One event of a request's lifecycle, delivered in causal order over
+/// a session's stream: `Queued` ≤ `Placed` ≤ (`Rescued`) ≤
+/// `FirstToken` ≤ `Tokens`* ≤ `Finished`, with
+/// `ApiCallStarted`/`ApiCallCompleted` pairs in between, and exactly
+/// one terminal event (`Finished` xor `Dropped`) closing the stream.
+#[derive(Debug, Clone)]
+pub enum RequestEvent {
+    /// Accepted by the server; an id has been assigned.
+    Queued,
+    /// Dispatched to `replica` by the placement policy.
+    Placed { replica: usize },
+    /// Moved by the admission re-queue — subsequent events come from
+    /// the new owner.
+    Rescued { from: usize, to: usize },
+    /// First token decoded (the TTFT mark).
+    FirstToken,
+    /// `chunk` further tokens decoded.
+    Tokens { chunk: u64 },
+    /// The request hit API call `index` and was parked under
+    /// `strategy`, chosen from `predicted_us`. When `external`, the
+    /// client owns the call: the engine will hold the request until a
+    /// `tool_result` for this index arrives.
+    ApiCallStarted {
+        index: usize,
+        strategy: HandlingStrategy,
+        predicted_us: u64,
+        external: bool,
+    },
+    /// API call `index` returned after `actual_us`.
+    ApiCallCompleted { index: usize, actual_us: u64 },
+    /// Terminal: served to completion.
+    Finished(Completion),
+    /// Terminal: dropped unserved.
+    Dropped { reason: String },
+    /// Non-terminal protocol error scoped to this session — e.g. a
+    /// `tool_result` the engine rejected (wrong index, duplicate
+    /// fire). The call it misdirected is still parked; a corrected
+    /// `tool_result` can follow.
+    Error { message: String },
+}
+
+impl RequestEvent {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self,
+                 RequestEvent::Finished(_) | RequestEvent::Dropped { .. })
+    }
+
+    /// Render one protocol-v2 NDJSON frame. Every frame carries
+    /// `type` and the session `id`.
+    pub fn to_json(&self, id: u64) -> String {
+        let idv = json::num(id as f64);
+        let frame = match self {
+            RequestEvent::Queued => json::obj(vec![
+                ("type", json::s("queued")),
+                ("id", idv),
+            ]),
+            RequestEvent::Placed { replica } => json::obj(vec![
+                ("type", json::s("placed")),
+                ("id", idv),
+                ("replica", json::num(*replica as f64)),
+            ]),
+            RequestEvent::Rescued { from, to } => json::obj(vec![
+                ("type", json::s("rescued")),
+                ("id", idv),
+                ("from", json::num(*from as f64)),
+                ("to", json::num(*to as f64)),
+            ]),
+            RequestEvent::FirstToken => json::obj(vec![
+                ("type", json::s("first_token")),
+                ("id", idv),
+            ]),
+            RequestEvent::Tokens { chunk } => json::obj(vec![
+                ("type", json::s("tokens")),
+                ("id", idv),
+                ("chunk", json::num(*chunk as f64)),
+            ]),
+            RequestEvent::ApiCallStarted {
+                index,
+                strategy,
+                predicted_us,
+                external,
+            } => json::obj(vec![
+                ("type", json::s("api_call_started")),
+                ("id", idv),
+                ("index", json::num(*index as f64)),
+                ("strategy", json::s(strategy.label())),
+                ("predicted_us", json::num(*predicted_us as f64)),
+                ("external", Value::Bool(*external)),
+            ]),
+            RequestEvent::ApiCallCompleted { index, actual_us } => {
+                json::obj(vec![
+                    ("type", json::s("api_call_completed")),
+                    ("id", idv),
+                    ("index", json::num(*index as f64)),
+                    ("actual_us", json::num(*actual_us as f64)),
+                ])
+            }
+            RequestEvent::Finished(completion) => {
+                let mut v = completion.to_value();
+                if let Value::Obj(map) = &mut v {
+                    map.insert("type".to_string(), json::s("finished"));
+                }
+                v
+            }
+            RequestEvent::Dropped { reason } => json::obj(vec![
+                ("type", json::s("dropped")),
+                ("id", idv),
+                ("reason", json::s(reason)),
+            ]),
+            RequestEvent::Error { message } => json::obj(vec![
+                ("type", json::s("error")),
+                ("id", idv),
+                ("error", json::s(message)),
+            ]),
+        };
+        json::write(&frame)
+    }
+}
+
+/// Where a session's events are delivered: `(session id, event)` pairs
+/// pushed by the engine thread. One TCP connection fans all of its
+/// sessions into a single sink; [`ServerHandle::open_session`] gives
+/// each library session its own.
+pub type EventSink = mpsc::Sender<(u64, RequestEvent)>;
+
 enum Command {
-    Submit {
+    Open {
         spec: RequestSpec,
-        done: mpsc::Sender<Completion>,
+        sink: EventSink,
+    },
+    ToolResult {
+        id: RequestId,
+        index: usize,
+        response_tokens: u64,
+        /// Where to report an unknown-session rejection (the known-
+        /// session path reports on the session's own sink). The TCP
+        /// frontend passes its connection sink; library callers have
+        /// none — their session stream either exists (and gets the
+        /// Error event) or already closed with a terminal.
+        reply: Option<EventSink>,
     },
     Shutdown,
 }
 
-/// Completion for a request the engine refused or abandoned (it can
-/// never fit its replica's memory budget): zero `tokens_decoded` marks
-/// it unserved, and the client's blocking recv is released instead of
-/// hanging forever.
-fn dropped_completion(id: RequestId) -> Completion {
+/// Completion for a request the engine refused or abandoned: zero
+/// `tokens_decoded` plus an explicit drop `reason`, and the client's
+/// blocking recv is released instead of hanging forever.
+fn dropped_completion(id: RequestId, reason: String) -> Completion {
     Completion {
         id: id.0,
         latency_us: 0,
         ttft_us: None,
         tokens_decoded: 0,
         generated: None,
+        dropped: Some(reason),
     }
 }
 
@@ -86,30 +286,153 @@ fn dropped_completion(id: RequestId) -> Completion {
 pub struct ServerHandle {
     tx: mpsc::Sender<Command>,
     next_id: Arc<AtomicU64>,
+    /// The engine thread's API source, published once it boots (its
+    /// config may be built inside the thread — PJRT handles are not
+    /// `Send` — so the spawner cannot know it up front). The TCP
+    /// frontend consults this to reject v1 one-shot requests whose
+    /// API calls could never be resolved on an external-source
+    /// server.
+    api_source: Arc<std::sync::OnceLock<ApiSourceKind>>,
 }
 
 // mpsc::Sender is !Sync; guard clone-per-thread use behind a Mutex-free
 // pattern: each connection thread clones the handle (Sender clones are
 // cheap and Send).
 impl ServerHandle {
-    /// Submit a spec and block until completion. The spec's `id` and
-    /// `arrival` are overwritten by the server.
-    pub fn submit_blocking(&self, mut spec: RequestSpec)
-                           -> anyhow::Result<Completion> {
+    /// Open an event-streaming session for `spec` (its `id` and
+    /// `arrival` are overwritten by the server). Events arrive on the
+    /// returned handle from `Queued` through exactly one terminal
+    /// `Finished`/`Dropped`.
+    pub fn open_session(&self, spec: RequestSpec)
+                        -> anyhow::Result<SessionHandle> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.open_session_with(spec, tx)?;
+        Ok(SessionHandle {
+            id,
+            server: self.clone(),
+            events: rx,
+        })
+    }
+
+    /// Low-level session open routing events into a caller-supplied
+    /// sink — what lets one TCP connection serialize any number of
+    /// concurrent sessions through one writer pump. Returns the
+    /// assigned session id.
+    pub fn open_session_with(&self, mut spec: RequestSpec,
+                             sink: EventSink) -> anyhow::Result<u64> {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         spec.id = RequestId(id);
-        let (done_tx, done_rx) = mpsc::channel();
         self.tx
-            .send(Command::Submit {
-                spec,
-                done: done_tx,
-            })
+            .send(Command::Open { spec, sink })
             .map_err(|_| anyhow::anyhow!("server thread gone"))?;
-        Ok(done_rx.recv()?)
+        Ok(id)
+    }
+
+    /// Resolve session `id`'s externally-held API call `index` with
+    /// the tool's actual response length (`tool_result` on the wire).
+    /// Misdirected results (unknown id, wrong index, simulated call)
+    /// are rejected by the engine and logged, never routed.
+    pub fn complete_api_call(&self, id: u64, index: usize,
+                             response_tokens: u64) -> anyhow::Result<()> {
+        self.complete_api_call_with_reply(id, index, response_tokens,
+                                          None)
+    }
+
+    /// [`ServerHandle::complete_api_call`] with a fallback sink for
+    /// the unknown-session rejection (the TCP frontend's connection
+    /// pump — a stale or typo'd id must come back as an error frame,
+    /// not vanish into the server's stderr).
+    fn complete_api_call_with_reply(&self, id: u64, index: usize,
+                                    response_tokens: u64,
+                                    reply: Option<EventSink>)
+                                    -> anyhow::Result<()> {
+        self.tx
+            .send(Command::ToolResult {
+                id: RequestId(id),
+                index,
+                response_tokens,
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("server thread gone"))
+    }
+
+    /// Submit a spec and block until completion — a thin
+    /// drain-to-terminal wrapper over [`ServerHandle::open_session`].
+    /// A dropped request yields a zero-token completion carrying the
+    /// drop reason rather than an error. On an external-source server
+    /// a spec with API calls must have its `tool_result`s posted from
+    /// another thread, or this blocks until the call timeout drops the
+    /// request (the v2 session API is the right tool there).
+    pub fn submit_blocking(&self, spec: RequestSpec)
+                           -> anyhow::Result<Completion> {
+        self.open_session(spec)?.wait()
     }
 
     pub fn shutdown(&self) {
         let _ = self.tx.send(Command::Shutdown);
+    }
+
+    /// The serving engine's API source, waiting (bounded, ~30 s) for
+    /// the engine thread to publish it on boot — PJRT model loading
+    /// inside the factory can take seconds. `None` means the engine
+    /// has not booted (or died before publishing): callers must fail
+    /// *closed* — e.g. reject a v1-with-API-calls line — never assume
+    /// `Simulated`, which is exactly the guess that would deadlock
+    /// the connection if wrong.
+    fn api_source(&self) -> Option<ApiSourceKind> {
+        for _ in 0..30_000 {
+            if let Some(&kind) = self.api_source.get() {
+                return Some(kind);
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        None
+    }
+}
+
+/// One open session: a typed event stream plus the back-channel for
+/// externally-resolved tool calls.
+pub struct SessionHandle {
+    id: u64,
+    server: ServerHandle,
+    events: mpsc::Receiver<(u64, RequestEvent)>,
+}
+
+impl SessionHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Next event, blocking. `None` once the stream is closed (the
+    /// terminal event was already delivered, or the server is gone).
+    pub fn next_event(&self) -> Option<RequestEvent> {
+        self.events.recv().ok().map(|(_, ev)| ev)
+    }
+
+    /// Resolve this session's externally-held API call `index` with
+    /// the tool's response length.
+    pub fn complete_api_call(&self, index: usize, response_tokens: u64)
+                             -> anyhow::Result<()> {
+        self.server.complete_api_call(self.id, index, response_tokens)
+    }
+
+    /// Drain the stream to its terminal event — what
+    /// [`ServerHandle::submit_blocking`] rides on. A session with
+    /// externally-resolved calls cannot be drained this way unless
+    /// another thread answers them.
+    pub fn wait(self) -> anyhow::Result<Completion> {
+        loop {
+            match self.events.recv() {
+                Ok((_, RequestEvent::Finished(completion))) => {
+                    return Ok(completion);
+                }
+                Ok((id, RequestEvent::Dropped { reason })) => {
+                    return Ok(dropped_completion(RequestId(id), reason));
+                }
+                Ok(_) => {}
+                Err(_) => anyhow::bail!("server thread gone"),
+            }
+        }
     }
 }
 
@@ -119,8 +442,9 @@ pub type ReplicaParts = (Box<dyn Backend>, Box<dyn Predictor>);
 
 /// Spawn a simulated-backend server from a config alone — the frontend
 /// counterpart of [`Engine::simulated`]. All engine knobs, including the
-/// batch-composer settings (`cfg.compose`) and multi-replica dispatch
-/// (`cfg.replicas` + `cfg.placement`), take effect as-is.
+/// batch-composer settings (`cfg.compose`), multi-replica dispatch
+/// (`cfg.replicas` + `cfg.placement`), and the API source
+/// (`cfg.api_source`), take effect as-is.
 pub fn spawn_sim(cfg: SystemConfig)
                  -> (ServerHandle, std::thread::JoinHandle<()>) {
     spawn_replicated(move || {
@@ -155,24 +479,56 @@ where
 
 /// Spawn the engine thread with one engine per replica part. Arriving
 /// requests are routed through the configured placement policy
-/// (`cfg.placement`); completions fan back in from whichever replica
-/// owns the request. A request's KV state, swap traffic, and API return
-/// all stay on its owning replica.
+/// (`cfg.placement`); each session's events fan back in from whichever
+/// replica owns the request. A request's KV state, swap traffic, and
+/// API return all stay on its owning replica.
 pub fn spawn_replicated<F>(factory: F)
                            -> (ServerHandle, std::thread::JoinHandle<()>)
 where
     F: FnOnce() -> (SystemConfig, Vec<ReplicaParts>) + Send + 'static,
 {
     let (tx, rx) = mpsc::channel::<Command>();
+    let api_source = Arc::new(std::sync::OnceLock::new());
     let handle = ServerHandle {
         tx,
         next_id: Arc::new(AtomicU64::new(0)),
+        api_source: Arc::clone(&api_source),
     };
     let join = std::thread::spawn(move || {
         let (cfg, parts) = factory();
+        let _ = api_source.set(cfg.api_source);
         engine_thread(cfg, parts, rx);
     });
     (handle, join)
+}
+
+/// Build the completion for a request the engine reported `Finished`.
+fn build_completion(engine: &Engine, id: RequestId) -> Completion {
+    let r = engine.request(id).expect("finished request");
+    #[cfg(feature = "pjrt")]
+    let generated = engine.backend_any().and_then(|any| {
+        any.downcast_ref::<crate::engine::pjrt_backend::PjrtBackend>()
+            .and_then(|b| b.generated_tokens(id).map(|t| t.to_vec()))
+    });
+    #[cfg(not(feature = "pjrt"))]
+    let generated = None;
+    Completion {
+        id: id.0,
+        latency_us: (r.finished_at.expect("finished") - r.spec.arrival).0,
+        ttft_us: r.first_token_at.map(|t| (t - r.spec.arrival).0),
+        tokens_decoded: r.spec.total_decode().0,
+        generated,
+        dropped: None,
+    }
+}
+
+/// One session's server-side state: its event sink and the replica
+/// that currently owns the request (updated by the admission
+/// re-queue, so external returns and the completion always route to
+/// the current owner).
+struct Session {
+    sink: EventSink,
+    owner: usize,
 }
 
 fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
@@ -186,18 +542,23 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
     let shared_on = cfg.shared_prefix && cfg.prefix_cache.enabled
         && cfg.replicas > 1 && parts.len() > 1;
     eprintln!(
-        "lamps: engine up (scheduler {}, replicas {} [{} placement], \
-         batch composer: budget {}, prefill chunk {}, async swap {}, \
-         prefix cache {}, shared prefix index {})",
+        "lamps: engine up (scheduler {}, api source {}, replicas {} \
+         [{} placement], batch composer: budget {}, prefill chunk {}, \
+         async swap {}, prefix cache {}, shared prefix index {})",
         cfg.scheduler.label(),
+        cfg.api_source.label(),
         parts.len(),
         cfg.placement.label(),
         cfg.compose
             .max_batch_tokens
             .map_or("unbounded".to_string(), |t| t.to_string()),
-        cfg.compose
-            .prefill_chunk
-            .map_or("whole-context".to_string(), |t| t.to_string()),
+        if cfg.compose.auto_chunk {
+            "auto".to_string()
+        } else {
+            cfg.compose
+                .prefill_chunk
+                .map_or("whole-context".to_string(), |t| t.to_string())
+        },
         cfg.compose.async_swap,
         if cfg.prefix_cache.enabled {
             match cfg.prefix_cache.cache_blocks {
@@ -217,31 +578,87 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
     let mut engines: Vec<Engine> = parts
         .into_iter()
         .map(|(backend, predictor)| {
-            Engine::new(cfg.clone(), backend, predictor,
-                        Clock::wall_clock())
+            let mut engine = Engine::new(cfg.clone(), backend, predictor,
+                                         Clock::wall_clock());
+            // Session streams are fed from the engines' lifecycle
+            // journals (drained every pass below).
+            engine.enable_events();
+            engine
         })
         .collect();
     let mut rr_next = 0usize;
-    // (request, owning replica, completion channel)
-    let mut watchers: Vec<(RequestId, usize, mpsc::Sender<Completion>)> =
-        Vec::new();
+    let mut sessions: std::collections::HashMap<RequestId, Session> =
+        std::collections::HashMap::new();
     // Requests the admission re-queue already moved once (see below).
     let mut requeued: std::collections::HashSet<RequestId> =
         std::collections::HashSet::new();
     let mut shutdown = false;
+    let mut last_timeout_sweep = std::time::Instant::now();
 
     loop {
         // Drain commands without blocking.
         loop {
             match rx.try_recv() {
-                Ok(Command::Submit { mut spec, done }) => {
+                Ok(Command::Open { mut spec, sink }) => {
                     let (r, _credit) = crate::cluster::pick_replica(
                         &engines, placement, &mut rr_next, &spec,
                         shared.as_ref());
                     spec.arrival = engines[r].now();
                     let id = spec.id;
+                    let _ = sink.send((id.0, RequestEvent::Queued));
+                    let _ = sink.send((id.0, RequestEvent::Placed {
+                        replica: r,
+                    }));
+                    sessions.insert(id, Session { sink, owner: r });
                     engines[r].submit(spec);
-                    watchers.push((id, r, done));
+                }
+                Ok(Command::ToolResult {
+                    id,
+                    index,
+                    response_tokens,
+                    reply,
+                }) => {
+                    // External returns route to the request's *current*
+                    // owner — a rescue may have moved it since
+                    // placement. A result the engine refuses (wrong
+                    // index, duplicate fire, simulated call) is
+                    // reported back on the session's stream as a
+                    // non-terminal Error event — silence would leave
+                    // the client believing the call resolved while it
+                    // stays parked.
+                    match sessions.get(&id) {
+                        Some(session) => {
+                            if let Err(e) = engines[session.owner]
+                                .complete_api_call(
+                                    id, index, Tokens(response_tokens))
+                            {
+                                let _ = session.sink.send((
+                                    id.0,
+                                    RequestEvent::Error {
+                                        message: format!(
+                                            "tool_result rejected: {e}"),
+                                    },
+                                ));
+                            }
+                        }
+                        None => {
+                            let message = format!(
+                                "tool_result for unknown session {id} \
+                                 (already finished, dropped, or never \
+                                 opened)");
+                            match reply {
+                                Some(sink) => {
+                                    let _ = sink.send((
+                                        id.0,
+                                        RequestEvent::Error { message },
+                                    ));
+                                }
+                                None => {
+                                    eprintln!("lamps: {message}");
+                                }
+                            }
+                        }
+                    }
                 }
                 Ok(Command::Shutdown) => shutdown = true,
                 Err(mpsc::TryRecvError::Empty) => break,
@@ -252,8 +669,62 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
             }
         }
 
+        // A shutdown request ends the service: outstanding
+        // externally-held calls can never be resolved once the
+        // operator asked to stop, and waiting out the 10-minute
+        // client backstop would hang anything joining the engine
+        // thread — abort them now, so shutdown is bounded by the poll
+        // cadence (their sessions close with Dropped below).
+        if shutdown {
+            for engine in engines.iter_mut() {
+                for id in engine.external_api_ids() {
+                    engine.abort_external_call(
+                        id, "server shutting down".to_string());
+                }
+            }
+        }
+
+        // Abort externally-held calls nobody will ever answer (client
+        // gone, tool hung): past EXTERNAL_CALL_TIMEOUT the owning
+        // engine drops the request terminally and the resulting
+        // Dropped event closes the session — releasing the pinned KV,
+        // the once-only re-queue guard, and (once no sink remains) the
+        // connection's writer pump.
+        if last_timeout_sweep.elapsed() >= TIMEOUT_SWEEP_PERIOD {
+            last_timeout_sweep = std::time::Instant::now();
+            // Scan the engines' own externally-parked sets, NOT the
+            // session map: a request orphaned mid-decode (dead sink
+            // detached its session) can still park on an external
+            // call afterwards, and it must be swept too or it pins
+            // its KV forever.
+            for engine in engines.iter_mut() {
+                let now = engine.now();
+                for id in engine.external_api_ids() {
+                    let expired = engine.request(id).is_some_and(|r| {
+                        r.api_started_at.is_some_and(
+                            |t0| now - t0 >= EXTERNAL_CALL_TIMEOUT)
+                    });
+                    if expired {
+                        engine.abort_external_call(
+                            id,
+                            format!("external API call unresolved \
+                                     after {}s",
+                                    EXTERNAL_CALL_TIMEOUT.0
+                                        / 1_000_000));
+                    }
+                }
+            }
+        }
+
         let mut progressed = false;
-        if !watchers.is_empty() {
+        // Orphaned *runnable* requests (their session's client hung
+        // up mid-decode) still drain via `has_runnable_work`; orphaned
+        // *parked* external calls are bounded by the timeout sweep
+        // above — so a long-running server never strands engine state
+        // behind a dead sink for more than EXTERNAL_CALL_TIMEOUT.
+        let active = !sessions.is_empty()
+            || engines.iter().any(|e| e.has_runnable_work());
+        if active {
             for (i, engine) in engines.iter_mut().enumerate() {
                 if !engine.has_live_work() {
                     continue;
@@ -264,7 +735,10 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
                 // event is left alone entirely — the single poll sleep
                 // at the bottom of the loop covers it; stepping it
                 // would add one serialized in-step sleep per idle
-                // replica per pass.
+                // replica per pass. An engine whose only in-flight work
+                // is an externally-held API call has no event at all —
+                // `next_return` does not bound that wait — and is
+                // likewise left alone until the tool result lands.
                 let due = next.is_some_and(|t| t <= engine.now());
                 if !due && !engine.has_runnable_work() {
                     continue;
@@ -296,18 +770,24 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
             // simulated fleet's protocol core
             // (`cluster::rescue_stranded_on`): a request
             // memory-rejected by its owner before first run moves once
-            // to the best sibling that can admit it now; its watcher
-            // follows so the completion fans in from the new owner.
+            // to the best sibling that can admit it now; its session
+            // follows so later events (and the external-return route)
+            // come from the new owner.
             if cfg.admission_requeue && engines.len() > 1 {
                 for owner in 0..engines.len() {
                     let moves = crate::cluster::rescue_stranded_on(
                         &mut engines, owner, placement,
                         shared.as_ref(), &mut requeued);
                     for (id, j, _credit) in moves {
-                        for w in watchers.iter_mut() {
-                            if w.0 == id {
-                                w.1 = j;
-                            }
+                        if let Some(session) = sessions.get_mut(&id) {
+                            let _ = session.sink.send((
+                                id.0,
+                                RequestEvent::Rescued {
+                                    from: owner,
+                                    to: j,
+                                },
+                            ));
+                            session.owner = j;
                         }
                         progressed = true;
                     }
@@ -315,57 +795,71 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
             }
         }
 
-        // Notify completions from each request's owning replica.
-        let mut still: Vec<(RequestId, usize,
-                            mpsc::Sender<Completion>)> = Vec::new();
-        for (id, owner, done) in watchers.drain(..) {
-            let engine = &engines[owner];
-            let Some(r) = engine.request(id) else {
-                // Fail-fast drop at submit (the spec can never fit this
-                // replica's memory budget): unblock the client with an
-                // empty completion — zero tokens marks it unserved —
-                // instead of hanging its recv forever.
-                let _ = done.send(dropped_completion(id));
-                requeued.remove(&id);
-                continue;
-            };
-            if !r.is_finished() {
-                still.push((id, owner, done));
-                continue;
+        // Forward the engines' journaled lifecycle events onto their
+        // sessions' streams. Terminal events close the session (and
+        // retire its once-only re-queue guard — a long-running server
+        // must not accumulate one per rescued request forever);
+        // non-terminal events whose sink is gone detach the session so
+        // the request finishes as an orphan.
+        let mut journaled: Vec<(usize, EngineEvent)> = Vec::new();
+        for (i, engine) in engines.iter_mut().enumerate() {
+            for ev in engine.drain_events() {
+                journaled.push((i, ev));
             }
-            // Terminal either way below: the once-only re-queue guard
-            // entry is dead weight from here on (a long-running server
-            // must not accumulate one per rescued request forever).
-            requeued.remove(&id);
-            let Some(finished_at) = r.finished_at else {
-                // Dropped mid-run (context outgrew the budget): the
-                // request is terminal but was never served.
-                let _ = done.send(dropped_completion(id));
-                continue;
-            };
-            #[cfg(feature = "pjrt")]
-            let generated = engine.backend_any().and_then(|any| {
-                any.downcast_ref::<crate::engine::pjrt_backend::PjrtBackend>()
-                    .and_then(|b| {
-                        b.generated_tokens(id).map(|t| t.to_vec())
-                    })
-            });
-            #[cfg(not(feature = "pjrt"))]
-            let generated = None;
-            let completion = Completion {
-                id: id.0,
-                latency_us: (finished_at - r.spec.arrival).0,
-                ttft_us: r
-                    .first_token_at
-                    .map(|t| (t - r.spec.arrival).0),
-                tokens_decoded: r.spec.total_decode().0,
-                generated,
-            };
-            let _ = done.send(completion);
         }
-        watchers = still;
+        for (replica, ev) in journaled {
+            let (id, event) = match ev {
+                EngineEvent::FirstToken { id, .. } => {
+                    (id, RequestEvent::FirstToken)
+                }
+                EngineEvent::Tokens { id, chunk } => {
+                    (id, RequestEvent::Tokens { chunk })
+                }
+                EngineEvent::ApiStarted {
+                    id,
+                    index,
+                    strategy,
+                    predicted,
+                    external,
+                } => (id, RequestEvent::ApiCallStarted {
+                    index,
+                    strategy,
+                    predicted_us: predicted.0,
+                    external,
+                }),
+                EngineEvent::ApiCompleted { id, index, actual } => {
+                    (id, RequestEvent::ApiCallCompleted {
+                        index,
+                        actual_us: actual.0,
+                    })
+                }
+                EngineEvent::Finished { id, .. } => {
+                    (id, RequestEvent::Finished(
+                        build_completion(&engines[replica], id)))
+                }
+                EngineEvent::Dropped { id, reason } => {
+                    (id, RequestEvent::Dropped { reason })
+                }
+            };
+            if event.is_terminal() {
+                requeued.remove(&id);
+                if let Some(session) = sessions.remove(&id) {
+                    let _ = session.sink.send((id.0, event));
+                }
+            } else {
+                let sink_dead = match sessions.get(&id) {
+                    Some(session) => {
+                        session.sink.send((id.0, event)).is_err()
+                    }
+                    None => false,
+                };
+                if sink_dead {
+                    sessions.remove(&id);
+                }
+            }
+        }
 
-        if shutdown && watchers.is_empty() {
+        if shutdown && sessions.is_empty() {
             return;
         }
         if !progressed {
@@ -374,48 +868,94 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
     }
 }
 
-/// JSON-lines TCP request format:
-/// `{"prompt": "...", "output_tokens": N, "pre_api_tokens": N,
-///   "api_ms": N}`
+/// One API call of a wire request (protocol v2 `api_calls` entry).
+#[derive(Debug, Clone)]
+pub struct WireCall {
+    /// Decode tokens before this call fires.
+    pub decode_before: u64,
+    /// Simulated call duration in milliseconds. Under
+    /// `--api-source external` this is only a prediction hint; omitted,
+    /// the class's historical mean (Table 2) is used either way.
+    pub api_ms: Option<u64>,
+    pub api_type: ApiType,
+    /// Tokens the API response appends on return (an external
+    /// `tool_result` overrides this with the tool's actual length).
+    pub response_tokens: u64,
+}
+
+/// A request line of the JSON wire protocol (v2 `api_calls` array, or
+/// the legacy v1 `pre_api_tokens`/`api_ms` single-call shape).
 #[derive(Debug, Clone)]
 pub struct WireRequest {
     pub prompt: String,
-    /// Decode length before the API call (0 = no API call).
-    pub pre_api_tokens: u64,
-    /// API latency in milliseconds (simulated external service).
-    pub api_ms: u64,
+    pub api_calls: Vec<WireCall>,
     pub output_tokens: u64,
 }
 
 impl WireRequest {
     pub fn parse(line: &str) -> anyhow::Result<WireRequest> {
-        let v = json::parse(line)?;
+        Self::from_value(&json::parse(line)?)
+    }
+
+    /// Parse an already-decoded request object (shared by the v1 line
+    /// handler and the v2 `{"type":"request"}` frame handler).
+    pub fn from_value(v: &Value) -> anyhow::Result<WireRequest> {
+        let prompt = v.str_field("prompt")?;
+        let output_tokens = v.u64_field("output_tokens")?;
+        let api_calls = match v.get("api_calls") {
+            Some(calls) => {
+                let arr = calls.as_arr().ok_or_else(|| {
+                    anyhow::anyhow!("'api_calls' must be an array")
+                })?;
+                arr.iter()
+                    .map(WireCall::from_value)
+                    .collect::<anyhow::Result<Vec<WireCall>>>()?
+            }
+            None => {
+                // Legacy v1 single-call shape.
+                let pre = v
+                    .get("pre_api_tokens")
+                    .and_then(|x| x.as_u64())
+                    .unwrap_or(0);
+                let api_ms =
+                    v.get("api_ms").and_then(|x| x.as_u64()).unwrap_or(0);
+                if pre > 0 {
+                    vec![WireCall {
+                        decode_before: pre,
+                        api_ms: Some(api_ms),
+                        api_type: ApiType::Tool(0),
+                        response_tokens: 4,
+                    }]
+                } else {
+                    vec![]
+                }
+            }
+        };
         Ok(WireRequest {
-            prompt: v.str_field("prompt")?,
-            pre_api_tokens: v
-                .get("pre_api_tokens")
-                .and_then(|x| x.as_u64())
-                .unwrap_or(0),
-            api_ms: v.get("api_ms").and_then(|x| x.as_u64()).unwrap_or(0),
-            output_tokens: v.u64_field("output_tokens")?,
+            prompt,
+            api_calls,
+            output_tokens,
         })
     }
 
     pub fn to_spec(&self) -> RequestSpec {
-        use crate::core::request::{ApiCallSpec, ApiType};
-        use crate::core::types::Tokens;
+        use crate::core::request::ApiCallSpec;
         let prompt_tokens =
             crate::util::tokenizer::valid_len(&self.prompt, 64) as u64;
-        let api_calls = if self.pre_api_tokens > 0 {
-            vec![ApiCallSpec {
-                decode_before: Tokens(self.pre_api_tokens),
-                api_type: ApiType::Tool(0),
-                duration: Micros(self.api_ms * 1000),
-                response_tokens: Tokens(4),
-            }]
-        } else {
-            vec![]
-        };
+        let api_calls = self
+            .api_calls
+            .iter()
+            .map(|call| ApiCallSpec {
+                decode_before: Tokens(call.decode_before),
+                api_type: call.api_type,
+                duration: call.api_ms.map(|ms| Micros(ms * 1000))
+                    .unwrap_or_else(|| {
+                        crate::predictor::api_stats::predicted_duration(
+                            call.api_type)
+                    }),
+                response_tokens: Tokens(call.response_tokens),
+            })
+            .collect();
         RequestSpec {
             id: RequestId(0), // assigned by the server
             arrival: Micros::ZERO,
@@ -427,8 +967,46 @@ impl WireRequest {
     }
 }
 
-/// Serve JSON-lines over TCP: one request object per line, one
-/// [`Completion`] object per line back. Blocks forever.
+impl WireCall {
+    fn from_value(v: &Value) -> anyhow::Result<WireCall> {
+        let api_type = match v.get("api_type").and_then(|x| x.as_str()) {
+            Some(name) => ApiType::parse(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown api_type '{name}'")
+            })?,
+            None => ApiType::Tool(0),
+        };
+        Ok(WireCall {
+            decode_before: v.u64_field("decode_before")?,
+            api_ms: v.get("api_ms").and_then(|x| x.as_u64()),
+            api_type,
+            response_tokens: v
+                .get("response_tokens")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(4),
+        })
+    }
+}
+
+/// `{"error": ..., "type": "error"}`, built through the JSON writer so
+/// a message containing quotes or backslashes stays valid —
+/// and unforgeable — JSON (the old `format!` splice emitted whatever
+/// the error text contained).
+fn error_frame(msg: &str) -> String {
+    json::write(&json::obj(vec![
+        ("type", json::s("error")),
+        ("error", json::s(msg)),
+    ]))
+}
+
+fn write_line(w: &mut TcpStream, text: &str) -> std::io::Result<()> {
+    w.write_all(text.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+/// Serve the JSON-lines wire protocol over TCP (one frame per line,
+/// both directions — see the module docs for the v2 schema). Blocks
+/// forever.
 pub fn serve_tcp(handle: ServerHandle, addr: &str) -> anyhow::Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!("lamps: serving on {addr}");
@@ -448,27 +1026,110 @@ pub fn serve_tcp(handle: ServerHandle, addr: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Handle one inbound line; `Some` is an immediate reply to write (v1
+/// completions and error frames — v2 session output flows through the
+/// event pump instead).
+fn dispatch_line(line: &str, handle: &ServerHandle, events: &EventSink)
+                 -> Option<String> {
+    let parsed = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return Some(error_frame(&format!("bad request: {e}"))),
+    };
+    match parsed.get("type").and_then(|t| t.as_str()) {
+        // Legacy v1: no type field, one blocking completion per line.
+        None => Some(match WireRequest::from_value(&parsed) {
+            // A v1 one-shot with API calls would block this reader
+            // thread inside submit_blocking waiting for a tool_result
+            // that can never arrive on an external-source server (the
+            // v1 client is never told the session id, and the blocked
+            // reader would stop consuming lines for the whole
+            // connection) — reject it up front instead of
+            // deadlocking. Fail closed while the engine is still
+            // booting (api_source unknown): wrongly guessing
+            // `Simulated` here is precisely the deadlock.
+            Ok(req) if !req.api_calls.is_empty()
+                && handle.api_source()
+                    != Some(ApiSourceKind::Simulated) =>
+            {
+                error_frame(
+                    "v1 one-shot requests cannot carry API calls on an \
+                     external-source (or still-booting) server; open a \
+                     v2 session with {\"type\":\"request\",...}")
+            }
+            Ok(req) => match handle.submit_blocking(req.to_spec()) {
+                Ok(completion) => completion.to_json(),
+                Err(e) => error_frame(&e.to_string()),
+            },
+            Err(e) => error_frame(&format!("bad request: {e}")),
+        }),
+        Some("request") => match WireRequest::from_value(&parsed) {
+            Ok(req) => {
+                match handle.open_session_with(req.to_spec(),
+                                               events.clone()) {
+                    // The `queued` frame announces the session id.
+                    Ok(_id) => None,
+                    Err(e) => Some(error_frame(&e.to_string())),
+                }
+            }
+            Err(e) => Some(error_frame(&format!("bad request: {e}"))),
+        },
+        Some("tool_result") => {
+            let route = || -> anyhow::Result<()> {
+                handle.complete_api_call_with_reply(
+                    parsed.u64_field("id")?,
+                    parsed.u64_field("index")? as usize,
+                    parsed.u64_field("response_tokens")?,
+                    Some(events.clone()))
+            };
+            match route() {
+                Ok(()) => None,
+                Err(e) => {
+                    Some(error_frame(&format!("bad tool_result: {e}")))
+                }
+            }
+        }
+        Some(other) => {
+            Some(error_frame(&format!("unknown frame type '{other}'")))
+        }
+    }
+}
+
 fn handle_conn(stream: TcpStream, handle: ServerHandle)
                -> anyhow::Result<()> {
     let peer = stream.peer_addr()?;
-    let mut writer = stream.try_clone()?;
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let reader = BufReader::new(stream);
+    // One pump serializes every session's event frames onto the
+    // socket; the reader thread writes only immediate replies (v1
+    // completions, error frames) under the same lock.
+    let (ev_tx, ev_rx) = mpsc::channel::<(u64, RequestEvent)>();
+    let pump_writer = Arc::clone(&writer);
+    let pump = std::thread::spawn(move || {
+        for (id, ev) in ev_rx {
+            let frame = ev.to_json(id);
+            let mut w = pump_writer.lock().unwrap();
+            if write_line(&mut w, &frame).is_err() {
+                // Client gone: the engine thread detaches the sessions
+                // on its next failed send.
+                return;
+            }
+        }
+    });
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match WireRequest::parse(&line) {
-            Ok(req) => match handle.submit_blocking(req.to_spec()) {
-                Ok(completion) => completion.to_json(),
-                Err(e) => format!("{{\"error\":\"{e}\"}}"),
-            },
-            Err(e) => format!("{{\"error\":\"bad request: {e}\"}}"),
-        };
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        if let Some(reply) = dispatch_line(&line, &handle, &ev_tx) {
+            let mut w = writer.lock().unwrap();
+            write_line(&mut w, &reply)?;
+        }
     }
+    // Half-close: the client stopped sending, but open sessions keep
+    // streaming until their terminal events land (the pump exits once
+    // every session sink is dropped).
+    drop(ev_tx);
+    let _ = pump.join();
     eprintln!("lamps: {peer} disconnected");
     Ok(())
 }
@@ -478,15 +1139,17 @@ mod tests {
     use super::*;
 
     #[test]
-    fn wire_request_parse_full() {
+    fn wire_request_parse_v1_full() {
         let r = WireRequest::parse(
             r#"{"prompt": "hi there", "output_tokens": 12,
                 "pre_api_tokens": 4, "api_ms": 50}"#).unwrap();
         assert_eq!(r.output_tokens, 12);
-        assert_eq!(r.pre_api_tokens, 4);
+        assert_eq!(r.api_calls.len(), 1);
+        assert_eq!(r.api_calls[0].decode_before, 4);
         let spec = r.to_spec();
         assert_eq!(spec.api_calls.len(), 1);
         assert_eq!(spec.api_calls[0].duration, Micros(50_000));
+        assert_eq!(spec.api_calls[0].response_tokens, Tokens(4));
         assert_eq!(spec.final_decode.0, 12);
     }
 
@@ -494,14 +1157,52 @@ mod tests {
     fn wire_request_defaults() {
         let r = WireRequest::parse(
             r#"{"prompt": "x", "output_tokens": 3}"#).unwrap();
-        assert_eq!(r.api_ms, 0);
+        assert!(r.api_calls.is_empty());
         assert!(r.to_spec().api_calls.is_empty());
     }
 
     #[test]
-    fn wire_request_rejects_missing_fields() {
+    fn wire_request_parse_v2_multi_call() {
+        let r = WireRequest::parse(
+            r#"{"type": "request", "prompt": "plan my trip",
+                "output_tokens": 20,
+                "api_calls": [
+                  {"decode_before": 5, "api_type": "qa", "api_ms": 700,
+                   "response_tokens": 32},
+                  {"decode_before": 3, "api_type": "image"},
+                  {"decode_before": 2}
+                ]}"#).unwrap();
+        assert_eq!(r.api_calls.len(), 3);
+        let spec = r.to_spec();
+        assert_eq!(spec.api_calls[0].duration, Micros(700_000));
+        assert_eq!(spec.api_calls[0].response_tokens, Tokens(32));
+        // No api_ms: the class's Table 2 mean is the duration (and the
+        // oracle's prediction).
+        assert_eq!(spec.api_calls[1].duration,
+                   crate::predictor::api_stats::predicted_duration(
+                       ApiType::Image));
+        assert_eq!(spec.api_calls[1].response_tokens, Tokens(4));
+        // No api_type: the generic tool class.
+        assert_eq!(spec.api_calls[2].api_type, ApiType::Tool(0));
+        // Three calls -> four segments.
+        assert_eq!(spec.num_segments(), 4);
+    }
+
+    #[test]
+    fn wire_request_rejects_missing_fields_and_bad_calls() {
         assert!(WireRequest::parse(r#"{"prompt": "x"}"#).is_err());
         assert!(WireRequest::parse("not json").is_err());
+        assert!(WireRequest::parse(
+            r#"{"prompt": "x", "output_tokens": 1,
+                "api_calls": 3}"#).is_err());
+        assert!(WireRequest::parse(
+            r#"{"prompt": "x", "output_tokens": 1,
+                "api_calls": [{"decode_before": 1,
+                               "api_type": "nope"}]}"#).is_err());
+        assert!(WireRequest::parse(
+            r#"{"prompt": "x", "output_tokens": 1,
+                "api_calls": [{"api_type": "qa"}]}"#).is_err(),
+                "decode_before is required per call");
     }
 
     #[test]
@@ -512,10 +1213,13 @@ mod tests {
             ttft_us: Some(10),
             tokens_decoded: 5,
             generated: Some(vec![1, 2]),
+            dropped: None,
         };
         let v = json::parse(&c.to_json()).unwrap();
         assert_eq!(v.u64_field("id").unwrap(), 3);
         assert_eq!(v.get("generated").unwrap().as_arr().unwrap().len(), 2);
+        assert!(v.get("dropped").is_none(),
+                "served completions carry no dropped key");
         let c2 = Completion {
             ttft_us: None,
             generated: None,
@@ -523,5 +1227,84 @@ mod tests {
         };
         let v2 = json::parse(&c2.to_json()).unwrap();
         assert_eq!(v2.get("ttft_us"), Some(&Value::Null));
+        // A dropped completion is distinguishable from a zero-token
+        // serve: the reason rides in the JSON.
+        let d = dropped_completion(RequestId(9),
+                                   "context outgrew budget".to_string());
+        let vd = json::parse(&d.to_json()).unwrap();
+        assert_eq!(vd.u64_field("tokens_decoded").unwrap(), 0);
+        assert_eq!(vd.str_field("dropped").unwrap(),
+                   "context outgrew budget");
+    }
+
+    #[test]
+    fn event_frames_are_valid_json() {
+        let events = vec![
+            RequestEvent::Queued,
+            RequestEvent::Placed { replica: 2 },
+            RequestEvent::Rescued { from: 2, to: 0 },
+            RequestEvent::FirstToken,
+            RequestEvent::Tokens { chunk: 7 },
+            RequestEvent::ApiCallStarted {
+                index: 0,
+                strategy: HandlingStrategy::Swap,
+                predicted_us: 690_000,
+                external: true,
+            },
+            RequestEvent::ApiCallCompleted {
+                index: 0,
+                actual_us: 1_234,
+            },
+            RequestEvent::Finished(Completion {
+                id: 5,
+                latency_us: 10,
+                ttft_us: None,
+                tokens_decoded: 1,
+                generated: None,
+                dropped: None,
+            }),
+            RequestEvent::Dropped {
+                reason: "a \"quoted\" \\ reason".to_string(),
+            },
+            RequestEvent::Error {
+                message: "tool_result rejected: wrong index"
+                    .to_string(),
+            },
+        ];
+        let mut terminals = 0;
+        for ev in &events {
+            let frame = ev.to_json(5);
+            let v = json::parse(&frame).expect("frame must be JSON");
+            assert_eq!(v.u64_field("id").unwrap(), 5, "{frame}");
+            assert!(v.str_field("type").is_ok(), "{frame}");
+            if ev.is_terminal() {
+                terminals += 1;
+            }
+        }
+        assert_eq!(terminals, 2);
+        // Spot-check the api_call_started payload.
+        let started = events[5].to_json(5);
+        let v = json::parse(&started).unwrap();
+        assert_eq!(v.str_field("type").unwrap(), "api_call_started");
+        assert_eq!(v.str_field("strategy").unwrap(), "swap");
+        assert_eq!(v.u64_field("predicted_us").unwrap(), 690_000);
+        assert_eq!(v.get("external").unwrap().as_bool(), Some(true));
+        // Injection-proof: the dropped reason survives a round-trip.
+        let dropped = events[8].to_json(5);
+        let v = json::parse(&dropped).unwrap();
+        assert_eq!(v.str_field("reason").unwrap(),
+                   "a \"quoted\" \\ reason");
+    }
+
+    #[test]
+    fn error_frames_are_injection_proof() {
+        // The old format! splice emitted invalid/forgeable JSON when
+        // the error text contained quotes or backslashes.
+        let hostile = "boom\" ,\"tokens_decoded\":999,\"x\":\"\\";
+        let frame = error_frame(hostile);
+        let v = json::parse(&frame).expect("must stay valid JSON");
+        assert_eq!(v.str_field("error").unwrap(), hostile);
+        assert_eq!(v.str_field("type").unwrap(), "error");
+        assert!(v.get("tokens_decoded").is_none(), "no forged fields");
     }
 }

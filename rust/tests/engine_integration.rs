@@ -58,6 +58,54 @@ fn toolbench_trace_completes() {
 }
 
 #[test]
+fn sim_report_json_shape_pinned() {
+    // Regression pin for the `--api-source` seam: a simulated-source
+    // run (the default) must keep the exact PR 4 report shape — the
+    // external-only keys (api_calls_completed, api_pred_abs_err_us,
+    // api_pred_err_hist) may never leak into it, and nothing else may
+    // appear or vanish.
+    let trace = infercept::single_api_dataset(30, 2.0, 7);
+    let report = run("lamps", &trace);
+    assert!(report.completed > 0);
+    assert_eq!(report.api_calls_completed, 0,
+               "no externally-resolved calls on a sim run");
+    let v = lamps::util::json::parse(&report.to_json(false)).unwrap();
+    let keys: Vec<&str> = v
+        .as_obj()
+        .unwrap()
+        .keys()
+        .map(|k| k.as_str())
+        .collect();
+    assert_eq!(keys, [
+        "blocks_allocated",
+        "completed",
+        "discard_count",
+        "duration_us",
+        "iterations",
+        "latency",
+        "materialize_us",
+        "preemptions",
+        "prefix_cached_blocks",
+        "prefix_evictions",
+        "prefix_hit_tokens",
+        "preserve_count",
+        "rejected_memory",
+        "rejected_reservation",
+        "rejected_slot",
+        "submitted",
+        "swap_count",
+        "swap_overlap_us",
+        "swap_restore_cached_tokens",
+        "swap_stall_us",
+        "throughput_rps",
+        "tokens_decoded",
+        "tokens_prefilled",
+        "tokens_recomputed",
+        "ttft",
+    ], "exactly the PR 4 sim-report shape");
+}
+
+#[test]
 fn deterministic_replay() {
     let trace = infercept::multi_api_dataset(40, 3.0, 23);
     let a = run("lamps", &trace);

@@ -6,12 +6,12 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
-use lamps::config::{CostModel, SystemConfig};
-use lamps::core::request::RequestSpec;
+use lamps::config::{ApiSourceKind, CostModel, SystemConfig};
+use lamps::core::request::{ApiCallSpec, ApiType, RequestSpec};
 use lamps::core::types::{Micros, RequestId, Tokens};
 use lamps::engine::backend::SimBackend;
 use lamps::predictor::oracle::OraclePredictor;
-use lamps::server::{self, WireRequest};
+use lamps::server::{self, RequestEvent, WireRequest};
 use lamps::util::json;
 
 fn fast_cost() -> CostModel {
@@ -86,12 +86,9 @@ fn concurrent_submissions_all_complete() {
 #[test]
 fn api_request_waits_wall_time() {
     let handle = spawn_sim_server();
-    let wire = WireRequest {
-        prompt: "call the weather api".to_string(),
-        pre_api_tokens: 2,
-        api_ms: 30,
-        output_tokens: 3,
-    };
+    let wire = WireRequest::parse(
+        r#"{"prompt": "call the weather api", "output_tokens": 3,
+            "pre_api_tokens": 2, "api_ms": 30}"#).unwrap();
     let start = std::time::Instant::now();
     let completion = handle.submit_blocking(wire.to_spec()).unwrap();
     let elapsed = start.elapsed();
@@ -147,6 +144,260 @@ fn spawn_sim_replicated_serves_all() {
     ids.dedup();
     assert_eq!(ids.len(), 9, "ids must be unique across replicas");
     handle.shutdown();
+}
+
+#[test]
+fn external_session_round_trip_in_process() {
+    // `--api-source external` end to end through the session API: the
+    // engine parks the request (strategy chosen from the *predicted*
+    // duration) and only the client's tool result — posted well after
+    // the park — completes it, with the tool's actual response length
+    // replacing the spec's.
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.cost = fast_cost();
+    cfg.api_source = ApiSourceKind::External;
+    let (handle, _join) = server::spawn_sim(cfg);
+    let spec = RequestSpec {
+        id: RequestId(0),
+        arrival: Micros::ZERO,
+        prompt: "look this up".to_string(),
+        prompt_tokens: Tokens(3),
+        api_calls: vec![ApiCallSpec {
+            decode_before: Tokens(2),
+            api_type: ApiType::Qa,
+            duration: Micros(500_000), // prediction hint only
+            response_tokens: Tokens(0),
+        }],
+        final_decode: Tokens(3),
+    };
+    let session = handle.open_session(spec).unwrap();
+    // Drive to the park point.
+    let started = loop {
+        let ev = session.next_event().expect("stream open");
+        if let RequestEvent::ApiCallStarted {
+            index,
+            predicted_us,
+            external,
+            ..
+        } = ev
+        {
+            break (index, predicted_us, external);
+        }
+        assert!(!ev.is_terminal(),
+                "must not finish before the tool result: {ev:?}");
+    };
+    assert_eq!(started, (0, 500_000, true),
+               "parked under the predicted duration, client-owned");
+    // A misdirected result (wrong index) is rejected with a
+    // non-terminal Error event; the call stays parked for the real
+    // answer.
+    session.complete_api_call(1, 9).unwrap();
+    match session.next_event().expect("stream open") {
+        RequestEvent::Error { message } => {
+            assert!(message.contains("parked on call 0"), "{message}");
+        }
+        other => panic!("expected an error event, got {other:?}"),
+    }
+    // The engine holds the request until we answer.
+    std::thread::sleep(Duration::from_millis(30));
+    session.complete_api_call(0, 5).unwrap();
+    let mut completed_us = None;
+    let completion = loop {
+        match session.next_event().expect("stream open") {
+            RequestEvent::ApiCallCompleted { index, actual_us } => {
+                assert_eq!(index, 0);
+                completed_us = Some(actual_us);
+            }
+            RequestEvent::Finished(c) => break c,
+            RequestEvent::Dropped { reason } => {
+                panic!("dropped: {reason}")
+            }
+            _ => {}
+        }
+    };
+    assert!(session.next_event().is_none(), "stream closed");
+    let actual = completed_us.expect("completion event before finish");
+    assert!(actual >= 30_000,
+            "the park time is the measured duration: {actual}");
+    assert_eq!(completion.tokens_decoded, 5, "2 pre-API + 3 final");
+    assert!(completion.dropped.is_none());
+    handle.shutdown();
+}
+
+#[test]
+fn tcp_v2_external_session_round_trip() {
+    // Protocol v2 over real TCP: a typed request frame opens the
+    // session, event frames stream back, a scripted client drives the
+    // externally-held call with a tool_result frame, and the session
+    // closes with a finished frame.
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.cost = fast_cost();
+    cfg.api_source = ApiSourceKind::External;
+    let (handle, _join) = server::spawn_sim(cfg);
+    let addr = "127.0.0.1:17072";
+    let server_handle = handle.clone();
+    std::thread::spawn(move || {
+        let _ = server::serve_tcp(server_handle, addr);
+    });
+    let mut stream = None;
+    for _ in 0..50 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    let stream = stream.expect("server did not come up");
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let read_frame = |reader: &mut BufReader<TcpStream>| {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        json::parse(&line).expect("frames are valid JSON")
+    };
+
+    // An unknown frame type gets an injection-proof error frame.
+    writer.write_all(b"{\"type\": \"bogus\"}\n").unwrap();
+    writer.flush().unwrap();
+    let v = read_frame(&mut reader);
+    assert_eq!(v.str_field("type").unwrap(), "error");
+
+    // A v1 one-shot carrying an API call is rejected up front on an
+    // external-source server: its tool result could never be posted
+    // back, and blocking the reader on it would deadlock the
+    // connection.
+    writer
+        .write_all(b"{\"prompt\": \"v1\", \"output_tokens\": 2, \
+                      \"pre_api_tokens\": 1, \"api_ms\": 5}\n")
+        .unwrap();
+    writer.flush().unwrap();
+    let v = read_frame(&mut reader);
+    assert_eq!(v.str_field("type").unwrap(), "error");
+    assert!(v.str_field("error").unwrap().contains("v2 session"));
+
+    // ...while a call-free v1 one-shot still works as before.
+    writer
+        .write_all(b"{\"prompt\": \"v1 plain\", \"output_tokens\": 2}\n")
+        .unwrap();
+    writer.flush().unwrap();
+    let v = read_frame(&mut reader);
+    assert_eq!(v.u64_field("tokens_decoded").unwrap(), 2);
+
+    let request = "{\"type\":\"request\",\
+                    \"prompt\":\"use the calculator\",\
+                    \"output_tokens\":3,\
+                    \"api_calls\":[{\"decode_before\":2,\
+                    \"api_type\":\"math\",\"response_tokens\":2}]}\n";
+    writer.write_all(request.as_bytes()).unwrap();
+    writer.flush().unwrap();
+
+    // queued announces the id; then frames stream until the park.
+    let v = read_frame(&mut reader);
+    assert_eq!(v.str_field("type").unwrap(), "queued");
+    let id = v.u64_field("id").unwrap();
+    let started = loop {
+        let v = read_frame(&mut reader);
+        let t = v.str_field("type").unwrap();
+        assert_ne!(t, "finished",
+                   "must not finish before the tool result");
+        assert_ne!(t, "dropped");
+        if t == "api_call_started" {
+            break v;
+        }
+    };
+    assert_eq!(started.u64_field("id").unwrap(), id);
+    assert_eq!(started.u64_field("index").unwrap(), 0);
+    assert_eq!(started.get("external").unwrap().as_bool(), Some(true));
+    // predicted_us defaults to the math class's Table 2 mean (90 us).
+    assert_eq!(started.u64_field("predicted_us").unwrap(), 90);
+
+    let tool_result = format!(
+        "{{\"type\": \"tool_result\", \"id\": {id}, \"index\": 0, \
+         \"response_tokens\": 2}}\n");
+    writer.write_all(tool_result.as_bytes()).unwrap();
+    writer.flush().unwrap();
+
+    let mut saw_completed = false;
+    loop {
+        let v = read_frame(&mut reader);
+        match v.str_field("type").unwrap().as_str() {
+            "api_call_completed" => {
+                assert_eq!(v.u64_field("index").unwrap(), 0);
+                saw_completed = true;
+            }
+            "finished" => {
+                assert_eq!(v.u64_field("id").unwrap(), id);
+                assert_eq!(v.u64_field("tokens_decoded").unwrap(), 5);
+                break;
+            }
+            "dropped" => panic!("dropped: {v:?}"),
+            _ => {}
+        }
+    }
+    assert!(saw_completed, "completion frame precedes finished");
+
+    // A tool_result for a session that no longer exists comes back as
+    // an error frame instead of vanishing into the server's stderr.
+    let stale = format!(
+        "{{\"type\": \"tool_result\", \"id\": {id}, \"index\": 0, \
+         \"response_tokens\": 1}}\n");
+    writer.write_all(stale.as_bytes()).unwrap();
+    writer.flush().unwrap();
+    let v = read_frame(&mut reader);
+    assert_eq!(v.str_field("type").unwrap(), "error");
+    assert_eq!(v.u64_field("id").unwrap(), id);
+    assert!(v.str_field("error").unwrap().contains("unknown session"));
+    handle.shutdown();
+}
+
+#[test]
+fn shutdown_aborts_parked_external_calls() {
+    // Without the shutdown abort, the engine thread would wait out
+    // the 10-minute client backstop for a call nobody will answer;
+    // the session must instead close promptly with a Dropped terminal
+    // and the engine thread must exit.
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.cost = fast_cost();
+    cfg.api_source = ApiSourceKind::External;
+    let (handle, join) = server::spawn_sim(cfg);
+    let session = handle
+        .open_session(RequestSpec {
+            id: RequestId(0),
+            arrival: Micros::ZERO,
+            prompt: String::new(),
+            prompt_tokens: Tokens(2),
+            api_calls: vec![ApiCallSpec {
+                decode_before: Tokens(1),
+                api_type: ApiType::Qa,
+                duration: Micros(1_000_000),
+                response_tokens: Tokens(0),
+            }],
+            final_decode: Tokens(1),
+        })
+        .unwrap();
+    loop {
+        let ev = session.next_event().expect("stream open");
+        if matches!(ev, RequestEvent::ApiCallStarted { .. }) {
+            break;
+        }
+        assert!(!ev.is_terminal(), "{ev:?}");
+    }
+    handle.shutdown();
+    loop {
+        match session.next_event() {
+            Some(RequestEvent::Dropped { reason }) => {
+                assert!(reason.contains("shutting down"), "{reason}");
+                break;
+            }
+            Some(ev) => assert!(!ev.is_terminal(), "{ev:?}"),
+            None => panic!("stream closed without a terminal event"),
+        }
+    }
+    // Bounded shutdown: the engine thread exits once the aborted
+    // session is closed.
+    join.join().unwrap();
 }
 
 #[test]

@@ -1,0 +1,344 @@
+//! Event-stream invariants of the session API, end to end through the
+//! serving frontend: per session, events arrive in causal order
+//! (`Queued` ≤ `Placed` ≤ [`Rescued`] ≤ `FirstToken` ≤ terminal),
+//! exactly one terminal event (`Finished` xor `Dropped`) closes the
+//! stream, `ApiCallStarted`/`ApiCallCompleted` pair up per index, and
+//! nothing is ever delivered after the terminal — including on a
+//! randomized multi-replica run with the admission re-queue rescuing
+//! sessions between replicas mid-stream.
+
+use std::time::Duration;
+
+use lamps::config::{CostModel, HandlingPolicy, PlacementKind,
+                    SystemConfig};
+use lamps::core::request::{ApiCallSpec, ApiType, HandlingStrategy,
+                           RequestSpec};
+use lamps::core::types::{Micros, RequestId, Tokens};
+use lamps::server::{self, RequestEvent};
+
+fn fast_cost() -> CostModel {
+    CostModel {
+        decode_base: Micros(200),
+        decode_per_ctx_token_us: 0.0,
+        prefill_per_token_us: 5.0,
+        swap_base_us: 0.0,
+        swap_per_token_us: 0.0,
+        rank_overhead_per_request_us: 0.0,
+    }
+}
+
+fn spec(prompt_tokens: u64, api_calls: Vec<ApiCallSpec>,
+        final_decode: u64) -> RequestSpec {
+    RequestSpec {
+        id: RequestId(0), // assigned by the server
+        arrival: Micros::ZERO,
+        prompt: String::new(),
+        prompt_tokens: Tokens(prompt_tokens),
+        api_calls,
+        final_decode: Tokens(final_decode),
+    }
+}
+
+fn sim_call(decode_before: u64, api_ms: u64, response: u64)
+            -> ApiCallSpec {
+    ApiCallSpec {
+        decode_before: Tokens(decode_before),
+        api_type: ApiType::Tool(0),
+        duration: Micros(api_ms * 1000),
+        response_tokens: Tokens(response),
+    }
+}
+
+/// The satellite invariants, checked over one session's full stream.
+fn assert_stream_invariants(events: &[RequestEvent]) {
+    assert!(!events.is_empty(), "a session delivers at least a terminal");
+    // Exactly one terminal event, and it closes the stream.
+    let terminals =
+        events.iter().filter(|e| e.is_terminal()).count();
+    assert_eq!(terminals, 1, "exactly one terminal event: {events:?}");
+    assert!(events.last().unwrap().is_terminal(),
+            "the terminal event must be last: {events:?}");
+    // Causal prefix: Queued first, Placed second.
+    assert!(matches!(events[0], RequestEvent::Queued),
+            "stream must start with Queued: {events:?}");
+    assert!(matches!(events[1], RequestEvent::Placed { .. }),
+            "Placed must directly follow Queued: {events:?}");
+    // A rescue, if any, happens before the request ever runs.
+    if let Some(rescued) = events
+        .iter()
+        .position(|e| matches!(e, RequestEvent::Rescued { .. }))
+    {
+        let first_progress = events.iter().position(|e| {
+            matches!(e,
+                     RequestEvent::FirstToken
+                         | RequestEvent::Tokens { .. }
+                         | RequestEvent::ApiCallStarted { .. })
+        });
+        if let Some(p) = first_progress {
+            assert!(rescued < p,
+                    "a rescue can only precede execution: {events:?}");
+        }
+    }
+    // At most one FirstToken, before any Tokens.
+    let first_token = events
+        .iter()
+        .position(|e| matches!(e, RequestEvent::FirstToken));
+    assert!(events
+                .iter()
+                .filter(|e| matches!(e, RequestEvent::FirstToken))
+                .count()
+                <= 1);
+    if let Some(tokens) = events
+        .iter()
+        .position(|e| matches!(e, RequestEvent::Tokens { .. }))
+    {
+        assert_eq!(first_token.map(|f| f < tokens), Some(true),
+                   "FirstToken precedes token chunks: {events:?}");
+    }
+    // API call events pair up, in index order, never nested.
+    let mut open: Option<usize> = None;
+    let mut next_index = 0usize;
+    for e in events {
+        match e {
+            RequestEvent::ApiCallStarted { index, .. } => {
+                assert!(open.is_none(), "nested API call: {events:?}");
+                assert_eq!(*index, next_index,
+                           "calls start in order: {events:?}");
+                open = Some(*index);
+            }
+            RequestEvent::ApiCallCompleted { index, .. } => {
+                assert_eq!(open, Some(*index),
+                           "completion without a start: {events:?}");
+                open = None;
+                next_index += 1;
+            }
+            _ => {}
+        }
+    }
+    if matches!(events.last().unwrap(), RequestEvent::Finished(_)) {
+        assert!(open.is_none(),
+                "finished with an API call still open: {events:?}");
+    }
+}
+
+/// Drain a session to its terminal event, then assert the stream is
+/// truly closed (nothing may ever follow the terminal).
+fn drain(session: server::SessionHandle) -> Vec<RequestEvent> {
+    let mut events = Vec::new();
+    loop {
+        let ev = session
+            .next_event()
+            .expect("stream must stay open through the terminal");
+        let terminal = ev.is_terminal();
+        events.push(ev);
+        if terminal {
+            break;
+        }
+    }
+    assert!(session.next_event().is_none(),
+            "no event may be delivered after the terminal one");
+    events
+}
+
+#[test]
+fn single_session_causal_order_and_api_pairing() {
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.cost = fast_cost();
+    let (handle, _join) = server::spawn_sim(cfg);
+    let session = handle
+        .open_session(spec(
+            3,
+            vec![sim_call(2, 20, 2), sim_call(1, 5, 0)],
+            2,
+        ))
+        .unwrap();
+    let events = drain(session);
+    assert_stream_invariants(&events);
+    // Both calls started and completed.
+    let starts = events
+        .iter()
+        .filter(|e| matches!(e, RequestEvent::ApiCallStarted { .. }))
+        .count();
+    assert_eq!(starts, 2);
+    let RequestEvent::Finished(c) = events.last().unwrap() else {
+        panic!("expected Finished: {events:?}");
+    };
+    assert_eq!(c.tokens_decoded, 5, "2 + 1 + 2 decode tokens");
+    assert!(c.dropped.is_none());
+    handle.shutdown();
+}
+
+#[test]
+fn dropped_session_gets_terminal_reason() {
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.cost = fast_cost();
+    cfg.memory_budget = Tokens(10);
+    let (handle, _join) = server::spawn_sim(cfg);
+    let session = handle.open_session(spec(50, vec![], 1)).unwrap();
+    let events = drain(session);
+    assert_stream_invariants(&events);
+    let RequestEvent::Dropped { reason } = events.last().unwrap() else {
+        panic!("expected Dropped: {events:?}");
+    };
+    assert!(reason.contains("capacity"), "{reason}");
+    // The blocking wrapper reports the same drop as a zero-token
+    // completion carrying the reason.
+    let completion =
+        handle.submit_blocking(spec(50, vec![], 1)).unwrap();
+    assert_eq!(completion.tokens_decoded, 0);
+    assert!(completion.dropped.as_deref().unwrap().contains("capacity"));
+    handle.shutdown();
+}
+
+#[test]
+fn rescued_session_streams_from_new_owner() {
+    // Deterministic admission-rescue through the serving frontend:
+    // round-robin puts a 25-token hog on replica 0 and parks it there
+    // under a Preserve API call; the next replica-0 arrival cannot fit
+    // and must be rescued to the idle replica 1, its stream carrying
+    // Rescued{0→1} before any execution event.
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.cost = fast_cost();
+    cfg.handling = HandlingPolicy::Forced(HandlingStrategy::Preserve);
+    cfg.replicas = 2;
+    cfg.placement = PlacementKind::RoundRobin;
+    cfg.memory_budget = Tokens(30);
+    cfg.block_size = 1;
+    let (handle, _join) = server::spawn_sim(cfg);
+
+    // Hog → replica 0 (round-robin slot 0).
+    let hog = handle
+        .open_session(spec(25, vec![sim_call(2, 400, 0)], 1))
+        .unwrap();
+    // Small filler → replica 1 (slot 1); completes immediately.
+    let filler = handle.open_session(spec(2, vec![], 1)).unwrap();
+    assert_stream_invariants(&drain(filler));
+    // Wait until the hog is parked (its API call started) so its
+    // memory is held when the victim arrives.
+    let mut hog_events = Vec::new();
+    loop {
+        let ev = hog.next_event().expect("hog stream open");
+        let parked =
+            matches!(ev, RequestEvent::ApiCallStarted { .. });
+        hog_events.push(ev);
+        if parked {
+            break;
+        }
+    }
+
+    // Victim → replica 0 (slot 2): 21 admission tokens cannot fit
+    // beside the hog's held 28; the re-queue must move it to replica 1.
+    let victim = handle.open_session(spec(20, vec![], 2)).unwrap();
+    let events = drain(victim);
+    assert_stream_invariants(&events);
+    let rescued = events
+        .iter()
+        .find(|e| matches!(e, RequestEvent::Rescued { .. }));
+    let Some(RequestEvent::Rescued { from, to }) = rescued else {
+        panic!("expected a rescue: {events:?}");
+    };
+    assert_eq!((*from, *to), (0, 1));
+    assert!(matches!(events.last().unwrap(),
+                     RequestEvent::Finished(_)),
+            "the rescued session must be served: {events:?}");
+
+    // The hog itself completes normally after its call returns.
+    loop {
+        let ev = hog.next_event().expect("hog stream open");
+        let terminal = ev.is_terminal();
+        hog_events.push(ev);
+        if terminal {
+            break;
+        }
+    }
+    assert!(hog.next_event().is_none());
+    assert_stream_invariants(&hog_events);
+    handle.shutdown();
+}
+
+/// Tiny deterministic PRNG (the offline vendor set has no rand crate).
+struct XorShift(u64);
+
+impl XorShift {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+#[test]
+fn randomized_replicated_run_never_events_after_terminal() {
+    // Satellite invariant at fleet scale: replicas = 4 with the
+    // admission re-queue enabled (the default), a randomized mix of
+    // shapes — some too big to serve at all (Dropped), some parked on
+    // API calls, some rescued between replicas — and every session's
+    // stream must stay causally ordered, close with exactly one
+    // terminal event, and deliver nothing after it.
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.cost = fast_cost();
+    cfg.handling = HandlingPolicy::Forced(HandlingStrategy::Preserve);
+    cfg.replicas = 4;
+    cfg.placement = PlacementKind::RoundRobin;
+    cfg.memory_budget = Tokens(60);
+    cfg.block_size = 1;
+    let (handle, _join) = server::spawn_sim(cfg);
+
+    let mut rng = XorShift(0x5EED_CAFE);
+    let mut specs = Vec::new();
+    for _ in 0..24 {
+        let prompt = 1 + rng.below(70); // some exceed the 60 budget
+        let api_calls = if rng.below(2) == 0 {
+            vec![sim_call(1 + rng.below(3), rng.below(50),
+                          rng.below(4))]
+        } else {
+            vec![]
+        };
+        let final_decode = 1 + rng.below(5);
+        let stagger = rng.below(10);
+        specs.push((spec(prompt, api_calls, final_decode), stagger));
+    }
+
+    let streams: Vec<Vec<RequestEvent>> =
+        std::thread::scope(|scope| {
+            let joins: Vec<_> = specs
+                .into_iter()
+                .map(|(request, stagger)| {
+                    let h = handle.clone();
+                    scope.spawn(move || {
+                        std::thread::sleep(
+                            Duration::from_millis(stagger));
+                        let session = h.open_session(request).unwrap();
+                        drain(session)
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+
+    let mut finished = 0;
+    let mut dropped = 0;
+    for events in &streams {
+        assert_stream_invariants(events);
+        match events.last().unwrap() {
+            RequestEvent::Finished(c) => {
+                assert!(c.dropped.is_none());
+                finished += 1;
+            }
+            RequestEvent::Dropped { .. } => dropped += 1,
+            other => panic!("non-terminal last event {other:?}"),
+        }
+    }
+    assert_eq!(finished + dropped, 24);
+    assert!(finished > 0, "the mix must serve most sessions");
+    assert!(dropped > 0,
+            "the mix must include oversized (dropped) sessions");
+    handle.shutdown();
+}
