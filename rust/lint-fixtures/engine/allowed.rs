@@ -1,0 +1,10 @@
+//! A clean fixture: the same panic-class sites as `bad_panic.rs`, but
+//! each carries a well-formed `lamps-lint` escape naming the rule and
+//! a reason — this file must scan clean.
+
+pub fn pop(queue: &mut Vec<u64>, lookup: Option<u64>) -> u64 {
+    // lamps-lint: allow(panic) invariant: caller checked non-empty
+    let head = queue.pop().unwrap();
+    let hit = lookup.expect("resident"); // lamps-lint: allow(panic) invariant: admission pinned it
+    head + hit
+}

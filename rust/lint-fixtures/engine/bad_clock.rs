@@ -1,0 +1,9 @@
+//! Seeded `wall-clock` violations: real time read outside the
+//! `engine/clock.rs` seam breaks virtual-clock determinism.
+
+pub fn stamp_us() -> u128 {
+    let t = std::time::Instant::now();
+    let epoch = std::time::SystemTime::now();
+    let _ = epoch;
+    t.elapsed().as_micros()
+}

@@ -1,0 +1,16 @@
+//! Seeded `float-iter` violations: f64 accumulation over HashMap
+//! iteration order (the PR 3 placement-reproducibility class).
+
+use std::collections::HashMap;
+
+pub fn mean_load(per_replica: &HashMap<u64, f64>) -> f64 {
+    let mut total = 0.0;
+    for load in per_replica.values() {
+        total += load;
+    }
+    total / per_replica.len().max(1) as f64
+}
+
+pub fn chained(per_replica: &HashMap<u64, f64>) -> f64 {
+    per_replica.values().copied().sum::<f64>()
+}

@@ -1,0 +1,11 @@
+//! Seeded `panic` violations: unwrap/expect/panic!/indexing in
+//! scheduler-critical code without an escape.
+
+pub fn pop(queue: &mut Vec<u64>, lookup: Option<u64>) -> u64 {
+    let head = queue.pop().unwrap();
+    let hit = lookup.expect("must be resident");
+    if head == 0 {
+        panic!("zero head");
+    }
+    head + hit + queue[0]
+}

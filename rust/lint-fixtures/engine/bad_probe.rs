@@ -1,0 +1,7 @@
+//! Seeded `probe-purity` violation: a placement probe that takes
+//! `&mut` can perturb the state it scores.
+
+pub fn placement_score(engines: &mut Vec<u64>, tokens: u64) -> f64 {
+    engines.push(tokens);
+    engines.len() as f64
+}

@@ -1,0 +1,10 @@
+//! Seeded `wire-format` violations: JSON frames assembled by string
+//! splicing instead of `util::json::obj` (the PR 5 injection class).
+
+pub fn error_frame(id: u64, msg: &str) -> String {
+    format!("{{\"type\":\"error\",\"id\":{id},\"error\":\"{msg}\"}}")
+}
+
+pub fn append_event(out: &mut String) {
+    out.push_str(r#"{"type":"event","name":"first_token"}"#);
+}

@@ -1,0 +1,665 @@
+//! Runtime invariant auditor: read-only re-derivation of the
+//! correctness properties the scheduler's results rest on, checked
+//! after every engine/fleet step when armed.
+//!
+//! Scheduling bugs here rarely crash — they silently skew ranks,
+//! leak blocks, or reorder streams, and the run still prints a
+//! plausible report. The auditor promotes the invariants that used to
+//! live scattered across `tests/kv_properties.rs`,
+//! `tests/replica_properties.rs` and `tests/session_events.rs` into
+//! one reusable checker:
+//!
+//! - **Block conservation** — every device block is accounted exactly
+//!   once across free list, private allocations, and prefix cache;
+//!   gauges match recounts ([`crate::kv::BlockManager::check_invariants`]).
+//! - **Prefix refcounts** — each cached block's refcount equals its
+//!   holder count; zero-ref gauge and LRU agree.
+//! - **Swap gauge** — host-parked tokens sum to the used gauge.
+//! - **Queue order** — pending arrivals non-decreasing (engine), the
+//!   fleet's shared admission queue strictly `(arrival, id)`-sorted.
+//! - **Queue membership** — waiting/running disjoint, duplicate-free,
+//!   and subsets of the live request table.
+//! - **Clock monotonicity** — a step never moves time backwards.
+//! - **Event causality** — per-request lifecycle streams obey
+//!   `Queued ≤ Placed ≤ FirstToken ≤ terminal`, API calls pair up in
+//!   index order and never nest, and nothing follows the terminal
+//!   event ([`StreamState`]).
+//! - **Fleet consistency** — the dispatch log covers every placed
+//!   request exactly once on a valid replica, request tables are
+//!   disjoint across replicas, and the shared prefix index is a
+//!   subset of what is actually resident.
+//!
+//! Armed via [`crate::config::AuditMode`]: `--audit` (or
+//! `LAMPS_AUDIT=on` for the benches) forces it on, and the `Auto`
+//! default turns it on under `cfg(debug_assertions)` — so the whole
+//! tier-1 test suite runs audited. Every check is observe-only: an
+//! audited run's report is byte-identical to an unaudited one. A
+//! violated invariant is a bug, and the engine treats it as fatal.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+
+use crate::cluster::ReplicaSet;
+use crate::core::types::{Micros, RequestId};
+use crate::engine::{Engine, EngineEvent};
+
+/// One violated invariant: which check tripped, and the recount that
+/// disagrees. Construction implies a bug somewhere upstream — the
+/// auditor itself never mutates what it measures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AuditError {
+    /// Short check slug (`"kv"`, `"swap"`, `"clock"`, `"queue"`,
+    /// `"stream"`, `"fleet"`).
+    pub check: &'static str,
+    pub detail: String,
+}
+
+impl fmt::Display for AuditError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "audit[{}]: {}", self.check, self.detail)
+    }
+}
+
+impl std::error::Error for AuditError {}
+
+fn fail(check: &'static str, detail: String) -> Result<(), AuditError> {
+    Err(AuditError { check, detail })
+}
+
+// ----------------------------------------------------------------------
+// Per-request lifecycle stream machine
+// ----------------------------------------------------------------------
+
+/// One observed lifecycle event, normalized across layers: the engine
+/// journal ([`EngineEvent`], via [`from_engine_event`]) and the
+/// serving frontend's session stream (`server::RequestEvent`) both
+/// map onto it, so a single state machine checks either.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamEvent {
+    /// Accepted into a queue (server-level; always the head event).
+    Queued,
+    /// Placed onto a replica (server-level; directly after `Queued`).
+    Placed,
+    /// Moved to a sibling replica by the admission re-queue. Only a
+    /// request that never executed is relocatable, so a rescue must
+    /// precede all progress.
+    Rescued,
+    /// First decoded token.
+    FirstToken,
+    /// Further decoded tokens (any chunk size).
+    Tokens,
+    /// API call `index` parked the request.
+    ApiStarted { index: usize },
+    /// API call `index` returned.
+    ApiCompleted { index: usize },
+    /// Terminal: served to completion (`finished`) or dropped.
+    Terminal { finished: bool },
+}
+
+/// Per-request event-stream state: feed every event in delivery order
+/// through [`StreamState::observe`] and any causality violation
+/// surfaces as an [`AuditError`] at the exact event that broke it.
+#[derive(Debug, Clone, Default)]
+pub struct StreamState {
+    /// 0 = no head events, 1 = after `Queued`, 2 = after `Placed`.
+    head: u8,
+    saw_first_token: bool,
+    saw_tokens: bool,
+    open_call: Option<usize>,
+    next_call: usize,
+    terminated: bool,
+}
+
+impl StreamState {
+    /// Has the terminal event been observed? (The state is retained
+    /// afterwards precisely so a late event can be caught.)
+    pub fn terminated(&self) -> bool {
+        self.terminated
+    }
+
+    /// Any evidence the request has started executing — after which
+    /// it holds replica-local state and can no longer be rescued.
+    fn progressed(&self) -> bool {
+        self.saw_first_token
+            || self.saw_tokens
+            || self.next_call > 0
+            || self.open_call.is_some()
+    }
+
+    /// Observe the next event of this request's stream.
+    pub fn observe(&mut self, id: RequestId, ev: StreamEvent)
+                   -> Result<(), AuditError> {
+        if self.terminated {
+            return fail("stream",
+                        format!("{id}: {ev:?} after the terminal event"));
+        }
+        match ev {
+            StreamEvent::Queued => {
+                if self.head != 0 || self.progressed() {
+                    return fail("stream",
+                                format!("{id}: Queued not at stream head"));
+                }
+                self.head = 1;
+            }
+            StreamEvent::Placed => {
+                if self.head > 1 || self.progressed() {
+                    return fail(
+                        "stream",
+                        format!("{id}: Placed after head/progress \
+                                 (head={})", self.head));
+                }
+                self.head = 2;
+            }
+            StreamEvent::Rescued => {
+                if self.progressed() {
+                    return fail("stream",
+                                format!("{id}: Rescued after execution \
+                                         started"));
+                }
+            }
+            StreamEvent::FirstToken => {
+                if self.saw_first_token || self.saw_tokens {
+                    return fail("stream",
+                                format!("{id}: duplicate/late FirstToken"));
+                }
+                if self.open_call.is_some() {
+                    return fail("stream",
+                                format!("{id}: FirstToken while parked on \
+                                         an API call"));
+                }
+                self.saw_first_token = true;
+            }
+            StreamEvent::Tokens => {
+                if !self.saw_first_token {
+                    return fail("stream",
+                                format!("{id}: Tokens before FirstToken"));
+                }
+                if self.open_call.is_some() {
+                    return fail("stream",
+                                format!("{id}: Tokens while parked on an \
+                                         API call"));
+                }
+                self.saw_tokens = true;
+            }
+            StreamEvent::ApiStarted { index } => {
+                if self.open_call.is_some() {
+                    return fail("stream",
+                                format!("{id}: nested API call {index}"));
+                }
+                if index != self.next_call {
+                    return fail(
+                        "stream",
+                        format!("{id}: API call {index} started out of \
+                                 order (expected {})", self.next_call));
+                }
+                self.open_call = Some(index);
+            }
+            StreamEvent::ApiCompleted { index } => {
+                if self.open_call != Some(index) {
+                    return fail(
+                        "stream",
+                        format!("{id}: API call {index} completed but \
+                                 open call is {:?}", self.open_call));
+                }
+                self.open_call = None;
+                self.next_call = index + 1;
+            }
+            StreamEvent::Terminal { finished } => {
+                if finished && self.open_call.is_some() {
+                    return fail(
+                        "stream",
+                        format!("{id}: finished with API call {:?} still \
+                                 open", self.open_call));
+                }
+                self.terminated = true;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Check one complete (or partial) stream in delivery order,
+/// returning the final state — the promoted core of the old
+/// `session_events.rs` per-stream asserts, reused by those tests.
+pub fn check_stream(id: RequestId,
+                    events: impl IntoIterator<Item = StreamEvent>)
+                    -> Result<StreamState, AuditError> {
+    let mut state = StreamState::default();
+    for ev in events {
+        state.observe(id, ev)?;
+    }
+    Ok(state)
+}
+
+/// Normalize an engine journal entry onto the stream machine's
+/// event alphabet.
+pub fn from_engine_event(ev: &EngineEvent) -> (RequestId, StreamEvent) {
+    match ev {
+        EngineEvent::FirstToken { id, .. } => {
+            (*id, StreamEvent::FirstToken)
+        }
+        EngineEvent::Tokens { id, .. } => (*id, StreamEvent::Tokens),
+        EngineEvent::ApiStarted { id, index, .. } => {
+            (*id, StreamEvent::ApiStarted { index: *index })
+        }
+        EngineEvent::ApiCompleted { id, index, .. } => {
+            (*id, StreamEvent::ApiCompleted { index: *index })
+        }
+        EngineEvent::Finished { id, .. } => {
+            (*id, StreamEvent::Terminal { finished: true })
+        }
+        EngineEvent::Dropped { id, .. } => {
+            (*id, StreamEvent::Terminal { finished: false })
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Engine auditor
+// ----------------------------------------------------------------------
+
+/// Per-engine auditor state: the last observed clock (monotonicity)
+/// and one [`StreamState`] per request ever seen in the event journal
+/// (causality). The structural checks re-derive everything else from
+/// the engine on every call, so they carry no state at all.
+#[derive(Debug, Default)]
+pub struct EngineAuditor {
+    last_now: Option<Micros>,
+    streams: HashMap<RequestId, StreamState>,
+}
+
+impl EngineAuditor {
+    pub fn new() -> EngineAuditor {
+        EngineAuditor::default()
+    }
+
+    /// Feed one journaled lifecycle event through the owning
+    /// request's stream machine. The engine calls this on *every*
+    /// event — before the journal's arming gate — so causality is
+    /// checked even in runs that never drain events.
+    pub fn observe_event(&mut self, ev: &EngineEvent)
+                         -> Result<(), AuditError> {
+        let (id, sev) = from_engine_event(ev);
+        self.streams.entry(id).or_default().observe(id, sev)
+    }
+
+    /// Full post-step structural check of one engine: clock
+    /// monotonicity, KV block conservation and prefix refcounts, the
+    /// swap gauge, pending-arrival order, and queue membership.
+    pub fn check_engine(&mut self, engine: &Engine)
+                        -> Result<(), AuditError> {
+        let now = engine.now();
+        if let Some(last) = self.last_now {
+            if now < last {
+                return fail("clock",
+                            format!("clock moved backwards: {last} -> \
+                                     {now}"));
+            }
+        }
+        self.last_now = Some(now);
+
+        engine
+            .audit_kv()
+            .check_invariants()
+            .map_err(|detail| AuditError { check: "kv", detail })?;
+        engine
+            .audit_swap()
+            .check_invariants()
+            .map_err(|detail| AuditError { check: "swap", detail })?;
+
+        let mut last_arrival: Option<Micros> = None;
+        for (arrival, id) in engine.audit_pending() {
+            if let Some(prev) = last_arrival {
+                if arrival < prev {
+                    return fail(
+                        "queue",
+                        format!("pending arrivals out of order at {id}: \
+                                 {arrival} after {prev}"));
+                }
+            }
+            last_arrival = Some(arrival);
+        }
+
+        let mut seen: HashSet<RequestId> = HashSet::new();
+        let queues = [("waiting", engine.audit_waiting()),
+                      ("running", engine.audit_running())];
+        for (name, ids) in queues {
+            for &id in ids {
+                if !seen.insert(id) {
+                    return fail(
+                        "queue",
+                        format!("{id} queued twice (second hit in \
+                                 {name})"));
+                }
+                if engine.request(id).is_none() {
+                    return fail("queue",
+                                format!("{name} holds unknown {id}"));
+                }
+                if !engine.audit_live().contains(&id) {
+                    return fail("queue",
+                                format!("{name} holds non-live {id}"));
+                }
+            }
+        }
+        for &id in engine.audit_live() {
+            if engine.request(id).is_none() {
+                return fail("queue",
+                            format!("live set holds unknown {id}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------------------
+// Fleet auditor
+// ----------------------------------------------------------------------
+
+/// Post-step structural check of a [`ReplicaSet`] (stateless — the
+/// per-replica clocks and streams are audited by each engine's own
+/// [`EngineAuditor`]): shared-queue order, dispatch-log shape and
+/// coverage, cross-replica request disjointness, and the shared
+/// prefix index staying a subset of what is resident.
+pub fn check_fleet(set: &ReplicaSet) -> Result<(), AuditError> {
+    let n = set.len();
+
+    let mut last: Option<(Micros, RequestId)> = None;
+    for key in set.audit_pending() {
+        if let Some(prev) = last {
+            if key <= prev {
+                return fail(
+                    "fleet",
+                    format!("shared queue not (arrival, id)-sorted: \
+                             {key:?} after {prev:?}"));
+            }
+        }
+        last = Some(key);
+    }
+
+    let mut owners: HashMap<RequestId, usize> = HashMap::new();
+    for &(id, r) in set.assignments() {
+        if r >= n {
+            return fail("fleet",
+                        format!("{id} assigned to replica {r} of {n}"));
+        }
+        if owners.insert(id, r).is_some() {
+            return fail("fleet",
+                        format!("{id} appears twice in the dispatch \
+                                 log"));
+        }
+    }
+
+    // Request tables disjoint across replicas, and every resident
+    // request owned per the dispatch log.
+    let mut resident_on: HashMap<RequestId, usize> = HashMap::new();
+    for i in 0..n {
+        for id in set.replica(i).audit_request_ids() {
+            if let Some(j) = resident_on.insert(id, i) {
+                return fail("fleet",
+                            format!("{id} resident on replicas {j} and \
+                                     {i}"));
+            }
+            if owners.get(&id) != Some(&i) {
+                return fail(
+                    "fleet",
+                    format!("{id} resident on replica {i} but the \
+                             dispatch log says {:?}", owners.get(&id)));
+            }
+        }
+    }
+
+    // Coverage: every placed request is findable on its owner — still
+    // queued there, in its request table, or fail-fast dropped.
+    for (&id, &r) in &owners {
+        let e = set.replica(r);
+        let known = e.request(id).is_some()
+            || e.dropped.contains(&id)
+            || e.audit_pending().any(|(_, pid)| pid == id);
+        if !known {
+            return fail("fleet",
+                        format!("{id} assigned to replica {r} but not \
+                                 found there"));
+        }
+    }
+
+    // Shared prefix index ⊆ per-replica resident sets.
+    if let Some(index) = set.shared_index() {
+        let resident: Vec<Vec<crate::kv::prefix::BlockHash>> = (0..n)
+            .map(|i| {
+                let mut v = set.replica(i).resident_prefix_hashes();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        for hash in index.hashes() {
+            for r in index.replicas_of(hash) {
+                if r >= n {
+                    return fail(
+                        "fleet",
+                        format!("shared index maps {hash:?} to replica \
+                                 {r} of {n}"));
+                }
+                if resident[r].binary_search(&hash).is_err() {
+                    return fail(
+                        "fleet",
+                        format!("shared index claims {hash:?} on \
+                                 replica {r}, but it is not resident"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id() -> RequestId {
+        RequestId(7)
+    }
+
+    fn check(events: &[StreamEvent]) -> Result<StreamState, AuditError> {
+        check_stream(id(), events.iter().copied())
+    }
+
+    #[test]
+    fn well_formed_stream_passes() {
+        let state = check(&[
+            StreamEvent::Queued,
+            StreamEvent::Placed,
+            StreamEvent::Rescued,
+            StreamEvent::FirstToken,
+            StreamEvent::Tokens,
+            StreamEvent::ApiStarted { index: 0 },
+            StreamEvent::ApiCompleted { index: 0 },
+            StreamEvent::Tokens,
+            StreamEvent::ApiStarted { index: 1 },
+            StreamEvent::ApiCompleted { index: 1 },
+            StreamEvent::Terminal { finished: true },
+        ])
+        .unwrap();
+        assert!(state.terminated());
+    }
+
+    #[test]
+    fn engine_only_stream_needs_no_head_events() {
+        // The engine journal has no Queued/Placed alphabet; a stream
+        // may open directly with execution events.
+        check(&[
+            StreamEvent::FirstToken,
+            StreamEvent::Tokens,
+            StreamEvent::Terminal { finished: true },
+        ])
+        .unwrap();
+        // Fail-fast drops terminate a stream that never started.
+        check(&[StreamEvent::Terminal { finished: false }]).unwrap();
+    }
+
+    #[test]
+    fn nothing_after_terminal() {
+        let err = check(&[
+            StreamEvent::Terminal { finished: false },
+            StreamEvent::Tokens,
+        ])
+        .unwrap_err();
+        assert_eq!(err.check, "stream");
+        assert!(err.detail.contains("after the terminal"), "{err}");
+        let err = check(&[
+            StreamEvent::Terminal { finished: true },
+            StreamEvent::Terminal { finished: true },
+        ])
+        .unwrap_err();
+        assert!(err.detail.contains("after the terminal"), "{err}");
+    }
+
+    #[test]
+    fn head_events_only_at_the_head() {
+        assert!(check(&[StreamEvent::Queued, StreamEvent::Queued])
+                    .is_err());
+        assert!(check(&[
+            StreamEvent::Queued,
+            StreamEvent::Placed,
+            StreamEvent::Placed,
+        ])
+        .is_err());
+        assert!(check(&[
+            StreamEvent::FirstToken,
+            StreamEvent::Queued,
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn rescue_must_precede_execution() {
+        assert!(check(&[StreamEvent::FirstToken, StreamEvent::Rescued])
+                    .is_err());
+        assert!(check(&[
+            StreamEvent::ApiStarted { index: 0 },
+            StreamEvent::Rescued,
+        ])
+        .is_err());
+        // Two rescues before any progress are legal (double re-queue).
+        check(&[
+            StreamEvent::Queued,
+            StreamEvent::Placed,
+            StreamEvent::Rescued,
+            StreamEvent::Rescued,
+            StreamEvent::Terminal { finished: false },
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn first_token_precedes_tokens_and_never_repeats() {
+        let err = check(&[StreamEvent::Tokens]).unwrap_err();
+        assert!(err.detail.contains("before FirstToken"), "{err}");
+        assert!(check(&[
+            StreamEvent::FirstToken,
+            StreamEvent::FirstToken,
+        ])
+        .is_err());
+        assert!(check(&[
+            StreamEvent::FirstToken,
+            StreamEvent::Tokens,
+            StreamEvent::FirstToken,
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn api_calls_pair_in_order_and_never_nest() {
+        assert!(check(&[
+            StreamEvent::ApiStarted { index: 0 },
+            StreamEvent::ApiStarted { index: 1 },
+        ])
+        .is_err(), "nested call");
+        assert!(check(&[StreamEvent::ApiStarted { index: 1 }]).is_err(),
+                "out-of-order start");
+        assert!(check(&[StreamEvent::ApiCompleted { index: 0 }])
+                    .is_err(), "completion without a start");
+        assert!(check(&[
+            StreamEvent::ApiStarted { index: 0 },
+            StreamEvent::ApiCompleted { index: 1 },
+        ])
+        .is_err(), "mismatched completion");
+    }
+
+    #[test]
+    fn finishing_with_an_open_call_is_a_bug_but_dropping_is_not() {
+        assert!(check(&[
+            StreamEvent::ApiStarted { index: 0 },
+            StreamEvent::Terminal { finished: true },
+        ])
+        .is_err());
+        // An external call whose client vanished is aborted mid-call.
+        check(&[
+            StreamEvent::ApiStarted { index: 0 },
+            StreamEvent::Terminal { finished: false },
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn engine_events_map_onto_the_machine() {
+        use crate::core::request::HandlingStrategy;
+        let events = [
+            EngineEvent::FirstToken { id: id(), at: Micros(5) },
+            EngineEvent::Tokens { id: id(), chunk: 3 },
+            EngineEvent::ApiStarted {
+                id: id(),
+                index: 0,
+                strategy: HandlingStrategy::Preserve,
+                predicted: Micros(100),
+                external: false,
+            },
+            EngineEvent::ApiCompleted {
+                id: id(),
+                index: 0,
+                actual: Micros(90),
+            },
+            EngineEvent::Finished { id: id(), at: Micros(400) },
+        ];
+        let mut auditor = EngineAuditor::new();
+        for ev in &events {
+            auditor.observe_event(ev).unwrap();
+        }
+        let late = EngineEvent::Dropped {
+            id: id(),
+            reason: "late".to_string(),
+        };
+        let err = auditor.observe_event(&late).unwrap_err();
+        assert_eq!(err.check, "stream");
+    }
+
+    #[test]
+    fn audited_engine_run_stays_green_and_identical() {
+        use crate::config::{AuditMode, CostModel, SystemConfig};
+        use crate::core::request::RequestSpec;
+        use crate::core::types::Tokens;
+        use crate::workload::Trace;
+
+        let spec = |i: u64| RequestSpec {
+            id: RequestId(i),
+            arrival: Micros(i * 1_000),
+            prompt: String::new(),
+            prompt_tokens: Tokens(4),
+            api_calls: vec![],
+            final_decode: Tokens(3),
+        };
+        let trace =
+            Trace::new("t", 1.0, (0..6).map(spec).collect());
+        let run = |mode: AuditMode| {
+            let mut cfg = SystemConfig {
+                memory_budget: Tokens(40),
+                cost: CostModel::unit(),
+                ..SystemConfig::default()
+            };
+            cfg.audit = mode;
+            let mut engine = crate::engine::Engine::simulated(cfg);
+            engine.run_trace(&trace).to_json(false)
+        };
+        assert_eq!(run(AuditMode::On), run(AuditMode::Off),
+                   "the auditor must be observe-only");
+    }
+}

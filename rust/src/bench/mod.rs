@@ -156,6 +156,14 @@ pub fn run_cell_fleet_shared(system: &str, dataset: Dataset,
     cfg.placement = placement;
     cfg.prefix_cache = prefix;
     cfg.shared_prefix = shared_prefix;
+    // Bench-level audit switch (the CI smoke's `LAMPS_AUDIT` axis):
+    // "on"/"off" force the invariant auditor either way; any other
+    // value keeps Auto (debug builds audit, release builds don't).
+    match std::env::var("LAMPS_AUDIT").as_deref() {
+        Ok("on") => cfg.audit = crate::config::AuditMode::On,
+        Ok("off") => cfg.audit = crate::config::AuditMode::Off,
+        _ => {}
+    }
     // ToolBench uses the score-update interval of 10 (§5).
     if dataset == Dataset::ToolBench {
         cfg.score_update_interval = 10;

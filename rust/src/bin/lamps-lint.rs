@@ -1,0 +1,38 @@
+//! `lamps-lint` — the project's static-analysis gate (see
+//! `lamps::lint` for the rules). Scans `rust/src` by default, or the
+//! tree given as the first argument (CI points it at the fixture
+//! corpus to prove the rules still bite).
+//!
+//! Exit status: 0 when clean, 1 when any violation is reported, 2 on
+//! I/O trouble.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use lamps::lint;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src"))
+        });
+    let violations = match lint::scan_tree(&root) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("lamps-lint: cannot scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if violations.is_empty() {
+        println!("lamps-lint: {} clean", root.display());
+        return ExitCode::SUCCESS;
+    }
+    for v in &violations {
+        println!("{v}");
+    }
+    println!("lamps-lint: {} violation(s) in {}", violations.len(),
+             root.display());
+    ExitCode::from(1)
+}

@@ -110,15 +110,18 @@ pub fn pick_replica(replicas: &[Engine], policy: PlacementKind,
             let credits = prefix_credits(replicas, spec, shared);
             let mut best = 0usize;
             let mut best_score = f64::INFINITY;
-            for (i, e) in replicas.iter().enumerate() {
+            for ((i, e), &credit) in
+                replicas.iter().enumerate().zip(&credits)
+            {
                 let score =
-                    e.placement_score_prefixed(spec, Tokens(credits[i]));
+                    e.placement_score_prefixed(spec, Tokens(credit));
                 if score < best_score {
                     best = i;
                     best_score = score;
                 }
             }
-            (best, Tokens(credits[best]))
+            let credit = credits.get(best).copied().unwrap_or(0);
+            (best, Tokens(credit))
         }
     }
 }
@@ -149,13 +152,16 @@ pub fn pick_rescue_sibling(replicas: &[Engine], owner: usize,
                            -> Option<(usize, Tokens)> {
     // Admissibility first: in the saturated case nothing below runs —
     // no prompt hashing, no load sums.
-    let fitting: Vec<usize> = (0..replicas.len())
-        .filter(|&j| {
+    let fitting: Vec<usize> = replicas
+        .iter()
+        .enumerate()
+        .filter(|&(j, e)| {
             j != owner
-                && replicas[j].can_fit_fresh_with(
+                && e.can_fit_fresh_with(
                     spec,
                     Tokens(reserved.get(j).copied().unwrap_or(0)))
         })
+        .map(|(j, _)| j)
         .collect();
     if fitting.is_empty() {
         return None;
@@ -168,11 +174,12 @@ pub fn pick_rescue_sibling(replicas: &[Engine], owner: usize,
     };
     let mut best: Option<(f64, usize)> = None;
     for &j in &fitting {
+        let Some(e) = replicas.get(j) else { continue };
+        let credit = credits.get(j).copied().unwrap_or(0);
         let score = if affinity {
-            replicas[j].placement_score_prefixed(spec,
-                                                 Tokens(credits[j]))
+            e.placement_score_prefixed(spec, Tokens(credit))
         } else {
-            replicas[j].load_memory_over_time()
+            e.load_memory_over_time()
         };
         // Ascending j: strict < keeps the lowest index on ties.
         let better = match best {
@@ -183,7 +190,9 @@ pub fn pick_rescue_sibling(replicas: &[Engine], owner: usize,
             best = Some((score, j));
         }
     }
-    best.map(|(_, j)| (j, Tokens(credits[j])))
+    best.map(|(_, j)| {
+        (j, Tokens(credits.get(j).copied().unwrap_or(0)))
+    })
 }
 
 /// Per-replica cached-token credits of `spec`'s prompt chain against
@@ -194,7 +203,8 @@ fn prefix_credits(replicas: &[Engine], spec: &RequestSpec,
                   shared: Option<&SharedPrefixIndex>) -> Vec<u64> {
     match shared {
         Some(index) if !index.is_empty() => {
-            let block_size = replicas[0].cfg.block_size;
+            let block_size =
+                replicas.first().map_or(1, |e| e.cfg.block_size);
             let chain = prefix::content_chain(spec, block_size,
                                               spec.prompt_tokens);
             index.cached_tokens_per_replica(&chain, block_size,
@@ -217,11 +227,13 @@ pub fn rescue_stranded_on(replicas: &mut [Engine], owner: usize,
                           shared: Option<&SharedPrefixIndex>,
                           requeued: &mut HashSet<RequestId>)
                           -> Vec<(RequestId, usize, Tokens)> {
+    // lamps-lint: allow(panic) owner is a valid replica index by contract
     let stranded = replicas[owner].stranded_waiting();
     if stranded.is_empty() {
         return Vec::new();
     }
-    let block_size = replicas[0].cfg.block_size.max(1);
+    let block_size =
+        replicas.first().map_or(1, |e| e.cfg.block_size).max(1);
     // Tokens promised to each sibling: its own owed-but-unadmitted
     // backlog (covering adoptees of *previous* sweeps, which hold no
     // KV until admitted and are invisible to the block manager) plus
@@ -239,6 +251,7 @@ pub fn rescue_stranded_on(replicas: &mut [Engine], owner: usize,
             continue;
         }
         let target = {
+            // lamps-lint: allow(panic) owner is a valid replica index by contract
             let Some(req) = replicas[owner].request(id) else {
                 continue;
             };
@@ -248,13 +261,16 @@ pub fn rescue_stranded_on(replicas: &mut [Engine], owner: usize,
         let Some((j, credit)) = target else {
             continue; // no sibling can admit it either — leave it
         };
+        // lamps-lint: allow(panic) owner is a valid replica index by contract
         let Some(w) = replicas[owner].withdraw_waiting(id) else {
             continue;
         };
-        promised[j] +=
-            (w.spec.prompt_tokens.0 + 1).div_ceil(block_size)
+        if let Some(p) = promised.get_mut(j) {
+            *p += (w.spec.prompt_tokens.0 + 1).div_ceil(block_size)
                 * block_size;
+        }
         requeued.insert(id);
+        // lamps-lint: allow(panic) pick_rescue_sibling returns an in-range sibling
         replicas[j].adopt(w);
         moves.push((id, j, credit));
     }
@@ -330,6 +346,10 @@ pub struct ReplicaSet {
     /// many tokens), so a later rescue can re-book the stats against
     /// where the request actually ended up.
     steered_log: HashMap<RequestId, (usize, u64)>,
+    /// Fleet-level invariant audit ([`crate::audit::check_fleet`])
+    /// after every step, per `cfg.audit`. Observe-only; the
+    /// per-replica engines additionally run their own auditors.
+    audit: bool,
 }
 
 impl ReplicaSet {
@@ -359,6 +379,7 @@ impl ReplicaSet {
             requeue,
             requeued: HashSet::new(),
             steered_log: HashMap::new(),
+            audit: cfg.audit.enabled(),
         }
     }
 
@@ -371,7 +392,15 @@ impl ReplicaSet {
     }
 
     pub fn replica(&self, i: usize) -> &Engine {
+        // lamps-lint: allow(panic) Vec-style API — out-of-range is the caller's bug
         &self.replicas[i]
+    }
+
+    /// `(arrival, id)` of every spec still in the shared admission
+    /// queue, in queue order (invariant-auditor tap).
+    pub(crate) fn audit_pending(
+        &self) -> impl Iterator<Item = (Micros, RequestId)> + '_ {
+        self.pending.iter().map(|s| (s.arrival, s.id))
     }
 
     /// Every placed request with its owning replica, in dispatch order.
@@ -399,6 +428,7 @@ impl ReplicaSet {
             .iter()
             .map(|e| e.now())
             .min()
+            // lamps-lint: allow(panic) the constructor asserts replicas >= 1
             .expect("non-empty fleet")
     }
 
@@ -429,6 +459,7 @@ impl ReplicaSet {
         let Some(owner) = self.owner_of(id) else {
             anyhow::bail!("unknown request {id}");
         };
+        // lamps-lint: allow(panic) owner_of returns an in-range position
         self.replicas[owner].complete_api_call(id, index,
                                                response_tokens)
     }
@@ -455,13 +486,14 @@ impl ReplicaSet {
             .front()
             .is_some_and(|s| s.arrival <= frontier)
         {
-            let spec = self.pending.pop_front().unwrap();
+            let Some(spec) = self.pending.pop_front() else { break };
             let (r, credit) = pick_replica(&self.replicas, self.policy,
                                            &mut self.rr_next, &spec,
                                            self.shared.as_ref());
             // A spec submit would fail-fast drop (it can never fit an
             // empty replica) must not count as steering — the credit
             // will never be served.
+            // lamps-lint: allow(panic) pick_replica returns an in-range index
             if self.replicas[r].fits_capacity(&spec) {
                 if let Some(stats) = self.shared_stats.as_mut() {
                     stats.note(r, credit.0);
@@ -471,6 +503,7 @@ impl ReplicaSet {
                 }
             }
             self.assignments.push((spec.id, r));
+            // lamps-lint: allow(panic) pick_replica returns an in-range index
             self.replicas[r].enqueue(spec);
         }
     }
@@ -482,6 +515,7 @@ impl ReplicaSet {
         let Some(index) = self.shared.as_mut() else {
             return;
         };
+        // lamps-lint: allow(panic) callers pass the index they just stepped
         for delta in self.replicas[i].drain_prefix_deltas() {
             index.on_delta(i, &delta);
         }
@@ -536,6 +570,17 @@ impl ReplicaSet {
     /// interleaving). Returns false when the whole fleet is idle with
     /// nothing pending.
     pub fn step(&mut self) -> bool {
+        let progressed = self.step_inner();
+        if self.audit {
+            if let Err(e) = crate::audit::check_fleet(self) {
+                // lamps-lint: allow(panic) a tripped audit invariant is a fleet bug — fail loudly
+                panic!("{e}");
+            }
+        }
+        progressed
+    }
+
+    fn step_inner(&mut self) -> bool {
         let next_arrival = self.pending.front().map(|s| s.arrival);
         let busy_min = self
             .replicas
@@ -579,11 +624,14 @@ impl ReplicaSet {
             e.set_external_event(hint);
         }
         let mut order: Vec<usize> = (0..self.replicas.len()).collect();
+        // lamps-lint: allow(panic) order holds indexes of this very Vec
         order.sort_by_key(|&i| (self.replicas[i].now(), i));
         for i in order {
+            // lamps-lint: allow(panic) order holds indexes of this very Vec
             if !self.replicas[i].has_live_work() {
                 continue;
             }
+            // lamps-lint: allow(panic) order holds indexes of this very Vec
             let progressed = self.replicas[i].step();
             // A step mutates only the stepped replica — mirror its
             // prefix-cache resident-set deltas into the shared index
@@ -616,6 +664,7 @@ impl ReplicaSet {
             }
             self.steps += 1;
             if self.steps >= MAX_FLEET_STEPS {
+                // lamps-lint: allow(panic) livelock safety valve — aborting beats spinning forever
                 panic!("fleet exceeded MAX_FLEET_STEPS — scheduling \
                         livelock?");
             }
@@ -653,6 +702,7 @@ impl ReplicaSet {
             .map(|e| e.metrics.report())
             .collect();
         let fleet = if per_replica.len() == 1 {
+            // lamps-lint: allow(panic) guarded by the length check above
             per_replica[0].clone()
         } else {
             let mut latencies: Vec<Micros> = Vec::new();

@@ -221,6 +221,53 @@ impl ApiSourceKind {
     }
 }
 
+/// Runtime invariant auditor (`--audit` / `LAMPS_AUDIT`): the
+/// read-only [`audit`](crate::audit) pass re-checking block
+/// conservation, prefix refcounts, shared-index subset, queue order,
+/// clock monotonicity, and event causality after every engine/fleet
+/// step. Observe-only by construction — the run report is
+/// byte-identical whichever mode is set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AuditMode {
+    /// On in debug builds (so every tier-1 test runs audited), off in
+    /// release builds. The default.
+    #[default]
+    Auto,
+    /// Always on (`--audit`, `LAMPS_AUDIT=on`).
+    On,
+    /// Always off (`LAMPS_AUDIT=off`), even in debug builds.
+    Off,
+}
+
+impl AuditMode {
+    /// Whether the auditor actually runs under this mode in this build.
+    pub fn enabled(&self) -> bool {
+        match self {
+            AuditMode::Auto => cfg!(debug_assertions),
+            AuditMode::On => true,
+            AuditMode::Off => false,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AuditMode::Auto => "auto",
+            AuditMode::On => "on",
+            AuditMode::Off => "off",
+        }
+    }
+
+    /// Parse a CLI/env name (`LAMPS_AUDIT=on|off|auto`).
+    pub fn parse(name: &str) -> Option<AuditMode> {
+        Some(match name {
+            "auto" => AuditMode::Auto,
+            "on" => AuditMode::On,
+            "off" => AuditMode::Off,
+            _ => return None,
+        })
+    }
+}
+
 /// Which predictor feeds the scheduler.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum PredictorKind {
@@ -375,6 +422,10 @@ pub struct SystemConfig {
     /// or externally-resolved tool calls driven by the client over the
     /// session event stream.
     pub api_source: ApiSourceKind,
+    /// Runtime invariant auditing (`--audit`): [`AuditMode::Auto`] by
+    /// default, i.e. every debug-build (tier-1 test) engine/fleet step
+    /// is audit-checked and release runs pay nothing unless opted in.
+    pub audit: AuditMode,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -399,6 +450,7 @@ impl Default for SystemConfig {
             shared_prefix: false,
             admission_requeue: true,
             api_source: ApiSourceKind::default(),
+            audit: AuditMode::default(),
             cost: CostModel::paper_scale(),
             seed: 0,
         }
@@ -543,6 +595,25 @@ mod tests {
             let p = SystemConfig::preset(name).unwrap();
             assert_eq!(p.replicas, 1, "{name}");
             assert!(!p.shared_prefix, "{name}");
+        }
+    }
+
+    #[test]
+    fn audit_defaults_auto_and_parses() {
+        assert_eq!(AuditMode::default(), AuditMode::Auto);
+        assert_eq!(SystemConfig::default().audit, AuditMode::Auto);
+        // Auto tracks the build profile; On/Off override it.
+        assert_eq!(AuditMode::Auto.enabled(), cfg!(debug_assertions));
+        assert!(AuditMode::On.enabled());
+        assert!(!AuditMode::Off.enabled());
+        for mode in [AuditMode::Auto, AuditMode::On, AuditMode::Off] {
+            assert_eq!(AuditMode::parse(mode.label()), Some(mode));
+        }
+        assert_eq!(AuditMode::parse("nope"), None);
+        // Presets must not silently force auditing on or off.
+        for name in ["vllm", "infercept", "lamps"] {
+            assert_eq!(SystemConfig::preset(name).unwrap().audit,
+                       AuditMode::Auto, "{name}");
         }
     }
 

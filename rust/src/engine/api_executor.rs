@@ -71,11 +71,12 @@ impl ApiExecutor {
     /// Pop every simulated call that has returned by `now`.
     pub fn drain_returned(&mut self, now: Micros,
                           mut on_return: impl FnMut(RequestId)) {
-        while let Some(Reverse((t, _))) = self.heap.peek() {
-            if *t > now {
-                break;
-            }
-            let Reverse((_, id)) = self.heap.pop().unwrap();
+        while self
+            .heap
+            .peek()
+            .is_some_and(|Reverse((t, _))| *t <= now)
+        {
+            let Some(Reverse((_, id))) = self.heap.pop() else { break };
             on_return(id);
         }
     }

@@ -171,6 +171,11 @@ pub struct Engine {
     /// when a driver armed it via [`Engine::enable_events`].
     events: Vec<EngineEvent>,
     events_on: bool,
+    /// Runtime invariant auditor ([`crate::audit`]), armed per
+    /// `cfg.audit`. Observe-only: an audited engine schedules
+    /// byte-identically to an unaudited one, and a tripped invariant
+    /// is fatal (it means a scheduler/KV bug, not a bad request).
+    auditor: Option<Box<crate::audit::EngineAuditor>>,
 }
 
 impl Engine {
@@ -219,6 +224,10 @@ impl Engine {
             external_event: None,
             events: Vec::new(),
             events_on: false,
+            auditor: cfg
+                .audit
+                .enabled()
+                .then(|| Box::new(crate::audit::EngineAuditor::new())),
             cfg,
         }
     }
@@ -233,6 +242,7 @@ impl Engine {
                 Box::new(NoisyOraclePredictor::new(error_pct, cfg.seed))
             }
             PredictorKind::Pjrt => {
+                // lamps-lint: allow(panic) config error at construction — no result channel exists
                 panic!("PJRT predictor requires Engine::new with a \
                         PjrtPredictor (see runtime::)")
             }
@@ -304,6 +314,44 @@ impl Engine {
     }
 
     // ------------------------------------------------------------------
+    // Invariant-auditor taps (crate::audit) — read-only state views
+    // ------------------------------------------------------------------
+
+    pub(crate) fn audit_kv(&self) -> &BlockManager {
+        &self.kv
+    }
+
+    pub(crate) fn audit_swap(&self) -> &SwapSpace {
+        &self.swap
+    }
+
+    /// `(arrival, id)` of every not-yet-submitted pending spec, in
+    /// queue order.
+    pub(crate) fn audit_pending(
+        &self) -> impl Iterator<Item = (Micros, RequestId)> + '_ {
+        self.pending.iter().map(|s| (s.arrival, s.id))
+    }
+
+    pub(crate) fn audit_waiting(&self) -> &[RequestId] {
+        &self.waiting
+    }
+
+    pub(crate) fn audit_running(&self) -> &[RequestId] {
+        &self.running
+    }
+
+    pub(crate) fn audit_live(&self) -> &BTreeSet<RequestId> {
+        &self.live
+    }
+
+    /// Every id in the request table (finished entries included — the
+    /// engine keeps them for result queries).
+    pub(crate) fn audit_request_ids(
+        &self) -> impl Iterator<Item = RequestId> + '_ {
+        self.requests.keys().copied()
+    }
+
+    // ------------------------------------------------------------------
     // Placement load signals (cluster placement policies)
     // ------------------------------------------------------------------
 
@@ -343,6 +391,7 @@ impl Engine {
         let mut total: f64 = self
             .live
             .iter()
+            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             .map(|id| memory_over_time(&self.requests[id], &cost,
                                        inputs))
             .sum();
@@ -422,6 +471,15 @@ impl Engine {
     }
 
     fn push_event(&mut self, ev: EngineEvent) {
+        // The auditor sees every event *before* the journal's arming
+        // gate, so lifecycle causality is checked even in plain
+        // simulation runs that never drain events.
+        if let Some(auditor) = self.auditor.as_mut() {
+            if let Err(e) = auditor.observe_event(&ev) {
+                // lamps-lint: allow(panic) a tripped audit invariant is a scheduler bug — fail loudly
+                panic!("{e}");
+            }
+        }
         if !self.events_on {
             return;
         }
@@ -475,6 +533,7 @@ impl Engine {
         if !self.api.resolve_external(id) {
             anyhow::bail!("{id} has no pending external call");
         }
+        // lamps-lint: allow(panic) segment index is bounded by the spec's call list
         req.spec.api_calls[index].response_tokens = response_tokens;
         self.route_api_return(id, now);
         Ok(())
@@ -514,6 +573,7 @@ impl Engine {
         self.free_terminal(id);
         self.swap.discard(id);
         self.backend.release(id);
+        // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
         let req = self.requests.get_mut(&id).expect("checked above");
         req.phase = Phase::Finished;
         req.api_started_at = None;
@@ -640,6 +700,7 @@ impl Engine {
             .waiting
             .iter()
             .filter(|id| !self.kv.contains(**id))
+            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             .map(|id| round(self.requests[id].admission_memory().0))
             .sum();
         let pending: u64 = self
@@ -664,6 +725,7 @@ impl Engine {
         self.waiting.remove(pos);
         self.live.remove(&id);
         self.pred_return.remove(&id);
+        // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
         let req = self.requests.remove(&id).expect("checked above");
         self.metrics.forget(id);
         Some(WithdrawnRequest {
@@ -719,6 +781,7 @@ impl Engine {
     /// parked tokens whose blocks are attached to the allocation and
     /// therefore need no PCIe transfer.
     fn take_restore_resident(&mut self, id: RequestId) -> Tokens {
+        // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
         let req = self.requests.get_mut(&id).expect("restoring request");
         std::mem::replace(&mut req.restore_resident, Tokens::ZERO)
     }
@@ -758,6 +821,7 @@ impl Engine {
                 let mut ctx = spec.prompt_tokens.0 as f64;
                 let mut out = Vec::with_capacity(spec.api_calls.len());
                 for (i, _call) in spec.api_calls.iter().enumerate() {
+                    // lamps-lint: allow(panic) segment index is bounded by the spec's call list
                     let pred = &predictions[i];
                     ctx += pred.decode_tokens.0 as f64;
                     let inp = WasteInputs {
@@ -808,6 +872,7 @@ impl Engine {
                 }
             }
             if self.iteration >= MAX_ITERATIONS {
+                // lamps-lint: allow(panic) livelock safety valve — aborting beats spinning forever
                 panic!("engine exceeded MAX_ITERATIONS — scheduling \
                         livelock?");
             }
@@ -827,6 +892,26 @@ impl Engine {
     /// One scheduling round. Returns false when fully idle with no
     /// pending work.
     pub fn step(&mut self) -> bool {
+        let progressed = self.step_inner();
+        self.audit_after_step();
+        progressed
+    }
+
+    /// Post-step invariant audit ([`crate::audit`]); no-op unless the
+    /// auditor is armed. Take/put-back so the auditor can borrow the
+    /// whole engine read-only while updating its own state.
+    fn audit_after_step(&mut self) {
+        let Some(mut auditor) = self.auditor.take() else {
+            return;
+        };
+        if let Err(e) = auditor.check_engine(self) {
+            // lamps-lint: allow(panic) a tripped audit invariant is a scheduler bug — fail loudly
+            panic!("{e}");
+        }
+        self.auditor = Some(auditor);
+    }
+
+    fn step_inner(&mut self) -> bool {
         let now = self.now();
         self.drain_arrivals(now);
         self.complete_transfers(now);
@@ -835,6 +920,7 @@ impl Engine {
         // sorted queue every iteration. Deselected requests keep their KV
         // (pause, not preemption).
         for id in self.running.drain(..) {
+            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             let req = self.requests.get_mut(&id).unwrap();
             req.phase = Phase::Waiting;
             self.waiting.push(id);
@@ -924,11 +1010,12 @@ impl Engine {
     }
 
     fn drain_arrivals(&mut self, now: Micros) {
-        while let Some(front) = self.pending.front() {
-            if front.arrival > now {
-                break;
-            }
-            let spec = self.pending.pop_front().unwrap();
+        while self
+            .pending
+            .front()
+            .is_some_and(|front| front.arrival <= now)
+        {
+            let Some(spec) = self.pending.pop_front() else { break };
             self.submit(spec);
         }
     }
@@ -945,13 +1032,16 @@ impl Engine {
     /// core of the simulated drain (deadline heap) and the external
     /// resolution path ([`Engine::complete_api_call`]).
     fn route_api_return(&mut self, id: RequestId, now: Micros) {
+        // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
         let req = self.requests.get_mut(&id).expect("api return");
         let Phase::ApiWait { strategy, return_at } = req.phase else {
+            // lamps-lint: allow(panic) executor-heap ids are parked in ApiWait by construction
             panic!("{id} returned but not in ApiWait");
         };
         self.api.note_returned(strategy);
         self.pred_return.remove(&id);
         let seg = req.segment;
+        // lamps-lint: allow(panic) segment index is bounded by the spec's call list
         let call = &req.spec.api_calls[seg];
         let response = call.response_tokens;
         // Actual duration: the sampled truth for simulated calls, the
@@ -962,6 +1052,7 @@ impl Engine {
         } else {
             call.duration
         };
+        // lamps-lint: allow(panic) segment index is bounded by the spec's call list
         let predicted = req.predictions[seg]
             .api_duration
             .unwrap_or(call.duration);
@@ -1039,6 +1130,7 @@ impl Engine {
         let ctx = self.schedule_context();
         let interval = self.cfg.score_update_interval.max(1);
         for id in &self.waiting {
+            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             let req = self.requests.get_mut(id).expect("waiting req");
             let stale = req.score_iteration == u64::MAX
                 || (self.scheduler.is_dynamic()
@@ -1051,7 +1143,9 @@ impl Engine {
         }
         let requests = &self.requests;
         self.waiting.sort_by(|a, b| {
+            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             let ra = &requests[a];
+            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             let rb = &requests[b];
             rb.starving
                 .cmp(&ra.starving)
@@ -1087,11 +1181,13 @@ impl Engine {
             // A context that outgrew the whole budget can never run again:
             // drop it rather than livelock (real deployments would error
             // the request back to the client).
+            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             if self.requests[&id].admission_memory() > self.kv.capacity() {
                 self.transfers.cancel(id);
                 self.free_terminal(id);
                 self.swap.discard(id);
                 self.backend.release(id);
+                // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                 self.requests.get_mut(&id).unwrap().phase =
                     Phase::Finished;
                 self.live.remove(&id);
@@ -1127,6 +1223,7 @@ impl Engine {
                         .copied();
                     let Some(v) = victim else { break };
                     if self.cfg.scheduler == SchedulerKind::Lamps
+                        // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                         && !self.requests[&id].starving
                     {
                         // Starving candidates (§4.4 promotion) always get
@@ -1135,12 +1232,14 @@ impl Engine {
                         // candidate's score plus the recompute waste the
                         // eviction causes — which is why R2 *waits* for
                         // preserved R1 in Fig 3d instead of evicting.
+                        // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                         let vr = &self.requests[&v];
                         let ctx = vr.logical_context;
                         let evict_cost = self.cfg.cost.prefill_time(ctx).0
                             as f64
                             * ctx.0 as f64;
                         let candidate_score =
+                            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                             self.requests[&id].cached_score.primary;
                         if vr.cached_score.primary
                             <= candidate_score + evict_cost
@@ -1167,6 +1266,7 @@ impl Engine {
                 // iteration will append). All allocation happens here;
                 // decode itself never allocates.
                 let existing = self.kv.tokens_of(id);
+                // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                 let logical = self.requests[&id].logical_context;
                 let delta =
                     (logical + Tokens(1)).saturating_sub(existing);
@@ -1177,6 +1277,7 @@ impl Engine {
                     // at the first uncached token.
                     let cached = self.allocate_admitted(id, delta);
                     if cached > Tokens::ZERO {
+                        // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                         let req = self.requests.get_mut(&id).unwrap();
                         req.pending_materialize = req
                             .pending_materialize
@@ -1192,6 +1293,7 @@ impl Engine {
                         }
                     }
                 }
+                // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                 let req = self.requests.get_mut(&id).unwrap();
                 req.was_scheduled = true;
                 req.starvation_cnt = 0;
@@ -1206,12 +1308,14 @@ impl Engine {
                     // above re-attached skips the transfer outright.
                     let (tokens, stall) = self
                         .book_swap_in(id)
+                        // lamps-lint: allow(panic) swap-out recorded the parked context for this id
                         .expect("parked context");
                     self.metrics.swap_overlap_us += stall.0;
                     self.transfers.begin(id, TransferDir::SwapIn, tokens,
                                          now + stall);
                     still_waiting.push(id);
                 } else {
+                    // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                     let req = self.requests.get_mut(&id).unwrap();
                     req.phase = Phase::Running;
                     admitted.push(id);
@@ -1229,6 +1333,7 @@ impl Engine {
                 if self.transfers.contains(*id) {
                     continue;
                 }
+                // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                 let req = self.requests.get_mut(id).unwrap();
                 if !req.starving {
                     req.starvation_cnt += 1;
@@ -1249,6 +1354,7 @@ impl Engine {
     /// request whose async swap-in already reserved `logical + 1` tokens
     /// needs nothing more.
     fn fits_memory(&self, id: RequestId) -> bool {
+        // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
         let req = &self.requests[&id];
         let existing = self.kv.tokens_of(id);
         let needed = (req.logical_context + Tokens(1))
@@ -1271,6 +1377,7 @@ impl Engine {
     /// are zero there.
     fn allocate_admitted(&mut self, id: RequestId, delta: Tokens)
                          -> Tokens {
+        // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
         let req = &self.requests[&id];
         if self.prefix_cache_active()
             && self.swap.contains(id)
@@ -1279,6 +1386,7 @@ impl Engine {
             let parked = self
                 .swap
                 .parked_tokens(id)
+                // lamps-lint: allow(panic) fits_memory/contains checked in this scope
                 .expect("checked contains");
             let chain = prefix::content_chain(&req.spec,
                                               self.kv.block_size(),
@@ -1286,7 +1394,9 @@ impl Engine {
             let cached = self
                 .kv
                 .allocate_prefixed(id, delta, &chain)
+                // lamps-lint: allow(panic) fits_memory/contains checked in this scope
                 .expect("fits_memory held");
+            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             let req = self.requests.get_mut(&id).expect("checked above");
             req.restore_resident = cached.min(parked);
             return Tokens::ZERO;
@@ -1297,6 +1407,7 @@ impl Engine {
             && req.logical_context.0 >= self.kv.block_size()
             && !self.swap.contains(id);
         if !fresh_full {
+            // lamps-lint: allow(panic) fits_memory/contains checked in this scope
             self.kv.allocate(id, delta).expect("fits_memory held");
             return Tokens::ZERO;
         }
@@ -1305,6 +1416,7 @@ impl Engine {
                                           req.logical_context);
         self.kv
             .allocate_prefixed(id, delta, &chain)
+            // lamps-lint: allow(panic) fits_memory/contains checked in this scope
             .expect("fits_memory held")
     }
 
@@ -1319,6 +1431,7 @@ impl Engine {
     /// is keyed per-request and dies with the request, so terminal
     /// frees purge it from the cache instead of retaining garbage.
     fn shareable_prompt_blocks(&self, id: RequestId) -> u64 {
+        // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
         let req = &self.requests[&id];
         if req.spec.prompt.is_empty() {
             return 0;
@@ -1339,9 +1452,11 @@ impl Engine {
         if self.kv.contains(id) {
             self.kv
                 .free_discarding_private(id, retain)
+                // lamps-lint: allow(panic) fits_memory/contains checked in this scope
                 .expect("terminal free");
         }
         if self.prefix_cache_active() {
+            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             let req = &self.requests[&id];
             let chain = prefix::content_chain(&req.spec,
                                               self.kv.block_size(),
@@ -1354,6 +1469,7 @@ impl Engine {
         if !self.prefix_cache_active() {
             return;
         }
+        // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
         let req = &self.requests[&id];
         let ctx = req.context;
         if ctx.0 < self.kv.block_size() {
@@ -1373,6 +1489,7 @@ impl Engine {
         }
         let budget = self.kv.capacity().0;
         for (&p_id, &t_ret) in &self.pred_return {
+            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             let p = &self.requests[&p_id];
             let Phase::ApiWait { strategy, .. } = p.phase else {
                 continue;
@@ -1382,11 +1499,13 @@ impl Engine {
                     // Held context stays allocated; needs the response +
                     // one-token headroom on top.
                     p.context.0
+                        // lamps-lint: allow(panic) segment index is bounded by the spec's call list
                         + p.predictions[p.segment].response_tokens.0
                         + 1
                 }
                 HandlingStrategy::Swap => {
                     p.logical_context.0
+                        // lamps-lint: allow(panic) segment index is bounded by the spec's call list
                         + p.predictions[p.segment].response_tokens.0
                         + 1
                 }
@@ -1398,6 +1517,7 @@ impl Engine {
                 if o_id == p_id {
                     continue;
                 }
+                // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                 let o = &self.requests[&o_id];
                 if let Phase::ApiWait {
                     strategy: HandlingStrategy::Preserve, ..
@@ -1407,10 +1527,12 @@ impl Engine {
                 }
             }
             for &q_id in self.running.iter().chain(admitted) {
+                // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                 projected += self.projected_mem(&self.requests[&q_id],
                                                 now, t_ret);
             }
             projected +=
+                // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                 self.projected_mem(&self.requests[&candidate], now, t_ret);
             if projected > budget {
                 return false;
@@ -1433,6 +1555,7 @@ impl Engine {
             .0 as f64;
         let avail_us = (t - now).0 as f64 - mat_us;
         let decoded = (avail_us / t_iter).floor().max(0.0) as u64;
+        // lamps-lint: allow(panic) index clamped to the predictions length just above
         let pred = &q.predictions[q.segment.min(q.predictions.len() - 1)];
         let seg_remaining = pred
             .decode_tokens
@@ -1467,6 +1590,7 @@ impl Engine {
                 }
                 TransferDir::SwapOut => {
                     if self.kv.contains(t.id) {
+                        // lamps-lint: allow(panic) fits_memory/contains checked in this scope
                         self.kv.free(t.id).expect("swap-out drain free");
                     }
                 }
@@ -1482,6 +1606,7 @@ impl Engine {
             .running
             .iter()
             .map(|id| {
+                // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                 let req = &self.requests[id];
                 ComposeItem {
                     id: *id,
@@ -1541,11 +1666,13 @@ impl Engine {
                 if let Some((tokens, stall)) = self.book_swap_in(id) {
                     self.metrics.swap_stall_us += stall.0;
                     elapsed += stall;
+                    // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                     self.requests.get_mut(&id).unwrap().context = tokens;
                 }
             }
             if chunk.tokens > Tokens::ZERO {
                 let (prompt, total_after) = {
+                    // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                     let req = self.requests.get_mut(&id).unwrap();
                     if req.segment > 0
                         && req.pending_materialize == req.logical_context
@@ -1565,6 +1692,7 @@ impl Engine {
                     .materialize(id, &prompt, total_after, chunk.tokens);
                 elapsed += t;
                 self.metrics.tokens_prefilled += chunk.tokens.0;
+                // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                 if self.requests[&id].recomputing {
                     self.metrics.tokens_recomputed += chunk.tokens.0;
                 }
@@ -1575,6 +1703,7 @@ impl Engine {
             }
             // Commit the chunk: advance the materialization cursor,
             // keeping `context = logical_context - pending_materialize`.
+            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             let req = self.requests.get_mut(&id).unwrap();
             req.pending_materialize =
                 req.pending_materialize.saturating_sub(chunk.tokens);
@@ -1622,6 +1751,7 @@ impl Engine {
             plan.decode.iter().map(|s| s.id).collect();
         for id in &decode_ids {
             let first = {
+                // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                 let req = self.requests.get_mut(id).unwrap();
                 debug_assert!(self.kv.tokens_of(*id)
                                   >= req.context + Tokens(1),
@@ -1651,6 +1781,7 @@ impl Engine {
         // Route segment boundaries: API encounters and completions.
         let mut leaving: Vec<RequestId> = Vec::new();
         for id in decode_ids {
+            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             let req = &self.requests[&id];
             if req.segment_remaining() > Tokens::ZERO {
                 continue;
@@ -1668,6 +1799,7 @@ impl Engine {
         if let Some(cap) = self.backend.max_context() {
             let ids: Vec<RequestId> = self.running.clone();
             for id in ids {
+                // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                 if self.requests[&id].logical_context.0 >= cap {
                     self.finish(id, now);
                     self.running.retain(|r| *r != id);
@@ -1688,7 +1820,9 @@ impl Engine {
                     && !self.transfers.contains(**id)
             })
             .max_by(|a, b| {
+                // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                 let ra = &self.requests[*a];
+                // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                 let rb = &self.requests[*b];
                 ra.cached_score
                     .cmp(&rb.cached_score)
@@ -1705,6 +1839,7 @@ impl Engine {
         // Keep the victim's full blocks hittable: its recompute on
         // re-admission then skips the cached prefix.
         self.register_prefix_of(id);
+        // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
         let req = self.requests.get_mut(&id).unwrap();
         req.phase = Phase::Waiting;
         req.pending_materialize = req.logical_context;
@@ -1718,6 +1853,7 @@ impl Engine {
         }
         req.score_iteration = u64::MAX;
         if self.kv.contains(id) {
+            // lamps-lint: allow(panic) fits_memory/contains checked in this scope
             self.kv.free(id).expect("preempt free");
         }
         self.backend.release(id);
@@ -1737,11 +1873,14 @@ impl Engine {
     /// 34-44).
     fn encounter_api(&mut self, id: RequestId, now: Micros) {
         let (seg, duration, pred_duration, own_ctx) = {
+            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             let req = &self.requests[&id];
             let seg = req.segment;
+            // lamps-lint: allow(panic) segment index is bounded by the spec's call list
             let call = &req.spec.api_calls[seg];
             (seg,
              call.duration,
+             // lamps-lint: allow(panic) segment index is bounded by the spec's call list
              req.predictions[seg].api_duration.unwrap_or(call.duration),
              req.context)
         };
@@ -1752,6 +1891,7 @@ impl Engine {
                     .running
                     .iter()
                     .filter(|r| **r != id)
+                    // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                     .map(|r| self.requests[r].context.0)
                     .sum();
                 let inp = WasteInputs {
@@ -1762,19 +1902,24 @@ impl Engine {
                 };
                 select_strategy(&inp, &self.cfg.cost)
             }
+            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             _ => self.requests[&id].handling[seg],
         };
         {
+            // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             let req = self.requests.get_mut(&id).unwrap();
+            // lamps-lint: allow(panic) segment index is bounded by the spec's call list
             req.handling[seg] = strategy;
             req.starvation_cnt = 0; // §4.4 reset on API encounter
         }
 
         match strategy {
             HandlingStrategy::Preserve => {
+                // lamps-lint: allow(panic) fixed-size strategy_counts array indexed by constant
                 self.metrics.strategy_counts[0] += 1;
             }
             HandlingStrategy::Discard => {
+                // lamps-lint: allow(panic) fixed-size strategy_counts array indexed by constant
                 self.metrics.strategy_counts[1] += 1;
                 // Publish the full blocks before dropping them: the
                 // freed shared blocks stay reclaimable-cached, so the
@@ -1782,17 +1927,20 @@ impl Engine {
                 // recomputing (the cache's headline saving).
                 self.register_prefix_of(id);
                 if self.kv.contains(id) {
+                    // lamps-lint: allow(panic) fits_memory/contains checked in this scope
                     self.kv.free(id).expect("discard free");
                 }
                 self.backend.release(id);
             }
             HandlingStrategy::Swap => {
+                // lamps-lint: allow(panic) fixed-size strategy_counts array indexed by constant
                 self.metrics.strategy_counts[2] += 1;
                 // Publish the full blocks before parking: the freed
                 // device blocks stay reclaimable-cached, so the swap-in
                 // restore can skip the PCIe transfer for whatever is
                 // still resident when the call returns.
                 self.register_prefix_of(id);
+                // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
                 let ctx = self.requests[&id].context;
                 if self.cfg.compose.async_swap {
                     // Background transfer: the batch keeps decoding;
@@ -1826,6 +1974,7 @@ impl Engine {
                         self.clock.advance(stall);
                     }
                     if self.kv.contains(id) {
+                        // lamps-lint: allow(panic) fits_memory/contains checked in this scope
                         self.kv.free(id).expect("swap free");
                     }
                 }
@@ -1841,6 +1990,7 @@ impl Engine {
         let external = self.cfg.api_source == ApiSourceKind::External;
         let started = self.clock.now();
         let return_at = (!external).then(|| started + duration);
+        // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
         let req = self.requests.get_mut(&id).unwrap();
         req.phase = Phase::ApiWait {
             strategy,
@@ -1859,6 +2009,7 @@ impl Engine {
     }
 
     fn finish(&mut self, id: RequestId, now: Micros) {
+        // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
         let req = self.requests.get_mut(&id).unwrap();
         req.phase = Phase::Finished;
         req.finished_at = Some(now);

@@ -107,6 +107,7 @@ impl Backend for PjrtBackend {
     fn materialize(&mut self, id: RequestId, prompt: &str,
                    total_ctx: Tokens, _increment: Tokens) -> Micros {
         let ctx = total_ctx;
+        // lamps-lint: allow(wall-clock) real PJRT step timing is the measurement, not the clock
         let start = Instant::now();
         let max_seq = self.model.meta.max_seq;
         {
@@ -117,6 +118,7 @@ impl Backend for PjrtBackend {
             let mut history: Vec<i32> = Vec::new();
             if !prompt.is_empty() {
                 let n = tokenizer::valid_len(prompt, max_seq);
+                // lamps-lint: allow(panic) valid_len bounds n to the encoded length
                 history.extend(&tokenizer::encode(prompt, max_seq)[..n]);
             }
             let mut gen_iter = state.generated.iter().copied();
@@ -131,22 +133,28 @@ impl Backend for PjrtBackend {
         let b = self.model.meta.batch;
         let mut tokens = vec![tokenizer::PAD_ID; b * max_seq];
         let mut lengths = vec![0i32; b];
+        // lamps-lint: allow(panic) materialize creates the state entry for every live id
         let state = &self.states[&id];
         let n = state.history.len().max(1);
         let mut history = state.history.clone();
         if history.is_empty() {
             history.push(tokenizer::BOS_ID);
         }
+        // lamps-lint: allow(panic) n <= history.len() and tokens spans batch * max_seq
         tokens[..n].copy_from_slice(&history[..n]);
+        // lamps-lint: allow(panic) batch size is at least one slot
         lengths[0] = n as i32;
         let result = self
             .model
             .run_prefill(&tokens, &lengths)
+            // lamps-lint: allow(panic) a failed PJRT execution is unrecoverable on this backend
             .expect("prefill execution");
+        // lamps-lint: allow(panic) materialize creates the state entry for every live id
         let state = self.states.get_mut(&id).unwrap();
         state.k = self.model.extract_slot(&result.k, 0);
         state.v = self.model.extract_slot(&result.v, 0);
         state.kv_len = n;
+        // lamps-lint: allow(panic) run_prefill returns one next-token per slot
         state.last_token = result.next_tokens[0];
         Micros(start.elapsed().as_micros() as u64)
     }
@@ -155,6 +163,7 @@ impl Backend for PjrtBackend {
         if batch.is_empty() {
             return Micros::ZERO;
         }
+        // lamps-lint: allow(wall-clock) real PJRT step timing is the measurement, not the clock
         let start = Instant::now();
         let b = self.model.meta.batch;
         assert!(batch.len() <= b, "engine must respect slot_capacity");
@@ -164,8 +173,11 @@ impl Backend for PjrtBackend {
         let mut k = self.model.zero_kv();
         let mut v = self.model.zero_kv();
         for (slot, ds) in batch.iter().enumerate() {
+            // lamps-lint: allow(panic) materialize creates the state entry for every live id
             let state = &self.states[&ds.id];
+            // lamps-lint: allow(panic) slot < batch.len() <= b by the assert above
             token[slot] = state.last_token;
+            // lamps-lint: allow(panic) slot < batch.len() <= b by the assert above
             pos[slot] =
                 (state.kv_len as i32).min(self.model.meta.max_seq as i32 - 1);
             self.model.insert_slot(&mut k, slot, &state.k);
@@ -174,13 +186,16 @@ impl Backend for PjrtBackend {
         let result = self
             .model
             .run_decode(&token, &pos, &k, &v)
+            // lamps-lint: allow(panic) a failed PJRT execution is unrecoverable on this backend
             .expect("decode execution");
         for (slot, ds) in batch.iter().enumerate() {
             let new_k = self.model.extract_slot(&result.k, slot);
             let new_v = self.model.extract_slot(&result.v, slot);
+            // lamps-lint: allow(panic) materialize creates the state entry for every live id
             let state = self.states.get_mut(&ds.id).unwrap();
             state.k = new_k;
             state.v = new_v;
+            // lamps-lint: allow(panic) run_decode returns one next-token per slot
             let tok = result.next_tokens[slot];
             state.history.push(state.last_token);
             state.kv_len = (state.kv_len + 1).min(self.model.meta.max_seq);

@@ -291,10 +291,12 @@ impl BlockManager {
                 .prefix
                 .as_mut()
                 .and_then(|p| p.reclaim_one())
+                // lamps-lint: allow(panic) can_fit verified a reclaimable zero-ref block exists
                 .expect("fit check guaranteed a reclaimable block");
             self.free_blocks.push(reclaimed);
         }
         self.blocks_allocated += 1;
+        // lamps-lint: allow(panic) pop_free_block refills the free list just above
         self.free_blocks.pop().expect("free list non-empty")
     }
 
@@ -322,12 +324,15 @@ impl BlockManager {
                 Allocation::empty);
             (alloc.tokens + tokens.0).div_ceil(self.block_size)
         };
+        // lamps-lint: allow(panic) the entry was created by the or_insert_with above
         while (self.allocs[&req].blocks.len() as u64) < needed_blocks {
             let block = self.pop_free_block();
+            // lamps-lint: allow(panic) the entry was created by the or_insert_with above
             let alloc = self.allocs.get_mut(&req).expect("entry above");
             alloc.blocks.push(block);
             alloc.hashes.push(None);
         }
+        // lamps-lint: allow(panic) the entry was created by the or_insert_with above
         let alloc = self.allocs.get_mut(&req).expect("entry above");
         alloc.tokens += tokens.0;
         self.used_tokens += tokens.0;
@@ -362,15 +367,18 @@ impl BlockManager {
         // Phase 1 (read-only): walk the chain for consecutive leading
         // hits, then check the remainder fits without touching state —
         // a failed allocation must leave everything unchanged.
+        // lamps-lint: allow(panic) the prefix-cache presence was checked by the caller
         let cache = self.prefix.as_ref().expect("checked above");
         let full_blocks =
             (tokens.0 / self.block_size).min(chain.len() as u64) as usize;
         let mut hits = 0usize;
+        // lamps-lint: allow(panic) hits < full_blocks <= chain.len()
         while hits < full_blocks && cache.contains(chain[hits]) {
             hits += 1;
         }
         // Zero-ref blocks we are about to pin cannot also be reclaimed
         // to satisfy the fresh remainder.
+        // lamps-lint: allow(panic) hits is bounded by chain.len()
         let zero_ref_hits = chain[..hits]
             .iter()
             .filter(|h| !cache.is_pinned(**h))
@@ -393,8 +401,11 @@ impl BlockManager {
         let mut blocks = Vec::with_capacity(needed_blocks as usize);
         let mut hashes = Vec::with_capacity(needed_blocks as usize);
         {
+            // lamps-lint: allow(panic) the prefix-cache presence was checked by the caller
             let cache = self.prefix.as_mut().expect("checked above");
+            // lamps-lint: allow(panic) hits is bounded by chain.len()
             for &hash in &chain[..hits] {
+                // lamps-lint: allow(panic) the read-only hit walk saw this hash in the cache
                 blocks.push(cache.pin(hash).expect("hit walk saw it"));
                 hashes.push(Some(hash));
             }
@@ -452,11 +463,15 @@ impl BlockManager {
         let full = (materialized.0 / self.block_size)
             .min(chain.len() as u64)
             .min(alloc.blocks.len() as u64) as usize;
+        // lamps-lint: allow(panic) register_prefix is only called with a prefix cache configured
         let cache = self.prefix.as_mut().expect("checked above");
         for i in 0..full {
+            // lamps-lint: allow(panic) full is min-clamped to both hashes and chain lengths
             if alloc.hashes[i].is_none()
+                // lamps-lint: allow(panic) full is min-clamped to both hashes and chain lengths
                 && cache.register(chain[i], alloc.blocks[i])
             {
+                // lamps-lint: allow(panic) full is min-clamped to both hashes and chain lengths
                 alloc.hashes[i] = Some(chain[i]);
             }
         }
@@ -497,11 +512,13 @@ impl BlockManager {
             .remove(&req)
             .ok_or(KvError::UnknownRequest(req))?;
         for i in (0..alloc.blocks.len()).rev() {
+            // lamps-lint: allow(panic) blocks and hashes are pushed in lock-step
             match alloc.hashes[i] {
                 Some(h) => {
                     let cache = self
                         .prefix
                         .as_mut()
+                        // lamps-lint: allow(panic) a hashed block can only exist with a prefix cache
                         .expect("hashed block implies cache");
                     cache.release(h);
                     if i as u64 >= retain_blocks {
@@ -510,6 +527,7 @@ impl BlockManager {
                         }
                     }
                 }
+                // lamps-lint: allow(panic) i < alloc.blocks.len() by the loop bound
                 None => self.free_blocks.push(alloc.blocks[i]),
             }
         }
@@ -519,6 +537,142 @@ impl BlockManager {
         }
         self.used_tokens -= alloc.tokens;
         Ok(Tokens(alloc.tokens))
+    }
+
+    /// Audit self-check ([`crate::audit`]), promoting the shadow-model
+    /// invariants of `tests/kv_properties.rs` into the manager itself:
+    /// free-list integrity, logical token accounting, per-hash
+    /// refcounts equal to the number of allocation holders (all on the
+    /// canonical physical block), and block conservation — free,
+    /// pinned, and cached blocks exactly partition the capacity.
+    /// Read-only.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        // Free-list integrity: in range, no duplicates.
+        let mut free = self.free_blocks.clone();
+        free.sort_unstable();
+        free.dedup();
+        if free.len() != self.free_blocks.len() {
+            return Err("duplicate block on the free list".to_string());
+        }
+        if free.iter().any(|&b| u64::from(b) >= self.total_blocks) {
+            return Err("free list holds an out-of-range block"
+                .to_string());
+        }
+        // Logical token accounting.
+        let alloc_tokens: u64 =
+            self.allocs.values().map(|a| a.tokens).sum();
+        if alloc_tokens != self.used_tokens {
+            return Err(format!(
+                "used_tokens {} != sum of allocations {alloc_tokens}",
+                self.used_tokens));
+        }
+        // Per-allocation shape, hash holders, and the private set.
+        let mut holders: HashMap<BlockHash, u32> = HashMap::new();
+        let mut held: Vec<BlockId> = Vec::new();
+        for (id, alloc) in &self.allocs {
+            if alloc.blocks.len() != alloc.hashes.len() {
+                return Err(format!(
+                    "{id}: blocks/hashes length mismatch"));
+            }
+            if alloc.tokens
+                > alloc.blocks.len() as u64 * self.block_size
+            {
+                return Err(format!(
+                    "{id}: {} tokens exceed its {} blocks",
+                    alloc.tokens,
+                    alloc.blocks.len()));
+            }
+            for (block, hash) in alloc.blocks.iter().zip(&alloc.hashes)
+            {
+                match hash {
+                    Some(h) => {
+                        let canonical = self
+                            .prefix
+                            .as_ref()
+                            .and_then(|p| p.block_of(*h));
+                        if canonical != Some(*block) {
+                            return Err(format!(
+                                "{id}: holds hashed block {block} but \
+                                 the canonical cached block is \
+                                 {canonical:?}"));
+                        }
+                        *holders.entry(*h).or_insert(0) += 1;
+                    }
+                    None => held.push(*block),
+                }
+            }
+        }
+        // Private blocks are uniquely owned.
+        let private_count = held.len();
+        held.sort_unstable();
+        held.dedup();
+        if held.len() != private_count {
+            return Err("a private block has two holders".to_string());
+        }
+        // Cache cross-check: every refcount equals its holder count,
+        // and cache-owned blocks join the held set exactly once each.
+        let mut pinned_cache = 0u64;
+        if let Some(cache) = self.prefix.as_ref() {
+            cache.check_invariants()?;
+            for hash in cache.resident_hashes() {
+                let refs = cache.refcount_of(hash).unwrap_or(0);
+                let holding =
+                    holders.get(&hash).copied().unwrap_or(0);
+                if refs != holding {
+                    return Err(format!(
+                        "hash {hash:#x}: refcount {refs} != \
+                         {holding} allocation holders"));
+                }
+                if refs > 0 {
+                    pinned_cache += 1;
+                }
+                if let Some(block) = cache.block_of(hash) {
+                    held.push(block);
+                }
+            }
+            let with_cache = held.len();
+            held.sort_unstable();
+            held.dedup();
+            if held.len() != with_cache {
+                return Err("a cached block aliases a private block"
+                    .to_string());
+            }
+            for hash in holders.keys() {
+                if cache.refcount_of(*hash).is_none() {
+                    return Err(format!(
+                        "allocation holds hash {hash:#x} absent from \
+                         the cache"));
+                }
+            }
+        } else if !holders.is_empty() {
+            return Err("hashed blocks without a prefix cache"
+                .to_string());
+        }
+        // Block conservation: free + pinned + cached must exactly
+        // partition the capacity (disjoint and complete).
+        let held_count = held.len() as u64;
+        let mut all = held;
+        all.extend(free.iter().copied());
+        let combined = all.len() as u64;
+        all.sort_unstable();
+        all.dedup();
+        if combined != self.total_blocks
+            || all.len() as u64 != self.total_blocks
+        {
+            return Err(format!(
+                "block conservation: {} free + {held_count} held does \
+                 not partition {} total blocks",
+                free.len(),
+                self.total_blocks));
+        }
+        // The derived pinned gauge agrees with the physical partition.
+        if self.pinned_blocks() != private_count as u64 + pinned_cache {
+            return Err(format!(
+                "pinned gauge {} != {private_count} private + \
+                 {pinned_cache} pinned cached blocks",
+                self.pinned_blocks()));
+        }
+        Ok(())
     }
 }
 

@@ -81,6 +81,7 @@ pub fn content_chain(spec: &RequestSpec, block_size: u64, upto: Tokens)
     for p in 0..full_blocks * block_size {
         if p < spec.prompt_tokens.0 && !bytes.is_empty() {
             if (p as usize) < bytes.len() {
+                // lamps-lint: allow(panic) p is range-checked against bytes.len() just above
                 mix(&mut h, u64::from(bytes[p as usize]));
             } else {
                 mix(&mut h, PAD_MARKER);
@@ -197,6 +198,49 @@ impl PrefixCache {
         self.map.get(&hash).map(|c| c.refcount)
     }
 
+    /// Canonical physical block for `hash` (`None` when absent) —
+    /// read-only introspection for the audit layer.
+    pub fn block_of(&self, hash: BlockHash) -> Option<BlockId> {
+        self.map.get(&hash).map(|c| c.block)
+    }
+
+    /// Audit self-check ([`crate::audit`]): the zero-ref gauge matches
+    /// the map, live LRU entries mirror exactly the zero-ref
+    /// population, and no two hashes alias one physical block.
+    /// Read-only.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let zero_in_map =
+            self.map.values().filter(|c| c.refcount == 0).count() as u64;
+        if zero_in_map != self.zero_ref {
+            return Err(format!(
+                "zero-ref gauge {} != {zero_in_map} zero-ref map \
+                 entries",
+                self.zero_ref));
+        }
+        let live_in_lru = self
+            .lru
+            .iter()
+            .filter(|&&(h, s)| {
+                PrefixCache::lru_entry_live(&self.map, h, s)
+            })
+            .count() as u64;
+        if live_in_lru != self.zero_ref {
+            return Err(format!(
+                "{live_in_lru} live LRU entries for {} zero-ref \
+                 blocks",
+                self.zero_ref));
+        }
+        let mut blocks: Vec<BlockId> =
+            self.map.values().map(|c| c.block).collect();
+        blocks.sort_unstable();
+        blocks.dedup();
+        if blocks.len() != self.map.len() {
+            return Err("two cached hashes alias one physical block"
+                .to_string());
+        }
+        Ok(())
+    }
+
     pub(super) fn note_hit_tokens(&mut self, tokens: u64) {
         self.hit_tokens += tokens;
     }
@@ -273,6 +317,7 @@ impl PrefixCache {
         let cached = self
             .map
             .get_mut(&hash)
+            // lamps-lint: allow(panic) release pairs a pin — the auditor checks refcounts
             .expect("release of unregistered prefix block");
         assert!(cached.refcount > 0, "prefix refcount underflow");
         cached.refcount -= 1;
@@ -307,6 +352,7 @@ impl PrefixCache {
             return None;
         }
         // The deque entry becomes a tombstone (the map lookup fails).
+        // lamps-lint: allow(panic) the refcount-zero branch checked presence above
         let cached = self.map.remove(&hash).expect("checked present");
         debug_assert!(self.zero_ref > 0, "zero-ref gauge underflow");
         self.zero_ref -= 1;
@@ -323,6 +369,7 @@ impl PrefixCache {
                 continue; // tombstone from a resurrection or purge
             }
             let cached =
+                // lamps-lint: allow(panic) lru_entry_live just confirmed the map entry
                 self.map.remove(&hash).expect("live entry is mapped");
             debug_assert_eq!(cached.refcount, 0, "LRU held a pinned block");
             self.zero_ref -= 1;
@@ -341,6 +388,7 @@ impl PrefixCache {
         };
         let mut freed = Vec::new();
         while self.zero_ref() > cap {
+            // lamps-lint: allow(panic) the zero_ref gauge counts exactly the reclaimable entries
             freed.push(self.reclaim_one().expect("zero_ref > 0"));
         }
         freed

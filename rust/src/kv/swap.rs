@@ -94,6 +94,22 @@ impl SwapSpace {
         self.used -= tokens.0;
         Some(tokens)
     }
+
+    /// Audit self-check ([`crate::audit`]): the used gauge equals the
+    /// sum of parked contexts and respects capacity. Read-only.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let parked_sum: u64 = self.parked.values().map(|t| t.0).sum();
+        if parked_sum != self.used {
+            return Err(format!(
+                "swap used gauge {} != parked sum {parked_sum}",
+                self.used));
+        }
+        if self.used > self.capacity.0 {
+            return Err(format!("swap used {} exceeds capacity {}",
+                               self.used, self.capacity.0));
+        }
+        Ok(())
+    }
 }
 
 /// Direction of an in-flight KV transfer.

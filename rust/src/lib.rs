@@ -34,7 +34,30 @@
 //! let report = engine.run_trace(&trace);
 //! println!("mean latency: {:.3}s", report.latency.mean_secs());
 //! ```
+//!
+//! ## Correctness tooling
+//!
+//! Scheduling quality here degrades *silently* when memory accounting
+//! or determinism slips (wrong ranks, not crashes), so the invariants
+//! the paper relies on are machine-checked at two layers:
+//!
+//! - **Static** — [`lint`] + the `lamps-lint` binary enforce the
+//!   project rules distilled from PR 1–5 reviews: no string-spliced
+//!   JSON on the wire (`wire-format`), no `.unwrap()`/`panic!`/
+//!   slice-indexing in scheduler-critical dirs without a
+//!   `// lamps-lint: allow(<rule>) <reason>` escape (`panic`), no
+//!   wall-clock reads outside `engine/clock.rs` (`wall-clock`), no
+//!   f64 accumulation over `HashMap` iteration order (`float-iter`),
+//!   and read-only placement probes (`probe-purity`). CI runs
+//!   `cargo run --bin lamps-lint` as a gate.
+//! - **Runtime** — [`audit`] re-derives the block-conservation,
+//!   prefix-refcount, shared-index-subset, queue-order, clock- and
+//!   event-causality invariants after every engine/fleet step.
+//!   Enabled with `--audit` (or `LAMPS_AUDIT=on` for the benches),
+//!   always on under `cfg(debug_assertions)`, and observe-only: the
+//!   run report is byte-identical with the auditor on or off.
 
+pub mod audit;
 pub mod bench;
 pub mod cluster;
 pub mod config;
@@ -42,6 +65,7 @@ pub mod coordinator;
 pub mod core;
 pub mod engine;
 pub mod kv;
+pub mod lint;
 pub mod metrics;
 pub mod predictor;
 #[cfg(feature = "pjrt")]

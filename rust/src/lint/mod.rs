@@ -1,0 +1,860 @@
+//! `lamps-lint` — the project's own static analysis, distilled from
+//! five PRs of review conventions into machine-checked rules (see
+//! `bin/lamps-lint.rs` for the CLI and `ROADMAP.md` for the history).
+//!
+//! A self-contained token-level Rust source scanner — no syn, no
+//! external deps (the offline vendor set has none) — that walks
+//! `rust/src` and enforces:
+//!
+//! | rule           | scope                               | violation |
+//! |----------------|-------------------------------------|-----------|
+//! | `wire-format`  | `server/`                           | JSON assembled via `format!`/`write!`/`push_str` string splicing (the PR 5 injection class) |
+//! | `panic`        | `server/ cluster/ engine/ kv/`      | `.unwrap()` / `.expect()` / `panic!` / slice-indexing in non-test code |
+//! | `wall-clock`   | everywhere but `engine/clock.rs`    | `Instant::now` / `SystemTime` (sim-clock determinism) |
+//! | `float-iter`   | `engine/ cluster/ coordinator/`     | f64 accumulation over `HashMap` iteration order (the PR 3 placement-reproducibility class) |
+//! | `probe-purity` | everywhere                          | a placement probe (`load_memory_over_time*`, `placement_score*`, `prefix_credits`) taking any `&mut` |
+//!
+//! A genuine exception is written down, not waved through:
+//!
+//! ```text
+//! // lamps-lint: allow(panic) invariant: admitted ids are in requests
+//! ```
+//!
+//! The escape names the rule and must carry a non-empty reason; it
+//! covers its own line and the next one (so it can sit above the
+//! offending line). A malformed escape (unknown rule, missing reason)
+//! is itself reported.
+//!
+//! Test code is exempt: items under a `#[cfg(test)]` / `#[test]`
+//! attribute are stripped before the rules run, and files named
+//! `tests.rs` (out-of-line test modules) are skipped entirely.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The five enforced rule slugs (what `allow(...)` accepts).
+pub const RULES: [&str; 5] = [
+    "wire-format",
+    "panic",
+    "wall-clock",
+    "float-iter",
+    "probe-purity",
+];
+
+/// One finding: file, 1-based line, rule slug, human message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule,
+               self.message)
+    }
+}
+
+// ----------------------------------------------------------------------
+// Lexer: a minimal Rust tokenizer. Comments vanish, strings become
+// opaque `Str` tokens (body kept for the wire-format rule), lifetimes
+// are told apart from char literals, numbers remember whether they are
+// floats. Enough structure for every rule; nothing more.
+// ----------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Punct(char),
+    /// String literal body (quotes stripped, escapes NOT decoded).
+    Str(String),
+    Num { float: bool },
+    CharLit,
+    Lifetime,
+}
+
+#[derive(Debug, Clone)]
+struct Token {
+    tok: Tok,
+    line: usize,
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn lex(src: &str) -> Vec<Token> {
+    let b = src.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                // Block comments nest in Rust.
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/'
+                        && i + 1 < b.len()
+                        && b[i + 1] == b'*'
+                    {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*'
+                        && i + 1 < b.len()
+                        && b[i + 1] == b'/'
+                    {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                let start_line = line;
+                let (body, ni, nl) = scan_string(b, i + 1);
+                out.push(Token { tok: Tok::Str(body), line: start_line });
+                line += nl;
+                i = ni;
+            }
+            b'r' | b'b' => {
+                if let Some((tok, ni, nl)) = try_prefixed_string(b, i) {
+                    out.push(Token { tok, line });
+                    line += nl;
+                    i = ni;
+                } else {
+                    let (name, ni) = scan_ident(b, i);
+                    out.push(Token { tok: Tok::Ident(name), line });
+                    i = ni;
+                }
+            }
+            b'\'' => {
+                // Char literal vs lifetime: 'x' / '\n' are chars,
+                // 'static / '_ are lifetimes.
+                if i + 1 < b.len() && b[i + 1] == b'\\' {
+                    // Escaped char literal: skip escape, find quote.
+                    let mut j = i + 3;
+                    while j < b.len() && b[j] != b'\'' {
+                        j += 1;
+                    }
+                    out.push(Token { tok: Tok::CharLit, line });
+                    i = (j + 1).min(b.len());
+                } else if i + 2 < b.len() && b[i + 2] == b'\'' {
+                    out.push(Token { tok: Tok::CharLit, line });
+                    i += 3;
+                } else {
+                    let mut j = i + 1;
+                    while j < b.len() && is_ident_cont(b[j]) {
+                        j += 1;
+                    }
+                    out.push(Token { tok: Tok::Lifetime, line });
+                    i = j;
+                }
+            }
+            _ if c.is_ascii_digit() => {
+                let mut j = i;
+                let mut float = false;
+                while j < b.len() {
+                    if is_ident_cont(b[j]) {
+                        j += 1;
+                    } else if b[j] == b'.'
+                        && j + 1 < b.len()
+                        && b[j + 1].is_ascii_digit()
+                    {
+                        float = true;
+                        j += 1;
+                    } else {
+                        break;
+                    }
+                }
+                out.push(Token { tok: Tok::Num { float }, line });
+                i = j;
+            }
+            _ if is_ident_start(c) => {
+                let (name, ni) = scan_ident(b, i);
+                out.push(Token { tok: Tok::Ident(name), line });
+                i = ni;
+            }
+            _ => {
+                out.push(Token { tok: Tok::Punct(c as char), line });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+fn scan_ident(b: &[u8], i: usize) -> (String, usize) {
+    let mut j = i;
+    while j < b.len() && is_ident_cont(b[j]) {
+        j += 1;
+    }
+    (String::from_utf8_lossy(&b[i..j]).into_owned(), j)
+}
+
+/// Scan a normal (escape-aware) string body starting just past the
+/// opening quote. Returns (body, index past closing quote, newlines).
+fn scan_string(b: &[u8], mut i: usize) -> (String, usize, usize) {
+    let start = i;
+    let mut newlines = 0usize;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i = (i + 2).min(b.len()),
+            b'"' => {
+                let body =
+                    String::from_utf8_lossy(&b[start..i]).into_owned();
+                return (body, i + 1, newlines);
+            }
+            b'\n' => {
+                newlines += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    (String::from_utf8_lossy(&b[start..]).into_owned(), i, newlines)
+}
+
+/// Raw/byte string starting at `r` / `b` / `br` / `rb`. `None` means
+/// "just an identifier" and the caller lexes it as one.
+fn try_prefixed_string(b: &[u8], i: usize) -> Option<(Tok, usize, usize)> {
+    let mut j = i;
+    let mut raw = false;
+    while j < b.len() && (b[j] == b'r' || b[j] == b'b') && j - i < 2 {
+        raw |= b[j] == b'r';
+        j += 1;
+    }
+    if j >= b.len() {
+        return None;
+    }
+    if raw {
+        // r"..."  r#"..."#  br##"..."## — no escapes inside.
+        let mut hashes = 0usize;
+        while j < b.len() && b[j] == b'#' {
+            hashes += 1;
+            j += 1;
+        }
+        if j >= b.len() || b[j] != b'"' {
+            return None;
+        }
+        j += 1;
+        let start = j;
+        let mut newlines = 0usize;
+        while j < b.len() {
+            if b[j] == b'\n' {
+                newlines += 1;
+            }
+            if b[j] == b'"' {
+                let mut k = j + 1;
+                let mut seen = 0usize;
+                while k < b.len() && b[k] == b'#' && seen < hashes {
+                    seen += 1;
+                    k += 1;
+                }
+                if seen == hashes {
+                    let body = String::from_utf8_lossy(&b[start..j])
+                        .into_owned();
+                    return Some((Tok::Str(body), k, newlines));
+                }
+            }
+            j += 1;
+        }
+        let body = String::from_utf8_lossy(&b[start..]).into_owned();
+        Some((Tok::Str(body), j, newlines))
+    } else {
+        // b"..." — escape-aware like a normal string.
+        if b[j] != b'"' {
+            return None;
+        }
+        let (body, ni, nl) = scan_string(b, j + 1);
+        Some((Tok::Str(body), ni, nl))
+    }
+}
+
+// ----------------------------------------------------------------------
+// Test-code stripping: drop any item annotated `#[cfg(test)]` /
+// `#[test]` (attribute plus the whole item body) before rules run.
+// ----------------------------------------------------------------------
+
+fn strip_test_items(tokens: Vec<Token>) -> Vec<Token> {
+    let mut out = Vec::with_capacity(tokens.len());
+    let mut i = 0usize;
+    let mut skip_pending = false;
+    while i < tokens.len() {
+        let is_attr = matches!(tokens[i].tok, Tok::Punct('#'))
+            && matches!(tokens.get(i + 1).map(|t| &t.tok),
+                        Some(Tok::Punct('[')));
+        if is_attr {
+            // Collect the attribute to its matching `]`.
+            let mut j = i + 2;
+            let mut depth = 1usize;
+            let mut has_test = false;
+            while j < tokens.len() && depth > 0 {
+                match &tokens[j].tok {
+                    Tok::Punct('[') => depth += 1,
+                    Tok::Punct(']') => depth -= 1,
+                    Tok::Ident(s) if s == "test" => has_test = true,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if has_test || skip_pending {
+                skip_pending = true;
+            } else {
+                out.extend_from_slice(&tokens[i..j]);
+            }
+            i = j;
+            continue;
+        }
+        if skip_pending {
+            // Drop the attributed item: to `;` at bracket depth 0, or
+            // through the body of the first `{` opened at depth 0.
+            let mut depth = 0isize;
+            while i < tokens.len() {
+                match &tokens[i].tok {
+                    Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+                    Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+                    Tok::Punct(';') if depth == 0 => {
+                        i += 1;
+                        break;
+                    }
+                    Tok::Punct('{') if depth == 0 => {
+                        let mut braces = 1usize;
+                        i += 1;
+                        while i < tokens.len() && braces > 0 {
+                            match &tokens[i].tok {
+                                Tok::Punct('{') => braces += 1,
+                                Tok::Punct('}') => braces -= 1,
+                                _ => {}
+                            }
+                            i += 1;
+                        }
+                        break;
+                    }
+                    _ => {}
+                }
+                i += 1;
+            }
+            skip_pending = false;
+            continue;
+        }
+        out.push(tokens[i].clone());
+        i += 1;
+    }
+    out
+}
+
+// ----------------------------------------------------------------------
+// Allow escapes
+// ----------------------------------------------------------------------
+
+/// Parse `// lamps-lint: allow(<rule>) <reason>` escapes. An escape
+/// covers its own line and the next. Malformed escapes are reported.
+fn parse_allows(src: &str)
+                -> (HashMap<usize, Vec<&'static str>>, Vec<Violation>) {
+    let mut allows: HashMap<usize, Vec<&'static str>> = HashMap::new();
+    let mut bad = Vec::new();
+    for (idx, text) in src.lines().enumerate() {
+        let line = idx + 1;
+        let Some(comment_at) = text.find("//") else { continue };
+        let comment = &text[comment_at..];
+        let Some(at) = comment.find("lamps-lint:") else { continue };
+        let rest = comment[at + "lamps-lint:".len()..].trim_start();
+        let Some(args) = rest.strip_prefix("allow(") else {
+            bad.push(Violation {
+                file: String::new(),
+                line,
+                rule: "allow",
+                message: "malformed lamps-lint escape (expected \
+                          `lamps-lint: allow(<rule>) <reason>`)"
+                    .to_string(),
+            });
+            continue;
+        };
+        let Some(close) = args.find(')') else {
+            bad.push(Violation {
+                file: String::new(),
+                line,
+                rule: "allow",
+                message: "unclosed lamps-lint allow(...)".to_string(),
+            });
+            continue;
+        };
+        let slug = args[..close].trim();
+        let reason = args[close + 1..].trim();
+        let Some(&known) = RULES.iter().find(|r| **r == slug) else {
+            bad.push(Violation {
+                file: String::new(),
+                line,
+                rule: "allow",
+                message: format!("unknown lint rule '{slug}' in allow \
+                                  escape"),
+            });
+            continue;
+        };
+        if reason.is_empty() {
+            bad.push(Violation {
+                file: String::new(),
+                line,
+                rule: "allow",
+                message: format!("allow({known}) escape carries no \
+                                  reason"),
+            });
+            continue;
+        }
+        allows.entry(line).or_default().push(known);
+        allows.entry(line + 1).or_default().push(known);
+    }
+    (allows, bad)
+}
+
+// ----------------------------------------------------------------------
+// Rules
+// ----------------------------------------------------------------------
+
+/// Idents that may directly precede `[` without it being an index
+/// expression (`&mut [Engine]`, `let [a, b] = ..`, `for x in [..]`).
+const NON_INDEX_KEYWORDS: [&str; 24] = [
+    "mut", "dyn", "ref", "in", "as", "return", "break", "continue",
+    "else", "match", "move", "const", "static", "crate", "super",
+    "impl", "where", "let", "fn", "if", "while", "loop", "for",
+    "unsafe",
+];
+
+fn id_at<'a>(t: &'a [Token], i: usize) -> Option<&'a str> {
+    match t.get(i).map(|tk| &tk.tok) {
+        Some(Tok::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn punct_at(t: &[Token], i: usize, c: char) -> bool {
+    matches!(t.get(i).map(|tk| &tk.tok), Some(Tok::Punct(p)) if *p == c)
+}
+
+fn in_dir(rel: &str, dir: &str) -> bool {
+    rel.starts_with(&format!("{dir}/"))
+}
+
+struct Ctx<'a> {
+    file: &'a str,
+    allows: HashMap<usize, Vec<&'static str>>,
+    out: Vec<Violation>,
+}
+
+impl Ctx<'_> {
+    fn push(&mut self, line: usize, rule: &'static str, message: String) {
+        let allowed = self
+            .allows
+            .get(&line)
+            .is_some_and(|rules| rules.contains(&rule));
+        if !allowed {
+            self.out.push(Violation {
+                file: self.file.to_string(),
+                line,
+                rule,
+                message,
+            });
+        }
+    }
+}
+
+/// Scan one file's source under its `src/`-relative path (forward
+/// slashes). The path decides which rules apply.
+pub fn scan_source(rel_path: &str, src: &str) -> Vec<Violation> {
+    let rel = rel_path.replace('\\', "/");
+    let (allows, mut bad_allows) = parse_allows(src);
+    for v in &mut bad_allows {
+        v.file = rel.clone();
+    }
+    let tokens = strip_test_items(lex(src));
+    let mut ctx = Ctx { file: &rel, allows, out: Vec::new() };
+
+    let panic_scope = ["server", "cluster", "engine", "kv"]
+        .iter()
+        .any(|d| in_dir(&rel, d));
+    let float_scope = ["engine", "cluster", "coordinator"]
+        .iter()
+        .any(|d| in_dir(&rel, d));
+    let clock_scope = rel != "engine/clock.rs";
+    let wire_scope = in_dir(&rel, "server");
+
+    if panic_scope {
+        rule_panic(&tokens, &mut ctx);
+    }
+    if clock_scope {
+        rule_wall_clock(&tokens, &mut ctx);
+    }
+    if wire_scope {
+        rule_wire_format(&tokens, &mut ctx);
+    }
+    if float_scope {
+        rule_float_iter(&tokens, &mut ctx);
+    }
+    rule_probe_purity(&tokens, &mut ctx);
+
+    let mut out = ctx.out;
+    out.extend(bad_allows);
+    out.sort_by_key(|v| v.line);
+    out
+}
+
+/// Rule `panic`: `.unwrap()` / `.expect()` / `panic!`-family macros /
+/// slice-indexing in non-test scheduler-critical code.
+fn rule_panic(t: &[Token], ctx: &mut Ctx<'_>) {
+    for i in 0..t.len() {
+        let line = t[i].line;
+        if let Some(name) = id_at(t, i) {
+            match name {
+                "unwrap" | "expect"
+                    if punct_at(t, i.wrapping_sub(1), '.')
+                        && punct_at(t, i + 1, '(') =>
+                {
+                    ctx.push(line, "panic", format!(
+                        ".{name}() in scheduler-critical code — \
+                         handle the miss or annotate the invariant"));
+                }
+                "panic" | "unreachable" | "todo" | "unimplemented"
+                    if punct_at(t, i + 1, '!') =>
+                {
+                    ctx.push(line, "panic", format!(
+                        "{name}! in scheduler-critical code — return \
+                         an error or annotate the invariant"));
+                }
+                _ => {}
+            }
+        }
+        if punct_at(t, i, '[') && i > 0 {
+            let indexes = match &t[i - 1].tok {
+                Tok::Punct(')') | Tok::Punct(']') => true,
+                Tok::Ident(s) => {
+                    !NON_INDEX_KEYWORDS.contains(&s.as_str())
+                }
+                _ => false,
+            };
+            if indexes {
+                ctx.push(line, "panic",
+                         "slice/map indexing can panic — use .get() \
+                          or annotate the bounds invariant"
+                             .to_string());
+            }
+        }
+    }
+}
+
+/// Rule `wall-clock`: `Instant::now` / `SystemTime` anywhere outside
+/// `engine/clock.rs` (simulation determinism — real time may only
+/// enter through the sim clock seam or an annotated TCP-layer site).
+fn rule_wall_clock(t: &[Token], ctx: &mut Ctx<'_>) {
+    for i in 0..t.len() {
+        let Some(name) = id_at(t, i) else { continue };
+        if name == "Instant"
+            && punct_at(t, i + 1, ':')
+            && punct_at(t, i + 2, ':')
+            && id_at(t, i + 3) == Some("now")
+        {
+            ctx.push(t[i].line, "wall-clock",
+                     "Instant::now outside engine/clock.rs breaks \
+                      virtual-clock determinism"
+                         .to_string());
+        }
+        if name == "SystemTime" {
+            ctx.push(t[i].line, "wall-clock",
+                     "SystemTime outside engine/clock.rs breaks \
+                      virtual-clock determinism"
+                         .to_string());
+        }
+    }
+}
+
+/// Rule `wire-format`: string-formatted JSON in `server/` (a `{"`
+/// skeleton inside a `format!`/`write!`/`writeln!`/`push_str`
+/// argument). Frames must go through `util::json::obj`, which escapes.
+fn rule_wire_format(t: &[Token], ctx: &mut Ctx<'_>) {
+    for i in 0..t.len() {
+        let Some(name) = id_at(t, i) else { continue };
+        let is_macro = matches!(name, "format" | "write" | "writeln")
+            && punct_at(t, i + 1, '!');
+        let is_push = name == "push_str"
+            && punct_at(t, i.wrapping_sub(1), '.');
+        if !is_macro && !is_push {
+            continue;
+        }
+        // Examine string literals inside the call's parentheses.
+        let mut j = i + 1;
+        while j < t.len() && !punct_at(t, j, '(') {
+            j += 1;
+        }
+        let mut depth = 0isize;
+        while j < t.len() {
+            match &t[j].tok {
+                Tok::Punct('(') => depth += 1,
+                Tok::Punct(')') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                Tok::Str(body)
+                    if body.contains("{\"")
+                        || body.contains("{\\\"") =>
+                {
+                    ctx.push(t[i].line, "wire-format",
+                             "JSON spliced via string formatting in \
+                              server/ — build the frame with \
+                              util::json::obj (PR 5 injection class)"
+                                 .to_string());
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+}
+
+/// Rule `float-iter`: f64 accumulation over `HashMap` iteration order.
+/// HashMap order is per-process random and f64 addition is not
+/// associative, so such sums differ run to run (the PR 3 placement
+/// bug). Collect-and-sort (or iterate a BTree/sorted Vec) instead.
+fn rule_float_iter(t: &[Token], ctx: &mut Ctx<'_>) {
+    // Pass 1: names declared (or bound) as HashMap.
+    let mut hashmaps: HashSet<String> = HashSet::new();
+    for i in 0..t.len() {
+        if id_at(t, i) != Some("HashMap") {
+            continue;
+        }
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            match &t[j].tok {
+                Tok::Punct(':') | Tok::Punct('=') | Tok::Punct('<')
+                | Tok::Punct('&') => continue,
+                Tok::Ident(s) if s == "mut" => continue,
+                Tok::Ident(s) => {
+                    hashmaps.insert(s.clone());
+                    break;
+                }
+                _ => break,
+            }
+        }
+    }
+    // Pass 2: names declared/initialized as floats.
+    let mut floats: HashSet<String> = HashSet::new();
+    for i in 0..t.len() {
+        if id_at(t, i) == Some("f64") && punct_at(t, i.wrapping_sub(1), ':')
+        {
+            if let Some(name) = id_at(t, i.wrapping_sub(2)) {
+                floats.insert(name.to_string());
+            }
+        }
+        if matches!(t[i].tok, Tok::Num { float: true })
+            && punct_at(t, i.wrapping_sub(1), '=')
+            && !punct_at(t, i.wrapping_sub(2), '+')
+        {
+            if let Some(name) = id_at(t, i.wrapping_sub(2)) {
+                floats.insert(name.to_string());
+            }
+        }
+    }
+    // Pass 3: for-loops whose header mentions a HashMap and whose body
+    // accumulates into a float.
+    for i in 0..t.len() {
+        if id_at(t, i) != Some("for") {
+            continue;
+        }
+        // Header: tokens to the loop's `{` at bracket depth 0.
+        let mut j = i + 1;
+        let mut depth = 0isize;
+        let mut over_map = false;
+        while j < t.len() {
+            match &t[j].tok {
+                Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+                Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+                Tok::Punct('{') if depth == 0 => break,
+                Tok::Ident(s) if hashmaps.contains(s) => over_map = true,
+                _ => {}
+            }
+            j += 1;
+        }
+        if !over_map || j >= t.len() {
+            continue;
+        }
+        // Body: to the matching `}`.
+        let body_start = j + 1;
+        let mut braces = 1usize;
+        let mut k = body_start;
+        while k < t.len() && braces > 0 {
+            match &t[k].tok {
+                Tok::Punct('{') => braces += 1,
+                Tok::Punct('}') => braces -= 1,
+                _ => {}
+            }
+            k += 1;
+        }
+        let body = &t[body_start..k];
+        let mut accumulates = false;
+        for m in 0..body.len() {
+            if punct_at(body, m, '+') && punct_at(body, m + 1, '=') {
+                let lhs_float = id_at(body, m.wrapping_sub(1))
+                    .is_some_and(|n| floats.contains(n));
+                let rhs_float = matches!(
+                    body.get(m + 2).map(|tk| &tk.tok),
+                    Some(Tok::Num { float: true }));
+                let casts = body.iter().zip(body.iter().skip(1)).any(
+                    |(a, b)| matches!(&a.tok, Tok::Ident(s) if s == "as")
+                        && matches!(&b.tok,
+                                    Tok::Ident(s) if s == "f64"));
+                if lhs_float || rhs_float || casts {
+                    accumulates = true;
+                    break;
+                }
+            }
+        }
+        if accumulates {
+            ctx.push(t[i].line, "float-iter",
+                     "f64 accumulation over HashMap iteration order is \
+                      nondeterministic — collect and sort first (PR 3 \
+                      placement class)"
+                         .to_string());
+        }
+    }
+    // Pass 4: iterator-chain sums (`map.values().map(..).sum::<f64>()`).
+    for i in 0..t.len() {
+        let Some(name) = id_at(t, i) else { continue };
+        if !hashmaps.contains(name) {
+            continue;
+        }
+        let mut saw_iter = false;
+        let mut saw_sum = false;
+        let mut saw_f64 = false;
+        let mut j = i + 1;
+        while j < t.len() && !punct_at(t, j, ';') {
+            match id_at(t, j) {
+                Some("values") | Some("keys") | Some("iter")
+                | Some("values_mut") => saw_iter = true,
+                Some("sum") => saw_sum = true,
+                Some("f64") => saw_f64 = true,
+                _ => {}
+            }
+            j += 1;
+        }
+        if saw_iter && saw_sum && saw_f64 {
+            ctx.push(t[i].line, "float-iter",
+                     "f64 sum over HashMap iteration order is \
+                      nondeterministic — collect and sort first (PR 3 \
+                      placement class)"
+                         .to_string());
+        }
+    }
+}
+
+/// Rule `probe-purity`: placement probes must be read-only. Any `&mut`
+/// in the signature of `load_memory_over_time*` / `placement_score*` /
+/// `prefix_credits` means a probe can perturb the state it scores —
+/// the PR 3 side-effect class.
+fn rule_probe_purity(t: &[Token], ctx: &mut Ctx<'_>) {
+    for i in 0..t.len() {
+        if id_at(t, i) != Some("fn") {
+            continue;
+        }
+        let Some(name) = id_at(t, i + 1) else { continue };
+        let is_probe = name.starts_with("load_memory_over_time")
+            || name.starts_with("placement_score")
+            || name == "prefix_credits";
+        if !is_probe {
+            continue;
+        }
+        // Parameter list: first `(` after the name, to its match.
+        let mut j = i + 2;
+        while j < t.len() && !punct_at(t, j, '(') {
+            j += 1;
+        }
+        let mut depth = 0isize;
+        while j < t.len() {
+            if punct_at(t, j, '(') {
+                depth += 1;
+            } else if punct_at(t, j, ')') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if punct_at(t, j, '&')
+                && id_at(t, j + 1) == Some("mut")
+            {
+                ctx.push(t[i].line, "probe-purity", format!(
+                    "placement probe {name} takes &mut — probes must \
+                     be read-only (&self / &[Engine])"));
+                break;
+            }
+            j += 1;
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Tree walk
+// ----------------------------------------------------------------------
+
+/// Scan every `.rs` file under `root` (skipping out-of-line test
+/// modules named `tests.rs`), in sorted order for stable output.
+pub fn scan_tree(root: &Path) -> io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in files {
+        if path.file_name().is_some_and(|n| n == "tests.rs") {
+            continue;
+        }
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(&path)?;
+        out.extend(scan_source(&rel, &src));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,303 @@
+//! Per-rule fixtures for `lamps-lint`: one known-violating and one
+//! clean snippet per rule, the `allow` escape syntax (good and
+//! malformed), the test-code exemption, and a scan of the on-disk
+//! fixture corpus under `rust/lint-fixtures/` proving every rule
+//! catches its seeded violation there.
+
+use std::path::Path;
+
+use super::{scan_source, scan_tree, Violation, RULES};
+
+fn rules_hit(violations: &[Violation]) -> Vec<&'static str> {
+    violations.iter().map(|v| v.rule).collect()
+}
+
+// -- wire-format -------------------------------------------------------
+
+#[test]
+fn wire_format_flags_spliced_json_in_server() {
+    let src = r#"
+pub fn frame(id: u64) -> String {
+    format!("{{\"type\":\"error\",\"id\":{id}}}")
+}
+"#;
+    let v = scan_source("server/wire.rs", src);
+    assert!(rules_hit(&v).contains(&"wire-format"), "{v:?}");
+}
+
+#[test]
+fn wire_format_ignores_plain_messages_and_other_dirs() {
+    let clean = r#"
+pub fn msg(e: &str) -> String {
+    format!("bad request: {e}")
+}
+"#;
+    assert!(scan_source("server/wire.rs", clean).is_empty());
+    let spliced = r#"
+pub fn frame(id: u64) -> String {
+    format!("{{\"type\":\"error\",\"id\":{id}}}")
+}
+"#;
+    // Outside server/ the wire rule does not apply.
+    assert!(scan_source("util/fmt.rs", spliced).is_empty());
+}
+
+#[test]
+fn wire_format_flags_push_str_and_raw_strings() {
+    let src = r##"
+pub fn frame(out: &mut String) {
+    out.push_str(r#"{"type":"error"}"#);
+}
+"##;
+    let v = scan_source("server/wire.rs", src);
+    assert!(rules_hit(&v).contains(&"wire-format"), "{v:?}");
+}
+
+// -- panic -------------------------------------------------------------
+
+#[test]
+fn panic_rule_flags_unwrap_expect_macros_and_indexing() {
+    let src = r#"
+pub fn f(xs: &[u64], m: Option<u64>) -> u64 {
+    let a = m.unwrap();
+    let b = m.expect("present");
+    if xs.is_empty() {
+        panic!("empty");
+    }
+    a + b + xs[0]
+}
+"#;
+    let v = scan_source("engine/f.rs", src);
+    let hits = rules_hit(&v);
+    assert_eq!(hits.iter().filter(|r| **r == "panic").count(), 4,
+               "{v:?}");
+}
+
+#[test]
+fn panic_rule_scoped_to_scheduler_dirs_and_spares_non_index_brackets() {
+    let src = r#"
+pub fn f(m: Option<u64>) -> u64 {
+    m.unwrap()
+}
+"#;
+    // util/ is outside the panic rule's scope.
+    assert!(scan_source("util/f.rs", src).is_empty());
+    let clean = r#"
+pub fn g(pair: (u64, u64), xs: &[u64]) -> u64 {
+    let [_a, _b] = [pair.0, pair.1];
+    let v = vec![1u64, 2];
+    xs.first().copied().unwrap_or(0) + v.len() as u64
+}
+"#;
+    assert!(scan_source("kv/g.rs", clean).is_empty());
+}
+
+#[test]
+fn panic_rule_exempts_test_items() {
+    let src = r#"
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let xs = vec![1u64];
+        assert_eq!(xs[0], Some(1).unwrap());
+    }
+}
+"#;
+    assert!(scan_source("engine/f.rs", src).is_empty());
+}
+
+// -- allow escapes -----------------------------------------------------
+
+#[test]
+fn allow_escape_suppresses_same_line_and_next_line() {
+    let same_line = r#"
+pub fn f(m: Option<u64>) -> u64 {
+    m.unwrap() // lamps-lint: allow(panic) invariant: set by caller
+}
+"#;
+    assert!(scan_source("engine/f.rs", same_line).is_empty());
+    let line_above = r#"
+pub fn f(m: Option<u64>) -> u64 {
+    // lamps-lint: allow(panic) invariant: set by caller
+    m.unwrap()
+}
+"#;
+    assert!(scan_source("engine/f.rs", line_above).is_empty());
+}
+
+#[test]
+fn allow_escape_requires_known_rule_and_reason() {
+    let unknown = r#"
+pub fn f(m: Option<u64>) -> u64 {
+    m.unwrap() // lamps-lint: allow(yolo) because
+}
+"#;
+    let v = scan_source("engine/f.rs", unknown);
+    let hits = rules_hit(&v);
+    assert!(hits.contains(&"allow"), "{v:?}");
+    assert!(hits.contains(&"panic"), "unknown rule must not suppress");
+    let no_reason = r#"
+pub fn f(m: Option<u64>) -> u64 {
+    m.unwrap() // lamps-lint: allow(panic)
+}
+"#;
+    let v = scan_source("engine/f.rs", no_reason);
+    let hits = rules_hit(&v);
+    assert!(hits.contains(&"allow"), "{v:?}");
+    assert!(hits.contains(&"panic"), "reasonless escape must not \
+                                      suppress");
+}
+
+#[test]
+fn allow_escape_is_rule_specific() {
+    let src = r#"
+pub fn f(m: Option<u64>) -> u64 {
+    m.unwrap() // lamps-lint: allow(wall-clock) wrong rule named
+}
+"#;
+    let v = scan_source("engine/f.rs", src);
+    assert!(rules_hit(&v).contains(&"panic"), "{v:?}");
+}
+
+// -- wall-clock --------------------------------------------------------
+
+#[test]
+fn wall_clock_flags_instant_and_system_time() {
+    let src = r#"
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
+pub fn epoch() -> std::time::SystemTime {
+    std::time::SystemTime::now()
+}
+"#;
+    let v = scan_source("metrics/t.rs", src);
+    let hits = rules_hit(&v);
+    assert!(hits.iter().filter(|r| **r == "wall-clock").count() >= 2,
+            "{v:?}");
+}
+
+#[test]
+fn wall_clock_exempts_the_sim_clock_seam() {
+    let src = r#"
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
+"#;
+    assert!(scan_source("engine/clock.rs", src).is_empty());
+}
+
+// -- float-iter --------------------------------------------------------
+
+#[test]
+fn float_iter_flags_accumulation_over_hashmap_order() {
+    let src = r#"
+use std::collections::HashMap;
+pub fn total(m: &HashMap<u64, f64>) -> f64 {
+    let mut sum = 0.0;
+    for v in m.values() {
+        sum += v;
+    }
+    sum
+}
+"#;
+    let v = scan_source("cluster/t.rs", src);
+    assert!(rules_hit(&v).contains(&"float-iter"), "{v:?}");
+}
+
+#[test]
+fn float_iter_flags_iterator_chain_sums() {
+    let src = r#"
+use std::collections::HashMap;
+pub fn total(m: &HashMap<u64, f64>) -> f64 {
+    let t = m.values().copied().sum::<f64>();
+    t
+}
+"#;
+    let v = scan_source("coordinator/t.rs", src);
+    assert!(rules_hit(&v).contains(&"float-iter"), "{v:?}");
+}
+
+#[test]
+fn float_iter_spares_sorted_collection_and_int_sums() {
+    let sorted = r#"
+use std::collections::HashMap;
+pub fn total(m: &HashMap<u64, f64>) -> f64 {
+    let mut vals: Vec<f64> = m.values().copied().collect();
+    vals.sort_by(f64::total_cmp);
+    let mut sum = 0.0;
+    for v in vals {
+        sum += v;
+    }
+    sum
+}
+"#;
+    assert!(scan_source("cluster/t.rs", sorted).is_empty());
+    let int_sum = r#"
+use std::collections::HashMap;
+pub fn count(m: &HashMap<u64, u64>) -> u64 {
+    let mut n = 0u64;
+    for v in m.values() {
+        n += v;
+    }
+    n
+}
+"#;
+    assert!(scan_source("engine/t.rs", int_sum).is_empty());
+}
+
+// -- probe-purity ------------------------------------------------------
+
+#[test]
+fn probe_purity_flags_mut_probe_signatures() {
+    let src = r#"
+pub fn placement_score(engines: &mut [Engine], spec: &RequestSpec)
+                       -> f64 {
+    engines.len() as f64
+}
+"#;
+    let v = scan_source("coordinator/ranking.rs", src);
+    assert!(rules_hit(&v).contains(&"probe-purity"), "{v:?}");
+}
+
+#[test]
+fn probe_purity_accepts_read_only_probes() {
+    let src = r#"
+pub fn placement_score(engines: &[Engine], spec: &RequestSpec) -> f64 {
+    engines.len() as f64
+}
+pub fn prefix_credits(engines: &[Engine]) -> Vec<u64> {
+    Vec::new()
+}
+"#;
+    assert!(scan_source("coordinator/ranking.rs", src).is_empty());
+}
+
+// -- the on-disk fixture corpus + the crate itself ---------------------
+
+#[test]
+fn fixture_corpus_trips_every_rule_and_allows_suppress() {
+    let root =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("lint-fixtures");
+    let violations = scan_tree(&root).expect("fixture tree readable");
+    for rule in RULES {
+        assert!(violations.iter().any(|v| v.rule == rule),
+                "fixture corpus must seed rule {rule}: {violations:?}");
+    }
+    assert!(!violations.iter().any(|v| v.file.contains("allowed")),
+            "allow-escaped fixture must scan clean: {violations:?}");
+}
+
+#[test]
+fn crate_sources_are_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let violations = scan_tree(&root).expect("src readable");
+    assert!(violations.is_empty(),
+            "lamps-lint must exit 0 on the crate:\n{}",
+            violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n"));
+}

@@ -14,7 +14,8 @@ use anyhow::Result;
 
 use lamps::bench::{Dataset, ModelPreset};
 use lamps::cluster::ReplicaSet;
-use lamps::config::{ApiSourceKind, PlacementKind, SystemConfig};
+use lamps::config::{ApiSourceKind, AuditMode, PlacementKind,
+                    SystemConfig};
 use lamps::core::types::Micros;
 #[cfg(feature = "pjrt")]
 use lamps::engine::pjrt_backend::PjrtBackend;
@@ -40,6 +41,7 @@ USAGE:
                 [--async-swap]
                 [--prefix-cache] [--prefix-cache-blocks N]
                 [--shared-prefix] [--no-admission-requeue]
+                [--audit]
   lamps run     [--dataset single-api|multi-api|toolbench|<trace.json>]
                 [--system vllm|infercept|lamps|lamps-no-sched|sjf|sjf-total]
                 [--model gptj-6b|vicuna-13b] [--rate 3.0]
@@ -51,7 +53,7 @@ USAGE:
                 [--async-swap]
                 [--prefix-cache] [--prefix-cache-blocks N]
                 [--shared-prefix] [--no-admission-requeue]
-                [--timeline]
+                [--audit] [--timeline]
   lamps gen-workload --out trace.json [--dataset single-api] [--rate 3.0]
                 [--requests 500] [--seed 42]
   lamps predict <prompt> [--artifacts artifacts]
@@ -92,7 +94,10 @@ WIRE PROTOCOL (serve; JSON lines over TCP, one frame per line):
   prefix index those discounts come from. A request memory-rejected by
   its owner before first run is re-queued once to the best sibling
   unless --no-admission-requeue. With --replicas 1 the single-engine
-  path runs unchanged.
+  path runs unchanged. --audit re-checks the engine/fleet invariants
+  (block conservation, prefix refcounts, queue order, event
+  causality) after every step and aborts on the first violation —
+  always on in debug builds, opt-in here for release builds.
 ";
 
 /// Tiny `--key value` argument map (no clap in the offline vendor set).
@@ -239,6 +244,9 @@ fn apply_replica_flags(cfg: &mut SystemConfig, args: &Args)
     if args.has("no-admission-requeue") {
         cfg.admission_requeue = false;
     }
+    if args.has("audit") {
+        cfg.audit = AuditMode::On;
+    }
     Ok(())
 }
 
@@ -310,6 +318,12 @@ fn serve(args: &Args) -> Result<()> {
     apply_prefix_flags(&mut base_cfg, args);
     apply_replica_flags(&mut base_cfg, args)?;
     apply_api_source_flag(&mut base_cfg, args, true)?;
+    eprintln!(
+        "lamps: {} replica(s), {} placement, api-source {}, audit {} \
+         ({})",
+        base_cfg.replicas, base_cfg.placement.label(),
+        base_cfg.api_source.label(), base_cfg.audit.label(),
+        if base_cfg.audit.enabled() { "active" } else { "inactive" });
 
     // PJRT handles are not Send: build them inside the engine thread.
     // Each replica loads its own model runtime (one modeled device).
@@ -376,6 +390,10 @@ fn run(args: &Args) -> Result<()> {
     apply_prefix_flags(&mut cfg, args);
     apply_replica_flags(&mut cfg, args)?;
     apply_api_source_flag(&mut cfg, args, false)?;
+    if cfg.audit.enabled() {
+        eprintln!("lamps: invariant auditor active (audit {})",
+                  cfg.audit.label());
+    }
     let cap = args
         .flags
         .get("time-cap-secs")

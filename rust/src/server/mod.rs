@@ -47,6 +47,18 @@
 //! based. Each TCP connection gets its own reader thread plus one
 //! writer pump serializing all of its sessions' event frames —
 //! adequate for the demo-scale deployments this CPU image can serve.)
+//!
+//! # Correctness tooling
+//!
+//! Every outbound frame is built through [`crate::util::json`] —
+//! splicing client text into a JSON skeleton by hand is banned by
+//! `lamps-lint`'s `wire-format` rule (the PR 5 injection class), and
+//! its `panic` rule keeps this layer's hot paths on logged-teardown
+//! error handling rather than unwraps. In debug builds each replica
+//! engine additionally runs the [`crate::audit`] invariant auditor
+//! after every step, so the randomized session/fuzz tests
+//! (`tests/session_events.rs`, `tests/wire_fuzz.rs`) exercise the
+//! full event-causality machine end to end.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -504,7 +516,20 @@ where
 
 /// Build the completion for a request the engine reported `Finished`.
 fn build_completion(engine: &Engine, id: RequestId) -> Completion {
-    let r = engine.request(id).expect("finished request");
+    let Some(r) = engine.request(id) else {
+        // A finished id the engine no longer knows is a routing bug.
+        // Answer the client with an explicit drop instead of tearing
+        // down the whole connection thread on a panic.
+        eprintln!("lamps-server: completion for unknown request {id}");
+        return Completion {
+            id: id.0,
+            latency_us: 0,
+            ttft_us: None,
+            tokens_decoded: 0,
+            generated: None,
+            dropped: Some("server lost the request state".to_string()),
+        };
+    };
     #[cfg(feature = "pjrt")]
     let generated = engine.backend_any().and_then(|any| {
         any.downcast_ref::<crate::engine::pjrt_backend::PjrtBackend>()
@@ -514,7 +539,16 @@ fn build_completion(engine: &Engine, id: RequestId) -> Completion {
     let generated = None;
     Completion {
         id: id.0,
-        latency_us: (r.finished_at.expect("finished") - r.spec.arrival).0,
+        latency_us: r.finished_at.map_or_else(
+            || {
+                eprintln!(
+                    "lamps-server: request {id} completed without a \
+                     finish stamp"
+                );
+                0
+            },
+            |t| (t - r.spec.arrival).0,
+        ),
         ttft_us: r.first_token_at.map(|t| (t - r.spec.arrival).0),
         tokens_decoded: r.spec.total_decode().0,
         generated,
@@ -593,6 +627,7 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
     let mut requeued: std::collections::HashSet<RequestId> =
         std::collections::HashSet::new();
     let mut shutdown = false;
+    // lamps-lint: allow(wall-clock) the timeout sweep tracks real elapsed client time
     let mut last_timeout_sweep = std::time::Instant::now();
 
     loop {
@@ -603,6 +638,7 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
                     let (r, _credit) = crate::cluster::pick_replica(
                         &engines, placement, &mut rr_next, &spec,
                         shared.as_ref());
+                    // lamps-lint: allow(panic) pick_replica returns an in-range index
                     spec.arrival = engines[r].now();
                     let id = spec.id;
                     let _ = sink.send((id.0, RequestEvent::Queued));
@@ -610,6 +646,7 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
                         replica: r,
                     }));
                     sessions.insert(id, Session { sink, owner: r });
+                    // lamps-lint: allow(panic) pick_replica returns an in-range index
                     engines[r].submit(spec);
                 }
                 Ok(Command::ToolResult {
@@ -628,6 +665,7 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
                     // stays parked.
                     match sessions.get(&id) {
                         Some(session) => {
+                            // lamps-lint: allow(panic) session.owner tracks a valid replica index
                             if let Err(e) = engines[session.owner]
                                 .complete_api_call(
                                     id, index, Tokens(response_tokens))
@@ -691,6 +729,7 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
         // the once-only re-queue guard, and (once no sink remains) the
         // connection's writer pump.
         if last_timeout_sweep.elapsed() >= TIMEOUT_SWEEP_PERIOD {
+            // lamps-lint: allow(wall-clock) the timeout sweep tracks real elapsed client time
             last_timeout_sweep = std::time::Instant::now();
             // Scan the engines' own externally-parked sets, NOT the
             // session map: a request orphaned mid-decode (dead sink
@@ -835,6 +874,7 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
                 }
                 EngineEvent::Finished { id, .. } => {
                     (id, RequestEvent::Finished(
+                        // lamps-lint: allow(panic) session.owner tracks a valid replica index
                         build_completion(&engines[replica], id)))
                 }
                 EngineEvent::Dropped { id, reason } => {
@@ -1014,7 +1054,11 @@ pub fn serve_tcp(handle: ServerHandle, addr: &str) -> anyhow::Result<()> {
     for stream in listener.incoming() {
         let stream = stream?;
         let handle = {
-            let guard = handle.lock().unwrap();
+            // A panicked holder only ever cloned the handle; the
+            // data cannot be torn, so recover the guard.
+            let guard = handle
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             guard.clone()
         };
         std::thread::spawn(move || {
@@ -1107,7 +1151,9 @@ fn handle_conn(stream: TcpStream, handle: ServerHandle)
     let pump = std::thread::spawn(move || {
         for (id, ev) in ev_rx {
             let frame = ev.to_json(id);
-            let mut w = pump_writer.lock().unwrap();
+            let mut w = pump_writer
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             if write_line(&mut w, &frame).is_err() {
                 // Client gone: the engine thread detaches the sessions
                 // on its next failed send.
@@ -1121,7 +1167,9 @@ fn handle_conn(stream: TcpStream, handle: ServerHandle)
             continue;
         }
         if let Some(reply) = dispatch_line(&line, &handle, &ev_tx) {
-            let mut w = writer.lock().unwrap();
+            let mut w = writer
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             write_line(&mut w, &reply)?;
         }
     }

@@ -28,6 +28,11 @@ use lamps::util::Rng;
 fn check_against_shadow(m: &BlockManager,
                         shadow: &BTreeMap<RequestId, u64>,
                         capacity: Tokens) {
+    // The promoted self-check — the same one the engine's invariant
+    // auditor runs after every step (`lamps::audit`).
+    if let Err(e) = m.check_invariants() {
+        panic!("BlockManager self-check failed: {e}");
+    }
     let shadow_sum: u64 = shadow.values().sum();
     assert_eq!(m.used_tokens(), Tokens(shadow_sum),
                "used_tokens must equal the sum of live allocations");
@@ -153,6 +158,11 @@ struct PrefixShadow {
 fn check_prefix_invariants(m: &BlockManager,
                            shadow: &BTreeMap<RequestId, PrefixShadow>,
                            total_blocks: u64, block_size: u64) {
+    // The promoted self-check — the same one the engine's invariant
+    // auditor runs after every step (`lamps::audit`).
+    if let Err(e) = m.check_invariants() {
+        panic!("BlockManager self-check failed: {e}");
+    }
     // Block conservation across the three physical states.
     let free = m.free_tokens().0 / block_size;
     assert_eq!(free + m.pinned_blocks() + m.cached_blocks(), total_blocks,

@@ -420,3 +420,41 @@ fn prop_single_replica_fleet_matches_engine_multi_api() {
                    "cap {cap:?}");
     }
 }
+
+/// The always-on invariant auditor must be observationally pure: a
+/// fig6-shaped fleet run with the auditor forced on yields a
+/// byte-identical timeline report to the same run with it forced off —
+/// where this test drives the promoted checker
+/// ([`lamps::audit::check_fleet`]) by hand after every step instead.
+#[test]
+fn prop_audit_mode_is_byte_invisible_to_the_fleet_report() {
+    use lamps::config::AuditMode;
+    let mut rng = Rng::new(0xA0D1_7EA);
+    let trace = random_trace(&mut rng, 60);
+    let run = |audit: AuditMode, check_by_hand: bool| {
+        let mut cfg = SystemConfig::preset("lamps").unwrap();
+        cfg.memory_budget = Tokens(3_000);
+        cfg.replicas = 4;
+        cfg.placement = PlacementKind::MemoryOverTime;
+        cfg.audit = audit;
+        let mut set = ReplicaSet::simulated(cfg);
+        set.set_record_timeline(true);
+        for spec in &trace.requests {
+            set.enqueue(spec.clone());
+        }
+        let mut steps = 0u64;
+        while set.step() {
+            steps += 1;
+            assert!(steps < 5_000_000, "fleet failed to drain");
+            if check_by_hand {
+                if let Err(e) = lamps::audit::check_fleet(&set) {
+                    panic!("fleet invariant violated: {e}");
+                }
+            }
+        }
+        set.fleet_report().to_json(true)
+    };
+    let on = run(AuditMode::On, false);
+    let off = run(AuditMode::Off, true);
+    assert_eq!(on, off, "the auditor must not perturb the run");
+}

@@ -14,6 +14,7 @@ use lamps::config::{CostModel, HandlingPolicy, PlacementKind,
 use lamps::core::request::{ApiCallSpec, ApiType, HandlingStrategy,
                            RequestSpec};
 use lamps::core::types::{Micros, RequestId, Tokens};
+use lamps::audit::{check_stream, StreamEvent};
 use lamps::server::{self, RequestEvent};
 
 fn fast_cost() -> CostModel {
@@ -49,7 +50,11 @@ fn sim_call(decode_before: u64, api_ms: u64, response: u64)
     }
 }
 
-/// The satellite invariants, checked over one session's full stream.
+/// The satellite invariants, checked over one session's full stream
+/// by the promoted stream machine ([`lamps::audit::check_stream`] —
+/// the same checker the engine's always-on auditor feeds), plus the
+/// server-level head shape the engine-journal alphabet deliberately
+/// leaves optional (sessions always announce Queued then Placed).
 fn assert_stream_invariants(events: &[RequestEvent]) {
     assert!(!events.is_empty(), "a session delivers at least a terminal");
     // Exactly one terminal event, and it closes the stream.
@@ -63,61 +68,35 @@ fn assert_stream_invariants(events: &[RequestEvent]) {
             "stream must start with Queued: {events:?}");
     assert!(matches!(events[1], RequestEvent::Placed { .. }),
             "Placed must directly follow Queued: {events:?}");
-    // A rescue, if any, happens before the request ever runs.
-    if let Some(rescued) = events
-        .iter()
-        .position(|e| matches!(e, RequestEvent::Rescued { .. }))
-    {
-        let first_progress = events.iter().position(|e| {
-            matches!(e,
-                     RequestEvent::FirstToken
-                         | RequestEvent::Tokens { .. }
-                         | RequestEvent::ApiCallStarted { .. })
-        });
-        if let Some(p) = first_progress {
-            assert!(rescued < p,
-                    "a rescue can only precede execution: {events:?}");
-        }
-    }
-    // At most one FirstToken, before any Tokens.
-    let first_token = events
-        .iter()
-        .position(|e| matches!(e, RequestEvent::FirstToken));
-    assert!(events
-                .iter()
-                .filter(|e| matches!(e, RequestEvent::FirstToken))
-                .count()
-                <= 1);
-    if let Some(tokens) = events
-        .iter()
-        .position(|e| matches!(e, RequestEvent::Tokens { .. }))
-    {
-        assert_eq!(first_token.map(|f| f < tokens), Some(true),
-                   "FirstToken precedes token chunks: {events:?}");
-    }
-    // API call events pair up, in index order, never nested.
-    let mut open: Option<usize> = None;
-    let mut next_index = 0usize;
-    for e in events {
-        match e {
+    // Everything else — rescue-before-execution, FirstToken ≤ 1 and
+    // before Tokens, API calls pairing in index order without nesting,
+    // finishing only with no call open, nothing after the terminal —
+    // is the machine's contract.
+    let mapped = events.iter().filter_map(|e| {
+        Some(match e {
+            RequestEvent::Queued => StreamEvent::Queued,
+            RequestEvent::Placed { .. } => StreamEvent::Placed,
+            RequestEvent::Rescued { .. } => StreamEvent::Rescued,
+            RequestEvent::FirstToken => StreamEvent::FirstToken,
+            RequestEvent::Tokens { .. } => StreamEvent::Tokens,
             RequestEvent::ApiCallStarted { index, .. } => {
-                assert!(open.is_none(), "nested API call: {events:?}");
-                assert_eq!(*index, next_index,
-                           "calls start in order: {events:?}");
-                open = Some(*index);
+                StreamEvent::ApiStarted { index: *index }
             }
             RequestEvent::ApiCallCompleted { index, .. } => {
-                assert_eq!(open, Some(*index),
-                           "completion without a start: {events:?}");
-                open = None;
-                next_index += 1;
+                StreamEvent::ApiCompleted { index: *index }
             }
-            _ => {}
-        }
-    }
-    if matches!(events.last().unwrap(), RequestEvent::Finished(_)) {
-        assert!(open.is_none(),
-                "finished with an API call still open: {events:?}");
+            RequestEvent::Finished(_) => {
+                StreamEvent::Terminal { finished: true }
+            }
+            RequestEvent::Dropped { .. } => {
+                StreamEvent::Terminal { finished: false }
+            }
+            // Non-terminal protocol errors carry no lifecycle state.
+            RequestEvent::Error { .. } => return None,
+        })
+    });
+    if let Err(e) = check_stream(RequestId(0), mapped) {
+        panic!("stream invariant violated: {e}\nin {events:?}");
     }
 }
 
