@@ -14,14 +14,17 @@
 //! cargo run --example session_client
 //! ```
 
+use std::borrow::Cow;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
 use lamps::config::{ApiSourceKind, CostModel, SystemConfig};
+use lamps::core::request::ApiType;
 use lamps::core::types::Micros;
 use lamps::server;
 use lamps::util::json;
+use lamps::wire::{CallFrame, RequestFrame, ToolResultFrame};
 
 fn main() -> anyhow::Result<()> {
     // A fast cost model so the demo finishes in milliseconds of model
@@ -61,11 +64,19 @@ fn main() -> anyhow::Result<()> {
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
 
-    let request = "{\"type\":\"request\",\
-                    \"prompt\":\"what is 6 times 7?\",\
-                    \"output_tokens\":4,\
-                    \"api_calls\":[{\"decode_before\":2,\
-                    \"api_type\":\"math\",\"response_tokens\":2}]}";
+    // The typed client-side constructor emits the same canonical line
+    // documented in examples/protocol_v2.ndjson.
+    let request = RequestFrame {
+        prompt: Cow::Borrowed("what is 6 times 7?"),
+        api_calls: vec![CallFrame {
+            decode_before: 2,
+            api_ms: None,
+            api_type: ApiType::Math,
+            response_tokens: 2,
+        }],
+        output_tokens: 4,
+    }
+    .to_line();
     println!("-> {request}");
     writer.write_all(request.as_bytes())?;
     writer.write_all(b"\n")?;
@@ -90,9 +101,12 @@ fn main() -> anyhow::Result<()> {
                 // "Run the tool" — the whole point: the server cannot
                 // know when (or with how many tokens) this returns.
                 std::thread::sleep(Duration::from_millis(25));
-                let result = format!(
-                    "{{\"type\":\"tool_result\",\"id\":{id},\
-                     \"index\":{index},\"response_tokens\":2}}");
+                let result = ToolResultFrame {
+                    id,
+                    index,
+                    response_tokens: 2,
+                }
+                .to_line();
                 println!("-> {result}");
                 writer.write_all(result.as_bytes())?;
                 writer.write_all(b"\n")?;

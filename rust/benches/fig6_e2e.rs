@@ -12,9 +12,16 @@
 //! `LAMPS_PREFIX_CACHE=on` for per-replica prefix caching and
 //! `LAMPS_SHARED_PREFIX=on` for the cross-replica shared prefix index
 //! (pair the latter with `LAMPS_PLACEMENT=prefix-affinity`).
-use lamps::bench::{print_cells, print_headline, run_cell_fleet_shared,
-                   Cell, Dataset, ModelPreset, SYSTEMS};
+//!
+//! Set `LAMPS_BENCH_JSON=/path/BENCH_fig6.json` to also write the grid
+//! as a stable perf-trajectory snapshot (per-cell simulated latency /
+//! TTFT percentiles plus measured wall-clock engine-steps/sec — see
+//! `lamps::bench::cell_json`).
+use lamps::bench::{cell_json, print_cells, print_headline,
+                   run_cell_fleet_shared, write_bench_json, Cell,
+                   Dataset, ModelPreset, SYSTEMS};
 use lamps::config::{ComposeConfig, PlacementKind, PrefixCacheConfig};
+use lamps::util::json;
 
 fn env_on(name: &str) -> bool {
     matches!(std::env::var(name).as_deref(),
@@ -53,21 +60,40 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(250);
+    let mut snapshot: Vec<json::Value> = Vec::new();
     for model in [ModelPreset::GptJ6b, ModelPreset::Vicuna13b] {
         for dataset in Dataset::ALL {
             let mut cells: Vec<Cell> = Vec::new();
             for &rate in &rates {
                 for system in SYSTEMS {
-                    cells.push(run_cell_fleet_shared(
+                    let t0 = std::time::Instant::now();
+                    let cell = run_cell_fleet_shared(
                         system, dataset, model, rate, n, 42, None,
                         compose, replicas, placement, prefix,
-                        shared_prefix));
+                        shared_prefix);
+                    let wall_us = t0.elapsed().as_micros() as u64;
+                    snapshot.push(cell_json(&cell, wall_us));
+                    cells.push(cell);
                 }
             }
             print_cells(&format!("Fig 6 — {} / {}", dataset.label(),
                                  model.label()),
                         &cells);
             print_headline(&cells);
+        }
+    }
+    if let Ok(path) = std::env::var("LAMPS_BENCH_JSON") {
+        let body = vec![
+            ("requests_per_cell", json::num(n as f64)),
+            ("replicas", json::num(replicas as f64)),
+            ("cells", json::Value::Arr(snapshot)),
+        ];
+        match write_bench_json(&path, "fig6", body) {
+            Ok(()) => eprintln!("bench json written to {path}"),
+            Err(e) => {
+                eprintln!("failed to write bench json {path}: {e}");
+                std::process::exit(1);
+            }
         }
     }
 }

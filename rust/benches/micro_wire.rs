@@ -1,0 +1,491 @@
+//! micro_wire: wire-layer hot-path microbench — inbound frame parsing
+//! and outbound event encoding, typed zero-copy (`lamps::wire`) versus
+//! the allocating `util::json` tree path it replaced.
+//!
+//! Three jobs in one binary:
+//!
+//! 1. **Correctness cross-check** (always): every corpus frame must
+//!    encode byte-identically through both paths before anything is
+//!    timed — a perf win that changes bytes is a protocol break.
+//! 2. **Measurement**: frames/sec + allocations/frame for both paths,
+//!    both directions, via a counting global allocator. The typed path
+//!    must allocate strictly less and parse/encode strictly faster, or
+//!    the bench exits non-zero (the PR's acceptance criterion, kept
+//!    honest forever).
+//! 3. **Perf trajectory**: `--json PATH` (or `LAMPS_BENCH_JSON`)
+//!    writes the stable `BENCH_micro_wire.json` snapshot; `--gate
+//!    PATH` (or `LAMPS_BENCH_GATE`) reads a checked-in snapshot and
+//!    fails if typed frames/sec regressed more than 20% against it.
+//!
+//! ```sh
+//! cargo bench --bench micro_wire -- \
+//!     --gate "$PWD/../BENCH_micro_wire.json" \
+//!     --json "$PWD/../BENCH_micro_wire.fresh.json"
+//! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use lamps::util::json::{self, Value};
+use lamps::wire::{CompletionFrame, Encoder, EventFrame, Frame};
+
+/// System allocator with an allocation counter — `alloc`/`realloc`
+/// calls are the "allocations" the zero-copy claim is about.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout,
+                      new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+// -------------------------------------------------------------------
+// Inbound: typed zero-copy parse vs Value-tree parse + field walk
+// -------------------------------------------------------------------
+
+/// The connection-realistic inbound mix: v2 requests (single- and
+/// multi-call), tool results (the per-call hot frame), a v1 one-shot,
+/// and an escape-heavy request (the lexer's owned slow path).
+fn inbound_corpus() -> Vec<String> {
+    vec![
+        "{\"type\":\"request\",\"prompt\":\"what is 6 times 7?\",\
+         \"output_tokens\":4,\"api_calls\":[{\"decode_before\":2,\
+         \"api_type\":\"math\",\"response_tokens\":2}]}"
+            .to_string(),
+        "{\"type\":\"request\",\"prompt\":\"plan my trip through three \
+         connecting flights and check the weather at each stop\",\
+         \"output_tokens\":40,\"api_calls\":[\
+         {\"decode_before\":5,\"api_type\":\"qa\",\"api_ms\":700,\
+         \"response_tokens\":32},\
+         {\"decode_before\":9,\"api_type\":\"image\"},\
+         {\"decode_before\":14,\"api_type\":\"tool\",\
+         \"response_tokens\":8}]}"
+            .to_string(),
+        "{\"type\":\"tool_result\",\"id\":3,\"index\":0,\
+         \"response_tokens\":2}"
+            .to_string(),
+        "{\"type\":\"tool_result\",\"id\":12345,\"index\":2,\
+         \"response_tokens\":64}"
+            .to_string(),
+        "{\"prompt\":\"legacy one-shot\",\"output_tokens\":5,\
+         \"pre_api_tokens\":2,\"api_ms\":30}"
+            .to_string(),
+        "{\"type\":\"request\",\"prompt\":\"escape \\\"heavy\\\" \
+         \\\\ prompt\\nwith\\ttabs and \\u20ac signs\",\
+         \"output_tokens\":6,\"api_calls\":[]}"
+            .to_string(),
+    ]
+}
+
+/// The pre-wire inbound path: `json::parse` into the `Value` tree,
+/// then the field walk `server/mod.rs` used to run (prompt/
+/// output_tokens/api_calls for requests, id/index/response_tokens for
+/// tool results). Returns a checksum so the work can't be optimized
+/// out.
+fn old_parse(line: &str) -> u64 {
+    let v = json::parse(line).expect("corpus lines are valid");
+    match v.get("type").and_then(|t| t.as_str()) {
+        Some("tool_result") => {
+            v.u64_field("id").expect("id")
+                + v.u64_field("index").expect("index")
+                + v.u64_field("response_tokens").expect("tokens")
+        }
+        _ => {
+            let prompt = v.str_field("prompt").expect("prompt");
+            let output = v.u64_field("output_tokens").expect("tokens");
+            let calls: u64 = match v.get("api_calls") {
+                Some(calls) => calls
+                    .as_arr()
+                    .expect("array")
+                    .iter()
+                    .map(|c| {
+                        c.u64_field("decode_before").expect("before")
+                            + c.get("api_ms")
+                                .and_then(|x| x.as_u64())
+                                .unwrap_or(0)
+                            + c.get("response_tokens")
+                                .and_then(|x| x.as_u64())
+                                .unwrap_or(4)
+                    })
+                    .sum(),
+                None => {
+                    // Legacy v1 synthesis: one implicit call.
+                    let pre = v
+                        .get("pre_api_tokens")
+                        .and_then(|x| x.as_u64())
+                        .unwrap_or(0);
+                    if pre > 0 {
+                        pre + v
+                            .get("api_ms")
+                            .and_then(|x| x.as_u64())
+                            .unwrap_or(0)
+                            + 4
+                    } else {
+                        0
+                    }
+                }
+            };
+            prompt.len() as u64 + output + calls
+        }
+    }
+}
+
+/// The typed zero-copy path, reduced to the same checksum.
+fn new_parse(line: &str) -> u64 {
+    match Frame::parse(line).expect("corpus lines are valid") {
+        Frame::Request(r) | Frame::V1Request(r) => {
+            r.prompt.len() as u64
+                + r.output_tokens
+                + r.api_calls
+                    .iter()
+                    .map(|c| {
+                        c.decode_before
+                            + c.api_ms.unwrap_or(0)
+                            + c.response_tokens
+                    })
+                    .sum::<u64>()
+        }
+        Frame::ToolResult(t) => t.id + t.index + t.response_tokens,
+        Frame::Cancel(c) => c.id,
+    }
+}
+
+// -------------------------------------------------------------------
+// Outbound: typed encoder vs Value-tree build + json::write
+// -------------------------------------------------------------------
+
+const GENERATED: [i32; 4] = [11, 7, -3, 42];
+
+/// The streaming-heavy outbound mix (tokens frames dominate a real
+/// session, so they dominate here too).
+fn outbound_corpus() -> Vec<EventFrame<'static>> {
+    let finished = CompletionFrame {
+        id: 7,
+        latency_us: 27_384,
+        ttft_us: Some(812),
+        tokens_decoded: 6,
+        generated: Some(&GENERATED),
+        dropped: None,
+    };
+    vec![
+        EventFrame::Queued { id: 7 },
+        EventFrame::Placed { id: 7, replica: 2 },
+        EventFrame::FirstToken { id: 7 },
+        EventFrame::Tokens { id: 7, chunk: 1 },
+        EventFrame::Tokens { id: 7, chunk: 1 },
+        EventFrame::Tokens { id: 7, chunk: 2 },
+        EventFrame::Tokens { id: 7, chunk: 4 },
+        EventFrame::ApiCallStarted {
+            id: 7,
+            index: 0,
+            strategy: "preserve",
+            predicted_us: 90,
+            external: true,
+        },
+        EventFrame::ApiCallCompleted {
+            id: 7,
+            index: 0,
+            actual_us: 25_310,
+        },
+        EventFrame::Finished(finished),
+    ]
+}
+
+/// Rebuild one outbound frame the pre-wire way: a fresh `Value` tree
+/// (BTreeMap per frame) serialized by `json::write` — exactly what
+/// `RequestEvent::to_json` did before the typed encoder.
+fn old_encode(frame: &EventFrame<'_>) -> String {
+    let v = match frame {
+        EventFrame::Queued { id } => json::obj(vec![
+            ("type", json::s("queued")),
+            ("id", json::num(*id as f64)),
+        ]),
+        EventFrame::Placed { id, replica } => json::obj(vec![
+            ("type", json::s("placed")),
+            ("id", json::num(*id as f64)),
+            ("replica", json::num(*replica as f64)),
+        ]),
+        EventFrame::FirstToken { id } => json::obj(vec![
+            ("type", json::s("first_token")),
+            ("id", json::num(*id as f64)),
+        ]),
+        EventFrame::Tokens { id, chunk } => json::obj(vec![
+            ("type", json::s("tokens")),
+            ("id", json::num(*id as f64)),
+            ("chunk", json::num(*chunk as f64)),
+        ]),
+        EventFrame::ApiCallStarted {
+            id,
+            index,
+            strategy,
+            predicted_us,
+            external,
+        } => json::obj(vec![
+            ("type", json::s("api_call_started")),
+            ("id", json::num(*id as f64)),
+            ("index", json::num(*index as f64)),
+            ("strategy", json::s(strategy)),
+            ("predicted_us", json::num(*predicted_us as f64)),
+            ("external", Value::Bool(*external)),
+        ]),
+        EventFrame::ApiCallCompleted { id, index, actual_us } => {
+            json::obj(vec![
+                ("type", json::s("api_call_completed")),
+                ("id", json::num(*id as f64)),
+                ("index", json::num(*index as f64)),
+                ("actual_us", json::num(*actual_us as f64)),
+            ])
+        }
+        EventFrame::Finished(c) => {
+            let mut v = json::obj(vec![
+                ("id", json::num(c.id as f64)),
+                ("latency_us", json::num(c.latency_us as f64)),
+                ("tokens_decoded", json::num(c.tokens_decoded as f64)),
+                ("ttft_us", match c.ttft_us {
+                    Some(t) => json::num(t as f64),
+                    None => Value::Null,
+                }),
+                ("generated", match c.generated {
+                    Some(toks) => Value::Arr(
+                        toks.iter()
+                            .map(|t| json::num(*t as f64))
+                            .collect()),
+                    None => Value::Null,
+                }),
+            ]);
+            if let Value::Obj(map) = &mut v {
+                map.insert("type".to_string(), json::s("finished"));
+            }
+            v
+        }
+        other => panic!("corpus has no old-path shape for {other:?}"),
+    };
+    json::write(&v)
+}
+
+// -------------------------------------------------------------------
+// Harness
+// -------------------------------------------------------------------
+
+struct Measured {
+    per_sec: f64,
+    allocs_per_frame: f64,
+}
+
+/// Time `iters` passes of `work` over a `corpus_len`-frame corpus,
+/// returning frames/sec and allocations/frame.
+fn measure<F: FnMut() -> u64>(iters: u64, corpus_len: usize,
+                              mut work: F) -> Measured {
+    // Warmup pass (fills allocator caches, faults in code).
+    let mut sink = work();
+    let a0 = allocs();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        sink = sink.wrapping_add(work());
+    }
+    let elapsed = t0.elapsed();
+    let da = allocs() - a0;
+    std::hint::black_box(sink);
+    let frames = iters * corpus_len as u64;
+    let secs = elapsed.as_secs_f64().max(1e-9);
+    Measured {
+        per_sec: frames as f64 / secs,
+        allocs_per_frame: da as f64 / frames as f64,
+    }
+}
+
+fn arg_or_env(args: &[String], flag: &str, env: &str)
+              -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+        .or_else(|| std::env::var(env).ok())
+}
+
+fn gate_value(v: &Value, section: &str, key: &str) -> Option<f64> {
+    v.get(section)?.get(key)?.as_f64()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let iters: u64 = std::env::var("LAMPS_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20_000);
+
+    let inbound = inbound_corpus();
+    let outbound = outbound_corpus();
+
+    // -- Correctness before speed -----------------------------------
+    // Typed parse must accept every corpus line the tree parser
+    // accepts (checksums agree)...
+    for line in &inbound {
+        assert_eq!(new_parse(line), old_parse(line),
+                   "parse divergence on {line}");
+    }
+    // ...and the typed encoder must be byte-identical to the old
+    // writer on every outbound frame.
+    for frame in &outbound {
+        assert_eq!(Encoder::frame_to_string(frame), old_encode(frame),
+                   "encode divergence on {frame:?}");
+    }
+
+    // -- Inbound ----------------------------------------------------
+    let old_in = measure(iters, inbound.len(), || {
+        inbound.iter().map(|l| old_parse(l)).sum()
+    });
+    let new_in = measure(iters, inbound.len(), || {
+        inbound.iter().map(|l| new_parse(l)).sum()
+    });
+
+    // -- Outbound ---------------------------------------------------
+    let old_out = measure(iters, outbound.len(), || {
+        outbound
+            .iter()
+            .map(|f| old_encode(f).len() as u64)
+            .sum()
+    });
+    let mut enc = Encoder::with_capacity(4096);
+    let new_out = measure(iters, outbound.len(), || {
+        for f in &outbound {
+            enc.push(f);
+        }
+        let n = enc.len() as u64;
+        enc.clear();
+        n
+    });
+
+    println!("== micro_wire ({} frames/pass, {iters} passes) ==",
+             inbound.len() + outbound.len());
+    println!("{:<26} {:>14} {:>14}", "path", "frames/s", "allocs/frame");
+    println!("{:<26} {:>14.0} {:>14.3}", "inbound  util::json",
+             old_in.per_sec, old_in.allocs_per_frame);
+    println!("{:<26} {:>14.0} {:>14.3}", "inbound  wire (typed)",
+             new_in.per_sec, new_in.allocs_per_frame);
+    println!("{:<26} {:>14.0} {:>14.3}", "outbound util::json",
+             old_out.per_sec, old_out.allocs_per_frame);
+    println!("{:<26} {:>14.0} {:>14.3}", "outbound wire (typed)",
+             new_out.per_sec, new_out.allocs_per_frame);
+
+    // -- Acceptance criteria, kept honest on every run --------------
+    let mut failed = false;
+    if new_in.allocs_per_frame >= old_in.allocs_per_frame {
+        eprintln!("FAIL: typed inbound parse must allocate strictly \
+                   less ({:.3} vs {:.3})",
+                  new_in.allocs_per_frame, old_in.allocs_per_frame);
+        failed = true;
+    }
+    if new_out.allocs_per_frame >= old_out.allocs_per_frame {
+        eprintln!("FAIL: typed outbound encode must allocate strictly \
+                   less ({:.3} vs {:.3})",
+                  new_out.allocs_per_frame, old_out.allocs_per_frame);
+        failed = true;
+    }
+    if new_in.per_sec <= old_in.per_sec {
+        eprintln!("FAIL: typed inbound parse must be faster \
+                   ({:.0} vs {:.0} frames/s)",
+                  new_in.per_sec, old_in.per_sec);
+        failed = true;
+    }
+    if new_out.per_sec <= old_out.per_sec {
+        eprintln!("FAIL: typed outbound encode must be faster \
+                   ({:.0} vs {:.0} events/s)",
+                  new_out.per_sec, old_out.per_sec);
+        failed = true;
+    }
+
+    // -- Regression gate against the checked-in baseline ------------
+    if let Some(path) = arg_or_env(&args, "--gate", "LAMPS_BENCH_GATE") {
+        match std::fs::read_to_string(&path)
+            .map_err(|e| e.to_string())
+            .and_then(|text| {
+                json::parse(&text).map_err(|e| e.to_string())
+            }) {
+            Ok(baseline) => {
+                let checks = [
+                    ("inbound", "frames_per_sec", new_in.per_sec),
+                    ("outbound", "events_per_sec", new_out.per_sec),
+                ];
+                for (section, key, measured) in checks {
+                    let Some(base) =
+                        gate_value(&baseline, section, key)
+                    else {
+                        eprintln!("FAIL: baseline {path} is missing \
+                                   {section}.{key}");
+                        failed = true;
+                        continue;
+                    };
+                    let floor = base * 0.8;
+                    if measured < floor {
+                        eprintln!(
+                            "FAIL: {section} {key} {measured:.0} \
+                             regressed >20% vs baseline {base:.0} \
+                             (floor {floor:.0}) from {path}");
+                        failed = true;
+                    } else {
+                        println!(
+                            "gate ok: {section} {key} {measured:.0} \
+                             >= floor {floor:.0}");
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!("FAIL: cannot read gate baseline {path}: {e}");
+                failed = true;
+            }
+        }
+    }
+
+    // -- Perf-trajectory snapshot -----------------------------------
+    if let Some(path) = arg_or_env(&args, "--json", "LAMPS_BENCH_JSON") {
+        let body = vec![
+            ("iters", json::num(iters as f64)),
+            ("inbound", json::obj(vec![
+                ("frames_per_sec", json::num(new_in.per_sec)),
+                ("frames_per_sec_baseline", json::num(old_in.per_sec)),
+                ("allocs_per_frame", json::num(new_in.allocs_per_frame)),
+                ("allocs_per_frame_baseline",
+                 json::num(old_in.allocs_per_frame)),
+            ])),
+            ("outbound", json::obj(vec![
+                ("events_per_sec", json::num(new_out.per_sec)),
+                ("events_per_sec_baseline", json::num(old_out.per_sec)),
+                ("allocs_per_event", json::num(new_out.allocs_per_frame)),
+                ("allocs_per_event_baseline",
+                 json::num(old_out.allocs_per_frame)),
+            ])),
+        ];
+        match lamps::bench::write_bench_json(&path, "micro_wire", body) {
+            Ok(()) => eprintln!("bench json written to {path}"),
+            Err(e) => {
+                eprintln!("FAIL: cannot write bench json {path}: {e}");
+                failed = true;
+            }
+        }
+    }
+
+    if failed {
+        std::process::exit(1);
+    }
+}

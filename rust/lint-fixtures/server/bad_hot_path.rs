@@ -1,0 +1,8 @@
+//! Seeded `wire-hot-path` violations: allocating `util::json`
+//! round-trips on the serving hot path instead of the typed
+//! `crate::wire` layer (the PR 7 zero-copy class).
+
+pub fn dispatch(line: &str) -> String {
+    let value = json::parse(line).unwrap_or(json::Value::Null);
+    json::write(&value)
+}

@@ -7,7 +7,8 @@ use crate::config::{ComposeConfig, CostModel, PlacementKind,
                     PrefixCacheConfig, SystemConfig};
 use crate::core::types::Micros;
 use crate::engine::Engine;
-use crate::metrics::RunReport;
+use crate::metrics::{RunReport, Summary};
+use crate::util::json::{self, Value};
 use crate::workload::{infercept, toolbench, Trace};
 
 /// The two model presets of the paper's evaluation, as cost-model scale
@@ -204,6 +205,58 @@ pub fn print_cells(title: &str, cells: &[Cell]) {
                  c.report.throughput_rps,
                  c.report.completed);
     }
+}
+
+/// A [`Summary`] in the stable `BENCH_*.json` schema.
+pub fn summary_json(s: &Summary) -> Value {
+    json::obj(vec![
+        ("mean_us", json::num(s.mean_us)),
+        ("p50_us", json::num(s.p50_us)),
+        ("p99_us", json::num(s.p99_us)),
+        ("max_us", json::num(s.max_us)),
+    ])
+}
+
+/// One grid cell in the stable `BENCH_*.json` schema: the simulated
+/// completion/TTFT percentiles plus the measured wall-clock cost of
+/// producing them (`wall_elapsed_us` comes from the bench binary —
+/// library code never reads the wall clock). `engine_steps_per_sec`
+/// is the raw-speed axis the perf trajectory tracks: simulated
+/// engine iterations retired per wall second.
+pub fn cell_json(cell: &Cell, wall_elapsed_us: u64) -> Value {
+    let steps_per_sec = if wall_elapsed_us == 0 {
+        0.0
+    } else {
+        cell.report.iterations as f64 * 1e6 / wall_elapsed_us as f64
+    };
+    json::obj(vec![
+        ("system", json::s(&cell.system)),
+        ("dataset", json::s(cell.dataset)),
+        ("model", json::s(cell.model)),
+        ("rate", json::num(cell.rate)),
+        ("completed", json::num(cell.report.completed as f64)),
+        ("latency", summary_json(&cell.report.latency)),
+        ("ttft", summary_json(&cell.report.ttft)),
+        ("throughput_rps", json::num(cell.report.throughput_rps)),
+        ("wall", json::obj(vec![
+            ("elapsed_us", json::num(wall_elapsed_us as f64)),
+            ("engine_steps_per_sec", json::num(steps_per_sec)),
+        ])),
+    ])
+}
+
+/// Write a `BENCH_<name>.json` perf-trajectory snapshot: a single
+/// JSON object with the bench name first and the caller's payload
+/// pairs after it. The checked-in copies at the repository root are
+/// the regression baselines the CI bench smoke compares against.
+pub fn write_bench_json(path: &str, bench: &str,
+                        body: Vec<(&str, Value)>)
+                        -> std::io::Result<()> {
+    let mut pairs = vec![("bench", json::s(bench))];
+    pairs.extend(body);
+    let mut text = json::write(&json::obj(pairs));
+    text.push('\n');
+    std::fs::write(path, text)
 }
 
 /// §6.2-style headline: percentage improvement of `a` over `b`

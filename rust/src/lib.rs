@@ -42,13 +42,15 @@
 //! the paper relies on are machine-checked at two layers:
 //!
 //! - **Static** — [`lint`] + the `lamps-lint` binary enforce the
-//!   project rules distilled from PR 1–5 reviews: no string-spliced
+//!   project rules distilled from PR 1–6 reviews: no string-spliced
 //!   JSON on the wire (`wire-format`), no `.unwrap()`/`panic!`/
 //!   slice-indexing in scheduler-critical dirs without a
 //!   `// lamps-lint: allow(<rule>) <reason>` escape (`panic`), no
 //!   wall-clock reads outside `engine/clock.rs` (`wall-clock`), no
 //!   f64 accumulation over `HashMap` iteration order (`float-iter`),
-//!   and read-only placement probes (`probe-purity`). CI runs
+//!   read-only placement probes (`probe-purity`), and no allocating
+//!   `util::json` calls on the serving hot path now that [`wire`]
+//!   owns frame encode/decode (`wire-hot-path`). CI runs
 //!   `cargo run --bin lamps-lint` as a gate.
 //! - **Runtime** — [`audit`] re-derives the block-conservation,
 //!   prefix-refcount, shared-index-subset, queue-order, clock- and
@@ -72,6 +74,7 @@ pub mod predictor;
 pub mod runtime;
 pub mod server;
 pub mod util;
+pub mod wire;
 pub mod workload;
 
 pub use config::SystemConfig;

@@ -1,5 +1,5 @@
 //! `lamps-lint` — the project's own static analysis, distilled from
-//! five PRs of review conventions into machine-checked rules (see
+//! six PRs of review conventions into machine-checked rules (see
 //! `bin/lamps-lint.rs` for the CLI and `ROADMAP.md` for the history).
 //!
 //! A self-contained token-level Rust source scanner — no syn, no
@@ -9,7 +9,8 @@
 //! | rule           | scope                               | violation |
 //! |----------------|-------------------------------------|-----------|
 //! | `wire-format`  | `server/`                           | JSON assembled via `format!`/`write!`/`push_str` string splicing (the PR 5 injection class) |
-//! | `panic`        | `server/ cluster/ engine/ kv/`      | `.unwrap()` / `.expect()` / `panic!` / slice-indexing in non-test code |
+//! | `wire-hot-path`| `server/`                           | allocating `util::json` round-trips (`json::parse` / `json::write`) on the serving hot path — frames go through `crate::wire` (the PR 7 zero-copy redesign); `json::obj`/`num`/`s` constructors stay legal |
+//! | `panic`        | `server/ cluster/ engine/ kv/ wire/`| `.unwrap()` / `.expect()` / `panic!` / slice-indexing in non-test code |
 //! | `wall-clock`   | everywhere but `engine/clock.rs`    | `Instant::now` / `SystemTime` (sim-clock determinism) |
 //! | `float-iter`   | `engine/ cluster/ coordinator/`     | f64 accumulation over `HashMap` iteration order (the PR 3 placement-reproducibility class) |
 //! | `probe-purity` | everywhere                          | a placement probe (`load_memory_over_time*`, `placement_score*`, `prefix_credits`) taking any `&mut` |
@@ -35,9 +36,10 @@ use std::fs;
 use std::io;
 use std::path::{Path, PathBuf};
 
-/// The five enforced rule slugs (what `allow(...)` accepts).
-pub const RULES: [&str; 5] = [
+/// The six enforced rule slugs (what `allow(...)` accepts).
+pub const RULES: [&str; 6] = [
     "wire-format",
+    "wire-hot-path",
     "panic",
     "wall-clock",
     "float-iter",
@@ -495,7 +497,7 @@ pub fn scan_source(rel_path: &str, src: &str) -> Vec<Violation> {
     let tokens = strip_test_items(lex(src));
     let mut ctx = Ctx { file: &rel, allows, out: Vec::new() };
 
-    let panic_scope = ["server", "cluster", "engine", "kv"]
+    let panic_scope = ["server", "cluster", "engine", "kv", "wire"]
         .iter()
         .any(|d| in_dir(&rel, d));
     let float_scope = ["engine", "cluster", "coordinator"]
@@ -512,6 +514,7 @@ pub fn scan_source(rel_path: &str, src: &str) -> Vec<Violation> {
     }
     if wire_scope {
         rule_wire_format(&tokens, &mut ctx);
+        rule_wire_hot_path(&tokens, &mut ctx);
     }
     if float_scope {
         rule_float_iter(&tokens, &mut ctx);
@@ -635,6 +638,35 @@ fn rule_wire_format(t: &[Token], ctx: &mut Ctx<'_>) {
             }
             j += 1;
         }
+    }
+}
+
+/// Rule `wire-hot-path`: allocating `util::json` round-trips in
+/// `server/` non-test code. Every per-frame path speaks `crate::wire`
+/// (borrowed-slice `Frame::parse`, reusable `Encoder`) since the PR 7
+/// redesign; a `json::parse` / `json::write` call there reintroduces
+/// the Value-tree allocation storm the wire layer removed. The typed
+/// constructors (`json::obj` / `json::num` / `json::s`) stay legal —
+/// they feed cold paths like report serialization, not the pump.
+fn rule_wire_hot_path(t: &[Token], ctx: &mut Ctx<'_>) {
+    for i in 0..t.len() {
+        if id_at(t, i) != Some("json")
+            || !punct_at(t, i + 1, ':')
+            || !punct_at(t, i + 2, ':')
+        {
+            continue;
+        }
+        let Some(name) = id_at(t, i + 3) else { continue };
+        if !matches!(name, "parse" | "write") {
+            continue;
+        }
+        if !punct_at(t, i + 4, '(') {
+            continue;
+        }
+        ctx.push(t[i].line, "wire-hot-path", format!(
+            "json::{name} on the server hot path — frames go through \
+             crate::wire (Frame::parse / Encoder), not the allocating \
+             Value tree (PR 7 zero-copy class)"));
     }
 }
 

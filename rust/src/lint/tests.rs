@@ -53,6 +53,52 @@ pub fn frame(out: &mut String) {
     assert!(rules_hit(&v).contains(&"wire-format"), "{v:?}");
 }
 
+// -- wire-hot-path -----------------------------------------------------
+
+#[test]
+fn wire_hot_path_flags_json_round_trips_in_server() {
+    let src = r#"
+pub fn dispatch(line: &str) -> String {
+    let v = json::parse(line).unwrap_or(json::Value::Null);
+    json::write(&v)
+}
+"#;
+    let v = scan_source("server/conn.rs", src);
+    let hits = rules_hit(&v);
+    assert_eq!(hits.iter().filter(|r| **r == "wire-hot-path").count(),
+               2, "{v:?}");
+}
+
+#[test]
+fn wire_hot_path_spares_constructors_other_dirs_and_tests() {
+    // The typed constructors stay legal in server/ (cold paths).
+    let constructors = r#"
+pub fn report(id: u64) -> json::Value {
+    json::obj(vec![("id", json::num(id as f64)), ("ok", json::s("y"))])
+}
+"#;
+    assert!(scan_source("server/report.rs", constructors).is_empty());
+    // Outside server/ the rule does not apply.
+    let elsewhere = r#"
+pub fn load(text: &str) -> Result<json::Value, String> {
+    json::parse(text)
+}
+"#;
+    assert!(scan_source("bench/baseline.rs", elsewhere).is_empty());
+    // Test items are stripped before the rule runs.
+    let test_only = r#"
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn round_trip() {
+        let v = json::parse("{}").unwrap();
+        assert_eq!(json::write(&v), "{}");
+    }
+}
+"#;
+    assert!(scan_source("server/conn.rs", test_only).is_empty());
+}
+
 // -- panic -------------------------------------------------------------
 
 #[test]

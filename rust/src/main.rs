@@ -78,6 +78,10 @@ WIRE PROTOCOL (serve; JSON lines over TCP, one frame per line):
      resolves an externally-held call (--api-source external: the
      client runs the tool; the engine parks the request under the
      strategy chosen from the predicted duration until this arrives).
+  -> {\"type\":\"cancel\", \"id\":N}
+     reserved: parses today and is acknowledged with a session-scoped
+     error frame while the session keeps streaming; teardown lands in
+     a later revision.
   See examples/protocol_v2.ndjson for a worked transcript.
 
   --api-source sim (default) simulates API durations server-side and

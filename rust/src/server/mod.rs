@@ -15,24 +15,37 @@
 //!
 //! # Wire protocol v2 (JSON lines over TCP, [`serve_tcp`])
 //!
-//! Client → server, one JSON object per line:
+//! Both directions of the protocol are typed in [`crate::wire`]:
+//! inbound lines decode through the zero-copy [`crate::wire::Frame`]
+//! lexer (strings borrow the read buffer unless they contain escapes)
+//! and outbound frames are [`crate::wire::EventFrame`] values encoded
+//! into a reusable per-connection buffer. Client → server, one JSON
+//! object per line:
 //!
 //! - `{"type": "request", "prompt": "...", "output_tokens": N,
 //!    "api_calls": [{"decode_before": N, "api_type": "qa",
 //!    "api_ms": N, "response_tokens": N}, ...]}`
-//!   opens a session. `api_calls` may name any Table 2 class
+//!   ([`crate::wire::Frame::Request`]) opens a session. `api_calls`
+//!   may name any Table 2 class
 //!   (`math|qa|ve|chatbot|image|tts|tool`); `api_ms` is the simulated
 //!   duration — under an external source it is only a prediction hint,
 //!   and omitted it defaults to the class's historical mean
 //!   (`predictor::api_stats`). `response_tokens` defaults to 4.
 //! - `{"type": "tool_result", "id": N, "index": N,
-//!    "response_tokens": N}`
+//!    "response_tokens": N}` ([`crate::wire::Frame::ToolResult`])
 //!   resolves session `N`'s externally-held API call `index`; the
 //!   response length the tool actually produced replaces the spec's.
+//! - `{"type": "cancel", "id": N}` ([`crate::wire::Frame::Cancel`]) is
+//!   **reserved**: the frame type parses and is acknowledged with a
+//!   session-scoped `error` frame, but cancellation is not implemented
+//!   yet — the session keeps streaming. Reserving the type now means
+//!   old servers already answer it with a well-formed frame instead of
+//!   `unknown frame type`.
 //! - A line with **no** `type` field is a legacy v1 request
-//!   (`{"prompt", "output_tokens", "pre_api_tokens", "api_ms"}`): the
-//!   server replies with a single [`Completion`] object and no event
-//!   frames — existing clients keep working.
+//!   (`{"prompt", "output_tokens", "pre_api_tokens", "api_ms"}`,
+//!   [`crate::wire::Frame::V1Request`]): the server replies with a
+//!   single [`Completion`] object and no event frames — existing
+//!   clients keep working.
 //!
 //! Server → client, one JSON frame per line, each carrying `type` and
 //! the session `id`: `queued`, `placed` (`replica`), `rescued`
@@ -45,22 +58,27 @@
 //!
 //! (The offline vendor set has no tokio; the frontend is std-thread
 //! based. Each TCP connection gets its own reader thread plus one
-//! writer pump serializing all of its sessions' event frames —
-//! adequate for the demo-scale deployments this CPU image can serve.)
+//! writer pump batching all of its sessions' event frames into one
+//! buffered write per drain — adequate for the demo-scale deployments
+//! this CPU image can serve.)
 //!
 //! # Correctness tooling
 //!
-//! Every outbound frame is built through [`crate::util::json`] —
-//! splicing client text into a JSON skeleton by hand is banned by
-//! `lamps-lint`'s `wire-format` rule (the PR 5 injection class), and
-//! its `panic` rule keeps this layer's hot paths on logged-teardown
+//! Every outbound frame is encoded through the typed
+//! [`crate::wire::Encoder`] — splicing client text into a JSON
+//! skeleton by hand is banned by `lamps-lint`'s `wire-format` rule
+//! (the PR 5 injection class), and calling the allocating
+//! [`crate::util::json`] reader/writer from this module's non-test
+//! code is banned by its `wire-hot-path` rule (the typed wire layer is
+//! byte-for-byte compatible, so there is never a reason to fall back).
+//! The `panic` rule keeps this layer's hot paths on logged-teardown
 //! error handling rather than unwraps. In debug builds each replica
 //! engine additionally runs the [`crate::audit`] invariant auditor
 //! after every step, so the randomized session/fuzz tests
 //! (`tests/session_events.rs`, `tests/wire_fuzz.rs`) exercise the
 //! full event-causality machine end to end.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -69,13 +87,14 @@ use std::time::Duration;
 
 use crate::cluster::PrefixDeltaSink;
 use crate::config::{ApiSourceKind, SystemConfig};
-use crate::core::request::{ApiType, HandlingStrategy, RequestSpec};
+use crate::core::request::{HandlingStrategy, RequestSpec};
 use crate::core::types::{Micros, RequestId, Tokens};
 use crate::engine::backend::Backend;
 use crate::engine::clock::Clock;
 use crate::engine::{Engine, EngineEvent};
 use crate::predictor::Predictor;
 use crate::util::json::{self, Value};
+use crate::wire::{self, EventFrame, FrameReader, WireLine};
 
 /// Idle poll period of the engine thread — also the cap on how long one
 /// replica's in-step wall-clock wait may stall the shared loop.
@@ -91,6 +110,14 @@ const EXTERNAL_CALL_TIMEOUT: Micros = Micros(600_000_000); // 10 min
 
 /// Cadence of the timeout sweep (it scans every open session).
 const TIMEOUT_SWEEP_PERIOD: Duration = Duration::from_secs(1);
+
+/// Soft cap on how many encoded event bytes one pump drain batches
+/// before flushing to the socket. The pump blocks for the first event,
+/// then opportunistically folds every already-queued event into the
+/// same buffer up to this bound — one buffered write per drain instead
+/// of one write + flush per frame — so a session streaming per-token
+/// `tokens` frames costs syscalls proportional to drains, not events.
+const PUMP_DRAIN_BYTES: usize = 32 * 1024;
 
 /// What the client receives when its request finishes.
 #[derive(Debug, Clone)]
@@ -130,8 +157,22 @@ impl Completion {
         json::obj(pairs)
     }
 
+    /// This completion as a borrowed wire frame payload (shared by the
+    /// v1 one-shot reply and the v2 `finished` event frame).
+    pub fn wire_frame(&self) -> wire::CompletionFrame<'_> {
+        wire::CompletionFrame {
+            id: self.id,
+            latency_us: self.latency_us,
+            ttft_us: self.ttft_us,
+            tokens_decoded: self.tokens_decoded,
+            generated: self.generated.as_deref(),
+            dropped: self.dropped.as_deref(),
+        }
+    }
+
     pub fn to_json(&self) -> String {
-        json::write(&self.to_value())
+        wire::Encoder::frame_to_string(
+            &EventFrame::Completion(self.wire_frame()))
     }
 }
 
@@ -182,75 +223,64 @@ impl RequestEvent {
                  RequestEvent::Finished(_) | RequestEvent::Dropped { .. })
     }
 
-    /// Render one protocol-v2 NDJSON frame. Every frame carries
-    /// `type` and the session `id`.
-    pub fn to_json(&self, id: u64) -> String {
-        let idv = json::num(id as f64);
-        let frame = match self {
-            RequestEvent::Queued => json::obj(vec![
-                ("type", json::s("queued")),
-                ("id", idv),
-            ]),
-            RequestEvent::Placed { replica } => json::obj(vec![
-                ("type", json::s("placed")),
-                ("id", idv),
-                ("replica", json::num(*replica as f64)),
-            ]),
-            RequestEvent::Rescued { from, to } => json::obj(vec![
-                ("type", json::s("rescued")),
-                ("id", idv),
-                ("from", json::num(*from as f64)),
-                ("to", json::num(*to as f64)),
-            ]),
-            RequestEvent::FirstToken => json::obj(vec![
-                ("type", json::s("first_token")),
-                ("id", idv),
-            ]),
-            RequestEvent::Tokens { chunk } => json::obj(vec![
-                ("type", json::s("tokens")),
-                ("id", idv),
-                ("chunk", json::num(*chunk as f64)),
-            ]),
+    /// This event as a borrowed typed wire frame carrying session
+    /// `id` — what the connection pump encodes. Key order and number
+    /// formatting are pinned to the old `util::json` writer by
+    /// [`crate::wire::Encoder`]'s tests.
+    pub fn wire_frame(&self, id: u64) -> EventFrame<'_> {
+        match self {
+            RequestEvent::Queued => EventFrame::Queued { id },
+            RequestEvent::Placed { replica } => EventFrame::Placed {
+                id,
+                replica: *replica as u64,
+            },
+            RequestEvent::Rescued { from, to } => EventFrame::Rescued {
+                id,
+                from: *from as u64,
+                to: *to as u64,
+            },
+            RequestEvent::FirstToken => EventFrame::FirstToken { id },
+            RequestEvent::Tokens { chunk } => EventFrame::Tokens {
+                id,
+                chunk: *chunk,
+            },
             RequestEvent::ApiCallStarted {
                 index,
                 strategy,
                 predicted_us,
                 external,
-            } => json::obj(vec![
-                ("type", json::s("api_call_started")),
-                ("id", idv),
-                ("index", json::num(*index as f64)),
-                ("strategy", json::s(strategy.label())),
-                ("predicted_us", json::num(*predicted_us as f64)),
-                ("external", Value::Bool(*external)),
-            ]),
+            } => EventFrame::ApiCallStarted {
+                id,
+                index: *index as u64,
+                strategy: strategy.label(),
+                predicted_us: *predicted_us,
+                external: *external,
+            },
             RequestEvent::ApiCallCompleted { index, actual_us } => {
-                json::obj(vec![
-                    ("type", json::s("api_call_completed")),
-                    ("id", idv),
-                    ("index", json::num(*index as f64)),
-                    ("actual_us", json::num(*actual_us as f64)),
-                ])
+                EventFrame::ApiCallCompleted {
+                    id,
+                    index: *index as u64,
+                    actual_us: *actual_us,
+                }
             }
             RequestEvent::Finished(completion) => {
-                let mut v = completion.to_value();
-                if let Value::Obj(map) = &mut v {
-                    map.insert("type".to_string(), json::s("finished"));
-                }
-                v
+                EventFrame::Finished(completion.wire_frame())
             }
-            RequestEvent::Dropped { reason } => json::obj(vec![
-                ("type", json::s("dropped")),
-                ("id", idv),
-                ("reason", json::s(reason)),
-            ]),
-            RequestEvent::Error { message } => json::obj(vec![
-                ("type", json::s("error")),
-                ("id", idv),
-                ("error", json::s(message)),
-            ]),
-        };
-        json::write(&frame)
+            RequestEvent::Dropped { reason } => EventFrame::Dropped {
+                id,
+                reason,
+            },
+            RequestEvent::Error { message } => EventFrame::SessionError {
+                id,
+                error: message,
+            },
+        }
+    }
+
+    /// Render one protocol-v2 NDJSON frame. Every frame carries
+    /// `type` and the session `id`.
+    pub fn to_json(&self, id: u64) -> String {
+        wire::Encoder::frame_to_string(&self.wire_frame(id))
     }
 }
 
@@ -908,23 +938,14 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
     }
 }
 
-/// One API call of a wire request (protocol v2 `api_calls` entry).
-#[derive(Debug, Clone)]
-pub struct WireCall {
-    /// Decode tokens before this call fires.
-    pub decode_before: u64,
-    /// Simulated call duration in milliseconds. Under
-    /// `--api-source external` this is only a prediction hint; omitted,
-    /// the class's historical mean (Table 2) is used either way.
-    pub api_ms: Option<u64>,
-    pub api_type: ApiType,
-    /// Tokens the API response appends on return (an external
-    /// `tool_result` overrides this with the tool's actual length).
-    pub response_tokens: u64,
-}
+/// One API call of a wire request (protocol v2 `api_calls` entry) —
+/// the typed [`crate::wire::CallFrame`], re-exported under the name
+/// this module has always used.
+pub type WireCall = wire::CallFrame;
 
 /// A request line of the JSON wire protocol (v2 `api_calls` array, or
-/// the legacy v1 `pre_api_tokens`/`api_ms` single-call shape).
+/// the legacy v1 `pre_api_tokens`/`api_ms` single-call shape), with
+/// the prompt owned so it can outlive the connection read buffer.
 #[derive(Debug, Clone)]
 pub struct WireRequest {
     pub prompt: String,
@@ -932,50 +953,27 @@ pub struct WireRequest {
     pub output_tokens: u64,
 }
 
-impl WireRequest {
-    pub fn parse(line: &str) -> anyhow::Result<WireRequest> {
-        Self::from_value(&json::parse(line)?)
+impl From<wire::RequestFrame<'_>> for WireRequest {
+    fn from(frame: wire::RequestFrame<'_>) -> Self {
+        WireRequest {
+            prompt: frame.prompt.into_owned(),
+            api_calls: frame.api_calls,
+            output_tokens: frame.output_tokens,
+        }
     }
+}
 
-    /// Parse an already-decoded request object (shared by the v1 line
-    /// handler and the v2 `{"type":"request"}` frame handler).
-    pub fn from_value(v: &Value) -> anyhow::Result<WireRequest> {
-        let prompt = v.str_field("prompt")?;
-        let output_tokens = v.u64_field("output_tokens")?;
-        let api_calls = match v.get("api_calls") {
-            Some(calls) => {
-                let arr = calls.as_arr().ok_or_else(|| {
-                    anyhow::anyhow!("'api_calls' must be an array")
-                })?;
-                arr.iter()
-                    .map(WireCall::from_value)
-                    .collect::<anyhow::Result<Vec<WireCall>>>()?
-            }
-            None => {
-                // Legacy v1 single-call shape.
-                let pre = v
-                    .get("pre_api_tokens")
-                    .and_then(|x| x.as_u64())
-                    .unwrap_or(0);
-                let api_ms =
-                    v.get("api_ms").and_then(|x| x.as_u64()).unwrap_or(0);
-                if pre > 0 {
-                    vec![WireCall {
-                        decode_before: pre,
-                        api_ms: Some(api_ms),
-                        api_type: ApiType::Tool(0),
-                        response_tokens: 4,
-                    }]
-                } else {
-                    vec![]
-                }
-            }
-        };
-        Ok(WireRequest {
-            prompt,
-            api_calls,
-            output_tokens,
-        })
+impl WireRequest {
+    /// Parse a request line (v1 or v2) through the zero-copy
+    /// [`crate::wire::Frame`] lexer, taking ownership of the decoded
+    /// strings. Non-request frame types are rejected.
+    pub fn parse(line: &str) -> anyhow::Result<WireRequest> {
+        match wire::Frame::parse(line) {
+            Ok(wire::Frame::Request(req))
+            | Ok(wire::Frame::V1Request(req)) => Ok(req.into()),
+            Ok(_) => anyhow::bail!("not a request frame"),
+            Err(e) => Err(e.into()),
+        }
     }
 
     pub fn to_spec(&self) -> RequestSpec {
@@ -1007,43 +1005,6 @@ impl WireRequest {
     }
 }
 
-impl WireCall {
-    fn from_value(v: &Value) -> anyhow::Result<WireCall> {
-        let api_type = match v.get("api_type").and_then(|x| x.as_str()) {
-            Some(name) => ApiType::parse(name).ok_or_else(|| {
-                anyhow::anyhow!("unknown api_type '{name}'")
-            })?,
-            None => ApiType::Tool(0),
-        };
-        Ok(WireCall {
-            decode_before: v.u64_field("decode_before")?,
-            api_ms: v.get("api_ms").and_then(|x| x.as_u64()),
-            api_type,
-            response_tokens: v
-                .get("response_tokens")
-                .and_then(|x| x.as_u64())
-                .unwrap_or(4),
-        })
-    }
-}
-
-/// `{"error": ..., "type": "error"}`, built through the JSON writer so
-/// a message containing quotes or backslashes stays valid —
-/// and unforgeable — JSON (the old `format!` splice emitted whatever
-/// the error text contained).
-fn error_frame(msg: &str) -> String {
-    json::write(&json::obj(vec![
-        ("type", json::s("error")),
-        ("error", json::s(msg)),
-    ]))
-}
-
-fn write_line(w: &mut TcpStream, text: &str) -> std::io::Result<()> {
-    w.write_all(text.as_bytes())?;
-    w.write_all(b"\n")?;
-    w.flush()
-}
-
 /// Serve the JSON-lines wire protocol over TCP (one frame per line,
 /// both directions — see the module docs for the v2 schema). Blocks
 /// forever.
@@ -1070,18 +1031,23 @@ pub fn serve_tcp(handle: ServerHandle, addr: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Handle one inbound line; `Some` is an immediate reply to write (v1
+/// Handle one inbound line, pushing any immediate reply frames (v1
 /// completions and error frames — v2 session output flows through the
-/// event pump instead).
-fn dispatch_line(line: &str, handle: &ServerHandle, events: &EventSink)
-                 -> Option<String> {
-    let parsed = match json::parse(line) {
-        Ok(v) => v,
-        Err(e) => return Some(error_frame(&format!("bad request: {e}"))),
+/// event pump instead) onto the connection's reusable reply encoder.
+fn dispatch_line(line: &str, handle: &ServerHandle, events: &EventSink,
+                 reply: &mut wire::Encoder) {
+    let frame = match wire::Frame::parse(line) {
+        Ok(frame) => frame,
+        Err(e) => {
+            reply.push(&EventFrame::Error {
+                error: &e.reply_message(),
+            });
+            return;
+        }
     };
-    match parsed.get("type").and_then(|t| t.as_str()) {
+    match frame {
         // Legacy v1: no type field, one blocking completion per line.
-        None => Some(match WireRequest::from_value(&parsed) {
+        wire::Frame::V1Request(req) => {
             // A v1 one-shot with API calls would block this reader
             // thread inside submit_blocking waiting for a tool_result
             // that can never arrive on an external-source server (the
@@ -1091,49 +1057,57 @@ fn dispatch_line(line: &str, handle: &ServerHandle, events: &EventSink)
             // deadlocking. Fail closed while the engine is still
             // booting (api_source unknown): wrongly guessing
             // `Simulated` here is precisely the deadlock.
-            Ok(req) if !req.api_calls.is_empty()
-                && handle.api_source()
-                    != Some(ApiSourceKind::Simulated) =>
+            if !req.api_calls.is_empty()
+                && handle.api_source() != Some(ApiSourceKind::Simulated)
             {
-                error_frame(
-                    "v1 one-shot requests cannot carry API calls on an \
-                     external-source (or still-booting) server; open a \
-                     v2 session with {\"type\":\"request\",...}")
+                reply.push(&EventFrame::Error {
+                    error:
+                        "v1 one-shot requests cannot carry API calls \
+                         on an external-source (or still-booting) \
+                         server; open a v2 session with \
+                         {\"type\":\"request\",...}",
+                });
+                return;
             }
-            Ok(req) => match handle.submit_blocking(req.to_spec()) {
-                Ok(completion) => completion.to_json(),
-                Err(e) => error_frame(&e.to_string()),
-            },
-            Err(e) => error_frame(&format!("bad request: {e}")),
-        }),
-        Some("request") => match WireRequest::from_value(&parsed) {
-            Ok(req) => {
-                match handle.open_session_with(req.to_spec(),
-                                               events.clone()) {
-                    // The `queued` frame announces the session id.
-                    Ok(_id) => None,
-                    Err(e) => Some(error_frame(&e.to_string())),
-                }
-            }
-            Err(e) => Some(error_frame(&format!("bad request: {e}"))),
-        },
-        Some("tool_result") => {
-            let route = || -> anyhow::Result<()> {
-                handle.complete_api_call_with_reply(
-                    parsed.u64_field("id")?,
-                    parsed.u64_field("index")? as usize,
-                    parsed.u64_field("response_tokens")?,
-                    Some(events.clone()))
-            };
-            match route() {
-                Ok(()) => None,
-                Err(e) => {
-                    Some(error_frame(&format!("bad tool_result: {e}")))
-                }
+            let req = WireRequest::from(req);
+            match handle.submit_blocking(req.to_spec()) {
+                Ok(completion) => reply.push(
+                    &EventFrame::Completion(completion.wire_frame())),
+                Err(e) => reply.push(&EventFrame::Error {
+                    error: &e.to_string(),
+                }),
             }
         }
-        Some(other) => {
-            Some(error_frame(&format!("unknown frame type '{other}'")))
+        wire::Frame::Request(req) => {
+            let req = WireRequest::from(req);
+            // The `queued` frame announces the session id; only a
+            // failed open is answered here.
+            if let Err(e) =
+                handle.open_session_with(req.to_spec(), events.clone())
+            {
+                reply.push(&EventFrame::Error {
+                    error: &e.to_string(),
+                });
+            }
+        }
+        wire::Frame::ToolResult(tr) => {
+            if let Err(e) = handle.complete_api_call_with_reply(
+                tr.id, tr.index as usize, tr.response_tokens,
+                Some(events.clone()))
+            {
+                reply.push(&EventFrame::Error {
+                    error: &format!("bad tool_result: {e}"),
+                });
+            }
+        }
+        // Reserved: parse + acknowledge, but don't tear anything down
+        // — see the module docs.
+        wire::Frame::Cancel(c) => {
+            reply.push(&EventFrame::SessionError {
+                id: c.id,
+                error: "cancel is reserved but not yet implemented; \
+                        the session keeps streaming",
+            });
         }
     }
 }
@@ -1142,35 +1116,74 @@ fn handle_conn(stream: TcpStream, handle: ServerHandle)
                -> anyhow::Result<()> {
     let peer = stream.peer_addr()?;
     let writer = Arc::new(Mutex::new(stream.try_clone()?));
-    let reader = BufReader::new(stream);
+    let mut frames = FrameReader::new(BufReader::new(stream));
     // One pump serializes every session's event frames onto the
     // socket; the reader thread writes only immediate replies (v1
-    // completions, error frames) under the same lock.
+    // completions, error frames) under the same lock. The pump owns a
+    // reusable encoder: block for the first event, fold every
+    // already-queued event into the same buffer (bounded by
+    // PUMP_DRAIN_BYTES), encode outside the writer lock, then flush
+    // the whole batch with one write.
     let (ev_tx, ev_rx) = mpsc::channel::<(u64, RequestEvent)>();
     let pump_writer = Arc::clone(&writer);
     let pump = std::thread::spawn(move || {
-        for (id, ev) in ev_rx {
-            let frame = ev.to_json(id);
+        let mut enc = wire::Encoder::with_capacity(4096);
+        while let Ok((id, ev)) = ev_rx.recv() {
+            enc.push(&ev.wire_frame(id));
+            while enc.len() < PUMP_DRAIN_BYTES {
+                match ev_rx.try_recv() {
+                    Ok((id, ev)) => enc.push(&ev.wire_frame(id)),
+                    Err(_) => break,
+                }
+            }
             let mut w = pump_writer
                 .lock()
                 .unwrap_or_else(std::sync::PoisonError::into_inner);
-            if write_line(&mut w, &frame).is_err() {
+            if enc.drain_to(&mut *w).is_err() {
                 // Client gone: the engine thread detaches the sessions
                 // on its next failed send.
                 return;
             }
         }
     });
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    // Immediate replies reuse one encoder for the connection's
+    // lifetime; inbound lines are borrowed straight out of the read
+    // buffer (zero-copy unless a string field contains escapes).
+    let mut reply = wire::Encoder::new();
+    while let Some(next) = frames.next_line()? {
+        match next {
+            WireLine::Oversized { bytes } => {
+                // The line was discarded while reading — answer with a
+                // well-formed error frame and stay alive (the reader
+                // already resynchronized on the newline).
+                reply.push(&EventFrame::Error {
+                    error: &format!(
+                        "bad request: frame of {bytes} bytes exceeds \
+                         the {} byte frame cap",
+                        wire::MAX_FRAME_BYTES),
+                });
+            }
+            WireLine::Frame(raw) => match std::str::from_utf8(raw) {
+                // Pre-wire servers tore the connection down here; an
+                // error frame keeps the (well-tested) listener
+                // invariant that every inbound line gets JSON or
+                // nothing, never a hangup mid-protocol.
+                Err(_) => reply.push(&EventFrame::Error {
+                    error: "bad request: frame is not valid UTF-8",
+                }),
+                Ok(line) => {
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    dispatch_line(line, &handle, &ev_tx, &mut reply);
+                }
+            },
         }
-        if let Some(reply) = dispatch_line(&line, &handle, &ev_tx) {
+        if !reply.is_empty() {
             let mut w = writer
                 .lock()
                 .unwrap_or_else(std::sync::PoisonError::into_inner);
-            write_line(&mut w, &reply)?;
+            reply.drain_to(&mut *w)?;
         }
     }
     // Half-close: the client stopped sending, but open sessions keep
@@ -1185,6 +1198,7 @@ fn handle_conn(stream: TcpStream, handle: ServerHandle)
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::request::ApiType;
 
     #[test]
     fn wire_request_parse_v1_full() {
@@ -1349,7 +1363,8 @@ mod tests {
         // The old format! splice emitted invalid/forgeable JSON when
         // the error text contained quotes or backslashes.
         let hostile = "boom\" ,\"tokens_decoded\":999,\"x\":\"\\";
-        let frame = error_frame(hostile);
+        let frame = wire::Encoder::frame_to_string(
+            &EventFrame::Error { error: hostile });
         let v = json::parse(&frame).expect("must stay valid JSON");
         assert_eq!(v.str_field("error").unwrap(), hostile);
         assert_eq!(v.str_field("type").unwrap(), "error");

@@ -3,6 +3,19 @@
 //! Supports the full JSON grammar minus exotic number forms; numbers are
 //! f64 (adequate for this crate's traces/metadata — token counts and
 //! microsecond stamps stay well under 2^53).
+//!
+//! # Owned vs borrowed
+//!
+//! This module is the *owned* side of the crate's JSON split: `parse`
+//! allocates a full [`Value`] tree (every string copied, every object a
+//! `BTreeMap`) and `write` renders one — convenient for traces,
+//! reports, artifacts, and anything cold. The serving hot path must
+//! not pay for that: [`crate::wire`] lexes frames as borrowed slices
+//! (`Cow` strings that only allocate on escapes) and encodes events
+//! into a reusable buffer, while reproducing this writer's byte format
+//! exactly (alphabetical keys, the same number and escape rules). The
+//! `wire-hot-path` lint keeps `server/` code on that side of the
+//! split.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;

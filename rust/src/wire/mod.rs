@@ -1,0 +1,1352 @@
+//! Typed zero-copy wire layer for protocol v2 (NDJSON over TCP).
+//!
+//! The serving front door used to route every inbound line through
+//! [`crate::util::json::parse`] (an allocating `Value` tree plus a
+//! `str_field -> String` walk) and rebuild every outbound event frame
+//! through `json::write` (one fresh `String` per event). At millions of
+//! streaming sessions each `tokens` frame is the per-token hot path, so
+//! this module replaces both directions with typed surfaces:
+//!
+//! - **Inbound**: [`Frame::parse`] lexes a line *in place* and produces
+//!   a typed [`Frame`] (`request`, `tool_result`, the reserved `cancel`,
+//!   or a type-less v1 one-shot). Strings are [`Cow`]`<'a, str>`: they
+//!   borrow the connection read buffer verbatim and only allocate when
+//!   an escape sequence forces a copy. Parse failures are structured
+//!   ([`FrameError`]) and render byte-for-byte the same messages the old
+//!   `Value`-tree walk produced, so client-visible error frames are
+//!   unchanged.
+//! - **Outbound**: [`EventFrame`] + [`Encoder`] serialize event frames
+//!   into a reusable per-connection buffer with hardcoded canonical key
+//!   order (the alphabetical order the old `BTreeMap` writer emitted —
+//!   byte-identical output), and [`Encoder::drain_to`] flushes a whole
+//!   pump batch with one gathered `write` instead of three syscalls per
+//!   frame.
+//! - **Framing**: [`FrameReader`] splits the socket byte stream into
+//!   newline-delimited frames without UTF-8-validating (or copying) more
+//!   than one line at a time, and caps a single frame at
+//!   [`MAX_FRAME_BYTES`] so a hostile endless line cannot balloon
+//!   memory ([`WireLine::Oversized`]).
+//!
+//! The `cancel` frame type (`{"type":"cancel","id":N}`) is *reserved*:
+//! it parses into [`Frame::Cancel`] but the server currently answers
+//! with a non-terminal error frame — client-driven cancellation is a
+//! ROADMAP item and reserving the type now keeps old servers' replies
+//! ("unknown frame type") distinguishable from future real support.
+//!
+//! Compatibility contract: every encoder path here is pinned
+//! byte-for-byte against the old `util::json` writer by unit tests and
+//! by the `examples/protocol_v2.ndjson` golden-transcript test
+//! (`tests/wire_golden.rs`); `benches/micro_wire.rs` pins the
+//! allocation and frames/sec win.
+
+use std::borrow::Cow;
+use std::io::{self, BufRead, Write};
+
+use crate::core::request::ApiType;
+
+/// Hard cap on one NDJSON frame. A line longer than this is swallowed
+/// (to resynchronize on the next newline) and reported as
+/// [`WireLine::Oversized`] instead of being buffered.
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+// ---------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------
+
+/// JSON syntax error, rendering the exact messages
+/// [`crate::util::json::parse`] produced so client-visible error frames
+/// stay byte-identical across the rework.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonError {
+    Expected { ch: char, at: usize },
+    UnterminatedString,
+    BadEscape { at: usize },
+    BadUnicodeEscape,
+    BadLiteral { at: usize },
+    BadNumber { text: String, at: usize, why: String },
+    TrailingChars { at: usize },
+    UnexpectedEnd,
+    ExpectedCommaOrBrace { at: usize },
+    ExpectedCommaOrBracket { at: usize },
+    /// Pass-through of a std error's own text (hex-escape edge cases),
+    /// matching what the old parser's `?` conversions surfaced.
+    Raw(String),
+}
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Expected { ch, at } => {
+                write!(f, "expected '{ch}' at byte {at}")
+            }
+            JsonError::UnterminatedString => write!(f, "unterminated string"),
+            JsonError::BadEscape { at } => {
+                write!(f, "bad escape at byte {at}")
+            }
+            JsonError::BadUnicodeEscape => write!(f, "bad \\u escape"),
+            JsonError::BadLiteral { at } => {
+                write!(f, "bad literal at byte {at}")
+            }
+            JsonError::BadNumber { text, at, why } => {
+                write!(f, "bad number '{text}' at byte {at}: {why}")
+            }
+            JsonError::TrailingChars { at } => {
+                write!(f, "trailing characters at byte {at}")
+            }
+            JsonError::UnexpectedEnd => write!(f, "unexpected end of input"),
+            JsonError::ExpectedCommaOrBrace { at } => {
+                write!(f, "expected ',' or '}}' at byte {at}")
+            }
+            JsonError::ExpectedCommaOrBracket { at } => {
+                write!(f, "expected ',' or ']' at byte {at}")
+            }
+            JsonError::Raw(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+/// A frame field that is missing or carries the wrong JSON type
+/// (message texts match the old `str_field`/`u64_field` walk).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FieldError {
+    Missing(&'static str),
+    NotAString(&'static str),
+    NotANumber(&'static str),
+    ApiCallsNotArray,
+    UnknownApiType(String),
+}
+
+impl std::fmt::Display for FieldError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FieldError::Missing(key) => {
+                write!(f, "missing JSON field '{key}'")
+            }
+            FieldError::NotAString(key) => {
+                write!(f, "field '{key}' not a string")
+            }
+            FieldError::NotANumber(key) => {
+                write!(f, "field '{key}' not a number")
+            }
+            FieldError::ApiCallsNotArray => {
+                write!(f, "'api_calls' must be an array")
+            }
+            FieldError::UnknownApiType(name) => {
+                write!(f, "unknown api_type '{name}'")
+            }
+        }
+    }
+}
+
+/// Which typed frame a field error belongs to — decides the reply
+/// prefix (`bad request:` / `bad tool_result:` / `bad cancel:`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    Request,
+    ToolResult,
+    Cancel,
+}
+
+/// Structured parse error for one inbound line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FrameError {
+    /// The line is not well-formed JSON.
+    Json(JsonError),
+    /// Well-formed JSON, but a typed frame field is missing/mistyped.
+    Field { frame: FrameKind, err: FieldError },
+    /// A `type` value this protocol version does not know.
+    UnknownFrameType(String),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Json(e) => write!(f, "{e}"),
+            FrameError::Field { err, .. } => write!(f, "{err}"),
+            FrameError::UnknownFrameType(t) => {
+                write!(f, "unknown frame type '{t}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<JsonError> for FrameError {
+    fn from(e: JsonError) -> Self {
+        FrameError::Json(e)
+    }
+}
+
+impl FrameError {
+    /// The full client-visible error text, with the same prefixes the
+    /// old dispatch attached (`bad request: ...`, `bad tool_result:
+    /// ...`, bare `unknown frame type '...'`). Syntax errors always
+    /// read `bad request:` because the old code parsed the JSON before
+    /// it knew the frame type.
+    pub fn reply_message(&self) -> String {
+        match self {
+            FrameError::Json(e) => format!("bad request: {e}"),
+            FrameError::Field { frame, err } => match frame {
+                FrameKind::Request => format!("bad request: {err}"),
+                FrameKind::ToolResult => format!("bad tool_result: {err}"),
+                FrameKind::Cancel => format!("bad cancel: {err}"),
+            },
+            FrameError::UnknownFrameType(t) => {
+                format!("unknown frame type '{t}'")
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Typed inbound frames
+// ---------------------------------------------------------------------
+
+/// A `{"type":"request"}` (or type-less v1) line. `prompt` borrows the
+/// read buffer unless the JSON contained escape sequences.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestFrame<'a> {
+    pub prompt: Cow<'a, str>,
+    pub api_calls: Vec<CallFrame>,
+    pub output_tokens: u64,
+}
+
+/// One `api_calls` entry of a request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CallFrame {
+    /// Decode tokens before this call fires.
+    pub decode_before: u64,
+    /// Simulated call duration in milliseconds. Under
+    /// `--api-source external` this is only a prediction hint; omitted,
+    /// the class's historical mean (Table 2) is used either way.
+    pub api_ms: Option<u64>,
+    pub api_type: ApiType,
+    /// Tokens the API response appends on return (an external
+    /// `tool_result` overrides this with the tool's actual length).
+    pub response_tokens: u64,
+}
+
+/// `{"type":"tool_result","id":N,"index":N,"response_tokens":N}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ToolResultFrame {
+    pub id: u64,
+    pub index: u64,
+    pub response_tokens: u64,
+}
+
+/// `{"type":"cancel","id":N}` — reserved; parsed but not yet acted on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CancelFrame {
+    pub id: u64,
+}
+
+/// One parsed inbound line of the v2 wire protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame<'a> {
+    Request(RequestFrame<'a>),
+    ToolResult(ToolResultFrame),
+    /// Reserved frame type (see module docs).
+    Cancel(CancelFrame),
+    /// A line with no `type` field: the legacy v1 one-shot shape
+    /// (`prompt`/`output_tokens` plus optional
+    /// `pre_api_tokens`/`api_ms`), answered with a single completion
+    /// object instead of event frames.
+    V1Request(RequestFrame<'a>),
+}
+
+impl<'a> Frame<'a> {
+    /// Parse one NDJSON line into a typed frame, borrowing unescaped
+    /// strings from `line`. Error messages (including syntax errors)
+    /// are byte-identical to the old `util::json` + field-walk path.
+    pub fn parse(line: &'a str) -> Result<Frame<'a>, FrameError> {
+        let mut lex = Lexer::new(line);
+        lex.skip_ws();
+        let fields = if lex.peek() == Some(b'{') {
+            lex.frame_fields()?
+        } else {
+            // Not an object: lex it anyway so malformed JSON reports
+            // the same syntax error the old tree parser did; a valid
+            // non-object value dispatches as an (empty) v1 request,
+            // which then fails with "missing JSON field 'prompt'" —
+            // again matching the old walk.
+            lex.skip_value()?;
+            FrameFields::default()
+        };
+        lex.skip_ws();
+        if lex.pos != lex.b.len() {
+            return Err(JsonError::TrailingChars { at: lex.pos }.into());
+        }
+        dispatch_fields(fields)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------
+
+/// Slice lexer over one line. Positions are byte offsets into the
+/// original line so error messages agree with the old parser.
+struct Lexer<'a> {
+    s: &'a str,
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Lexer<'a> {
+    fn new(s: &'a str) -> Self {
+        Lexer { s, b: s.as_bytes(), pos: 0 }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect_byte(&mut self, ch: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(ch) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(JsonError::Expected { ch: ch as char, at: self.pos })
+        }
+    }
+
+    /// Lex a JSON string. The fast path scans to the closing quote and
+    /// borrows the slice verbatim; only an escape sequence falls back
+    /// to an owned accumulator (util::json's full escape set).
+    fn string(&mut self) -> Result<Cow<'a, str>, JsonError> {
+        self.expect_byte(b'"')?;
+        let start = self.pos;
+        loop {
+            match self.peek() {
+                None => return Err(JsonError::UnterminatedString),
+                Some(b'"') => {
+                    let text =
+                        self.s.get(start..self.pos).unwrap_or_default();
+                    self.pos += 1;
+                    return Ok(Cow::Borrowed(text));
+                }
+                Some(b'\\') => break,
+                Some(_) => self.pos += 1,
+            }
+        }
+        // Slow path: restart from the string start with an owned
+        // buffer, replicating util::json's escapes (and error
+        // positions) bit for bit.
+        self.pos = start;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(JsonError::UnterminatedString),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(Cow::Owned(out));
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex_bytes = self
+                                .b
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or(JsonError::BadUnicodeEscape)?;
+                            let hex = std::str::from_utf8(hex_bytes)
+                                .map_err(|e| {
+                                    JsonError::Raw(e.to_string())
+                                })?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|e| {
+                                    JsonError::Raw(e.to_string())
+                                })?;
+                            out.push(
+                                char::from_u32(code).unwrap_or('\u{fffd}'),
+                            );
+                            self.pos += 4;
+                        }
+                        _ => {
+                            return Err(JsonError::BadEscape {
+                                at: self.pos,
+                            });
+                        }
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    let run = self.pos;
+                    while matches!(self.peek(),
+                                   Some(c) if c != b'"' && c != b'\\')
+                    {
+                        self.pos += 1;
+                    }
+                    out.push_str(
+                        self.s.get(run..self.pos).unwrap_or_default(),
+                    );
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64, JsonError> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.pos += 1;
+        }
+        let text = self.s.get(start..self.pos).unwrap_or_default();
+        text.parse::<f64>().map_err(|e| JsonError::BadNumber {
+            text: text.to_string(),
+            at: start,
+            why: e.to_string(),
+        })
+    }
+
+    fn literal(&mut self) -> Result<(), JsonError> {
+        let rest = self.s.get(self.pos..).unwrap_or_default();
+        for lit in ["true", "false", "null"] {
+            if rest.starts_with(lit) {
+                self.pos += lit.len();
+                return Ok(());
+            }
+        }
+        Err(JsonError::BadLiteral { at: self.pos })
+    }
+
+    /// Lex past any JSON value, validating it exactly as the old tree
+    /// parser did (so ignored/unknown fields still reject bad syntax).
+    fn skip_value(&mut self) -> Result<(), JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.skip_obj(),
+            Some(b'[') => self.skip_arr(),
+            Some(b'"') => self.string().map(|_| ()),
+            Some(b't' | b'f' | b'n') => self.literal(),
+            Some(_) => self.number().map(|_| ()),
+            None => Err(JsonError::UnexpectedEnd),
+        }
+    }
+
+    fn skip_obj(&mut self) -> Result<(), JsonError> {
+        self.expect_byte(b'{')?;
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            self.skip_ws();
+            self.string()?;
+            self.skip_ws();
+            self.expect_byte(b':')?;
+            self.skip_value()?;
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                _ => {
+                    return Err(JsonError::ExpectedCommaOrBrace {
+                        at: self.pos,
+                    });
+                }
+            }
+        }
+    }
+
+    fn skip_arr(&mut self) -> Result<(), JsonError> {
+        self.expect_byte(b'[')?;
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            self.skip_value()?;
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                _ => {
+                    return Err(JsonError::ExpectedCommaOrBracket {
+                        at: self.pos,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Capture a required string field, last occurrence wins (BTreeMap
+    /// insert parity for duplicate keys).
+    fn capture_string(&mut self, slot: &mut Seen<Cow<'a, str>>)
+                      -> Result<(), JsonError> {
+        self.skip_ws();
+        if self.peek() == Some(b'"') {
+            *slot = Seen::Got(self.string()?);
+        } else {
+            self.skip_value()?;
+            *slot = Seen::WrongType;
+        }
+        Ok(())
+    }
+
+    /// Capture an optional string (`.get(..).and_then(as_str)` parity:
+    /// a wrong-typed final occurrence reads as absent).
+    fn capture_opt_string(&mut self, slot: &mut Option<Cow<'a, str>>)
+                          -> Result<(), JsonError> {
+        self.skip_ws();
+        if self.peek() == Some(b'"') {
+            *slot = Some(self.string()?);
+        } else {
+            self.skip_value()?;
+            *slot = None;
+        }
+        Ok(())
+    }
+
+    /// Capture a required number field (`u64_field` parity: any
+    /// non-number JSON value is a type error, floats truncate, and
+    /// negatives saturate to 0 via the same `f64 as u64` cast).
+    fn capture_u64(&mut self, slot: &mut Seen<u64>)
+                   -> Result<(), JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{' | b'[' | b'"' | b't' | b'f' | b'n') => {
+                self.skip_value()?;
+                *slot = Seen::WrongType;
+            }
+            Some(_) => {
+                let n = self.number()?;
+                *slot = Seen::Got(n as u64);
+            }
+            None => return Err(JsonError::UnexpectedEnd),
+        }
+        Ok(())
+    }
+
+    /// Capture an optional number (`.get(..).and_then(as_u64)` parity:
+    /// a wrong-typed final occurrence resets the slot to `None`).
+    fn capture_opt_u64(&mut self, slot: &mut Option<u64>)
+                       -> Result<(), JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{' | b'[' | b'"' | b't' | b'f' | b'n') => {
+                self.skip_value()?;
+                *slot = None;
+            }
+            Some(_) => *slot = Some(self.number()? as u64),
+            None => return Err(JsonError::UnexpectedEnd),
+        }
+        Ok(())
+    }
+
+    /// Capture the `api_calls` array as typed per-call accumulators.
+    fn capture_api_calls(&mut self, slot: &mut Seen<Vec<CallFields>>)
+                         -> Result<(), JsonError> {
+        self.skip_ws();
+        if self.peek() != Some(b'[') {
+            self.skip_value()?;
+            *slot = Seen::WrongType;
+            return Ok(());
+        }
+        self.expect_byte(b'[')?;
+        let mut calls = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            *slot = Seen::Got(calls);
+            return Ok(());
+        }
+        loop {
+            calls.push(self.call_fields()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    *slot = Seen::Got(calls);
+                    return Ok(());
+                }
+                _ => {
+                    return Err(JsonError::ExpectedCommaOrBracket {
+                        at: self.pos,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Lex one `api_calls` element. Non-object elements are skipped
+    /// into an empty accumulator — the old walk's `get()` on them
+    /// returned `None` for every key, so validation (missing
+    /// `decode_before`) fires identically at build time.
+    fn call_fields(&mut self) -> Result<CallFields, JsonError> {
+        self.skip_ws();
+        let mut call = CallFields::default();
+        if self.peek() != Some(b'{') {
+            self.skip_value()?;
+            return Ok(call);
+        }
+        self.expect_byte(b'{')?;
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(call);
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect_byte(b':')?;
+            match key.as_ref() {
+                "api_type" => {
+                    self.skip_ws();
+                    if self.peek() == Some(b'"') {
+                        let name = self.string()?;
+                        call.api_type =
+                            match ApiType::parse(name.as_ref()) {
+                                Some(t) => CallType::Known(t),
+                                None => {
+                                    CallType::Unknown(name.into_owned())
+                                }
+                            };
+                    } else {
+                        // Non-string api_type reads as absent (the old
+                        // `.and_then(as_str)` walk) — generic tool.
+                        self.skip_value()?;
+                        call.api_type = CallType::Omitted;
+                    }
+                }
+                "decode_before" => {
+                    self.capture_u64(&mut call.decode_before)?;
+                }
+                "api_ms" => self.capture_opt_u64(&mut call.api_ms)?,
+                "response_tokens" => {
+                    self.capture_opt_u64(&mut call.response_tokens)?;
+                }
+                _ => self.skip_value()?,
+            }
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(call);
+                }
+                _ => {
+                    return Err(JsonError::ExpectedCommaOrBrace {
+                        at: self.pos,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Lex a whole frame object into field accumulators (single pass,
+    /// no tree).
+    fn frame_fields(&mut self) -> Result<FrameFields<'a>, JsonError> {
+        let mut fields = FrameFields::default();
+        self.expect_byte(b'{')?;
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(fields);
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect_byte(b':')?;
+            match key.as_ref() {
+                "type" => self.capture_opt_string(&mut fields.typ)?,
+                "prompt" => self.capture_string(&mut fields.prompt)?,
+                "output_tokens" => {
+                    self.capture_u64(&mut fields.output_tokens)?;
+                }
+                "api_calls" => {
+                    self.capture_api_calls(&mut fields.api_calls)?;
+                }
+                "pre_api_tokens" => {
+                    self.capture_opt_u64(&mut fields.pre_api_tokens)?;
+                }
+                "api_ms" => self.capture_opt_u64(&mut fields.api_ms)?,
+                "id" => self.capture_u64(&mut fields.id)?,
+                "index" => self.capture_u64(&mut fields.index)?,
+                "response_tokens" => {
+                    self.capture_u64(&mut fields.response_tokens)?;
+                }
+                _ => self.skip_value()?,
+            }
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(fields);
+                }
+                _ => {
+                    return Err(JsonError::ExpectedCommaOrBrace {
+                        at: self.pos,
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Field accumulators
+// ---------------------------------------------------------------------
+
+/// Tri-state field accumulator preserving the old tree's last-wins
+/// duplicate-key semantics: the *final* occurrence decides both the
+/// value and whether its type was acceptable.
+#[derive(Debug)]
+enum Seen<T> {
+    Missing,
+    WrongType,
+    Got(T),
+}
+
+impl<T> Default for Seen<T> {
+    fn default() -> Self {
+        Seen::Missing
+    }
+}
+
+impl<T> Seen<T> {
+    fn required(self, frame: FrameKind, key: &'static str,
+                wrong: fn(&'static str) -> FieldError)
+                -> Result<T, FrameError> {
+        match self {
+            Seen::Got(v) => Ok(v),
+            Seen::Missing => Err(FrameError::Field {
+                frame,
+                err: FieldError::Missing(key),
+            }),
+            Seen::WrongType => {
+                Err(FrameError::Field { frame, err: wrong(key) })
+            }
+        }
+    }
+}
+
+/// `api_type` accumulator: unknown names are stored, not rejected, so
+/// duplicate-key last-wins and the old walk's validate-at-the-end
+/// ordering both hold.
+#[derive(Debug, Default)]
+enum CallType {
+    #[default]
+    Omitted,
+    Known(ApiType),
+    Unknown(String),
+}
+
+#[derive(Debug, Default)]
+struct CallFields {
+    api_type: CallType,
+    decode_before: Seen<u64>,
+    api_ms: Option<u64>,
+    response_tokens: Option<u64>,
+}
+
+#[derive(Debug, Default)]
+struct FrameFields<'a> {
+    typ: Option<Cow<'a, str>>,
+    prompt: Seen<Cow<'a, str>>,
+    output_tokens: Seen<u64>,
+    api_calls: Seen<Vec<CallFields>>,
+    pre_api_tokens: Option<u64>,
+    api_ms: Option<u64>,
+    id: Seen<u64>,
+    index: Seen<u64>,
+    response_tokens: Seen<u64>,
+}
+
+fn dispatch_fields(mut fields: FrameFields<'_>)
+                   -> Result<Frame<'_>, FrameError> {
+    let typ = fields.typ.take();
+    match typ.as_deref() {
+        None => Ok(Frame::V1Request(build_request(fields)?)),
+        Some("request") => Ok(Frame::Request(build_request(fields)?)),
+        Some("tool_result") => {
+            let kind = FrameKind::ToolResult;
+            let id =
+                fields.id.required(kind, "id", FieldError::NotANumber)?;
+            let index = fields
+                .index
+                .required(kind, "index", FieldError::NotANumber)?;
+            let response_tokens = fields.response_tokens.required(
+                kind,
+                "response_tokens",
+                FieldError::NotANumber,
+            )?;
+            Ok(Frame::ToolResult(ToolResultFrame {
+                id,
+                index,
+                response_tokens,
+            }))
+        }
+        Some("cancel") => {
+            let id = fields.id.required(FrameKind::Cancel, "id",
+                                        FieldError::NotANumber)?;
+            Ok(Frame::Cancel(CancelFrame { id }))
+        }
+        Some(other) => Err(FrameError::UnknownFrameType(other.to_string())),
+    }
+}
+
+/// Validation order matches the old `WireRequest::from_value`: prompt,
+/// then output_tokens, then api_calls (elements in order; per call,
+/// api_type before decode_before).
+fn build_request(fields: FrameFields<'_>)
+                 -> Result<RequestFrame<'_>, FrameError> {
+    let kind = FrameKind::Request;
+    let prompt = fields
+        .prompt
+        .required(kind, "prompt", FieldError::NotAString)?;
+    let output_tokens = fields.output_tokens.required(
+        kind,
+        "output_tokens",
+        FieldError::NotANumber,
+    )?;
+    let api_calls = match fields.api_calls {
+        Seen::Got(calls) => {
+            let mut out = Vec::with_capacity(calls.len());
+            for call in calls {
+                out.push(build_call(call)?);
+            }
+            out
+        }
+        Seen::WrongType => {
+            return Err(FrameError::Field {
+                frame: kind,
+                err: FieldError::ApiCallsNotArray,
+            });
+        }
+        Seen::Missing => {
+            // Legacy v1 single-call shape.
+            let pre = fields.pre_api_tokens.unwrap_or(0);
+            let api_ms = fields.api_ms.unwrap_or(0);
+            if pre > 0 {
+                vec![CallFrame {
+                    decode_before: pre,
+                    api_ms: Some(api_ms),
+                    api_type: ApiType::Tool(0),
+                    response_tokens: 4,
+                }]
+            } else {
+                vec![]
+            }
+        }
+    };
+    Ok(RequestFrame { prompt, api_calls, output_tokens })
+}
+
+fn build_call(call: CallFields) -> Result<CallFrame, FrameError> {
+    let api_type = match call.api_type {
+        CallType::Known(t) => t,
+        CallType::Omitted => ApiType::Tool(0),
+        CallType::Unknown(name) => {
+            return Err(FrameError::Field {
+                frame: FrameKind::Request,
+                err: FieldError::UnknownApiType(name),
+            });
+        }
+    };
+    let decode_before = call.decode_before.required(
+        FrameKind::Request,
+        "decode_before",
+        FieldError::NotANumber,
+    )?;
+    Ok(CallFrame {
+        decode_before,
+        api_ms: call.api_ms,
+        api_type,
+        response_tokens: call.response_tokens.unwrap_or(4),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Client-side canonical encoders
+// ---------------------------------------------------------------------
+
+impl RequestFrame<'_> {
+    /// Canonical client-side request line (no trailing newline) —
+    /// byte-for-byte what `examples/protocol_v2.ndjson` shows:
+    /// `type`, `prompt`, `output_tokens`, then `api_calls` entries as
+    /// `decode_before`, `api_type`, optional `api_ms`,
+    /// `response_tokens`.
+    pub fn to_line(&self) -> String {
+        let mut enc = Encoder::new();
+        enc.raw(b"{\"type\":\"request\",\"prompt\":");
+        enc.quoted(self.prompt.as_ref());
+        enc.raw(b",\"output_tokens\":");
+        enc.num_u64(self.output_tokens);
+        enc.raw(b",\"api_calls\":[");
+        for (i, call) in self.api_calls.iter().enumerate() {
+            if i > 0 {
+                enc.raw(b",");
+            }
+            enc.raw(b"{\"decode_before\":");
+            enc.num_u64(call.decode_before);
+            enc.raw(b",\"api_type\":");
+            enc.quoted(call.api_type.label());
+            if let Some(ms) = call.api_ms {
+                enc.raw(b",\"api_ms\":");
+                enc.num_u64(ms);
+            }
+            enc.raw(b",\"response_tokens\":");
+            enc.num_u64(call.response_tokens);
+            enc.raw(b"}");
+        }
+        enc.raw(b"]}");
+        enc.into_string()
+    }
+}
+
+impl ToolResultFrame {
+    /// Canonical client-side tool-result line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        let mut enc = Encoder::new();
+        enc.raw(b"{\"type\":\"tool_result\",\"id\":");
+        enc.num_u64(self.id);
+        enc.raw(b",\"index\":");
+        enc.num_u64(self.index);
+        enc.raw(b",\"response_tokens\":");
+        enc.num_u64(self.response_tokens);
+        enc.raw(b"}");
+        enc.into_string()
+    }
+}
+
+impl CancelFrame {
+    /// Canonical client-side cancel line (reserved frame type).
+    pub fn to_line(&self) -> String {
+        let mut enc = Encoder::new();
+        enc.raw(b"{\"type\":\"cancel\",\"id\":");
+        enc.num_u64(self.id);
+        enc.raw(b"}");
+        enc.into_string()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Typed outbound frames
+// ---------------------------------------------------------------------
+
+/// Completion payload of a `finished` event frame (or a bare v1
+/// completion reply). Borrows the server-side completion.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompletionFrame<'a> {
+    pub id: u64,
+    pub latency_us: u64,
+    pub ttft_us: Option<u64>,
+    pub tokens_decoded: u64,
+    pub generated: Option<&'a [i32]>,
+    /// `Some(reason)` only for dropped requests — the key is omitted
+    /// entirely for served completions.
+    pub dropped: Option<&'a str>,
+}
+
+/// One typed outbound frame. Encoded key order is the canonical
+/// (alphabetical) order the old `BTreeMap` writer produced, hardcoded
+/// per variant — see [`Encoder`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventFrame<'a> {
+    Queued { id: u64 },
+    Placed { id: u64, replica: u64 },
+    Rescued { id: u64, from: u64, to: u64 },
+    FirstToken { id: u64 },
+    Tokens { id: u64, chunk: u64 },
+    ApiCallStarted {
+        id: u64,
+        index: u64,
+        strategy: &'a str,
+        predicted_us: u64,
+        external: bool,
+    },
+    ApiCallCompleted { id: u64, index: u64, actual_us: u64 },
+    /// Terminal `finished` frame (the completion's own id rides in the
+    /// payload).
+    Finished(CompletionFrame<'a>),
+    Dropped { id: u64, reason: &'a str },
+    /// Session-scoped error frame (`{"error","id","type"}`).
+    SessionError { id: u64, error: &'a str },
+    /// Connection-scoped error frame with no session id.
+    Error { error: &'a str },
+    /// Bare v1 completion reply (a `finished` frame minus the `type`).
+    Completion(CompletionFrame<'a>),
+}
+
+/// Reusable outbound frame buffer: push typed frames, then flush the
+/// whole batch to the socket with one write + flush
+/// ([`Encoder::drain_to`]) instead of one `String` + three syscalls per
+/// event. Byte output is pinned to the old `json::write` path.
+#[derive(Debug)]
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Default for Encoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Encoder { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        Encoder { buf: Vec::with_capacity(bytes) }
+    }
+
+    /// Encode one frame plus its newline into the buffer.
+    pub fn push(&mut self, frame: &EventFrame<'_>) {
+        self.encode(frame);
+        self.buf.push(b'\n');
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Write the whole batch with a single `write_all` + `flush`, then
+    /// reset the buffer for reuse (capacity is retained).
+    pub fn drain_to<W: Write>(&mut self, w: &mut W) -> io::Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        w.write_all(&self.buf)?;
+        w.flush()?;
+        self.buf.clear();
+        Ok(())
+    }
+
+    /// One frame as a `String` (no trailing newline) — the drop-in
+    /// replacement for the old per-event `json::write` call sites.
+    pub fn frame_to_string(frame: &EventFrame<'_>) -> String {
+        let mut enc = Encoder::new();
+        enc.encode(frame);
+        enc.into_string()
+    }
+
+    fn into_string(self) -> String {
+        // Every byte pushed is either ASCII or a verbatim UTF-8 char
+        // copy, so this cannot fail; the fallback is unreachable.
+        String::from_utf8(self.buf).unwrap_or_default()
+    }
+
+    fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// The old writer's number rule: integers (up to the f64-exact
+    /// range) print as i64, everything else via `{}` on the f64.
+    fn num_f64(&mut self, n: f64) {
+        if n.fract() == 0.0 && n.abs() < 9e15 {
+            let _ = write!(self.buf, "{}", n as i64);
+        } else {
+            let _ = write!(self.buf, "{n}");
+        }
+    }
+
+    /// All wire numbers historically round-tripped through `f64`
+    /// (`json::num(x as f64)`): keep that exact cast chain.
+    fn num_u64(&mut self, v: u64) {
+        self.num_f64(v as f64);
+    }
+
+    /// The old writer's string escaping, byte for byte: `"`, `\`,
+    /// `\n`, `\t`, `\r` named; other control bytes as `\u00xx`;
+    /// everything else (including multi-byte UTF-8) verbatim.
+    fn quoted(&mut self, s: &str) {
+        self.buf.push(b'"');
+        let bytes = s.as_bytes();
+        let mut start = 0usize;
+        for (i, &b) in bytes.iter().enumerate() {
+            if b == b'"' || b == b'\\' || b < 0x20 {
+                self.raw(bytes.get(start..i).unwrap_or_default());
+                match b {
+                    b'"' => self.raw(b"\\\""),
+                    b'\\' => self.raw(b"\\\\"),
+                    b'\n' => self.raw(b"\\n"),
+                    b'\t' => self.raw(b"\\t"),
+                    b'\r' => self.raw(b"\\r"),
+                    _ => {
+                        let _ = write!(self.buf, "\\u{:04x}", b as u32);
+                    }
+                }
+                start = i + 1;
+            }
+        }
+        self.raw(bytes.get(start..).unwrap_or_default());
+        self.buf.push(b'"');
+    }
+
+    fn encode(&mut self, frame: &EventFrame<'_>) {
+        match frame {
+            EventFrame::Queued { id } => {
+                self.raw(b"{\"id\":");
+                self.num_u64(*id);
+                self.raw(b",\"type\":\"queued\"}");
+            }
+            EventFrame::Placed { id, replica } => {
+                self.raw(b"{\"id\":");
+                self.num_u64(*id);
+                self.raw(b",\"replica\":");
+                self.num_u64(*replica);
+                self.raw(b",\"type\":\"placed\"}");
+            }
+            EventFrame::Rescued { id, from, to } => {
+                self.raw(b"{\"from\":");
+                self.num_u64(*from);
+                self.raw(b",\"id\":");
+                self.num_u64(*id);
+                self.raw(b",\"to\":");
+                self.num_u64(*to);
+                self.raw(b",\"type\":\"rescued\"}");
+            }
+            EventFrame::FirstToken { id } => {
+                self.raw(b"{\"id\":");
+                self.num_u64(*id);
+                self.raw(b",\"type\":\"first_token\"}");
+            }
+            EventFrame::Tokens { id, chunk } => {
+                self.raw(b"{\"chunk\":");
+                self.num_u64(*chunk);
+                self.raw(b",\"id\":");
+                self.num_u64(*id);
+                self.raw(b",\"type\":\"tokens\"}");
+            }
+            EventFrame::ApiCallStarted {
+                id,
+                index,
+                strategy,
+                predicted_us,
+                external,
+            } => {
+                self.raw(b"{\"external\":");
+                if *external {
+                    self.raw(b"true");
+                } else {
+                    self.raw(b"false");
+                }
+                self.raw(b",\"id\":");
+                self.num_u64(*id);
+                self.raw(b",\"index\":");
+                self.num_u64(*index);
+                self.raw(b",\"predicted_us\":");
+                self.num_u64(*predicted_us);
+                self.raw(b",\"strategy\":");
+                self.quoted(strategy);
+                self.raw(b",\"type\":\"api_call_started\"}");
+            }
+            EventFrame::ApiCallCompleted { id, index, actual_us } => {
+                self.raw(b"{\"actual_us\":");
+                self.num_u64(*actual_us);
+                self.raw(b",\"id\":");
+                self.num_u64(*id);
+                self.raw(b",\"index\":");
+                self.num_u64(*index);
+                self.raw(b",\"type\":\"api_call_completed\"}");
+            }
+            EventFrame::Finished(c) => self.completion(c, true),
+            EventFrame::Completion(c) => self.completion(c, false),
+            EventFrame::Dropped { id, reason } => {
+                self.raw(b"{\"id\":");
+                self.num_u64(*id);
+                self.raw(b",\"reason\":");
+                self.quoted(reason);
+                self.raw(b",\"type\":\"dropped\"}");
+            }
+            EventFrame::SessionError { id, error } => {
+                self.raw(b"{\"error\":");
+                self.quoted(error);
+                self.raw(b",\"id\":");
+                self.num_u64(*id);
+                self.raw(b",\"type\":\"error\"}");
+            }
+            EventFrame::Error { error } => {
+                self.raw(b"{\"error\":");
+                self.quoted(error);
+                self.raw(b",\"type\":\"error\"}");
+            }
+        }
+    }
+
+    /// Completion body, canonical key order: `dropped` (only when
+    /// present), `generated`, `id`, `latency_us`, `tokens_decoded`,
+    /// `ttft_us`, then `"type":"finished"` for event frames.
+    fn completion(&mut self, c: &CompletionFrame<'_>, finished: bool) {
+        self.raw(b"{");
+        if let Some(reason) = c.dropped {
+            self.raw(b"\"dropped\":");
+            self.quoted(reason);
+            self.raw(b",");
+        }
+        self.raw(b"\"generated\":");
+        match c.generated {
+            Some(toks) => {
+                self.raw(b"[");
+                for (i, t) in toks.iter().enumerate() {
+                    if i > 0 {
+                        self.raw(b",");
+                    }
+                    self.num_f64(f64::from(*t));
+                }
+                self.raw(b"]");
+            }
+            None => self.raw(b"null"),
+        }
+        self.raw(b",\"id\":");
+        self.num_u64(c.id);
+        self.raw(b",\"latency_us\":");
+        self.num_u64(c.latency_us);
+        self.raw(b",\"tokens_decoded\":");
+        self.num_u64(c.tokens_decoded);
+        self.raw(b",\"ttft_us\":");
+        match c.ttft_us {
+            Some(t) => self.num_u64(t),
+            None => self.raw(b"null"),
+        }
+        if finished {
+            self.raw(b",\"type\":\"finished\"}");
+        } else {
+            self.raw(b"}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Line framing
+// ---------------------------------------------------------------------
+
+/// One framed line off the socket.
+#[derive(Debug, PartialEq, Eq)]
+pub enum WireLine<'a> {
+    /// Raw line bytes, `\n` (and a trailing `\r`) stripped. UTF-8 is
+    /// *not* validated here — the dispatcher decides how to answer
+    /// invalid bytes instead of tearing the connection down.
+    Frame(&'a [u8]),
+    /// The line exceeded [`MAX_FRAME_BYTES`]; its `bytes` were
+    /// swallowed up to the next newline so the stream stays in sync.
+    Oversized { bytes: usize },
+}
+
+/// Newline framing over any [`BufRead`], reusing one line buffer for
+/// the life of the connection (the inbound half of the zero-copy
+/// story: [`Frame::parse`] borrows its strings from this buffer).
+#[derive(Debug)]
+pub struct FrameReader<R> {
+    inner: R,
+    buf: Vec<u8>,
+}
+
+impl<R: BufRead> FrameReader<R> {
+    pub fn new(inner: R) -> Self {
+        FrameReader { inner, buf: Vec::new() }
+    }
+
+    /// Next line, or `Ok(None)` at clean EOF. A final line without a
+    /// trailing newline is yielded (matching `BufRead::lines`).
+    pub fn next_line(&mut self) -> io::Result<Option<WireLine<'_>>> {
+        self.buf.clear();
+        let mut dropped = 0usize;
+        let mut saw_any = false;
+        loop {
+            let (used, done) = {
+                let chunk = match self.inner.fill_buf() {
+                    Ok(c) => c,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                };
+                if chunk.is_empty() {
+                    (0, true)
+                } else {
+                    saw_any = true;
+                    match chunk.iter().position(|&b| b == b'\n') {
+                        Some(i) => {
+                            let take =
+                                chunk.get(..i).unwrap_or_default();
+                            if dropped > 0
+                                || self.buf.len() + take.len()
+                                    > MAX_FRAME_BYTES
+                            {
+                                dropped += take.len();
+                            } else {
+                                self.buf.extend_from_slice(take);
+                            }
+                            (i + 1, true)
+                        }
+                        None => {
+                            if dropped > 0
+                                || self.buf.len() + chunk.len()
+                                    > MAX_FRAME_BYTES
+                            {
+                                dropped += chunk.len();
+                            } else {
+                                self.buf.extend_from_slice(chunk);
+                            }
+                            (chunk.len(), false)
+                        }
+                    }
+                }
+            };
+            self.inner.consume(used);
+            if done {
+                break;
+            }
+        }
+        if !saw_any && self.buf.is_empty() && dropped == 0 {
+            return Ok(None);
+        }
+        if dropped > 0 {
+            return Ok(Some(WireLine::Oversized {
+                bytes: self.buf.len() + dropped,
+            }));
+        }
+        if self.buf.ends_with(b"\r") {
+            self.buf.pop();
+        }
+        Ok(Some(WireLine::Frame(&self.buf)))
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,503 @@
+use std::io::{BufReader, Cursor};
+
+use super::*;
+use crate::util::json;
+
+// -------------------------------------------------------------------
+// Zero-copy semantics
+// -------------------------------------------------------------------
+
+#[test]
+fn unescaped_strings_borrow_the_input() {
+    let line = r#"{"type":"request","prompt":"plain ascii prompt","output_tokens":4,"api_calls":[]}"#;
+    let Ok(Frame::Request(req)) = Frame::parse(line) else {
+        panic!("expected a request frame");
+    };
+    assert!(matches!(req.prompt, Cow::Borrowed(_)),
+            "no escapes -> the prompt must borrow the line");
+    assert_eq!(req.prompt, "plain ascii prompt");
+    // Multi-byte UTF-8 without escapes still borrows.
+    let line = "{\"prompt\":\"héllo wörld ✓\",\"output_tokens\":1}";
+    let Ok(Frame::V1Request(req)) = Frame::parse(line) else {
+        panic!("expected a v1 frame");
+    };
+    assert!(matches!(req.prompt, Cow::Borrowed(_)));
+    assert_eq!(req.prompt, "héllo wörld ✓");
+}
+
+#[test]
+fn escaped_strings_copy_and_decode() {
+    let line = r#"{"prompt":"line\none \"two\" \\ \/ \t Aé","output_tokens":1}"#;
+    let Ok(Frame::V1Request(req)) = Frame::parse(line) else {
+        panic!("expected a v1 frame");
+    };
+    assert!(matches!(req.prompt, Cow::Owned(_)),
+            "escapes force an owned copy");
+    assert_eq!(req.prompt, "line\none \"two\" \\ / \t Aé");
+    // Decoded text matches the old tree parser exactly.
+    let old = json::parse(line).unwrap().str_field("prompt").unwrap();
+    assert_eq!(req.prompt, old.as_str());
+}
+
+// -------------------------------------------------------------------
+// Parse parity with the old util::json + field-walk path
+// -------------------------------------------------------------------
+
+#[test]
+fn syntax_errors_match_util_json_byte_for_byte() {
+    // Every line here fails JSON parsing; the typed lexer must report
+    // the identical message (clients see these in error frames).
+    let cases = [
+        "not json",
+        "",
+        "   ",
+        "{",
+        "tru",
+        "nul",
+        "falsehood extra",
+        "123 xyz",
+        "{} garbage",
+        "[1,]",
+        "[1 2]",
+        r#"{"a" 1}"#,
+        r#"{"a":}"#,
+        r#"{"a":1,}"#,
+        r#"{"a":1"#,
+        r#""unterminated"#,
+        r#"{"a":"\q"}"#,
+        r#""bad\u12""#,
+        r#"{"prompt":"x","output_tokens":-}"#,
+        r#"{"api_calls":[{]}"#,
+        "{\"nested\":{\"deep\":[1,{\"x\":}]}}",
+    ];
+    for line in cases {
+        let old = json::parse(line)
+            .err()
+            .map(|e| e.to_string())
+            .unwrap_or_else(|| panic!("'{line}' should fail json::parse"));
+        let new = Frame::parse(line)
+            .err()
+            .map(|e| e.to_string())
+            .unwrap_or_else(|| panic!("'{line}' should fail Frame::parse"));
+        assert_eq!(new, old, "error text diverged for input: {line}");
+    }
+}
+
+#[test]
+fn field_errors_match_the_old_walk() {
+    let cases: &[(&str, &str)] = &[
+        ("{}", "bad request: missing JSON field 'prompt'"),
+        ("[1,2]", "bad request: missing JSON field 'prompt'"),
+        ("\"str\"", "bad request: missing JSON field 'prompt'"),
+        ("42", "bad request: missing JSON field 'prompt'"),
+        ("null", "bad request: missing JSON field 'prompt'"),
+        (r#"{"prompt":5,"output_tokens":1}"#,
+         "bad request: field 'prompt' not a string"),
+        (r#"{"prompt":"x"}"#,
+         "bad request: missing JSON field 'output_tokens'"),
+        (r#"{"prompt":"x","output_tokens":"y"}"#,
+         "bad request: field 'output_tokens' not a number"),
+        (r#"{"prompt":"x","output_tokens":1,"api_calls":3}"#,
+         "bad request: 'api_calls' must be an array"),
+        (r#"{"prompt":"x","output_tokens":1,"api_calls":[{"decode_before":1,"api_type":"nope"}]}"#,
+         "bad request: unknown api_type 'nope'"),
+        (r#"{"prompt":"x","output_tokens":1,"api_calls":[{"api_type":"qa"}]}"#,
+         "bad request: missing JSON field 'decode_before'"),
+        (r#"{"type":"request"}"#,
+         "bad request: missing JSON field 'prompt'"),
+        // A non-string type reads as absent -> v1 dispatch (old
+        // `.and_then(as_str)` behavior).
+        (r#"{"type":5}"#, "bad request: missing JSON field 'prompt'"),
+        (r#"{"type":"tool_result"}"#,
+         "bad tool_result: missing JSON field 'id'"),
+        (r#"{"type":"tool_result","id":1}"#,
+         "bad tool_result: missing JSON field 'index'"),
+        (r#"{"type":"tool_result","id":1,"index":0}"#,
+         "bad tool_result: missing JSON field 'response_tokens'"),
+        (r#"{"type":"tool_result","id":"one","index":0,"response_tokens":2}"#,
+         "bad tool_result: field 'id' not a number"),
+        (r#"{"type":"cancel"}"#, "bad cancel: missing JSON field 'id'"),
+        (r#"{"type":"bogus"}"#, "unknown frame type 'bogus'"),
+    ];
+    for (line, expect) in cases {
+        let err = Frame::parse(line)
+            .err()
+            .unwrap_or_else(|| panic!("'{line}' should fail"));
+        assert_eq!(err.reply_message(), *expect, "input: {line}");
+    }
+}
+
+#[test]
+fn duplicate_keys_are_last_wins_like_a_btreemap() {
+    // Last occurrence decides value AND acceptability, both ways.
+    let Ok(Frame::V1Request(r)) = Frame::parse(
+        r#"{"prompt":5,"prompt":"a","output_tokens":1,"output_tokens":7}"#)
+    else {
+        panic!("expected v1");
+    };
+    assert_eq!(r.prompt, "a");
+    assert_eq!(r.output_tokens, 7);
+    let err = Frame::parse(r#"{"prompt":"a","prompt":5,"output_tokens":1}"#)
+        .err()
+        .map(|e| e.reply_message());
+    assert_eq!(err.as_deref(),
+               Some("bad request: field 'prompt' not a string"));
+    // A later non-string `type` demotes the line to v1 (the old map's
+    // last-wins + `.and_then(as_str)`).
+    let Ok(Frame::V1Request(_)) = Frame::parse(
+        r#"{"type":"request","type":1,"prompt":"x","output_tokens":1}"#)
+    else {
+        panic!("expected v1 dispatch");
+    };
+}
+
+#[test]
+fn typed_frames_carry_the_old_walk_semantics() {
+    // Defaults: api_type -> tool, response_tokens -> 4, api_ms -> None.
+    let Ok(Frame::Request(r)) = Frame::parse(
+        r#"{"type":"request","prompt":"p","output_tokens":20,
+            "api_calls":[
+              {"decode_before":5,"api_type":"qa","api_ms":700,
+               "response_tokens":32},
+              {"decode_before":3,"api_type":"image"},
+              {"decode_before":2}]}"#)
+    else {
+        panic!("expected request");
+    };
+    assert_eq!(r.api_calls.len(), 3);
+    assert_eq!(r.api_calls[0].api_type, ApiType::Qa);
+    assert_eq!(r.api_calls[0].api_ms, Some(700));
+    assert_eq!(r.api_calls[0].response_tokens, 32);
+    assert_eq!(r.api_calls[1].api_ms, None);
+    assert_eq!(r.api_calls[1].response_tokens, 4);
+    assert_eq!(r.api_calls[2].api_type, ApiType::Tool(0));
+    // v1 fallback synthesizes one generic tool call from
+    // pre_api_tokens/api_ms.
+    let Ok(Frame::V1Request(r)) = Frame::parse(
+        r#"{"prompt":"hi","output_tokens":12,"pre_api_tokens":4,"api_ms":50}"#)
+    else {
+        panic!("expected v1");
+    };
+    assert_eq!(r.api_calls.len(), 1);
+    assert_eq!(r.api_calls[0].decode_before, 4);
+    assert_eq!(r.api_calls[0].api_ms, Some(50));
+    assert_eq!(r.api_calls[0].api_type, ApiType::Tool(0));
+    // Floats truncate and negatives saturate exactly like the old
+    // `as_u64` cast; lenient optionals ignore wrong-typed values.
+    let Ok(Frame::ToolResult(t)) = Frame::parse(
+        r#"{"type":"tool_result","id":2.9,"index":-3,"response_tokens":8}"#)
+    else {
+        panic!("expected tool_result");
+    };
+    assert_eq!(t.id, 2);
+    assert_eq!(t.index, 0);
+    let Ok(Frame::V1Request(r)) = Frame::parse(
+        r#"{"prompt":"x","output_tokens":1,"pre_api_tokens":"lots"}"#)
+    else {
+        panic!("expected v1");
+    };
+    assert!(r.api_calls.is_empty(), "non-numeric pre_api_tokens ignored");
+    let Ok(Frame::Cancel(c)) =
+        Frame::parse(r#"{"type":"cancel","id":7}"#)
+    else {
+        panic!("expected cancel");
+    };
+    assert_eq!(c.id, 7);
+    // Unknown keys are skipped (with full syntax validation).
+    assert!(Frame::parse(
+        r#"{"prompt":"x","output_tokens":1,"extra":{"deep":[1,"s",null]}}"#)
+        .is_ok());
+}
+
+// -------------------------------------------------------------------
+// Encoder parity with the old json::write path
+// -------------------------------------------------------------------
+
+/// Build the exact Value tree the old `RequestEvent::to_json` built.
+fn old_style(pairs: Vec<(&str, json::Value)>) -> String {
+    json::write(&json::obj(pairs))
+}
+
+#[test]
+fn event_frames_encode_byte_identically_to_json_write() {
+    let id = json::num(5.0);
+    let cases: Vec<(EventFrame<'_>, String)> = vec![
+        (EventFrame::Queued { id: 5 },
+         old_style(vec![("type", json::s("queued")),
+                        ("id", id.clone())])),
+        (EventFrame::Placed { id: 5, replica: 2 },
+         old_style(vec![("type", json::s("placed")),
+                        ("id", id.clone()),
+                        ("replica", json::num(2.0))])),
+        (EventFrame::Rescued { id: 5, from: 2, to: 0 },
+         old_style(vec![("type", json::s("rescued")),
+                        ("id", id.clone()),
+                        ("from", json::num(2.0)),
+                        ("to", json::num(0.0))])),
+        (EventFrame::FirstToken { id: 5 },
+         old_style(vec![("type", json::s("first_token")),
+                        ("id", id.clone())])),
+        (EventFrame::Tokens { id: 5, chunk: 7 },
+         old_style(vec![("type", json::s("tokens")),
+                        ("id", id.clone()),
+                        ("chunk", json::num(7.0))])),
+        (EventFrame::ApiCallStarted {
+            id: 5,
+            index: 0,
+            strategy: "swap",
+            predicted_us: 690_000,
+            external: true,
+        },
+         old_style(vec![("type", json::s("api_call_started")),
+                        ("id", id.clone()),
+                        ("index", json::num(0.0)),
+                        ("strategy", json::s("swap")),
+                        ("predicted_us", json::num(690_000.0)),
+                        ("external", json::Value::Bool(true))])),
+        (EventFrame::ApiCallCompleted {
+            id: 5,
+            index: 1,
+            actual_us: 1_234,
+        },
+         old_style(vec![("type", json::s("api_call_completed")),
+                        ("id", id.clone()),
+                        ("index", json::num(1.0)),
+                        ("actual_us", json::num(1_234.0))])),
+        (EventFrame::Dropped {
+            id: 5,
+            reason: "a \"quoted\" \\ reason\nwith\tcontrol\u{1}bytes",
+        },
+         old_style(vec![
+             ("type", json::s("dropped")),
+             ("id", id.clone()),
+             ("reason",
+              json::s("a \"quoted\" \\ reason\nwith\tcontrol\u{1}bytes")),
+         ])),
+        (EventFrame::SessionError { id: 5, error: "wrong index" },
+         old_style(vec![("type", json::s("error")),
+                        ("id", id.clone()),
+                        ("error", json::s("wrong index"))])),
+        (EventFrame::Error { error: "bad request: bad literal at byte 0" },
+         old_style(vec![
+             ("type", json::s("error")),
+             ("error", json::s("bad request: bad literal at byte 0")),
+         ])),
+    ];
+    for (frame, expect) in &cases {
+        assert_eq!(&Encoder::frame_to_string(frame), expect,
+                   "frame diverged: {frame:?}");
+    }
+}
+
+#[test]
+fn completion_frames_encode_byte_identically_to_json_write() {
+    // Served completion with generated ids (negative ones too — the
+    // i32 -> f64 -> i64 chain must match).
+    let served = CompletionFrame {
+        id: 3,
+        latency_us: 27_384,
+        ttft_us: Some(812),
+        tokens_decoded: 6,
+        generated: Some(&[1, -2, 40_000]),
+        dropped: None,
+    };
+    let mut pairs = vec![
+        ("id", json::num(3.0)),
+        ("latency_us", json::num(27_384.0)),
+        ("tokens_decoded", json::num(6.0)),
+        ("ttft_us", json::num(812.0)),
+        ("generated",
+         json::Value::Arr(vec![json::num(1.0), json::num(-2.0),
+                               json::num(40_000.0)])),
+    ];
+    let old_v1 = json::write(&json::obj(pairs.clone()));
+    assert_eq!(Encoder::frame_to_string(&EventFrame::Completion(served)),
+               old_v1);
+    pairs.push(("type", json::s("finished")));
+    let old_finished = json::write(&json::obj(pairs));
+    assert_eq!(Encoder::frame_to_string(&EventFrame::Finished(served)),
+               old_finished);
+    // Dropped completion: null ttft/generated plus the dropped reason.
+    let dropped = CompletionFrame {
+        id: 9,
+        latency_us: 0,
+        ttft_us: None,
+        tokens_decoded: 0,
+        generated: None,
+        dropped: Some("context outgrew budget"),
+    };
+    let old = json::write(&json::obj(vec![
+        ("id", json::num(9.0)),
+        ("latency_us", json::num(0.0)),
+        ("tokens_decoded", json::num(0.0)),
+        ("ttft_us", json::Value::Null),
+        ("generated", json::Value::Null),
+        ("dropped", json::s("context outgrew budget")),
+        ("type", json::s("finished")),
+    ]));
+    assert_eq!(Encoder::frame_to_string(&EventFrame::Finished(dropped)),
+               old);
+    // Number edge: a huge latency exercises the non-integer branch of
+    // the number rule through the identical f64 chain.
+    let huge = CompletionFrame {
+        id: 1,
+        latency_us: u64::MAX,
+        ttft_us: Some(2u64.pow(53)),
+        tokens_decoded: 1,
+        generated: None,
+        dropped: None,
+    };
+    let old = json::write(&json::obj(vec![
+        ("id", json::num(1.0)),
+        ("latency_us", json::num(u64::MAX as f64)),
+        ("tokens_decoded", json::num(1.0)),
+        ("ttft_us", json::num(2f64.powi(53))),
+        ("generated", json::Value::Null),
+    ]));
+    assert_eq!(Encoder::frame_to_string(&EventFrame::Completion(huge)),
+               old);
+}
+
+#[test]
+fn encoder_batches_frames_and_resets_on_drain() {
+    let mut enc = Encoder::with_capacity(256);
+    assert!(enc.is_empty());
+    enc.push(&EventFrame::Queued { id: 0 });
+    enc.push(&EventFrame::FirstToken { id: 0 });
+    let expect = "{\"id\":0,\"type\":\"queued\"}\n\
+                  {\"id\":0,\"type\":\"first_token\"}\n";
+    assert_eq!(enc.bytes(), expect.as_bytes());
+    assert_eq!(enc.len(), expect.len());
+    let mut out: Vec<u8> = Vec::new();
+    enc.drain_to(&mut out).unwrap();
+    assert_eq!(out, expect.as_bytes());
+    assert!(enc.is_empty(), "drain resets the buffer for reuse");
+    enc.drain_to(&mut out).unwrap();
+    assert_eq!(out.len(), expect.len(), "empty drain writes nothing");
+}
+
+// -------------------------------------------------------------------
+// Client-side canonical lines
+// -------------------------------------------------------------------
+
+#[test]
+fn to_line_round_trips_through_parse() {
+    let req = RequestFrame {
+        prompt: Cow::Borrowed("what is 6 times 7?"),
+        api_calls: vec![CallFrame {
+            decode_before: 2,
+            api_ms: None,
+            api_type: ApiType::Math,
+            response_tokens: 2,
+        }],
+        output_tokens: 4,
+    };
+    let line = req.to_line();
+    assert_eq!(line,
+               "{\"type\":\"request\",\"prompt\":\"what is 6 times 7?\",\
+                \"output_tokens\":4,\"api_calls\":[{\"decode_before\":2,\
+                \"api_type\":\"math\",\"response_tokens\":2}]}");
+    let Ok(Frame::Request(back)) = Frame::parse(&line) else {
+        panic!("round trip failed");
+    };
+    assert_eq!(back, req);
+    // api_ms present rides between api_type and response_tokens.
+    let with_ms = RequestFrame {
+        prompt: Cow::Borrowed("x"),
+        api_calls: vec![CallFrame {
+            decode_before: 1,
+            api_ms: Some(700),
+            api_type: ApiType::Qa,
+            response_tokens: 4,
+        }],
+        output_tokens: 1,
+    };
+    let Ok(Frame::Request(back)) = Frame::parse(&with_ms.to_line()) else {
+        panic!("round trip failed");
+    };
+    assert_eq!(back, with_ms);
+    let tr = ToolResultFrame { id: 0, index: 0, response_tokens: 2 };
+    assert_eq!(tr.to_line(),
+               "{\"type\":\"tool_result\",\"id\":0,\"index\":0,\
+                \"response_tokens\":2}");
+    assert_eq!(Frame::parse(&tr.to_line()),
+               Ok(Frame::ToolResult(tr)));
+    let c = CancelFrame { id: 3 };
+    assert_eq!(c.to_line(), "{\"type\":\"cancel\",\"id\":3}");
+    assert_eq!(Frame::parse(&c.to_line()), Ok(Frame::Cancel(c)));
+}
+
+// -------------------------------------------------------------------
+// Line framing
+// -------------------------------------------------------------------
+
+fn reader_over(bytes: &[u8], cap: usize)
+               -> FrameReader<BufReader<Cursor<Vec<u8>>>> {
+    FrameReader::new(BufReader::with_capacity(cap,
+                                              Cursor::new(bytes.to_vec())))
+}
+
+#[test]
+fn frame_reader_splits_lines_and_strips_cr() {
+    let mut r = reader_over(b"one\ntwo\r\n\nlast", 8192);
+    assert_eq!(r.next_line().unwrap(), Some(WireLine::Frame(b"one")));
+    assert_eq!(r.next_line().unwrap(), Some(WireLine::Frame(b"two")));
+    assert_eq!(r.next_line().unwrap(), Some(WireLine::Frame(b"")));
+    // Final line without a trailing newline is still yielded.
+    assert_eq!(r.next_line().unwrap(), Some(WireLine::Frame(b"last")));
+    assert!(r.next_line().unwrap().is_none(), "clean EOF");
+    assert!(r.next_line().unwrap().is_none(), "EOF is sticky");
+}
+
+#[test]
+fn frame_reader_survives_byte_at_a_time_delivery() {
+    // A 1-byte BufReader forces every fill_buf to deliver one byte —
+    // the degenerate version of frames split across TCP segments —
+    // including splits inside a multi-byte UTF-8 character.
+    let line = "{\"prompt\":\"héllo ✓\",\"output_tokens\":1}";
+    let bytes = format!("{line}\n{line}").into_bytes();
+    let mut r = reader_over(&bytes, 1);
+    for _ in 0..2 {
+        let Some(WireLine::Frame(got)) = r.next_line().unwrap() else {
+            panic!("expected a frame");
+        };
+        assert_eq!(got, line.as_bytes());
+        let text = std::str::from_utf8(got).unwrap();
+        assert!(matches!(Frame::parse(text), Ok(Frame::V1Request(_))));
+    }
+    assert!(r.next_line().unwrap().is_none());
+}
+
+#[test]
+fn frame_reader_reports_oversized_lines_and_resyncs() {
+    let mut huge = vec![b'x'; MAX_FRAME_BYTES + 10];
+    huge.push(b'\n');
+    huge.extend_from_slice(b"{\"ok\":1}\n");
+    let mut r = reader_over(&huge, 4096);
+    assert_eq!(r.next_line().unwrap(),
+               Some(WireLine::Oversized { bytes: MAX_FRAME_BYTES + 10 }));
+    // The stream resynchronized on the newline: the next line is whole.
+    assert_eq!(r.next_line().unwrap(),
+               Some(WireLine::Frame(b"{\"ok\":1}".as_slice())));
+    assert!(r.next_line().unwrap().is_none());
+    // A line of exactly MAX_FRAME_BYTES still passes.
+    let mut edge = vec![b'y'; MAX_FRAME_BYTES];
+    edge.push(b'\n');
+    let mut r = reader_over(&edge, 4096);
+    let Some(WireLine::Frame(got)) = r.next_line().unwrap() else {
+        panic!("a cap-sized line must not be dropped");
+    };
+    assert_eq!(got.len(), MAX_FRAME_BYTES);
+}
+
+#[test]
+fn frame_reader_yields_invalid_utf8_for_the_dispatcher() {
+    // Framing is byte-level: invalid UTF-8 reaches the caller, who
+    // answers with an error frame instead of killing the connection.
+    let mut r = reader_over(b"\xff\xfe bad bytes\nnext\n", 8192);
+    let Some(WireLine::Frame(got)) = r.next_line().unwrap() else {
+        panic!("expected a frame");
+    };
+    assert!(std::str::from_utf8(got).is_err());
+    assert_eq!(r.next_line().unwrap(), Some(WireLine::Frame(b"next")));
+}

@@ -1,6 +1,8 @@
 //! Wire-protocol fuzz: seeded random frames — garbage bytes, bracket
-//! bombs, structurally random JSON, mutated valid frames, and valid
-//! frames with hostile field values — thrown at the v2 NDJSON TCP
+//! bombs, structurally random JSON, mutated valid frames, valid
+//! frames with hostile field values, escape-heavy strings, frames
+//! delivered one byte at a time (splitting multi-byte UTF-8 across
+//! reads), and oversized single frames — thrown at the v2 NDJSON TCP
 //! listener. The server must never panic and never emit a
 //! non-JSON byte in response: every reply line parses, and after the
 //! barrage the same listener still serves a well-formed request
@@ -116,6 +118,30 @@ fn mutated_frame(rng: &mut XorShift) -> String {
     String::from_utf8_lossy(&b).into_owned()
 }
 
+/// Escape-heavy strings: prompts stuffed with backslash escapes,
+/// quotes, `\u` sequences (well-formed, short, and malformed), and
+/// multi-byte UTF-8 — the zero-copy lexer's slow (owned) path, and
+/// the exact place a borrow/copy boundary bug would corrupt or panic.
+fn escape_heavy(rng: &mut XorShift) -> String {
+    const PIECES: [&str; 12] = [
+        "\\\"", "\\\\", "\\n", "\\t", "\\r", "\\b", "\\f", "\\/",
+        "\\u0041", "\\u20ac", "\\u12", "é✓",
+    ];
+    let n = 1 + rng.below(12) as usize;
+    let mut prompt = String::new();
+    for _ in 0..n {
+        prompt.push_str(PIECES[rng.below(12) as usize]);
+    }
+    // Half the time as a complete v1 request (so a well-formed escape
+    // run must decode and serve), half as a bare string frame (must
+    // die in field validation, not the lexer).
+    if rng.below(2) == 0 {
+        format!("{{\"prompt\":\"{prompt}\",\"output_tokens\":2}}")
+    } else {
+        format!("\"{prompt}\"")
+    }
+}
+
 /// A valid frame with adversarial-but-bounded field values: requests
 /// that may exceed the budget, tool results for ids that don't exist
 /// (or aren't externally held — this server simulates durations).
@@ -184,12 +210,13 @@ fn fuzzed_frames_never_break_the_listener() {
         let mut writer = stream.try_clone().unwrap();
         let mut reader = BufReader::new(stream);
         let mut rng = XorShift(seed);
-        for i in 0..160u64 {
-            let line = match rng.below(5) {
+        for i in 0..180u64 {
+            let line = match rng.below(6) {
                 0 => garbage_line(&mut rng),
                 1 => bracket_bomb(&mut rng),
                 2 => random_json(&mut rng, 3),
                 3 => mutated_frame(&mut rng),
+                4 => escape_heavy(&mut rng),
                 _ => hostile_valid(&mut rng),
             };
             // A dead listener surfaces here as a broken pipe.
@@ -222,5 +249,90 @@ fn fuzzed_frames_never_break_the_listener() {
     let v = json::parse(&line).expect("completion is valid JSON");
     assert_eq!(v.u64_field("tokens_decoded").unwrap(), 3,
                "post-fuzz request must be served normally");
+    handle.shutdown();
+}
+
+#[test]
+fn byte_at_a_time_delivery_with_split_utf8() {
+    // Frames trickled one byte per write + flush — every multi-byte
+    // UTF-8 character in the prompt is split across read-buffer
+    // boundaries. The line framer must reassemble them, the zero-copy
+    // lexer must decode the escapes, and the request must complete.
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.cost = fast_cost();
+    let (handle, _join) = server::spawn_sim(cfg);
+    let addr = "127.0.0.1:17074";
+    let server_handle = handle.clone();
+    std::thread::spawn(move || {
+        let _ = server::serve_tcp(server_handle, addr);
+    });
+    let stream = connect(addr);
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let line = "{\"prompt\":\"héllo ✓ \\u20ac wörld\",\
+                \"output_tokens\":3}\n";
+    for b in line.as_bytes() {
+        writer.write_all(std::slice::from_ref(b)).unwrap();
+        writer.flush().unwrap();
+    }
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    let v = json::parse(&reply).expect("completion is valid JSON");
+    assert_eq!(v.u64_field("tokens_decoded").unwrap(), 3,
+               "byte-at-a-time request must be served normally");
+    // Same treatment for a malformed escape: a JSON error frame, not
+    // a hangup.
+    let bad = "{\"prompt\":\"\\q\",\"output_tokens\":1}\n";
+    for b in bad.as_bytes() {
+        writer.write_all(std::slice::from_ref(b)).unwrap();
+    }
+    writer.flush().unwrap();
+    reply.clear();
+    reader.read_line(&mut reply).unwrap();
+    let v = json::parse(&reply).expect("error frame is valid JSON");
+    assert!(v.str_field("error").unwrap().contains("bad escape"),
+            "{reply}");
+    handle.shutdown();
+}
+
+#[test]
+fn oversized_frames_get_an_error_and_the_connection_survives() {
+    // A single frame beyond the 1 MiB line cap is discarded while
+    // reading; the reply must be a well-formed JSON error naming the
+    // size, and the same connection must then serve a normal request.
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.cost = fast_cost();
+    let (handle, _join) = server::spawn_sim(cfg);
+    let addr = "127.0.0.1:17075";
+    let server_handle = handle.clone();
+    std::thread::spawn(move || {
+        let _ = server::serve_tcp(server_handle, addr);
+    });
+    let stream = connect(addr);
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    // A syntactically valid giant request — size alone must reject it.
+    let mut huge =
+        String::from("{\"prompt\":\"");
+    huge.push_str(&"x".repeat(lamps::wire::MAX_FRAME_BYTES));
+    huge.push_str("\",\"output_tokens\":1}\n");
+    writer.write_all(huge.as_bytes()).unwrap();
+    writer.flush().unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    let v = json::parse(&reply).expect("oversize reply is valid JSON");
+    let msg = v.str_field("error").unwrap();
+    assert!(msg.contains("exceeds") && msg.contains("byte"), "{reply}");
+    // Listener and connection both survive.
+    writer
+        .write_all(b"{\"prompt\": \"after the flood\", \
+                      \"output_tokens\": 2}\n")
+        .unwrap();
+    writer.flush().unwrap();
+    reply.clear();
+    reader.read_line(&mut reply).unwrap();
+    let v = json::parse(&reply).unwrap();
+    assert_eq!(v.u64_field("tokens_decoded").unwrap(), 2,
+               "connection must stay usable after an oversized frame");
     handle.shutdown();
 }

@@ -1,0 +1,198 @@
+//! Golden-transcript test: replay `examples/protocol_v2.ndjson`
+//! through the typed wire layer and prove byte-for-byte compatibility
+//! with the documented protocol.
+//!
+//! Every `<-` (server) line must be in the canonical `util::json`
+//! writer form AND come out of the typed `wire::Encoder` identical to
+//! the byte. Every `->` (client) line must round-trip through
+//! `wire::Frame::parse` and the typed `to_line()` constructors (the
+//! legacy v1 line only parses — its canonical form is the v2 shape).
+//! The transcript's malformed tool_result must produce exactly the
+//! error text the following server line documents.
+
+use lamps::util::json::{self, Value};
+use lamps::wire::{CompletionFrame, Encoder, EventFrame, Frame};
+
+fn transcript() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"),
+                       "/../examples/protocol_v2.ndjson");
+    std::fs::read_to_string(path).expect("transcript readable")
+}
+
+fn u(v: &Value, key: &'static str) -> u64 {
+    v.u64_field(key).expect(key)
+}
+
+/// Rebuild the typed `EventFrame` a server line documents, borrowing
+/// the string fields straight out of the parsed `Value`.
+fn typed<'a>(v: &'a Value, line: &str) -> EventFrame<'a> {
+    let err = |v: &'a Value| {
+        v.get("error")
+            .and_then(|e| e.as_str())
+            .expect("error field is a string")
+    };
+    match v.get("type").and_then(|t| t.as_str()) {
+        Some("queued") => EventFrame::Queued { id: u(v, "id") },
+        Some("placed") => EventFrame::Placed {
+            id: u(v, "id"),
+            replica: u(v, "replica"),
+        },
+        Some("first_token") => {
+            EventFrame::FirstToken { id: u(v, "id") }
+        }
+        Some("tokens") => EventFrame::Tokens {
+            id: u(v, "id"),
+            chunk: u(v, "chunk"),
+        },
+        Some("api_call_started") => EventFrame::ApiCallStarted {
+            id: u(v, "id"),
+            index: u(v, "index"),
+            strategy: v
+                .get("strategy")
+                .and_then(|s| s.as_str())
+                .expect("strategy is a string"),
+            predicted_us: u(v, "predicted_us"),
+            external: v
+                .get("external")
+                .and_then(|b| b.as_bool())
+                .expect("external is a bool"),
+        },
+        Some("api_call_completed") => EventFrame::ApiCallCompleted {
+            id: u(v, "id"),
+            index: u(v, "index"),
+            actual_us: u(v, "actual_us"),
+        },
+        Some("finished") => EventFrame::Finished(completion(v)),
+        Some("dropped") => EventFrame::Dropped {
+            id: u(v, "id"),
+            reason: v
+                .get("reason")
+                .and_then(|r| r.as_str())
+                .expect("reason is a string"),
+        },
+        Some("error") => match v.get("id") {
+            Some(_) => EventFrame::SessionError {
+                id: u(v, "id"),
+                error: err(v),
+            },
+            None => EventFrame::Error { error: err(v) },
+        },
+        Some(other) => {
+            panic!("transcript line has unmapped type {other}: {line}")
+        }
+        // v1 completion object: no "type" key at all.
+        None => EventFrame::Completion(completion(v)),
+    }
+}
+
+fn completion<'a>(v: &'a Value) -> CompletionFrame<'a> {
+    // Every transcript completion carries generated:null; a non-null
+    // token list would need a backing slice this helper can't borrow.
+    assert!(matches!(v.get("generated"), Some(Value::Null)),
+            "transcript completions carry generated:null");
+    CompletionFrame {
+        id: u(v, "id"),
+        latency_us: u(v, "latency_us"),
+        ttft_us: v.get("ttft_us").and_then(|t| t.as_u64()),
+        tokens_decoded: u(v, "tokens_decoded"),
+        generated: None,
+        dropped: v.get("dropped").and_then(|d| d.as_str()),
+    }
+}
+
+#[test]
+fn transcript_replays_byte_identically_through_the_typed_wire_layer() {
+    let text = transcript();
+    // Set when a `->` line is (deliberately) malformed; the next `<-`
+    // line documents the exact error frame it must produce.
+    let mut pending_parse_error: Option<String> = None;
+    let mut server_lines = 0usize;
+    let mut client_lines = 0usize;
+    for raw in text.lines() {
+        let raw = raw.trim();
+        if raw.is_empty() || raw.starts_with('#') {
+            continue;
+        }
+        if let Some(line) = raw.strip_prefix("-> ") {
+            client_lines += 1;
+            match Frame::parse(line) {
+                Ok(Frame::Request(req)) => {
+                    assert_eq!(req.to_line(), line,
+                               "request to_line() must emit the \
+                                documented canonical bytes");
+                }
+                Ok(Frame::ToolResult(tr)) => {
+                    assert_eq!(tr.to_line(), line,
+                               "tool_result to_line() must emit the \
+                                documented canonical bytes");
+                }
+                Ok(Frame::Cancel(c)) => {
+                    assert_eq!(c.to_line(), line,
+                               "cancel to_line() must emit the \
+                                documented canonical bytes");
+                }
+                Ok(Frame::V1Request(req)) => {
+                    assert_eq!(req.prompt, "hello");
+                    assert_eq!(req.output_tokens, 3);
+                    assert!(req.api_calls.is_empty(),
+                            "the v1 line has no implicit call");
+                }
+                Err(e) => {
+                    pending_parse_error = Some(e.reply_message());
+                }
+            }
+        } else if let Some(line) = raw.strip_prefix("<- ") {
+            server_lines += 1;
+            let v = json::parse(line).expect("server line is JSON");
+            assert_eq!(json::write(&v), line,
+                       "transcript server lines are in canonical \
+                        writer form");
+            let frame = typed(&v, line);
+            assert_eq!(Encoder::frame_to_string(&frame), line,
+                       "typed encoder must reproduce the line");
+            if let Some(reply) = pending_parse_error.take() {
+                let documented = v
+                    .get("error")
+                    .and_then(|e| e.as_str())
+                    .expect("error reply documents its text");
+                assert_eq!(reply, documented,
+                           "parse error reply must match the \
+                            documented frame");
+            }
+        } else {
+            panic!("transcript line has no direction marker: {raw}");
+        }
+    }
+    assert!(pending_parse_error.is_none(),
+            "a malformed client line was never answered");
+    // The transcript shrank? Something was deleted — this test exists
+    // to notice exactly that.
+    assert!(client_lines >= 5, "expected >=5 client lines");
+    assert!(server_lines >= 11, "expected >=11 server lines");
+}
+
+/// The whole server->client transcript must also batch through one
+/// reusable encoder into exactly the concatenated documented bytes —
+/// the pump's drain path, not just frame-at-a-time encoding.
+#[test]
+fn transcript_batches_through_one_encoder_drain() {
+    let text = transcript();
+    let mut expected = String::new();
+    let mut enc = Encoder::with_capacity(64);
+    let mut parsed: Vec<Value> = Vec::new();
+    for raw in text.lines() {
+        let raw = raw.trim();
+        if let Some(line) = raw.strip_prefix("<- ") {
+            expected.push_str(line);
+            expected.push('\n');
+            parsed.push(json::parse(line).expect("server line"));
+        }
+    }
+    for v in &parsed {
+        enc.push(&typed(v, "batched"));
+    }
+    let mut out: Vec<u8> = Vec::new();
+    enc.drain_to(&mut out).expect("Vec write cannot fail");
+    assert_eq!(String::from_utf8(out).expect("utf8"), expected);
+    assert!(enc.is_empty(), "drain must reset the buffer");
+}
