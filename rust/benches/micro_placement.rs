@@ -1,0 +1,370 @@
+//! micro_placement: placement-probe hot-path microbench — the
+//! epoch-cached `Engine::load_memory_over_time` versus the from-scratch
+//! O(live + pending) recompute it memoizes (PR 8).
+//!
+//! A placement decision probes every replica; between arrivals almost
+//! no replica's state changes, so the stateless recompute redoes the
+//! same rank integrals fleet-wide per arrival. The epoch cache makes a
+//! probe O(1) when the replica is untouched. This bench builds two
+//! identical fleets — score cache on and off (`placement_cache`) — and
+//! measures probe sweeps with a realistic invalidation pattern: one
+//! replica dirtied per pass (an arrival lands somewhere, everyone else
+//! is unchanged).
+//!
+//! Three jobs in one binary, mirroring `micro_wire`:
+//!
+//! 1. **Correctness cross-check** (always): before anything is timed,
+//!    every replica's cached score must be bit-identical to the
+//!    uncached fleet's, to its own `load_memory_over_time_uncached`,
+//!    and a memory-over-time pick sequence over both fleets must choose
+//!    identical replicas — a perf win that moves placement is a
+//!    scheduling break.
+//! 2. **Measurement**: probes/sec + allocations/probe for both fleets
+//!    at 4, 16, and 64 replicas, via a counting global allocator. At 64
+//!    replicas the cached fleet must probe strictly faster and allocate
+//!    strictly less per probe, or the bench exits non-zero (the PR's
+//!    acceptance criterion, kept honest forever).
+//! 3. **Perf trajectory**: `--json PATH` (or `LAMPS_BENCH_JSON`)
+//!    writes the stable `BENCH_micro_placement.json` snapshot; `--gate
+//!    PATH` (or `LAMPS_BENCH_GATE`) reads a checked-in snapshot and
+//!    fails if cached probes/sec at 64 replicas regressed more than 20%
+//!    against it.
+//!
+//! ```sh
+//! cargo bench --bench micro_placement -- \
+//!     --gate "$PWD/../BENCH_micro_placement.json" \
+//!     --json "$PWD/../BENCH_micro_placement.fresh.json"
+//! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use lamps::cluster::{self, ArrivalScratch};
+use lamps::config::{PlacementKind, SystemConfig};
+use lamps::core::request::{ApiCallSpec, ApiType, RequestSpec};
+use lamps::core::types::{Micros, RequestId, Tokens};
+use lamps::engine::Engine;
+use lamps::util::json::{self, Value};
+
+/// System allocator with an allocation counter — `alloc`/`realloc`
+/// calls are the "allocations" the amortized-probe claim is about.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout,
+                      new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+// -------------------------------------------------------------------
+// Fleet construction: identical live + pending load per replica
+// -------------------------------------------------------------------
+
+const REPLICA_COUNTS: [usize; 3] = [4, 16, 64];
+/// Admitted, mid-decode requests per replica (the O(live) sweep).
+const LIVE_PER_REPLICA: u64 = 6;
+/// Arrival-queued specs per replica (each one costs the recompute an
+/// oracle prediction + a handling assignment — the allocating part).
+const PENDING_PER_REPLICA: u64 = 8;
+/// Per-replica KV budget in token slots.
+const BUDGET: u64 = 12_000;
+
+/// Deterministic mixed spec: every third request is augmented (a long
+/// prompt decoding into an API call), the rest plain chat turns. `salt`
+/// staggers replicas so their loads — and therefore their scores —
+/// differ, which is what makes the pick-sequence cross-check meaningful.
+fn spec(id: u64, salt: u64) -> RequestSpec {
+    let v = id + salt;
+    let api_calls = if v % 3 == 0 {
+        vec![ApiCallSpec {
+            decode_before: Tokens(24 + 8 * (v % 5)),
+            api_type: ApiType::Tool(0),
+            duration: Micros(400_000 + 100_000 * (v % 4)),
+            response_tokens: Tokens(8),
+        }]
+    } else {
+        vec![]
+    };
+    RequestSpec {
+        id: RequestId(id),
+        arrival: Micros(0),
+        prompt: String::new(),
+        prompt_tokens: Tokens(128 + 96 * (v % 7)),
+        api_calls,
+        final_decode: Tokens(200 + 40 * (v % 6)),
+    }
+}
+
+/// One replica carrying live and pending load, staggered by `salt`.
+fn make_replica(salt: u64, cache: bool) -> Engine {
+    let mut cfg = SystemConfig::preset("lamps")
+        .expect("lamps preset exists");
+    cfg.memory_budget = Tokens(BUDGET);
+    cfg.placement_cache = cache;
+    let mut e = Engine::simulated(cfg);
+    for k in 0..LIVE_PER_REPLICA {
+        e.submit(spec(k, salt));
+    }
+    // A few iterations admit the batch and start decoding; the decode
+    // runways above are long enough that nothing finishes.
+    for _ in 0..4 {
+        e.step();
+    }
+    for k in 0..PENDING_PER_REPLICA {
+        e.enqueue(spec(1_000 + k, salt));
+    }
+    e
+}
+
+fn make_fleet(n: usize, cache: bool) -> Vec<Engine> {
+    (0..n).map(|r| make_replica(r as u64 * 17, cache)).collect()
+}
+
+/// A fresh arrival for the pick-sequence cross-check.
+fn probe_spec(i: u64) -> RequestSpec {
+    RequestSpec {
+        id: RequestId(10_000 + i),
+        arrival: Micros(0),
+        prompt: String::new(),
+        prompt_tokens: Tokens(64 + 32 * (i % 7)),
+        api_calls: vec![],
+        final_decode: Tokens(16 + 8 * (i % 5)),
+    }
+}
+
+// -------------------------------------------------------------------
+// Harness
+// -------------------------------------------------------------------
+
+struct Measured {
+    per_sec: f64,
+    allocs_per_probe: f64,
+}
+
+/// Time `passes` sweeps of `probes_per_pass` probes, returning
+/// probes/sec and allocations/probe.
+fn measure<F: FnMut() -> u64>(passes: u64, probes_per_pass: usize,
+                              mut work: F) -> Measured {
+    // Warmup pass (fills allocator caches, primes the score memos).
+    let mut sink = work();
+    let a0 = allocs();
+    let t0 = Instant::now();
+    for _ in 0..passes {
+        sink = sink.wrapping_add(work());
+    }
+    let elapsed = t0.elapsed();
+    let da = allocs() - a0;
+    std::hint::black_box(sink);
+    let probes = passes * probes_per_pass as u64;
+    let secs = elapsed.as_secs_f64().max(1e-9);
+    Measured {
+        per_sec: probes as f64 / secs,
+        allocs_per_probe: da as f64 / probes as f64,
+    }
+}
+
+/// One probe sweep with the realistic invalidation pattern: dirty one
+/// replica (round-robin), then score the whole fleet — exactly what a
+/// placement decision does after an arrival lands somewhere.
+fn sweep(fleet: &mut [Engine], cursor: &mut usize) -> u64 {
+    *cursor = (*cursor + 1) % fleet.len();
+    fleet[*cursor].invalidate_placement_cache();
+    fleet
+        .iter()
+        .map(|e| e.load_memory_over_time().to_bits())
+        .fold(0u64, u64::wrapping_add)
+}
+
+fn arg_or_env(args: &[String], flag: &str, env: &str)
+              -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+        .or_else(|| std::env::var(env).ok())
+}
+
+fn gate_value(v: &Value, section: &str, key: &str) -> Option<f64> {
+    v.get(section)?.get(key)?.as_f64()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let iters: u64 = std::env::var("LAMPS_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20_000);
+
+    let mut failed = false;
+    let mut sections: Vec<(String, Value)> = Vec::new();
+    let mut at_64: Option<(Measured, Measured)> = None;
+
+    for n in REPLICA_COUNTS {
+        let mut cached = make_fleet(n, true);
+        let mut uncached = make_fleet(n, false);
+
+        // -- Correctness before speed -------------------------------
+        // Identical fleets must score bit-identically, cache or no
+        // cache, and the cached probe must agree with its own
+        // from-scratch seam.
+        for (c, u) in cached.iter().zip(&uncached) {
+            let cv = c.load_memory_over_time();
+            assert_eq!(cv.to_bits(),
+                       u.load_memory_over_time().to_bits(),
+                       "cached fleet diverged from uncached fleet");
+            assert_eq!(cv.to_bits(),
+                       c.load_memory_over_time_uncached().to_bits(),
+                       "cache hit diverged from recompute");
+        }
+        // A memory-over-time pick sequence must be byte-identical.
+        for i in 0..(2 * n as u64) {
+            let spec = probe_spec(i);
+            let arrival = ArrivalScratch::new(&spec, 16);
+            let (mut rc, mut ru) = (0usize, 0usize);
+            let (pc, _) = cluster::pick_replica(
+                &cached, PlacementKind::MemoryOverTime, &mut rc,
+                &arrival, None);
+            let (pu, _) = cluster::pick_replica(
+                &uncached, PlacementKind::MemoryOverTime, &mut ru,
+                &arrival, None);
+            assert_eq!(pc, pu,
+                       "pick #{i} diverged: cached chose {pc}, \
+                        uncached chose {pu}");
+        }
+
+        // -- Measurement --------------------------------------------
+        // Normalize total probes across fleet sizes so runtime stays
+        // flat as n grows.
+        let passes = (iters / n as u64).max(200);
+        let mut cur_c = 0usize;
+        let m_cached = measure(passes, n, || {
+            sweep(&mut cached, &mut cur_c)
+        });
+        let mut cur_u = 0usize;
+        let m_uncached = measure(passes, n, || {
+            sweep(&mut uncached, &mut cur_u)
+        });
+
+        println!("== micro_placement: {n} replicas x {} live + {} \
+                  pending ({passes} passes) ==",
+                 LIVE_PER_REPLICA, PENDING_PER_REPLICA);
+        println!("{:<26} {:>14} {:>14}", "path", "probes/s",
+                 "allocs/probe");
+        println!("{:<26} {:>14.0} {:>14.3}", "recompute (cache off)",
+                 m_uncached.per_sec, m_uncached.allocs_per_probe);
+        println!("{:<26} {:>14.0} {:>14.3}", "epoch cache",
+                 m_cached.per_sec, m_cached.allocs_per_probe);
+
+        sections.push((format!("replicas_{n}"), json::obj(vec![
+            ("cached_probes_per_sec", json::num(m_cached.per_sec)),
+            ("cached_allocs_per_probe",
+             json::num(m_cached.allocs_per_probe)),
+            ("uncached_probes_per_sec",
+             json::num(m_uncached.per_sec)),
+            ("uncached_allocs_per_probe",
+             json::num(m_uncached.allocs_per_probe)),
+        ])));
+        if n == 64 {
+            at_64 = Some((m_cached, m_uncached));
+        }
+    }
+
+    // -- Acceptance criteria, kept honest on every run --------------
+    let (cached64, uncached64) = at_64.expect("64-replica sweep ran");
+    if cached64.per_sec <= uncached64.per_sec {
+        eprintln!("FAIL: cached probes must be strictly faster at 64 \
+                   replicas ({:.0} vs {:.0} probes/s)",
+                  cached64.per_sec, uncached64.per_sec);
+        failed = true;
+    }
+    if cached64.allocs_per_probe >= uncached64.allocs_per_probe {
+        eprintln!("FAIL: cached probes must allocate strictly less at \
+                   64 replicas ({:.3} vs {:.3} allocs/probe)",
+                  cached64.allocs_per_probe, uncached64.allocs_per_probe);
+        failed = true;
+    }
+
+    // -- Regression gate against the checked-in baseline ------------
+    if let Some(path) = arg_or_env(&args, "--gate", "LAMPS_BENCH_GATE") {
+        match std::fs::read_to_string(&path)
+            .map_err(|e| e.to_string())
+            .and_then(|text| {
+                json::parse(&text).map_err(|e| e.to_string())
+            }) {
+            Ok(baseline) => {
+                let key = "cached_probes_per_sec";
+                match gate_value(&baseline, "replicas_64", key) {
+                    Some(base) => {
+                        let floor = base * 0.8;
+                        if c64.per_sec < floor {
+                            eprintln!(
+                                "FAIL: replicas_64 {key} {:.0} \
+                                 regressed >20% vs baseline {base:.0} \
+                                 (floor {floor:.0}) from {path}",
+                                c64.per_sec);
+                            failed = true;
+                        } else {
+                            println!(
+                                "gate ok: replicas_64 {key} {:.0} >= \
+                                 floor {floor:.0}", c64.per_sec);
+                        }
+                    }
+                    None => {
+                        eprintln!("FAIL: baseline {path} is missing \
+                                   replicas_64.{key}");
+                        failed = true;
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!("FAIL: cannot read gate baseline {path}: {e}");
+                failed = true;
+            }
+        }
+    }
+
+    // -- Perf-trajectory snapshot -----------------------------------
+    if let Some(path) = arg_or_env(&args, "--json", "LAMPS_BENCH_JSON") {
+        let mut body = vec![
+            ("iters", json::num(iters as f64)),
+            ("live_per_replica", json::num(LIVE_PER_REPLICA as f64)),
+            ("pending_per_replica",
+             json::num(PENDING_PER_REPLICA as f64)),
+        ];
+        for (name, v) in &sections {
+            body.push((name.as_str(), v.clone()));
+        }
+        match lamps::bench::write_bench_json(&path, "micro_placement",
+                                             body) {
+            Ok(()) => eprintln!("bench json written to {path}"),
+            Err(e) => {
+                eprintln!("FAIL: cannot write bench json {path}: {e}");
+                failed = true;
+            }
+        }
+    }
+
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,17 @@
+//! Seeded violation for `probe-hot-loop`: prompt hashing inside the
+//! per-replica scoring loop. The chain must be computed once per
+//! arrival (ArrivalScratch) and borrowed by every probe.
+
+pub fn worst_replica(replicas: &[Engine], spec: &RequestSpec) -> usize {
+    let mut best = 0;
+    let mut most_cached = 0u64;
+    for (i, e) in replicas.iter().enumerate() {
+        let chain = prefix::content_chain(spec, 16, spec.prompt_tokens);
+        let cached = e.cached_blocks(&chain);
+        if cached > most_cached {
+            best = i;
+            most_cached = cached;
+        }
+    }
+    best
+}

@@ -1,6 +1,23 @@
 //! Figure harness: the (system x dataset x rate) grid runner every paper
 //! figure bench drives, plus table formatting. See DESIGN.md §4 for the
 //! experiment index.
+//!
+//! # Perf trajectory
+//!
+//! Three checked-in `BENCH_*.json` snapshots at the repo root record
+//! the hot-path baselines CI gates against (each bench reads its file
+//! via `--gate` and fails a >20% regression; a missing baseline fails
+//! CI outright):
+//!
+//! | snapshot                     | bench             | gated metric |
+//! |------------------------------|-------------------|--------------|
+//! | `BENCH_micro_wire.json`      | `micro_wire`      | typed inbound `frames_per_sec`, outbound `events_per_sec` |
+//! | `BENCH_micro_placement.json` | `micro_placement` | `replicas_64.cached_probes_per_sec` |
+//! | `BENCH_fig6.json`            | `fig6_e2e`        | none — end-to-end trajectory only (CI checks the emission path writes a non-empty report) |
+//!
+//! Regenerate any snapshot with the command in its `notes` field and
+//! commit the result; [`write_bench_json`] keeps the key order stable
+//! so diffs stay reviewable.
 
 use crate::cluster::ReplicaSet;
 use crate::config::{ComposeConfig, CostModel, PlacementKind,

@@ -55,6 +55,58 @@ pub use shared_prefix::{PrefixDeltaSink, SharedPrefixIndex};
 /// the engine's own guard).
 const MAX_FLEET_STEPS: u64 = 400_000_000;
 
+/// One arrival's placement-time scratch state: the spec plus its
+/// lazily-computed, computed-at-most-once prompt content chain.
+///
+/// Before this existed, `prefix_credits` hashed the prompt from
+/// scratch on every probe — and the same arrival could be hashed again
+/// by a rescue sweep and a third time by the owning engine at
+/// admission. The scratch pins the one-shot contract: the chain is
+/// computed on first use (never at all for policies that don't need
+/// it), every later probe borrows it, and [`ArrivalScratch::into_chain`]
+/// hands the finished chain to the chosen replica's memo
+/// (`Engine::seed_chain`) so admission and registration extend it
+/// instead of rehashing. Interior-mutable (`OnceCell`) so placement
+/// probes stay `&`-only — the probe-purity lint's contract.
+pub struct ArrivalScratch<'a> {
+    spec: &'a RequestSpec,
+    block_size: u64,
+    chain: std::cell::OnceCell<Vec<prefix::BlockHash>>,
+}
+
+impl<'a> ArrivalScratch<'a> {
+    /// Scratch for one arrival at the fleet's KV block size (clamped
+    /// to 1 so a degenerate config cannot divide by zero).
+    pub fn new(spec: &'a RequestSpec, block_size: u64)
+               -> ArrivalScratch<'a> {
+        ArrivalScratch {
+            spec,
+            block_size: block_size.max(1),
+            chain: std::cell::OnceCell::new(),
+        }
+    }
+
+    pub fn spec(&self) -> &RequestSpec {
+        self.spec
+    }
+
+    /// The arrival's full-prompt content chain, hashed on first call
+    /// and borrowed thereafter.
+    fn chain(&self) -> &[prefix::BlockHash] {
+        self.chain.get_or_init(|| {
+            prefix::content_chain(self.spec, self.block_size,
+                                  self.spec.prompt_tokens)
+        })
+    }
+
+    /// Surrender the chain if any probe computed it (`None` means no
+    /// probe needed hashing — nothing to seed). The caller forwards it
+    /// to the placed replica's chain memo.
+    pub fn into_chain(self) -> Option<Vec<prefix::BlockHash>> {
+        self.chain.into_inner()
+    }
+}
+
 /// Choose a replica for the next arrival under `policy`, returning the
 /// chosen index and — for prefix-affinity placement — the cached-token
 /// credit the choice was steered by (zero for every other policy, or
@@ -62,12 +114,14 @@ const MAX_FLEET_STEPS: u64 = 400_000_000;
 /// round-robin cursor (ignored by the other policies). Ties break
 /// toward the lowest replica index, keeping placement deterministic.
 /// Read-only over the replicas: probing a candidate never perturbs its
-/// state.
+/// state. The arrival comes wrapped in an [`ArrivalScratch`] so its
+/// prompt is hashed at most once across every probe of the placement
+/// path.
 ///
 /// Shared by the simulation driver below and the serving frontend's
 /// wall-clock dispatch loop (`server::spawn_replicated`).
 pub fn pick_replica(replicas: &[Engine], policy: PlacementKind,
-                    rr_next: &mut usize, spec: &RequestSpec,
+                    rr_next: &mut usize, arrival: &ArrivalScratch<'_>,
                     shared: Option<&SharedPrefixIndex>)
                     -> (usize, Tokens) {
     if replicas.len() <= 1 {
@@ -107,14 +161,14 @@ pub fn pick_replica(replicas: &[Engine], policy: PlacementKind,
             // leg of the arrival's own rank integral on that replica —
             // the same memory-over-time objective, now seeing what each
             // replica already holds.
-            let credits = prefix_credits(replicas, spec, shared);
+            let credits = prefix_credits(replicas, arrival, shared);
             let mut best = 0usize;
             let mut best_score = f64::INFINITY;
             for ((i, e), &credit) in
                 replicas.iter().enumerate().zip(&credits)
             {
-                let score =
-                    e.placement_score_prefixed(spec, Tokens(credit));
+                let score = e.placement_score_prefixed(arrival.spec(),
+                                                       Tokens(credit));
                 if score < best_score {
                     best = i;
                     best_score = score;
@@ -146,7 +200,8 @@ pub fn pick_replica(replicas: &[Engine], policy: PlacementKind,
 /// Returns the chosen sibling and its cached-token credit (zero
 /// outside prefix-affinity).
 pub fn pick_rescue_sibling(replicas: &[Engine], owner: usize,
-                           spec: &RequestSpec, policy: PlacementKind,
+                           arrival: &ArrivalScratch<'_>,
+                           policy: PlacementKind,
                            shared: Option<&SharedPrefixIndex>,
                            reserved: &[u64])
                            -> Option<(usize, Tokens)> {
@@ -158,7 +213,7 @@ pub fn pick_rescue_sibling(replicas: &[Engine], owner: usize,
         .filter(|&(j, e)| {
             j != owner
                 && e.can_fit_fresh_with(
-                    spec,
+                    arrival.spec(),
                     Tokens(reserved.get(j).copied().unwrap_or(0)))
         })
         .map(|(j, _)| j)
@@ -168,7 +223,7 @@ pub fn pick_rescue_sibling(replicas: &[Engine], owner: usize,
     }
     let affinity = policy == PlacementKind::PrefixAffinity;
     let credits: Vec<u64> = if affinity {
-        prefix_credits(replicas, spec, shared)
+        prefix_credits(replicas, arrival, shared)
     } else {
         vec![0; replicas.len()]
     };
@@ -177,7 +232,7 @@ pub fn pick_rescue_sibling(replicas: &[Engine], owner: usize,
         let Some(e) = replicas.get(j) else { continue };
         let credit = credits.get(j).copied().unwrap_or(0);
         let score = if affinity {
-            e.placement_score_prefixed(spec, Tokens(credit))
+            e.placement_score_prefixed(arrival.spec(), Tokens(credit))
         } else {
             e.load_memory_over_time()
         };
@@ -195,19 +250,18 @@ pub fn pick_rescue_sibling(replicas: &[Engine], owner: usize,
     })
 }
 
-/// Per-replica cached-token credits of `spec`'s prompt chain against
-/// the shared index — the probe shared by prefix-affinity placement
-/// and the rescue target choice. All zeros when no index is supplied
-/// or it is empty (nothing is hashed in that case).
-fn prefix_credits(replicas: &[Engine], spec: &RequestSpec,
+/// Per-replica cached-token credits of the arrival's prompt chain
+/// against the shared index — the probe shared by prefix-affinity
+/// placement and the rescue target choice. All zeros when no index is
+/// supplied or it is empty (nothing is hashed in that case); otherwise
+/// the chain is borrowed from the [`ArrivalScratch`], which hashes it
+/// once per arrival no matter how many probes ask.
+fn prefix_credits(replicas: &[Engine], arrival: &ArrivalScratch<'_>,
                   shared: Option<&SharedPrefixIndex>) -> Vec<u64> {
     match shared {
         Some(index) if !index.is_empty() => {
-            let block_size =
-                replicas.first().map_or(1, |e| e.cfg.block_size);
-            let chain = prefix::content_chain(spec, block_size,
-                                              spec.prompt_tokens);
-            index.cached_tokens_per_replica(&chain, block_size,
+            index.cached_tokens_per_replica(arrival.chain(),
+                                            arrival.block_size,
                                             replicas.len())
         }
         _ => vec![0; replicas.len()],
@@ -250,13 +304,15 @@ pub fn rescue_stranded_on(replicas: &mut [Engine], owner: usize,
         if requeued.contains(&id) {
             continue;
         }
-        let target = {
+        let (target, chain) = {
             // lamps-lint: allow(panic) owner is a valid replica index by contract
             let Some(req) = replicas[owner].request(id) else {
                 continue;
             };
-            pick_rescue_sibling(replicas, owner, &req.spec, policy,
-                                shared, &promised)
+            let arrival = ArrivalScratch::new(&req.spec, block_size);
+            let target = pick_rescue_sibling(replicas, owner, &arrival,
+                                             policy, shared, &promised);
+            (target, arrival.into_chain())
         };
         let Some((j, credit)) = target else {
             continue; // no sibling can admit it either — leave it
@@ -270,6 +326,12 @@ pub fn rescue_stranded_on(replicas: &mut [Engine], owner: usize,
                 * block_size;
         }
         requeued.insert(id);
+        if let Some(chain) = chain {
+            // The sweep already hashed the prompt for its probes — hand
+            // the chain to the adopter so admission extends it in place.
+            // lamps-lint: allow(panic) pick_rescue_sibling returns an in-range sibling
+            replicas[j].seed_chain(id, block_size, chain);
+        }
         // lamps-lint: allow(panic) pick_rescue_sibling returns an in-range sibling
         replicas[j].adopt(w);
         moves.push((id, j, credit));
@@ -487,9 +549,22 @@ impl ReplicaSet {
             .is_some_and(|s| s.arrival <= frontier)
         {
             let Some(spec) = self.pending.pop_front() else { break };
+            let block_size = self
+                .replicas
+                .first()
+                .map_or(1, |e| e.cfg.block_size)
+                .max(1);
+            let arrival = ArrivalScratch::new(&spec, block_size);
             let (r, credit) = pick_replica(&self.replicas, self.policy,
-                                           &mut self.rr_next, &spec,
+                                           &mut self.rr_next, &arrival,
                                            self.shared.as_ref());
+            if let Some(chain) = arrival.into_chain() {
+                // Placement hashed the prompt once — seed the chosen
+                // replica's memo so admission/registration extend it
+                // instead of rehashing the same bytes.
+                // lamps-lint: allow(panic) pick_replica returns an in-range index
+                self.replicas[r].seed_chain(spec.id, block_size, chain);
+            }
             // A spec submit would fail-fast drop (it can never fit an
             // empty replica) must not count as steering — the credit
             // will never be served.

@@ -426,6 +426,14 @@ pub struct SystemConfig {
     /// default, i.e. every debug-build (tier-1 test) engine/fleet step
     /// is audit-checked and release runs pay nothing unless opted in.
     pub audit: AuditMode,
+    /// Epoch-keyed placement-score cache (`--placement-cache off` to
+    /// disable): each engine memoizes its memory-over-time load
+    /// aggregate and invalidates it on any state change, making
+    /// placement probes O(1) between mutations. Decisions are
+    /// byte-identical either way — a debug/audit shadow recompute
+    /// enforces exact equality with the stateless oracle — so `off`
+    /// exists only as an escape hatch and for A/B benchmarking.
+    pub placement_cache: bool,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -451,6 +459,7 @@ impl Default for SystemConfig {
             admission_requeue: true,
             api_source: ApiSourceKind::default(),
             audit: AuditMode::default(),
+            placement_cache: true,
             cost: CostModel::paper_scale(),
             seed: 0,
         }

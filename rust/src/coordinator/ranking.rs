@@ -18,6 +18,17 @@ use crate::core::request::{HandlingStrategy, Request, RequestSpec,
 use crate::core::types::{Micros, Tokens};
 
 /// Live quantities the score depends on (profiled by the engine).
+///
+/// Epoch-cache contract (PR 8): every field here, and every term the
+/// rank integrals below sum, is a pure function of engine state — no
+/// wall clock, no RNG, no iteration-order dependence. That is what
+/// makes `Engine`'s epoch-keyed memo of `load_memory_over_time` sound:
+/// within one `load_epoch` (no state mutation since the last
+/// `touch_load`) a recompute is bitwise-identical to the memoized
+/// value. Anything added here that breaks that purity must invalidate
+/// the cache on change, or cached placement silently diverges from the
+/// stateless oracle (debug/audited builds shadow-recompute and abort
+/// on the first divergence).
 #[derive(Debug, Clone, Copy)]
 pub struct RankInputs {
     /// Current estimate of one decode iteration's duration.

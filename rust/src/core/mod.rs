@@ -2,4 +2,5 @@
 //! the request state machine.
 
 pub mod request;
+pub mod slab;
 pub mod types;

@@ -1,0 +1,305 @@
+//! Generational slab storage for hot per-request state.
+//!
+//! The engine's request table lives for the whole run but its entries
+//! churn constantly (every submit allocates, every withdraw frees). A
+//! plain `HashMap<RequestId, Request>` pays an allocator round-trip and
+//! a rehash amortization for that churn; the [`Slab`] here recycles
+//! fixed slots from a free list instead, so steady-state insert/remove
+//! touches no allocator at all, and a stale key can never alias a
+//! recycled slot (each slot carries a generation stamp that a lookup
+//! must match).
+//!
+//! [`SlabMap`] layers the keyed lookup the engine actually wants on
+//! top: a `HashMap<K, SlabKey>` index into the slab. It mirrors the
+//! `HashMap` API surface the engine used (`get`/`get_mut`/`insert`/
+//! `remove`/`keys`/`Index<&K>`), so swapping the backing store is a
+//! type change, not a call-site rewrite. Values live contiguously in
+//! the slab's slot vector — better locality for the O(live) rank sweep
+//! than `HashMap`'s scattered buckets.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::ops::Index;
+
+/// Handle to one occupied slab slot. Stale after the slot is removed:
+/// the generation stamp stops matching, and lookups return `None`
+/// instead of aliasing whatever was recycled into the slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SlabKey {
+    index: u32,
+    generation: u32,
+}
+
+#[derive(Debug, Clone)]
+enum Slot<T> {
+    Vacant { generation: u32, next_free: Option<u32> },
+    Occupied { generation: u32, value: T },
+}
+
+/// A generational slab: O(1) insert/get/remove, slots recycled through
+/// an intrusive free list, ABA protected by per-slot generations.
+#[derive(Debug, Clone)]
+pub struct Slab<T> {
+    slots: Vec<Slot<T>>,
+    free_head: Option<u32>,
+    len: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Slab<T> {
+        Slab::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Slab<T> {
+        Slab { slots: Vec::new(), free_head: None, len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Store `value`, recycling a free slot when one exists (no
+    /// allocation) and growing the slot vector otherwise.
+    pub fn insert(&mut self, value: T) -> SlabKey {
+        self.len += 1;
+        match self.free_head {
+            Some(at) => {
+                let slot = &mut self.slots[at as usize];
+                let (generation, next_free) = match slot {
+                    Slot::Vacant { generation, next_free } => {
+                        (*generation, *next_free)
+                    }
+                    Slot::Occupied { .. } => {
+                        unreachable!("free list points at occupied slot")
+                    }
+                };
+                self.free_head = next_free;
+                *slot = Slot::Occupied { generation, value };
+                SlabKey { index: at, generation }
+            }
+            None => {
+                let index = self.slots.len() as u32;
+                self.slots.push(Slot::Occupied { generation: 0, value });
+                SlabKey { index, generation: 0 }
+            }
+        }
+    }
+
+    pub fn get(&self, key: SlabKey) -> Option<&T> {
+        match self.slots.get(key.index as usize) {
+            Some(Slot::Occupied { generation, value })
+                if *generation == key.generation => Some(value),
+            _ => None,
+        }
+    }
+
+    pub fn get_mut(&mut self, key: SlabKey) -> Option<&mut T> {
+        match self.slots.get_mut(key.index as usize) {
+            Some(Slot::Occupied { generation, value })
+                if *generation == key.generation => Some(value),
+            _ => None,
+        }
+    }
+
+    /// Free the slot (pushed on the free list with a bumped generation,
+    /// so `key` and any copy of it go stale immediately).
+    pub fn remove(&mut self, key: SlabKey) -> Option<T> {
+        let slot = self.slots.get_mut(key.index as usize)?;
+        match slot {
+            Slot::Occupied { generation, .. }
+                if *generation == key.generation =>
+            {
+                let next = Slot::Vacant {
+                    generation: key.generation.wrapping_add(1),
+                    next_free: self.free_head,
+                };
+                let Slot::Occupied { value, .. } =
+                    std::mem::replace(slot, next)
+                else {
+                    unreachable!("matched Occupied above");
+                };
+                self.free_head = Some(key.index);
+                self.len -= 1;
+                Some(value)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// A keyed view over a [`Slab`]: `HashMap`-shaped API, slab-backed
+/// value storage. The index maps each key to its live slab slot; the
+/// values themselves never move through the `HashMap`, so entry churn
+/// recycles slab slots instead of reallocating map buckets.
+#[derive(Debug, Clone)]
+pub struct SlabMap<K, V> {
+    slab: Slab<V>,
+    index: HashMap<K, SlabKey>,
+}
+
+impl<K: Eq + Hash + Copy, V> Default for SlabMap<K, V> {
+    fn default() -> SlabMap<K, V> {
+        SlabMap::new()
+    }
+}
+
+impl<K: Eq + Hash + Copy, V> SlabMap<K, V> {
+    pub fn new() -> SlabMap<K, V> {
+        SlabMap { slab: Slab::new(), index: HashMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slab.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slab.is_empty()
+    }
+
+    pub fn contains_key(&self, key: &K) -> bool {
+        self.index.contains_key(key)
+    }
+
+    pub fn get(&self, key: &K) -> Option<&V> {
+        self.index.get(key).and_then(|sk| self.slab.get(*sk))
+    }
+
+    pub fn get_mut(&mut self, key: &K) -> Option<&mut V> {
+        match self.index.get(key) {
+            Some(sk) => self.slab.get_mut(*sk),
+            None => None,
+        }
+    }
+
+    /// Insert, replacing (and returning) any value already under `key`.
+    pub fn insert(&mut self, key: K, value: V) -> Option<V> {
+        if let Some(sk) = self.index.get(&key) {
+            if let Some(slot) = self.slab.get_mut(*sk) {
+                return Some(std::mem::replace(slot, value));
+            }
+        }
+        let sk = self.slab.insert(value);
+        self.index.insert(key, sk);
+        None
+    }
+
+    pub fn remove(&mut self, key: &K) -> Option<V> {
+        let sk = self.index.remove(key)?;
+        self.slab.remove(sk)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &K> + '_ {
+        self.index.keys()
+    }
+}
+
+impl<K: Eq + Hash + Copy, V> Index<&K> for SlabMap<K, V> {
+    type Output = V;
+
+    fn index(&self, key: &K) -> &V {
+        self.get(key).expect("SlabMap: key not present")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slab_insert_get_remove_round_trip() {
+        let mut s: Slab<String> = Slab::new();
+        let a = s.insert("a".to_string());
+        let b = s.insert("b".to_string());
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a).map(String::as_str), Some("a"));
+        assert_eq!(s.get(b).map(String::as_str), Some("b"));
+        assert_eq!(s.remove(a), Some("a".to_string()));
+        assert_eq!(s.get(a), None);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn slab_recycles_slots_and_stales_old_keys() {
+        let mut s: Slab<u64> = Slab::new();
+        let a = s.insert(1);
+        s.remove(a);
+        let b = s.insert(2);
+        // The freed slot is recycled (no growth)...
+        assert_eq!(b.index, a.index);
+        assert_ne!(b.generation, a.generation);
+        // ...and the stale key cannot alias the new tenant.
+        assert_eq!(s.get(a), None);
+        assert_eq!(s.remove(a), None);
+        assert_eq!(s.get(b), Some(&2));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn slab_free_list_survives_interleaved_churn() {
+        let mut s: Slab<usize> = Slab::new();
+        let keys: Vec<SlabKey> = (0..8).map(|i| s.insert(i)).collect();
+        for k in keys.iter().step_by(2) {
+            s.remove(*k);
+        }
+        assert_eq!(s.len(), 4);
+        // Refills reuse the four freed slots before growing.
+        let grown_before = s.slots.len();
+        for i in 100..104 {
+            s.insert(i);
+        }
+        assert_eq!(s.slots.len(), grown_before);
+        assert_eq!(s.len(), 8);
+        // Odd originals are still intact.
+        for (i, k) in keys.iter().enumerate() {
+            if i % 2 == 1 {
+                assert_eq!(s.get(*k), Some(&i));
+            }
+        }
+    }
+
+    #[test]
+    fn slab_map_mirrors_hashmap_semantics() {
+        let mut m: SlabMap<u64, String> = SlabMap::new();
+        assert!(m.is_empty());
+        assert_eq!(m.insert(7, "seven".to_string()), None);
+        assert_eq!(m.insert(9, "nine".to_string()), None);
+        assert_eq!(m.len(), 2);
+        assert!(m.contains_key(&7));
+        assert_eq!(m.get(&7).map(String::as_str), Some("seven"));
+        assert_eq!(m[&9], "nine");
+        // Replacement returns the old value and does not grow.
+        assert_eq!(m.insert(7, "SEVEN".to_string()),
+                   Some("seven".to_string()));
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[&7], "SEVEN");
+        if let Some(v) = m.get_mut(&9) {
+            v.push('!');
+        }
+        assert_eq!(m[&9], "nine!");
+        assert_eq!(m.remove(&7), Some("SEVEN".to_string()));
+        assert_eq!(m.get(&7), None);
+        assert_eq!(m.remove(&7), None);
+        let mut keys: Vec<u64> = m.keys().copied().collect();
+        keys.sort_unstable();
+        assert_eq!(keys, vec![9]);
+    }
+
+    #[test]
+    fn slab_map_reinsert_after_remove_recycles() {
+        let mut m: SlabMap<u64, u64> = SlabMap::new();
+        for round in 0..10u64 {
+            m.insert(1, round);
+            assert_eq!(m[&1], round);
+            assert_eq!(m.remove(&1), Some(round));
+        }
+        assert!(m.is_empty());
+        // Ten rounds of churn, still exactly one slot.
+        assert_eq!(m.slab.slots.len(), 1);
+    }
+}

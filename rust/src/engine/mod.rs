@@ -50,6 +50,7 @@ use crate::coordinator::scheduler::{make_scheduler, ScheduleContext,
                                     Scheduler};
 use crate::core::request::{HandlingStrategy, Phase, Request, RequestSpec,
                            SegmentPrediction};
+use crate::core::slab::SlabMap;
 use crate::core::types::{Micros, RequestId, Tokens};
 use crate::kv::{prefix, BlockManager, SwapSpace, TransferDir,
                 TransferQueue};
@@ -133,7 +134,7 @@ pub struct Engine {
     transfers: TransferQueue,
     api: ApiExecutor,
 
-    requests: HashMap<RequestId, Request>,
+    requests: SlabMap<RequestId, Request>,
     /// Ids of unfinished requests (submitted, not yet finished/dropped).
     /// `requests` keeps finished entries for result queries, so load
     /// probes iterate this set instead: O(live) per probe, and the
@@ -176,6 +177,20 @@ pub struct Engine {
     /// byte-identically to an unaudited one, and a tripped invariant
     /// is fatal (it means a scheduler/KV bug, not a bad request).
     auditor: Option<Box<crate::audit::EngineAuditor>>,
+    /// Epoch counter for the placement-score cache: bumped by every
+    /// mutation that can change the load aggregate (`touch_load`). A
+    /// cached score is valid only while its recorded epoch matches.
+    load_epoch: u64,
+    /// Memoized `(epoch, load)` for `load_memory_over_time_with` under
+    /// the default rank inputs. Interior-mutable so probes stay `&self`
+    /// (the probe-purity lint guards that contract).
+    load_cache: std::cell::Cell<Option<(u64, f64)>>,
+    /// Per-request content-chain memo: the arrival-path chain (seeded
+    /// by placement via [`Engine::seed_chain`]) grows in place via
+    /// [`prefix::extend_content_chain`] instead of being rehashed at
+    /// admission, purge, and registration. Entries die with the
+    /// request (terminal free / withdraw / failed submit).
+    chain_memo: HashMap<RequestId, Vec<prefix::BlockHash>>,
 }
 
 impl Engine {
@@ -209,7 +224,7 @@ impl Engine {
             swap: SwapSpace::unbounded(),
             transfers: TransferQueue::new(),
             api: ApiExecutor::new(),
-            requests: HashMap::new(),
+            requests: SlabMap::new(),
             live: BTreeSet::new(),
             waiting: Vec::new(),
             running: Vec::new(),
@@ -228,6 +243,9 @@ impl Engine {
                 .audit
                 .enabled()
                 .then(|| Box::new(crate::audit::EngineAuditor::new())),
+            load_epoch: 0,
+            load_cache: std::cell::Cell::new(None),
+            chain_memo: HashMap::new(),
             cfg,
         }
     }
@@ -283,6 +301,7 @@ impl Engine {
     /// clocks in lockstep with the fleet.
     pub fn advance_clock_to(&mut self, t: Micros) {
         self.clock.wait_until(t);
+        self.touch_load();
     }
 
     /// Is there anything left for this engine to do — now or at a future
@@ -378,10 +397,53 @@ impl Engine {
             &self.schedule_context().rank_inputs())
     }
 
+    /// [`Engine::load_memory_over_time`] with the epoch cache bypassed:
+    /// always the from-scratch O(live + pending) recompute. Public seam
+    /// for the equivalence suite and the `micro_placement` A/B path;
+    /// placement itself never calls this.
+    pub fn load_memory_over_time_uncached(&self) -> f64 {
+        self.recompute_load_with(&self.schedule_context().rank_inputs())
+    }
+
     /// [`Engine::load_memory_over_time`] against already-built rank
     /// inputs, so a probe that needs the inputs for its own terms
     /// ([`Engine::placement_score_prefixed`]) builds them once.
+    ///
+    /// Epoch-cached: rank inputs and every summed term are pure
+    /// functions of engine state, every mutation of that state bumps
+    /// `load_epoch` (see [`Engine::touch_load`]), so within one epoch
+    /// the recompute is bitwise-constant and the memo returns it in
+    /// O(1). Debug and audited builds shadow-recompute on every hit and
+    /// abort on the first divergence, pinning cached placement
+    /// byte-identical to the stateless oracle.
     fn load_memory_over_time_with(
+        &self, inputs: &crate::coordinator::ranking::RankInputs) -> f64 {
+        if !self.cfg.placement_cache {
+            return self.recompute_load_with(inputs);
+        }
+        if let Some((epoch, value)) = self.load_cache.get() {
+            if epoch == self.load_epoch {
+                if cfg!(debug_assertions) || self.auditor.is_some() {
+                    let fresh = self.recompute_load_with(inputs);
+                    if value.to_bits() != fresh.to_bits() {
+                        // lamps-lint: allow(panic) audit invariant: a stale cache hit is a scheduler bug, not a bad request
+                        panic!("placement-score cache diverged from \
+                                recompute at epoch {}: cached {value} \
+                                vs fresh {fresh} — a mutation missed \
+                                touch_load", self.load_epoch);
+                    }
+                }
+                return value;
+            }
+        }
+        let fresh = self.recompute_load_with(inputs);
+        self.load_cache.set(Some((self.load_epoch, fresh)));
+        fresh
+    }
+
+    /// The stateless from-scratch load aggregate (PR 3 oracle): the
+    /// ground truth the epoch cache memoizes.
+    fn recompute_load_with(
         &self, inputs: &crate::coordinator::ranking::RankInputs) -> f64 {
         let cost = self.cfg.cost;
         // The sorted `live` index makes this O(live requests) — the
@@ -423,6 +485,58 @@ impl Engine {
             + memory_over_time_fresh_prefixed(spec, &predictions,
                                               &handling, &self.cfg.cost,
                                               &inputs, cached)
+    }
+
+    /// Note a state change that can move the load aggregate or the rank
+    /// inputs it is computed under. Called by every mutating entry
+    /// point; the next probe recomputes once and re-memoizes. Missing a
+    /// call site is caught loudly: debug/audited probes shadow-recompute
+    /// every cache hit and abort on divergence.
+    fn touch_load(&mut self) {
+        self.load_epoch = self.load_epoch.wrapping_add(1);
+    }
+
+    /// Force the next placement probe to recompute from scratch — the
+    /// `micro_placement` bench's A/B seam (simulates the invalidation a
+    /// real mutation would cause without perturbing state).
+    pub fn invalidate_placement_cache(&mut self) {
+        self.touch_load();
+    }
+
+    /// Seed the per-request content-chain memo with a chain computed on
+    /// the arrival path (placement already hashed the prompt once —
+    /// [`crate::cluster::ArrivalScratch`]). Admission, registration, and
+    /// the terminal purge then extend this chain in place instead of
+    /// rehashing from position zero. Ignored if the chain was computed
+    /// at a different block size, or if a longer memo already exists.
+    pub fn seed_chain(&mut self, id: RequestId, block_size: u64,
+                      chain: Vec<prefix::BlockHash>) {
+        if block_size != self.cfg.block_size.max(1) {
+            return;
+        }
+        let entry = self.chain_memo.entry(id).or_default();
+        if entry.len() < chain.len() {
+            *entry = chain;
+        }
+    }
+
+    /// The first `floor(upto / block_size)` chain hashes of `spec`,
+    /// extending the memoized chain in place (one-shot hashing: bytes
+    /// already covered by the memo are never rehashed). An associated
+    /// fn over the memo field so callers can hold `&mut self.kv`
+    /// concurrently.
+    fn chain_upto<'a>(
+        memo: &'a mut HashMap<RequestId, Vec<prefix::BlockHash>>,
+        spec: &RequestSpec, block_size: u64, upto: Tokens)
+        -> &'a [prefix::BlockHash] {
+        let blocks = (upto.0 / block_size.max(1)) as usize;
+        let entry = memo.entry(spec.id).or_default();
+        if entry.len() < blocks {
+            prefix::extend_content_chain(spec, block_size.max(1), entry,
+                                         upto);
+        }
+        // lamps-lint: allow(panic) extend_content_chain just grew the memo to >= blocks entries
+        &entry[..blocks]
     }
 
     // ------------------------------------------------------------------
@@ -468,6 +582,15 @@ impl Engine {
             return Vec::new();
         }
         std::mem::take(&mut self.events)
+    }
+
+    /// Allocation-free drain: swap the journal into `out` (cleared
+    /// first), so a pump that drains every loop iteration reuses one
+    /// buffer pair forever instead of allocating a fresh `Vec` per
+    /// drain ([`Engine::drain_events`] allocates; this does not).
+    pub fn drain_events_into(&mut self, out: &mut Vec<EngineEvent>) {
+        out.clear();
+        std::mem::swap(&mut self.events, out);
     }
 
     fn push_event(&mut self, ev: EngineEvent) {
@@ -535,6 +658,7 @@ impl Engine {
         }
         // lamps-lint: allow(panic) segment index is bounded by the spec's call list
         req.spec.api_calls[index].response_tokens = response_tokens;
+        self.touch_load();
         self.route_api_return(id, now);
         Ok(())
     }
@@ -579,6 +703,7 @@ impl Engine {
         req.api_started_at = None;
         self.live.remove(&id);
         self.dropped.push(id);
+        self.touch_load();
         self.push_event(EngineEvent::Dropped { id, reason });
         true
     }
@@ -590,6 +715,7 @@ impl Engine {
     /// Queue a spec for arrival-time-driven submission.
     pub fn enqueue(&mut self, spec: RequestSpec) {
         self.pending.push_back(spec);
+        self.touch_load();
     }
 
     /// Submit immediately with predicted handling per the config policy.
@@ -612,10 +738,12 @@ impl Engine {
         let id = spec.id;
         let arrival = spec.arrival;
         self.metrics.on_arrival(id, arrival);
+        self.touch_load();
         let req = Request::new(spec, predictions, handling);
         if req.admission_memory() > self.kv.capacity() {
             // Can never fit; fail fast instead of livelocking.
             self.dropped.push(id);
+            self.chain_memo.remove(&id);
             self.push_event(EngineEvent::Dropped {
                 id,
                 reason: format!(
@@ -725,6 +853,8 @@ impl Engine {
         self.waiting.remove(pos);
         self.live.remove(&id);
         self.pred_return.remove(&id);
+        self.chain_memo.remove(&id);
+        self.touch_load();
         // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
         let req = self.requests.remove(&id).expect("checked above");
         self.metrics.forget(id);
@@ -912,6 +1042,11 @@ impl Engine {
     }
 
     fn step_inner(&mut self) -> bool {
+        // A step mutates essentially everything a placement probe reads
+        // (queues, EMAs, contexts, segments): one epoch bump up front
+        // covers the whole iteration, since no probe can observe the
+        // engine mid-step (`&mut self` is held throughout).
+        self.touch_load();
         let now = self.now();
         self.drain_arrivals(now);
         self.complete_transfers(now);
@@ -1388,12 +1523,11 @@ impl Engine {
                 .parked_tokens(id)
                 // lamps-lint: allow(panic) fits_memory/contains checked in this scope
                 .expect("checked contains");
-            let chain = prefix::content_chain(&req.spec,
-                                              self.kv.block_size(),
-                                              parked);
+            let chain = Self::chain_upto(&mut self.chain_memo, &req.spec,
+                                         self.kv.block_size(), parked);
             let cached = self
                 .kv
-                .allocate_prefixed(id, delta, &chain)
+                .allocate_prefixed(id, delta, chain)
                 // lamps-lint: allow(panic) fits_memory/contains checked in this scope
                 .expect("fits_memory held");
             // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
@@ -1411,11 +1545,11 @@ impl Engine {
             self.kv.allocate(id, delta).expect("fits_memory held");
             return Tokens::ZERO;
         }
-        let chain = prefix::content_chain(&req.spec,
-                                          self.kv.block_size(),
-                                          req.logical_context);
+        let chain = Self::chain_upto(&mut self.chain_memo, &req.spec,
+                                     self.kv.block_size(),
+                                     req.logical_context);
         self.kv
-            .allocate_prefixed(id, delta, &chain)
+            .allocate_prefixed(id, delta, chain)
             // lamps-lint: allow(panic) fits_memory/contains checked in this scope
             .expect("fits_memory held")
     }
@@ -1458,11 +1592,14 @@ impl Engine {
         if self.prefix_cache_active() {
             // lamps-lint: allow(panic) live/queued ids are always in the request table (auditor-checked)
             let req = &self.requests[&id];
-            let chain = prefix::content_chain(&req.spec,
-                                              self.kv.block_size(),
-                                              req.logical_context);
-            self.kv.purge_chain_tail(&chain, retain);
+            let chain = Self::chain_upto(&mut self.chain_memo, &req.spec,
+                                         self.kv.block_size(),
+                                         req.logical_context);
+            self.kv.purge_chain_tail(chain, retain);
         }
+        // The request is terminal: its chain can never be asked for
+        // again at a longer prefix.
+        self.chain_memo.remove(&id);
     }
 
     fn register_prefix_of(&mut self, id: RequestId) {
@@ -1475,9 +1612,9 @@ impl Engine {
         if ctx.0 < self.kv.block_size() {
             return;
         }
-        let chain = prefix::content_chain(&req.spec,
-                                          self.kv.block_size(), ctx);
-        self.kv.register_prefix(id, ctx, &chain);
+        let chain = Self::chain_upto(&mut self.chain_memo, &req.spec,
+                                     self.kv.block_size(), ctx);
+        self.kv.register_prefix(id, ctx, chain);
     }
 
     /// Clairvoyant reservation: every in-flight Preserve/Swap API request

@@ -65,6 +65,24 @@ fn mix(h: &mut u64, value: u64) {
     }
 }
 
+/// Mix one context position into the rolling chain hash: a prompt byte,
+/// the pad marker for prompt positions past the prompt text, or the
+/// per-request private key for generated/API content.
+fn mix_position(h: &mut u64, spec: &RequestSpec, bytes: &[u8], p: u64) {
+    if p < spec.prompt_tokens.0 && !bytes.is_empty() {
+        if (p as usize) < bytes.len() {
+            // lamps-lint: allow(panic) p is range-checked against bytes.len() just above
+            mix(h, u64::from(bytes[p as usize]));
+        } else {
+            mix(h, PAD_MARKER);
+        }
+    } else {
+        mix(h, PRIVATE_MARKER);
+        mix(h, spec.id.0);
+        mix(h, p);
+    }
+}
+
 /// Chain hashes for every full block of the first `upto` tokens of
 /// `spec`'s context (`floor(upto / block_size)` entries). Positions
 /// beyond the prompt are keyed per-request (see the module docs), so a
@@ -73,29 +91,37 @@ fn mix(h: &mut u64, value: u64) {
 pub fn content_chain(spec: &RequestSpec, block_size: u64, upto: Tokens)
                      -> Vec<BlockHash> {
     assert!(block_size > 0, "block_size must be positive");
+    let mut chain = Vec::with_capacity((upto.0 / block_size) as usize);
+    extend_content_chain(spec, block_size, &mut chain, upto);
+    chain
+}
+
+/// Extend an existing chain (a prefix of `spec`'s full chain at this
+/// `block_size`) in place up to `floor(upto / block_size)` entries
+/// without rehashing the positions it already covers. Sound because the
+/// rolling hash continues from the value pushed at each block boundary:
+/// the chain's last entry *is* the rolling state at the next block's
+/// first position. A chain longer than `upto` needs is left untouched —
+/// chains are prefix-consistent across `upto` values.
+pub fn extend_content_chain(spec: &RequestSpec, block_size: u64,
+                            chain: &mut Vec<BlockHash>, upto: Tokens) {
+    assert!(block_size > 0, "block_size must be positive");
     let full_blocks = upto.0 / block_size;
-    let mut chain = Vec::with_capacity(full_blocks as usize);
-    let mut h = FNV_OFFSET;
-    mix(&mut h, block_size);
+    if (chain.len() as u64) >= full_blocks {
+        return;
+    }
+    let mut h = chain.last().copied().unwrap_or_else(|| {
+        let mut h = FNV_OFFSET;
+        mix(&mut h, block_size);
+        h
+    });
     let bytes = spec.prompt.as_bytes();
-    for p in 0..full_blocks * block_size {
-        if p < spec.prompt_tokens.0 && !bytes.is_empty() {
-            if (p as usize) < bytes.len() {
-                // lamps-lint: allow(panic) p is range-checked against bytes.len() just above
-                mix(&mut h, u64::from(bytes[p as usize]));
-            } else {
-                mix(&mut h, PAD_MARKER);
-            }
-        } else {
-            mix(&mut h, PRIVATE_MARKER);
-            mix(&mut h, spec.id.0);
-            mix(&mut h, p);
-        }
+    for p in (chain.len() as u64 * block_size)..full_blocks * block_size {
+        mix_position(&mut h, spec, bytes, p);
         if (p + 1) % block_size == 0 {
             chain.push(h);
         }
     }
-    chain
 }
 
 /// One resident-set change of a replica-local prefix cache, journaled
@@ -469,6 +495,29 @@ mod tests {
         assert_eq!(content_chain(&s, 4, Tokens(10)).len(), 2);
         assert_eq!(content_chain(&s, 4, Tokens(3)).len(), 0);
         assert_eq!(content_chain(&s, 4, Tokens(0)).len(), 0);
+    }
+
+    #[test]
+    fn extend_matches_from_scratch_at_every_cut() {
+        // Resuming the rolling hash from a shorter chain must equal the
+        // from-scratch chain at every extension point, across the
+        // prompt → pad → private-region transitions.
+        let s = spec(9, "abcdef", 10);
+        let full = content_chain(&s, 4, Tokens(24));
+        for cut in 0..=24u64 {
+            let mut chain = content_chain(&s, 4, Tokens(cut));
+            extend_content_chain(&s, 4, &mut chain, Tokens(24));
+            assert_eq!(chain, full, "cut at {cut} tokens diverged");
+        }
+    }
+
+    #[test]
+    fn extend_never_truncates_a_longer_chain() {
+        let s = spec(3, "abcdefgh", 8);
+        let mut chain = content_chain(&s, 4, Tokens(16));
+        let before = chain.clone();
+        extend_content_chain(&s, 4, &mut chain, Tokens(4));
+        assert_eq!(chain, before, "shorter upto must be a no-op");
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! | `wall-clock`   | everywhere but `engine/clock.rs`    | `Instant::now` / `SystemTime` (sim-clock determinism) |
 //! | `float-iter`   | `engine/ cluster/ coordinator/`     | f64 accumulation over `HashMap` iteration order (the PR 3 placement-reproducibility class) |
 //! | `probe-purity` | everywhere                          | a placement probe (`load_memory_over_time*`, `placement_score*`, `prefix_credits`) taking any `&mut` |
+//! | `probe-hot-loop` | `cluster/`                        | prompt hashing (`content_chain` / `extend_content_chain`) inside a `for` loop — per-replica iteration must borrow the arrival's one-shot chain (`ArrivalScratch`), not rehash it per candidate (the PR 8 class) |
 //!
 //! A genuine exception is written down, not waved through:
 //!
@@ -36,14 +37,15 @@ use std::fs;
 use std::io;
 use std::path::{Path, PathBuf};
 
-/// The six enforced rule slugs (what `allow(...)` accepts).
-pub const RULES: [&str; 6] = [
+/// The seven enforced rule slugs (what `allow(...)` accepts).
+pub const RULES: [&str; 7] = [
     "wire-format",
     "wire-hot-path",
     "panic",
     "wall-clock",
     "float-iter",
     "probe-purity",
+    "probe-hot-loop",
 ];
 
 /// One finding: file, 1-based line, rule slug, human message.
@@ -505,6 +507,7 @@ pub fn scan_source(rel_path: &str, src: &str) -> Vec<Violation> {
         .any(|d| in_dir(&rel, d));
     let clock_scope = rel != "engine/clock.rs";
     let wire_scope = in_dir(&rel, "server");
+    let hot_loop_scope = in_dir(&rel, "cluster");
 
     if panic_scope {
         rule_panic(&tokens, &mut ctx);
@@ -518,6 +521,9 @@ pub fn scan_source(rel_path: &str, src: &str) -> Vec<Violation> {
     }
     if float_scope {
         rule_float_iter(&tokens, &mut ctx);
+    }
+    if hot_loop_scope {
+        rule_probe_hot_loop(&tokens, &mut ctx);
     }
     rule_probe_purity(&tokens, &mut ctx);
 
@@ -802,6 +808,69 @@ fn rule_float_iter(t: &[Token], ctx: &mut Ctx<'_>) {
                       nondeterministic — collect and sort first (PR 3 \
                       placement class)"
                          .to_string());
+        }
+    }
+}
+
+/// Rule `probe-hot-loop`: prompt hashing inside per-replica iteration.
+/// A `content_chain` / `extend_content_chain` call in a `for`-loop body
+/// in `cluster/` redoes O(prompt) hashing once per candidate replica —
+/// the arrival's chain must be computed once (`ArrivalScratch`) and
+/// borrowed by every probe (the PR 8 one-shot-hashing class).
+fn rule_probe_hot_loop(t: &[Token], ctx: &mut Ctx<'_>) {
+    for i in 0..t.len() {
+        if id_at(t, i) != Some("for") {
+            continue;
+        }
+        // `impl Trait for Type { .. }` and `for<'a>` bounds also spell
+        // `for`; a loop's `for` starts a statement, so the preceding
+        // token is never an identifier, `>`, `&`, `:`, or `+`.
+        if i > 0
+            && matches!(&t[i - 1].tok,
+                        Tok::Ident(_) | Tok::Punct('>') | Tok::Punct('&')
+                        | Tok::Punct(':') | Tok::Punct('+'))
+        {
+            continue;
+        }
+        // Header: tokens to the loop's `{` at bracket depth 0.
+        let mut j = i + 1;
+        let mut depth = 0isize;
+        while j < t.len() {
+            match &t[j].tok {
+                Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+                Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+                Tok::Punct('{') if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        if j >= t.len() {
+            continue;
+        }
+        // Body: to the matching `}`.
+        let body_start = j + 1;
+        let mut braces = 1usize;
+        let mut k = body_start;
+        while k < t.len() && braces > 0 {
+            match &t[k].tok {
+                Tok::Punct('{') => braces += 1,
+                Tok::Punct('}') => braces -= 1,
+                _ => {}
+            }
+            k += 1;
+        }
+        for m in body_start..k {
+            let hasher = matches!(
+                id_at(t, m),
+                Some("content_chain") | Some("extend_content_chain"));
+            if hasher && punct_at(t, m + 1, '(') {
+                ctx.push(t[m].line, "probe-hot-loop",
+                         "prompt hashing inside a per-replica loop redoes \
+                          O(prompt) work per candidate — hash once into an \
+                          ArrivalScratch and borrow the chain (PR 8 \
+                          one-shot-hashing class)"
+                             .to_string());
+            }
         }
     }
 }

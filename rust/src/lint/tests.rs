@@ -320,6 +320,81 @@ pub fn prefix_credits(engines: &[Engine]) -> Vec<u64> {
     assert!(scan_source("coordinator/ranking.rs", src).is_empty());
 }
 
+// -- probe-hot-loop ----------------------------------------------------
+
+#[test]
+fn probe_hot_loop_flags_hashing_inside_replica_iteration() {
+    let src = r#"
+pub fn worst(replicas: &[Engine], spec: &RequestSpec) -> usize {
+    let mut best = 0;
+    for (i, e) in replicas.iter().enumerate() {
+        let chain = prefix::content_chain(spec, 16, spec.prompt_tokens);
+        if e.score(&chain) > 0 {
+            best = i;
+        }
+    }
+    best
+}
+"#;
+    let v = scan_source("cluster/t.rs", src);
+    assert!(rules_hit(&v).contains(&"probe-hot-loop"), "{v:?}");
+}
+
+#[test]
+fn probe_hot_loop_spares_hoisted_and_closure_hashing() {
+    // Hoisted above the loop: the one-shot pattern the rule demands.
+    let hoisted = r#"
+pub fn best(replicas: &[Engine], spec: &RequestSpec) -> usize {
+    let chain = prefix::content_chain(spec, 16, spec.prompt_tokens);
+    let mut best = 0;
+    for (i, e) in replicas.iter().enumerate() {
+        if e.score(&chain) > 0 {
+            best = i;
+        }
+    }
+    best
+}
+"#;
+    assert!(scan_source("cluster/t.rs", hoisted).is_empty());
+    // Lazy one-shot init (ArrivalScratch::chain) is not a loop body.
+    let lazy = r#"
+impl ArrivalScratch<'_> {
+    fn chain(&self) -> &[BlockHash] {
+        self.chain.get_or_init(|| {
+            prefix::content_chain(self.spec, self.block_size,
+                                  self.spec.prompt_tokens)
+        })
+    }
+}
+"#;
+    assert!(scan_source("cluster/t.rs", lazy).is_empty());
+    // Outside cluster/ the rule does not apply (the engine legitimately
+    // extends chains while iterating its own admission queue).
+    let engine_loop = r#"
+pub fn seed(reqs: &[RequestSpec]) {
+    for spec in reqs {
+        let chain = prefix::content_chain(spec, 16, spec.prompt_tokens);
+        drop(chain);
+    }
+}
+"#;
+    assert!(scan_source("engine/t.rs", engine_loop).is_empty());
+}
+
+#[test]
+fn probe_hot_loop_allow_escape_suppresses() {
+    let src = r#"
+pub fn audit(replicas: &[Engine], spec: &RequestSpec) {
+    for e in replicas.iter() {
+        // lamps-lint: allow(probe-hot-loop) audit path recomputes on purpose
+        let chain = prefix::content_chain(spec, 16, spec.prompt_tokens);
+        e.check(&chain);
+    }
+}
+"#;
+    assert!(scan_source("cluster/t.rs", src).is_empty());
+}
+
 // -- the on-disk fixture corpus + the crate itself ---------------------
 
 #[test]

@@ -41,7 +41,7 @@ USAGE:
                 [--async-swap]
                 [--prefix-cache] [--prefix-cache-blocks N]
                 [--shared-prefix] [--no-admission-requeue]
-                [--audit]
+                [--audit] [--placement-cache on|off]
   lamps run     [--dataset single-api|multi-api|toolbench|<trace.json>]
                 [--system vllm|infercept|lamps|lamps-no-sched|sjf|sjf-total]
                 [--model gptj-6b|vicuna-13b] [--rate 3.0]
@@ -53,7 +53,7 @@ USAGE:
                 [--async-swap]
                 [--prefix-cache] [--prefix-cache-blocks N]
                 [--shared-prefix] [--no-admission-requeue]
-                [--audit] [--timeline]
+                [--audit] [--placement-cache on|off] [--timeline]
   lamps gen-workload --out trace.json [--dataset single-api] [--rate 3.0]
                 [--requests 500] [--seed 42]
   lamps predict <prompt> [--artifacts artifacts]
@@ -102,6 +102,10 @@ WIRE PROTOCOL (serve; JSON lines over TCP, one frame per line):
   (block conservation, prefix refcounts, queue order, event
   causality) after every step and aborts on the first violation —
   always on in debug builds, opt-in here for release builds.
+  --placement-cache off disables the epoch-keyed placement-score cache
+  (each engine memoizes its memory-over-time load aggregate between
+  mutations; placement decisions are byte-identical either way, so off
+  exists only as an escape hatch and for A/B benchmarking).
 ";
 
 /// Tiny `--key value` argument map (no clap in the offline vendor set).
@@ -251,6 +255,15 @@ fn apply_replica_flags(cfg: &mut SystemConfig, args: &Args)
     if args.has("audit") {
         cfg.audit = AuditMode::On;
     }
+    if let Some(mode) = args.flags.get("placement-cache") {
+        cfg.placement_cache = match mode.as_str() {
+            "on" | "true" => true,
+            "off" | "false" => false,
+            other => anyhow::bail!(
+                "unknown --placement-cache '{other}' (expected on or \
+                 off)"),
+        };
+    }
     Ok(())
 }
 
@@ -323,9 +336,10 @@ fn serve(args: &Args) -> Result<()> {
     apply_replica_flags(&mut base_cfg, args)?;
     apply_api_source_flag(&mut base_cfg, args, true)?;
     eprintln!(
-        "lamps: {} replica(s), {} placement, api-source {}, audit {} \
-         ({})",
+        "lamps: {} replica(s), {} placement (score cache {}), \
+         api-source {}, audit {} ({})",
         base_cfg.replicas, base_cfg.placement.label(),
+        if base_cfg.placement_cache { "on" } else { "off" },
         base_cfg.api_source.label(), base_cfg.audit.label(),
         if base_cfg.audit.enabled() { "active" } else { "inactive" });
 

@@ -659,18 +659,37 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
     let mut shutdown = false;
     // lamps-lint: allow(wall-clock) the timeout sweep tracks real elapsed client time
     let mut last_timeout_sweep = std::time::Instant::now();
+    // Event-pump scratch, reused across passes: the journal drain swaps
+    // buffers with each engine (`drain_events_into`), so a busy pump
+    // ping-pongs the same allocations forever instead of allocating a
+    // fresh Vec per engine per pass.
+    let mut journaled: Vec<(usize, EngineEvent)> = Vec::new();
+    let mut drained: Vec<EngineEvent> = Vec::new();
 
     loop {
         // Drain commands without blocking.
         loop {
             match rx.try_recv() {
                 Ok(Command::Open { mut spec, sink }) => {
+                    let block_size = engines
+                        .first()
+                        .map_or(1, |e| e.cfg.block_size)
+                        .max(1);
+                    let arrival = crate::cluster::ArrivalScratch::new(
+                        &spec, block_size);
                     let (r, _credit) = crate::cluster::pick_replica(
-                        &engines, placement, &mut rr_next, &spec,
+                        &engines, placement, &mut rr_next, &arrival,
                         shared.as_ref());
+                    let chain = arrival.into_chain();
                     // lamps-lint: allow(panic) pick_replica returns an in-range index
                     spec.arrival = engines[r].now();
                     let id = spec.id;
+                    if let Some(chain) = chain {
+                        // Placement hashed the prompt once; the owner
+                        // extends the chain instead of rehashing it.
+                        // lamps-lint: allow(panic) pick_replica returns an in-range index
+                        engines[r].seed_chain(id, block_size, chain);
+                    }
                     let _ = sink.send((id.0, RequestEvent::Queued));
                     let _ = sink.send((id.0, RequestEvent::Placed {
                         replica: r,
@@ -870,13 +889,14 @@ fn engine_thread(cfg: SystemConfig, parts: Vec<ReplicaParts>,
         // must not accumulate one per rescued request forever);
         // non-terminal events whose sink is gone detach the session so
         // the request finishes as an orphan.
-        let mut journaled: Vec<(usize, EngineEvent)> = Vec::new();
+        journaled.clear();
         for (i, engine) in engines.iter_mut().enumerate() {
-            for ev in engine.drain_events() {
+            engine.drain_events_into(&mut drained);
+            for ev in drained.drain(..) {
                 journaled.push((i, ev));
             }
         }
-        for (replica, ev) in journaled {
+        for (replica, ev) in journaled.drain(..) {
             let (id, event) = match ev {
                 EngineEvent::FirstToken { id, .. } => {
                     (id, RequestEvent::FirstToken)

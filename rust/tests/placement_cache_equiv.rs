@@ -1,0 +1,186 @@
+//! Score-cache equivalence suite (PR 8): the epoch-keyed memo behind
+//! `Engine::load_memory_over_time` must be invisible. Two angles:
+//!
+//! 1. **Per-step oracle agreement**: drive randomized fleets through
+//!    admissions, decodes, API parks, preemptions, rescues, and
+//!    completions, and after *every* fleet step assert each replica's
+//!    cached score is bit-identical to the from-scratch recompute
+//!    (`load_memory_over_time_uncached`). In debug builds the engine
+//!    additionally shadow-recomputes on every cache hit and aborts on
+//!    divergence, so a missed `touch_load` call site fails twice over.
+//! 2. **Placement byte-identity**: the same trace run with
+//!    `placement_cache` on and off must produce identical placement
+//!    assignments and an identical fleet report (timeline included) —
+//!    the cache is a perf lever, never a policy change.
+
+use lamps::bench::Dataset;
+use lamps::cluster::ReplicaSet;
+use lamps::config::{PlacementKind, PrefixCacheConfig, SystemConfig};
+use lamps::core::request::{ApiCallSpec, ApiType, RequestSpec};
+use lamps::core::types::{Micros, RequestId, Tokens};
+use lamps::workload::Trace;
+
+/// Deterministic splitmix-flavored LCG — no rand dependency.
+fn lcg(state: &mut u64) -> u64 {
+    *state = state
+        .wrapping_mul(6364136223846793005)
+        .wrapping_add(1442695040888963407);
+    *state >> 33
+}
+
+/// Randomized mixed spec: every fourth request is a long-prompt heavy
+/// job (forcing preemption and admission rescues on small budgets),
+/// one in three carries an API call (parks and resumptions), and
+/// prompts share one of three textual families (real prefix-cache and
+/// shared-index traffic, not just token counts).
+fn random_spec(id: u64, rng: &mut u64) -> RequestSpec {
+    let heavy = lcg(rng) % 4 == 0;
+    let family = lcg(rng) % 3;
+    let prompt = format!(
+        "family-{family} shared preamble for the placement equivalence \
+         suite; user turn {}", lcg(rng) % 97);
+    let prompt_tokens = Tokens(if heavy {
+        700 + lcg(rng) % 500
+    } else {
+        48 + lcg(rng) % 96
+    });
+    let api_calls = if lcg(rng) % 3 == 0 {
+        vec![ApiCallSpec {
+            decode_before: Tokens(8 + lcg(rng) % 24),
+            api_type: ApiType::Qa,
+            duration: Micros(400_000 + (lcg(rng) % 5) * 250_000),
+            response_tokens: Tokens(4 + lcg(rng) % 12),
+        }]
+    } else {
+        vec![]
+    };
+    RequestSpec {
+        id: RequestId(id),
+        arrival: Micros(id * 40_000),
+        prompt,
+        prompt_tokens,
+        api_calls,
+        final_decode: Tokens(24 + lcg(rng) % 48),
+    }
+}
+
+fn random_trace(n: u64, seed: u64) -> Trace {
+    let mut rng = seed;
+    let specs = (0..n).map(|i| random_spec(i, &mut rng)).collect();
+    Trace::new("equiv-fuzz", 25.0, specs)
+}
+
+/// The config matrix the suite sweeps: placement policy x prefix cache
+/// (with the fleet-shared index under affinity) on a small 3-replica
+/// fleet whose budget forces preemptions and rescues.
+fn configs() -> Vec<(&'static str, SystemConfig)> {
+    let base = {
+        let mut cfg = SystemConfig::preset("lamps").unwrap();
+        cfg.replicas = 3;
+        cfg.memory_budget = Tokens(3_000);
+        cfg
+    };
+    let mut out = Vec::new();
+    let mut mot = base.clone();
+    mot.placement = PlacementKind::MemoryOverTime;
+    out.push(("memory-over-time", mot));
+    let mut mot_cache = base.clone();
+    mot_cache.placement = PlacementKind::MemoryOverTime;
+    mot_cache.prefix_cache = PrefixCacheConfig::on();
+    out.push(("memory-over-time + prefix cache", mot_cache));
+    let mut affinity = base.clone();
+    affinity.placement = PlacementKind::PrefixAffinity;
+    affinity.prefix_cache = PrefixCacheConfig::on();
+    affinity.shared_prefix = true;
+    out.push(("prefix-affinity + shared index", affinity));
+    out
+}
+
+const STEP_CAP: usize = 400_000;
+
+/// Angle 1: after every fleet step, every replica's cached probe must
+/// agree bit-for-bit with the stateless recompute.
+#[test]
+fn cached_score_matches_recompute_after_every_step() {
+    for (name, cfg) in configs() {
+        let trace = random_trace(60, 0xC0FFEE ^ cfg.placement as u64);
+        let mut set = ReplicaSet::simulated(cfg);
+        for spec in &trace.requests {
+            set.enqueue(spec.clone());
+        }
+        let mut steps = 0usize;
+        loop {
+            let more = set.step();
+            for i in 0..set.len() {
+                let e = set.replica(i);
+                let cached = e.load_memory_over_time();
+                let fresh = e.load_memory_over_time_uncached();
+                assert_eq!(
+                    cached.to_bits(), fresh.to_bits(),
+                    "[{name}] replica {i} step {steps}: cached score \
+                     {cached} != recompute {fresh}");
+            }
+            steps += 1;
+            assert!(steps < STEP_CAP,
+                    "[{name}] fleet did not drain in {STEP_CAP} steps");
+            if !more {
+                break;
+            }
+        }
+    }
+}
+
+/// Angle 1 on curated traffic: the InferCept-style multi-API dataset
+/// (every request parks at least once) through the same per-step check.
+#[test]
+fn cached_score_matches_recompute_on_multi_api_traffic() {
+    let mut cfg = SystemConfig::preset("lamps").unwrap();
+    cfg.replicas = 3;
+    cfg.memory_budget = Tokens(4_000);
+    cfg.placement = PlacementKind::MemoryOverTime;
+    let trace = Dataset::MultiApi.generate(40, 6.0, 42);
+    let mut set = ReplicaSet::simulated(cfg);
+    for spec in &trace.requests {
+        set.enqueue(spec.clone());
+    }
+    let mut steps = 0usize;
+    loop {
+        let more = set.step();
+        for i in 0..set.len() {
+            let e = set.replica(i);
+            assert_eq!(e.load_memory_over_time().to_bits(),
+                       e.load_memory_over_time_uncached().to_bits(),
+                       "replica {i} diverged at step {steps}");
+        }
+        steps += 1;
+        assert!(steps < STEP_CAP, "fleet did not drain");
+        if !more {
+            break;
+        }
+    }
+}
+
+/// Angle 2: cache on vs cache off is byte-identical — same placement
+/// assignments, same fleet report (timeline included).
+#[test]
+fn placement_assignments_identical_cache_on_and_off() {
+    for (name, cfg) in configs() {
+        let trace = random_trace(60, 0xBADCAB ^ cfg.placement as u64);
+        let run = |cache: bool| {
+            let mut cfg = cfg.clone();
+            cfg.placement_cache = cache;
+            let mut set = ReplicaSet::simulated(cfg);
+            set.set_record_timeline(true);
+            let report = set.run_trace(&trace);
+            (report.to_json(true), set.assignments().to_vec())
+        };
+        let (report_on, assign_on) = run(true);
+        let (report_off, assign_off) = run(false);
+        assert_eq!(assign_on, assign_off,
+                   "[{name}] placement assignments diverged between \
+                    cache on and off");
+        assert_eq!(report_on, report_off,
+                   "[{name}] fleet report diverged between cache on \
+                    and off");
+    }
+}
