@@ -316,17 +316,17 @@ fn main() {
                 match gate_value(&baseline, "replicas_64", key) {
                     Some(base) => {
                         let floor = base * 0.8;
-                        if c64.per_sec < floor {
+                        if cached64.per_sec < floor {
                             eprintln!(
                                 "FAIL: replicas_64 {key} {:.0} \
                                  regressed >20% vs baseline {base:.0} \
                                  (floor {floor:.0}) from {path}",
-                                c64.per_sec);
+                                cached64.per_sec);
                             failed = true;
                         } else {
                             println!(
                                 "gate ok: replicas_64 {key} {:.0} >= \
-                                 floor {floor:.0}", c64.per_sec);
+                                 floor {floor:.0}", cached64.per_sec);
                         }
                     }
                     None => {

@@ -1,0 +1,13 @@
+//! Seeded violation for `predictor-seam`: an engine-layer consumer
+//! reading the Table 2 stats directly instead of going through the
+//! `predictor::duration` seam, so learned estimators never see (or
+//! revise) this estimate.
+
+pub fn api_eta(api: ApiType) -> Micros {
+    api_stats::predicted_duration(api)
+}
+
+pub fn api_budget(api: ApiType) -> u64 {
+    let stats = api_stats::stats_for(api);
+    stats.response_tokens.0.round() as u64
+}

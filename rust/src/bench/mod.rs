@@ -182,6 +182,14 @@ pub fn run_cell_fleet_shared(system: &str, dataset: Dataset,
         Ok("off") => cfg.audit = crate::config::AuditMode::Off,
         _ => {}
     }
+    // Bench-level duration-seam switch (the CI smoke's
+    // `LAMPS_API_PRED` axis): "learned" turns the online per-class
+    // estimators on; "static" (or unset) keeps the pass-through seam.
+    if let Ok(name) = std::env::var("LAMPS_API_PRED") {
+        if let Some(kind) = crate::config::ApiPredKind::parse(&name) {
+            cfg.api_pred = kind;
+        }
+    }
     // ToolBench uses the score-update interval of 10 (§5).
     if dataset == Dataset::ToolBench {
         cfg.score_update_interval = 10;

@@ -221,6 +221,41 @@ impl ApiSourceKind {
     }
 }
 
+/// How API-duration estimates are produced behind the
+/// [`DurationModel`](crate::predictor::duration::DurationModel) seam
+/// (`--api-pred` / `LAMPS_API_PRED`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ApiPredKind {
+    /// Per-call estimates pass through untouched (the configured
+    /// predictor's output, i.e. Table 2 class means for the classifier
+    /// paths). Byte-identical to the pre-seam engine — the default.
+    #[default]
+    Static,
+    /// Per-class online estimators (EWMA mean + windowed quantile
+    /// sketch) learn from observed outcomes at the return sites and
+    /// revise every subsequent estimate, blending toward a conservative
+    /// class quantile when the observed relative error runs hot.
+    Learned,
+}
+
+impl ApiPredKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ApiPredKind::Static => "static",
+            ApiPredKind::Learned => "learned",
+        }
+    }
+
+    /// Parse a CLI name (`--api-pred`).
+    pub fn parse(name: &str) -> Option<ApiPredKind> {
+        Some(match name {
+            "static" => ApiPredKind::Static,
+            "learned" => ApiPredKind::Learned,
+            _ => return None,
+        })
+    }
+}
+
 /// Runtime invariant auditor (`--audit` / `LAMPS_AUDIT`): the
 /// read-only [`audit`](crate::audit) pass re-checking block
 /// conservation, prefix refcounts, shared-index subset, queue order,
@@ -422,6 +457,11 @@ pub struct SystemConfig {
     /// or externally-resolved tool calls driven by the client over the
     /// session event stream.
     pub api_source: ApiSourceKind,
+    /// API-duration estimation mode behind the predictor seam
+    /// (`--api-pred`): [`ApiPredKind::Static`] (default, byte-identical
+    /// to the pre-seam engine) or [`ApiPredKind::Learned`] online
+    /// per-class estimators closing the predict→observe→re-rank loop.
+    pub api_pred: ApiPredKind,
     /// Runtime invariant auditing (`--audit`): [`AuditMode::Auto`] by
     /// default, i.e. every debug-build (tier-1 test) engine/fleet step
     /// is audit-checked and release runs pay nothing unless opted in.
@@ -458,6 +498,7 @@ impl Default for SystemConfig {
             shared_prefix: false,
             admission_requeue: true,
             api_source: ApiSourceKind::default(),
+            api_pred: ApiPredKind::default(),
             audit: AuditMode::default(),
             placement_cache: true,
             cost: CostModel::paper_scale(),
@@ -575,6 +616,22 @@ mod tests {
         assert_eq!(ApiSourceKind::parse("simulated"),
                    Some(ApiSourceKind::Simulated));
         assert_eq!(ApiSourceKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn api_pred_defaults_static_and_parses() {
+        // `--api-pred static` (the default) must leave every preset on
+        // the pass-through duration seam — the byte-identical path.
+        assert_eq!(ApiPredKind::default(), ApiPredKind::Static);
+        for name in ["vllm", "infercept", "lamps", "lamps-no-sched",
+                     "sjf", "sjf-total"] {
+            assert_eq!(SystemConfig::preset(name).unwrap().api_pred,
+                       ApiPredKind::Static, "{name}");
+        }
+        for kind in [ApiPredKind::Static, ApiPredKind::Learned] {
+            assert_eq!(ApiPredKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(ApiPredKind::parse("nope"), None);
     }
 
     #[test]

@@ -55,6 +55,7 @@ use crate::core::types::{Micros, RequestId, Tokens};
 use crate::kv::{prefix, BlockManager, SwapSpace, TransferDir,
                 TransferQueue};
 use crate::metrics::{MetricsCollector, RunReport, TimelinePoint};
+use crate::predictor::duration::DurationModel;
 use crate::predictor::oracle::{NoisyOraclePredictor, OraclePredictor};
 use crate::predictor::Predictor;
 use crate::workload::Trace;
@@ -191,6 +192,18 @@ pub struct Engine {
     /// admission, purge, and registration. Entries die with the
     /// request (terminal free / withdraw / failed submit).
     chain_memo: HashMap<RequestId, Vec<prefix::BlockHash>>,
+    /// The API-duration seam (`cfg.api_pred`): every duration estimate
+    /// the scheduler consumes is routed through
+    /// [`DurationModel::revise`] (a pure read — placement probes use it
+    /// too), and observed outcomes update it in `route_api_return`, the
+    /// single mutation point. Static mode is the stateless identity.
+    duration_model: DurationModel,
+    /// Record simulated predicted-vs-actual API outcomes in the metrics
+    /// histogram. True whenever the configured predictor is not the
+    /// exact oracle (whose gap is identically zero — skipping it keeps
+    /// oracle-run report bytes unchanged). External outcomes are always
+    /// recorded regardless.
+    record_sim_outcomes: bool,
 }
 
 impl Engine {
@@ -246,6 +259,9 @@ impl Engine {
             load_epoch: 0,
             load_cache: std::cell::Cell::new(None),
             chain_memo: HashMap::new(),
+            duration_model: DurationModel::new(cfg.api_pred),
+            record_sim_outcomes: !matches!(cfg.predictor,
+                                           PredictorKind::Oracle),
             cfg,
         }
     }
@@ -270,6 +286,13 @@ impl Engine {
 
     pub fn now(&self) -> Micros {
         self.clock.now()
+    }
+
+    /// Outcomes the duration seam has observed (0 in static mode) —
+    /// lets tests pin that probes and rescue/adopt moves never update
+    /// the estimators.
+    pub fn api_pred_observations(&self) -> u64 {
+        self.duration_model.observations()
     }
 
     pub fn request(&self, id: RequestId) -> Option<&Request> {
@@ -459,7 +482,12 @@ impl Engine {
             .sum();
         let mut oracle = OraclePredictor;
         for spec in &self.pending {
+            // The stateless oracle (never the configured predictor, so
+            // a probe can't advance a noisy predictor's RNG), revised
+            // through the duration seam — `revise` is a pure read, so
+            // probe purity holds in learned mode too.
             let predictions = oracle.predict(spec);
+            let predictions = self.revise_predictions(spec, predictions);
             let handling = self.assign_handling(spec, &predictions);
             total += memory_over_time_fresh(spec, &predictions,
                                             &handling, &cost, inputs);
@@ -480,6 +508,7 @@ impl Engine {
         let inputs = self.schedule_context().rank_inputs();
         let mut oracle = OraclePredictor;
         let predictions = oracle.predict(spec);
+        let predictions = self.revise_predictions(spec, predictions);
         let handling = self.assign_handling(spec, &predictions);
         self.load_memory_over_time_with(&inputs)
             + memory_over_time_fresh_prefixed(spec, &predictions,
@@ -721,6 +750,7 @@ impl Engine {
     /// Submit immediately with predicted handling per the config policy.
     pub fn submit(&mut self, spec: RequestSpec) {
         let predictions = self.predictor.predict(&spec);
+        let predictions = self.revise_predictions(&spec, predictions);
         let handling = self.assign_handling(&spec, &predictions);
         self.submit_prepared(spec, predictions, handling);
     }
@@ -729,7 +759,32 @@ impl Engine {
     pub fn submit_with_handling(&mut self, spec: RequestSpec,
                                 handling: Vec<HandlingStrategy>) {
         let predictions = self.predictor.predict(&spec);
+        let predictions = self.revise_predictions(&spec, predictions);
         self.submit_prepared(spec, predictions, handling);
+    }
+
+    /// Route raw predictor output through the duration seam: each
+    /// segment's API-duration estimate is revised against the current
+    /// per-class estimator. Pure (`&self`) — the placement probes call
+    /// it on candidate specs — and the identity in static mode, so the
+    /// off path stays byte-identical. Note the deliberate asymmetry
+    /// with [`Engine::submit_prepared`]: a rescued/adopted request
+    /// crosses replicas with its predictions carried as-is (no second
+    /// predict, no revision).
+    fn revise_predictions(&self, spec: &RequestSpec,
+                          mut predictions: Vec<SegmentPrediction>)
+                          -> Vec<SegmentPrediction> {
+        if !self.duration_model.is_learned() {
+            return predictions;
+        }
+        for (seg, call) in spec.api_calls.iter().enumerate() {
+            let Some(pred) = predictions.get_mut(seg) else { break };
+            if let Some(raw) = pred.api_duration {
+                pred.api_duration =
+                    Some(self.duration_model.revise(call.api_type, raw));
+            }
+        }
+        predictions
     }
 
     fn submit_prepared(&mut self, spec: RequestSpec,
@@ -1179,6 +1234,7 @@ impl Engine {
         // lamps-lint: allow(panic) segment index is bounded by the spec's call list
         let call = &req.spec.api_calls[seg];
         let response = call.response_tokens;
+        let api = call.api_type;
         // Actual duration: the sampled truth for simulated calls, the
         // measured park time for externally-resolved ones.
         let external = return_at.is_none();
@@ -1225,12 +1281,21 @@ impl Engine {
         // Segment changed: invalidate the cached score.
         req.score_iteration = u64::MAX;
         self.waiting.push(id);
-        if external {
-            // The predicted-vs-actual duration gap is observable only
-            // for externally-resolved calls; recording nothing for
-            // simulated ones keeps sim reports byte-identical to the
-            // pre-seam engine.
+        if external || self.record_sim_outcomes {
+            // The predicted-vs-actual duration gap is observable for
+            // externally-resolved calls and for simulated returns under
+            // any non-oracle predictor (the exact oracle's gap is
+            // identically zero; skipping it keeps oracle-run report
+            // bytes unchanged, since the histogram is emitted only when
+            // non-empty).
             self.metrics.record_api_outcome(predicted, actual);
+        }
+        // The outcome sites — this simulated-return path and the
+        // external resolution that funnels through it — are the seam's
+        // single mutation point: one `observe` per finished call.
+        self.duration_model.observe(api, predicted, actual);
+        if self.duration_model.is_learned() {
+            self.metrics.api_pred_model = self.duration_model.snapshot();
         }
         self.push_event(EngineEvent::ApiCompleted {
             id,
@@ -2015,10 +2080,17 @@ impl Engine {
             let seg = req.segment;
             // lamps-lint: allow(panic) segment index is bounded by the spec's call list
             let call = &req.spec.api_calls[seg];
+            // lamps-lint: allow(panic) segment index is bounded by the spec's call list
+            let raw = req.predictions[seg]
+                .api_duration
+                .unwrap_or(call.duration);
             (seg,
              call.duration,
-             // lamps-lint: allow(panic) segment index is bounded by the spec's call list
-             req.predictions[seg].api_duration.unwrap_or(call.duration),
+             // Re-prediction at the encounter: the submit-time estimate
+             // is refreshed against the current class estimator before
+             // the strategy choice, the reservation plan, and the
+             // ApiStarted event consume it (identity in static mode).
+             self.duration_model.revise(call.api_type, raw),
              req.context)
         };
         // INFERCEPT decides here, with live batch context.
@@ -2047,6 +2119,16 @@ impl Engine {
             let req = self.requests.get_mut(&id).unwrap();
             // lamps-lint: allow(panic) segment index is bounded by the spec's call list
             req.handling[seg] = strategy;
+            if self.duration_model.is_learned() {
+                // Persist the refreshed estimate so the return site's
+                // outcome accounting measures the error of what the
+                // scheduler actually planned with.
+                if let Some(pred) = req.predictions.get_mut(seg) {
+                    if pred.api_duration.is_some() {
+                        pred.api_duration = Some(pred_duration);
+                    }
+                }
+            }
             req.starvation_cnt = 0; // §4.4 reset on API encounter
         }
 

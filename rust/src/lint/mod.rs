@@ -15,6 +15,7 @@
 //! | `float-iter`   | `engine/ cluster/ coordinator/`     | f64 accumulation over `HashMap` iteration order (the PR 3 placement-reproducibility class) |
 //! | `probe-purity` | everywhere                          | a placement probe (`load_memory_over_time*`, `placement_score*`, `prefix_credits`) taking any `&mut` |
 //! | `probe-hot-loop` | `cluster/`                        | prompt hashing (`content_chain` / `extend_content_chain`) inside a `for` loop — per-replica iteration must borrow the arrival's one-shot chain (`ArrivalScratch`), not rehash it per candidate (the PR 8 class) |
+//! | `predictor-seam` | everywhere but `predictor/ workload/` | direct Table 2 reads (`api_stats::stats_for` / `predicted_duration` / `predicted_response_tokens`) — consumers go through the `predictor::duration` seam (`DurationModel::revise`, `class_prior_*`) so learned estimators can revise every estimate (the PR 9 class) |
 //!
 //! A genuine exception is written down, not waved through:
 //!
@@ -37,8 +38,8 @@ use std::fs;
 use std::io;
 use std::path::{Path, PathBuf};
 
-/// The seven enforced rule slugs (what `allow(...)` accepts).
-pub const RULES: [&str; 7] = [
+/// The eight enforced rule slugs (what `allow(...)` accepts).
+pub const RULES: [&str; 8] = [
     "wire-format",
     "wire-hot-path",
     "panic",
@@ -46,6 +47,7 @@ pub const RULES: [&str; 7] = [
     "float-iter",
     "probe-purity",
     "probe-hot-loop",
+    "predictor-seam",
 ];
 
 /// One finding: file, 1-based line, rule slug, human message.
@@ -508,6 +510,9 @@ pub fn scan_source(rel_path: &str, src: &str) -> Vec<Violation> {
     let clock_scope = rel != "engine/clock.rs";
     let wire_scope = in_dir(&rel, "server");
     let hot_loop_scope = in_dir(&rel, "cluster");
+    let seam_scope = !["predictor", "workload"]
+        .iter()
+        .any(|d| in_dir(&rel, d));
 
     if panic_scope {
         rule_panic(&tokens, &mut ctx);
@@ -524,6 +529,9 @@ pub fn scan_source(rel_path: &str, src: &str) -> Vec<Violation> {
     }
     if hot_loop_scope {
         rule_probe_hot_loop(&tokens, &mut ctx);
+    }
+    if seam_scope {
+        rule_predictor_seam(&tokens, &mut ctx);
     }
     rule_probe_purity(&tokens, &mut ctx);
 
@@ -673,6 +681,34 @@ fn rule_wire_hot_path(t: &[Token], ctx: &mut Ctx<'_>) {
             "json::{name} on the server hot path — frames go through \
              crate::wire (Frame::parse / Encoder), not the allocating \
              Value tree (PR 7 zero-copy class)"));
+    }
+}
+
+/// Rule `predictor-seam`: direct Table 2 reads outside `predictor/`
+/// and `workload/`. A raw `api_stats::stats_for` /
+/// `predicted_duration` / `predicted_response_tokens` call bypasses
+/// the `predictor::duration` seam, so learned estimators never get to
+/// revise that estimate and the `--api-pred` knob silently stops
+/// covering the call site (the PR 9 class). Consumers read through
+/// `DurationModel::revise` or the `class_prior_*` re-exports instead;
+/// workload generators sample the same Table 2 distributions and are
+/// exempt by scope.
+fn rule_predictor_seam(t: &[Token], ctx: &mut Ctx<'_>) {
+    for i in 0..t.len() {
+        let Some(name) = id_at(t, i) else { continue };
+        if !matches!(name, "stats_for" | "predicted_duration"
+                           | "predicted_response_tokens")
+        {
+            continue;
+        }
+        if !punct_at(t, i + 1, '(') {
+            continue;
+        }
+        ctx.push(t[i].line, "predictor-seam", format!(
+            "direct api_stats::{name} call bypasses the duration \
+             seam — read through predictor::duration \
+             (DurationModel::revise / class_prior_*) so learned \
+             estimators stay in the loop (PR 9 class)"));
     }
 }
 

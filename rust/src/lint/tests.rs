@@ -395,6 +395,57 @@ pub fn audit(replicas: &[Engine], spec: &RequestSpec) {
     assert!(scan_source("cluster/t.rs", src).is_empty());
 }
 
+// -- predictor-seam ----------------------------------------------------
+
+#[test]
+fn predictor_seam_flags_direct_api_stats_reads() {
+    let src = r#"
+pub fn eta(api: ApiType) -> Micros {
+    api_stats::predicted_duration(api)
+}
+pub fn budget(api: ApiType) -> u64 {
+    api_stats::predicted_response_tokens(api)
+}
+pub fn spread(api: ApiType) -> f64 {
+    api_stats::stats_for(api).duration_secs.1
+}
+"#;
+    let v = scan_source("engine/mod.rs", src);
+    let hits = rules_hit(&v);
+    assert_eq!(hits.iter().filter(|r| **r == "predictor-seam").count(),
+               3, "{v:?}");
+}
+
+#[test]
+fn predictor_seam_exempts_seam_and_workload_and_spares_seam_calls() {
+    let direct = r#"
+pub fn eta(api: ApiType) -> Micros {
+    api_stats::predicted_duration(api)
+}
+"#;
+    // The seam itself and the trace generators read Table 2 directly.
+    assert!(scan_source("predictor/duration.rs", direct).is_empty());
+    assert!(scan_source("workload/toolbench.rs", direct).is_empty());
+    // Consumers going through the seam re-exports stay clean.
+    let through_seam = r#"
+pub fn eta(api: ApiType) -> Micros {
+    crate::predictor::duration::class_prior_duration(api)
+}
+"#;
+    assert!(scan_source("server/mod.rs", through_seam).is_empty());
+}
+
+#[test]
+fn predictor_seam_allow_escape_suppresses() {
+    let src = r#"
+pub fn eta(api: ApiType) -> Micros {
+    // lamps-lint: allow(predictor-seam) metrics label only, never scheduled
+    api_stats::predicted_duration(api)
+}
+"#;
+    assert!(scan_source("metrics/mod.rs", src).is_empty());
+}
+
 // -- the on-disk fixture corpus + the crate itself ---------------------
 
 #[test]

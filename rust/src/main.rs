@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use lamps::bench::{Dataset, ModelPreset};
 use lamps::cluster::ReplicaSet;
-use lamps::config::{ApiSourceKind, AuditMode, PlacementKind,
+use lamps::config::{ApiPredKind, ApiSourceKind, AuditMode, PlacementKind,
                     SystemConfig};
 use lamps::core::types::Micros;
 #[cfg(feature = "pjrt")]
@@ -34,6 +34,7 @@ USAGE:
   lamps serve   [--addr 127.0.0.1:7070] [--model gptj-tiny]
                 [--system lamps] [--artifacts artifacts]
                 [--api-source sim|external]
+                [--api-pred static|learned]
                 [--replicas N]
                 [--placement memory-over-time|prefix-affinity|
                              least-loaded|round-robin]
@@ -46,6 +47,7 @@ USAGE:
                 [--system vllm|infercept|lamps|lamps-no-sched|sjf|sjf-total]
                 [--model gptj-6b|vicuna-13b] [--rate 3.0]
                 [--requests 500] [--seed 42] [--time-cap-secs N]
+                [--api-pred static|learned]
                 [--replicas N]
                 [--placement memory-over-time|prefix-affinity|
                              least-loaded|round-robin]
@@ -86,7 +88,13 @@ WIRE PROTOCOL (serve; JSON lines over TCP, one frame per line):
 
   --api-source sim (default) simulates API durations server-side and
   is byte-identical to the pre-session engine; external hands every
-  API call to the client. --prefill-chunk auto derives the chunk size
+  API call to the client. --api-pred static (default) feeds the
+  scheduler raw per-call duration estimates and is byte-identical to
+  the pre-seam engine; learned revises every estimate through
+  per-API-class online estimators (EWMA mean + windowed quantiles,
+  updated from observed outcomes) that blend toward a conservative
+  class quantile when observed prediction error runs hot, and reports
+  the estimator state as api_pred_model in the metrics JSON. --prefill-chunk auto derives the chunk size
   from the profiled decode-iteration time (target: chunk forward time
   = one decode iteration). --replicas N dispatches across N engine
   replicas (one modeled GPU each); --placement picks how arrivals are
@@ -230,6 +238,21 @@ fn apply_api_source_flag(cfg: &mut SystemConfig, args: &Args,
     Ok(())
 }
 
+/// Apply `--api-pred static|learned`: the API-duration seam mode
+/// (static = pass-through, byte-identical to the pre-seam engine;
+/// learned = per-class online estimators revising every estimate).
+fn apply_api_pred_flag(cfg: &mut SystemConfig, args: &Args)
+                       -> Result<()> {
+    if let Some(name) = args.flags.get("api-pred") {
+        cfg.api_pred = ApiPredKind::parse(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown api pred mode '{name}' (expected static or \
+                 learned)")
+        })?;
+    }
+    Ok(())
+}
+
 /// Apply the multi-replica flags: `--replicas N` sizes the
 /// [`ReplicaSet`]; `--placement` picks the cross-replica placement
 /// policy (memory-over-time by default); `--shared-prefix` maintains
@@ -335,12 +358,14 @@ fn serve(args: &Args) -> Result<()> {
     apply_prefix_flags(&mut base_cfg, args);
     apply_replica_flags(&mut base_cfg, args)?;
     apply_api_source_flag(&mut base_cfg, args, true)?;
+    apply_api_pred_flag(&mut base_cfg, args)?;
     eprintln!(
         "lamps: {} replica(s), {} placement (score cache {}), \
-         api-source {}, audit {} ({})",
+         api-source {}, api-pred {}, audit {} ({})",
         base_cfg.replicas, base_cfg.placement.label(),
         if base_cfg.placement_cache { "on" } else { "off" },
-        base_cfg.api_source.label(), base_cfg.audit.label(),
+        base_cfg.api_source.label(), base_cfg.api_pred.label(),
+        base_cfg.audit.label(),
         if base_cfg.audit.enabled() { "active" } else { "inactive" });
 
     // PJRT handles are not Send: build them inside the engine thread.
@@ -408,6 +433,7 @@ fn run(args: &Args) -> Result<()> {
     apply_prefix_flags(&mut cfg, args);
     apply_replica_flags(&mut cfg, args)?;
     apply_api_source_flag(&mut cfg, args, false)?;
+    apply_api_pred_flag(&mut cfg, args)?;
     if cfg.audit.enabled() {
         eprintln!("lamps: invariant auditor active (audit {})",
                   cfg.audit.label());

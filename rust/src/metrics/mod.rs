@@ -217,16 +217,24 @@ pub struct MetricsCollector {
     pub rejected_slot: u64,
     pub rejected_memory: u64,
     pub rejected_reservation: u64,
-    /// Externally-resolved API calls completed (`--api-source
-    /// external`). Zero on simulated runs — the predicted-vs-actual
-    /// gap is unobservable when the "actual" was sampled up front —
-    /// which also keeps their report JSON free of the fields below.
+    /// API calls with an observable predicted-vs-actual gap: every
+    /// externally-resolved call (`--api-source external`), plus
+    /// simulated returns whenever the configured predictor is not the
+    /// exact oracle (whose gap is identically zero). Zero on
+    /// oracle-predictor sim runs, which also keeps their report JSON
+    /// free of the fields below.
     pub api_calls_completed: u64,
     /// Histogram of per-call relative duration error (see
     /// [`API_ERR_BUCKET_BOUNDS`]).
     pub api_pred_err_hist: [u64; API_ERR_BUCKETS],
     /// Sum of absolute predicted-vs-actual duration error, µs.
     pub api_pred_abs_err_us: u64,
+    /// Estimator-state snapshot of the learned duration seam
+    /// (`--api-pred learned`): per-class n/mean/p50/p90/blend, refreshed
+    /// by the engine at each observed outcome. `None` — and absent from
+    /// the JSON — in static mode, so the off-path report shape stays
+    /// pinned.
+    pub api_pred_model: Option<crate::util::json::Value>,
 }
 
 impl MetricsCollector {
@@ -340,6 +348,7 @@ impl MetricsCollector {
             api_calls_completed: self.api_calls_completed,
             api_pred_err_hist: self.api_pred_err_hist,
             api_pred_abs_err_us: self.api_pred_abs_err_us,
+            api_pred_model: self.api_pred_model.clone(),
             timeline: self.timeline.clone(),
         }
     }
@@ -384,15 +393,20 @@ pub struct RunReport {
     pub rejected_slot: u64,
     pub rejected_memory: u64,
     pub rejected_reservation: u64,
-    /// Externally-resolved API calls completed; zero on simulated
-    /// runs, which also omits the histogram fields from the JSON so
-    /// the sim report shape stays byte-identical to the pre-seam one.
+    /// API calls whose predicted-vs-actual gap was recorded (external
+    /// calls, plus simulated ones under a non-oracle predictor); zero
+    /// on oracle-predictor sim runs, which also omits the histogram
+    /// fields from the JSON so that report shape stays byte-identical
+    /// to the pre-seam one.
     pub api_calls_completed: u64,
     /// Per-call predicted-vs-actual relative-error histogram (see
     /// [`API_ERR_BUCKET_BOUNDS`]).
     pub api_pred_err_hist: [u64; API_ERR_BUCKETS],
     /// Sum of absolute predicted-vs-actual duration error, µs.
     pub api_pred_abs_err_us: u64,
+    /// Learned duration-seam estimator state (`--api-pred learned`
+    /// only; `None` in static mode keeps the JSON shape pinned).
+    pub api_pred_model: Option<crate::util::json::Value>,
     pub timeline: Vec<TimelinePoint>,
 }
 
@@ -466,6 +480,12 @@ impl RunReport {
             api_calls_completed: sum(|r| r.api_calls_completed),
             api_pred_err_hist,
             api_pred_abs_err_us: sum(|r| r.api_pred_abs_err_us),
+            // Per-replica estimators are independent state machines;
+            // averaging them would misrepresent each replica's actual
+            // scheduling inputs. The fleet aggregate carries none; the
+            // per-replica reports keep theirs (FleetReport renders
+            // them).
+            api_pred_model: None,
             timeline: Vec::new(),
         }
     }
@@ -525,9 +545,9 @@ impl RunReport {
              json::num(self.rejected_reservation as f64)),
         ];
         if self.api_calls_completed > 0 {
-            // Only externally-resolved calls populate these; omitting
-            // them otherwise keeps the simulated report JSON
-            // byte-identical to the pre-`--api-source` shape.
+            // External calls and non-oracle simulated returns populate
+            // these; omitting them while zero keeps oracle-run report
+            // JSON byte-identical to the pre-`--api-source` shape.
             pairs.push(("api_calls_completed",
                         json::num(self.api_calls_completed as f64)));
             pairs.push(("api_pred_abs_err_us",
@@ -537,6 +557,10 @@ impl RunReport {
                     .iter()
                     .map(|&c| json::num(c as f64))
                     .collect())));
+        }
+        if let Some(model) = &self.api_pred_model {
+            // Learned-seam estimator state; absent in static mode.
+            pairs.push(("api_pred_model", model.clone()));
         }
         if with_timeline {
             pairs.push(("timeline", Value::Arr(

@@ -1,0 +1,353 @@
+//! The duration seam: every API-duration estimate an engine consumes is
+//! routed through one [`DurationModel`] so the static Table 2 path and the
+//! learned online estimators are interchangeable behind a single surface.
+//!
+//! Seam contract (every consumer relies on all three):
+//! - **Pure reads.** [`DurationModel::revise`] is `&self` and mutates
+//!   nothing — placement/rescue probes in `cluster/` may call it freely
+//!   without breaking the probe-purity contract (lamps-lint `probe-purity`
+//!   guards the engine side; this module guards the model side by simply
+//!   having no interior mutability).
+//! - **Update at outcome only.** [`DurationModel::observe`] is the single
+//!   mutation point and is called exactly once per finished API call, at
+//!   the two outcome sites (`route_api_return` for simulated returns,
+//!   which `complete_api_call` also funnels through for external ones).
+//!   Rescue/adopt carries a request's predictions across replicas without
+//!   a second predict or observe.
+//! - **Fixed-order state.** Estimators live in a fixed `[ClassEstimator;
+//!   NUM_CLASSES]` array indexed by [`class_index`]; no HashMap iteration
+//!   anywhere, so two identical runs produce bit-identical estimator
+//!   state and reports (replica determinism).
+//!
+//! With [`ApiPredKind::Static`] (the default) `revise` is the identity
+//! and `observe` a no-op: reports stay byte-identical to the pre-seam
+//! code. With `Learned`, each class keeps an online mean (running mean
+//! early, 5% EWMA once warm), a 64-sample sliding window whose sorted
+//! copy serves as the streaming quantile sketch, and an EWMA of the
+//! *post-revision* relative error. `revise` blends the raw per-call
+//! estimate toward a conservative class estimate (mean nudged toward p90)
+//! with a weight that grows as the observed error histogram runs hot —
+//! the adaptive fallback of ROADMAP's learned-predictor item.
+
+use crate::config::ApiPredKind;
+use crate::core::request::ApiType;
+use crate::core::types::Micros;
+use crate::util::json::{self, Value};
+
+use super::api_stats;
+
+/// Number of duration classes: the six INFERCEPT augmentations plus the
+/// collapsed ToolBench row (Table 2 collapses all tool categories into
+/// one latency class, and so do we).
+pub const NUM_CLASSES: usize = 7;
+
+/// Sliding-window size of the per-class quantile sketch.
+const WINDOW: usize = 64;
+
+/// Observations a class needs before `revise` trusts its estimate.
+const MIN_OBS: u64 = 4;
+
+/// EWMA floor: once `n >= 20`, new outcomes weigh 5%.
+const EWMA_ALPHA: f64 = 0.05;
+
+/// Relative error (EWMA) at which blending starts / saturates.
+const HEAT_LO: f64 = 0.10;
+const HEAT_HI: f64 = 0.50;
+
+/// Fraction of the (p90 - mean) gap added to the class estimate at full
+/// heat — the conservative-quantile bias (overestimating a duration is
+/// the cheaper scheduling mistake: it costs recompute, not memory).
+const CONSERVATIVE_P90_WEIGHT: f64 = 0.25;
+
+/// Fixed class index for the estimator array (never a HashMap key).
+pub fn class_index(api: ApiType) -> usize {
+    match api {
+        ApiType::Math => 0,
+        ApiType::Qa => 1,
+        ApiType::Ve => 2,
+        ApiType::Chatbot => 3,
+        ApiType::Image => 4,
+        ApiType::Tts => 5,
+        ApiType::Tool(_) => 6,
+    }
+}
+
+fn class_label(idx: usize) -> &'static str {
+    match idx {
+        0 => "math",
+        1 => "qa",
+        2 => "ve",
+        3 => "chatbot",
+        4 => "image",
+        5 => "tts",
+        _ => "tool",
+    }
+}
+
+/// The static prior for a class — Table 2's mean, re-exported so
+/// consumers outside `predictor/` (the server's wire fallback, the
+/// engine) read it through the seam instead of `api_stats` directly
+/// (lamps-lint `predictor-seam` bans the direct call).
+pub fn class_prior_duration(api: ApiType) -> Micros {
+    api_stats::predicted_duration(api)
+}
+
+/// Static response-length prior, same seam role as
+/// [`class_prior_duration`].
+pub fn class_prior_response_tokens(api: ApiType) -> u64 {
+    api_stats::predicted_response_tokens(api)
+}
+
+/// Online per-class duration estimator (learned mode only).
+#[derive(Debug, Clone)]
+struct ClassEstimator {
+    /// Outcomes observed.
+    n: u64,
+    /// Online mean of actual durations (us): exact running mean while
+    /// `1/n > EWMA_ALPHA`, 5% EWMA afterwards.
+    mean_us: f64,
+    /// EWMA of the post-revision relative error |pred-actual|/actual.
+    rel_err_ema: f64,
+    /// Sliding window of the last `WINDOW` actual durations (us),
+    /// insertion-ordered ring.
+    window: Vec<f64>,
+    /// Next ring slot to overwrite once the window is full.
+    cursor: usize,
+    /// Sorted copy of `window`, rebuilt on every observe — the quantile
+    /// sketch. 64 doubles per class; rebuild cost is trivial next to a
+    /// scheduler step.
+    sorted: Vec<f64>,
+}
+
+impl ClassEstimator {
+    fn new() -> ClassEstimator {
+        ClassEstimator {
+            n: 0,
+            mean_us: 0.0,
+            rel_err_ema: 0.0,
+            window: Vec::new(),
+            cursor: 0,
+            sorted: Vec::new(),
+        }
+    }
+
+    fn observe(&mut self, predicted: Micros, actual: Micros) {
+        self.n += 1;
+        let actual_us = actual.0 as f64;
+        let alpha = (1.0 / self.n as f64).max(EWMA_ALPHA);
+        self.mean_us += alpha * (actual_us - self.mean_us);
+
+        let denom = (actual.0.max(1)) as f64;
+        let rel = (predicted.0 as f64 - actual_us).abs() / denom;
+        self.rel_err_ema += alpha * (rel - self.rel_err_ema);
+
+        if self.window.len() < WINDOW {
+            self.window.push(actual_us);
+        } else {
+            self.window[self.cursor] = actual_us;
+            self.cursor = (self.cursor + 1) % WINDOW;
+        }
+        self.sorted.clear();
+        self.sorted.extend_from_slice(&self.window);
+        self.sorted.sort_by(|a, b| a.total_cmp(b));
+    }
+
+    /// Windowed quantile (nearest-rank on the sorted copy).
+    fn quantile(&self, q: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = ((self.sorted.len() - 1) as f64 * q).round() as usize;
+        self.sorted[idx.min(self.sorted.len() - 1)]
+    }
+
+    /// Blend weight in [0, 1]: 0 while observed error stays under
+    /// `HEAT_LO`, saturating at `HEAT_HI`.
+    fn heat(&self) -> f64 {
+        ((self.rel_err_ema - HEAT_LO) / (HEAT_HI - HEAT_LO)).clamp(0.0, 1.0)
+    }
+}
+
+/// The seam every API-duration consumer reads through. Constructed once
+/// per engine from `cfg.api_pred`; `Static` is stateless and free.
+#[derive(Debug, Clone)]
+pub struct DurationModel {
+    kind: ApiPredKind,
+    classes: Vec<ClassEstimator>,
+}
+
+impl DurationModel {
+    pub fn new(kind: ApiPredKind) -> DurationModel {
+        DurationModel {
+            kind,
+            classes: (0..NUM_CLASSES).map(|_| ClassEstimator::new())
+                                     .collect(),
+        }
+    }
+
+    /// True when revisions/observations are live (learned mode).
+    pub fn is_learned(&self) -> bool {
+        matches!(self.kind, ApiPredKind::Learned)
+    }
+
+    /// Revise a raw per-call duration estimate through the class
+    /// estimator. Pure (`&self`): placement probes call this. Static
+    /// mode, or a class with fewer than `MIN_OBS` outcomes, returns the
+    /// input unchanged — the byte-identity guarantee.
+    pub fn revise(&self, api: ApiType, raw: Micros) -> Micros {
+        if !self.is_learned() {
+            return raw;
+        }
+        let est = &self.classes[class_index(api)];
+        if est.n < MIN_OBS {
+            return raw;
+        }
+        let h = est.heat();
+        if h == 0.0 {
+            return raw;
+        }
+        let p90 = est.quantile(0.90);
+        let class_est = est.mean_us
+            + h * CONSERVATIVE_P90_WEIGHT * (p90 - est.mean_us).max(0.0);
+        let raw_us = raw.0 as f64;
+        let revised = raw_us + h * (class_est - raw_us);
+        Micros(revised.max(0.0).round() as u64)
+    }
+
+    /// Record one finished call's (predicted, actual) pair. The single
+    /// mutation point; called only from the outcome sites. No-op in
+    /// static mode.
+    pub fn observe(&mut self, api: ApiType, predicted: Micros,
+                   actual: Micros) {
+        if !self.is_learned() {
+            return;
+        }
+        self.classes[class_index(api)].observe(predicted, actual);
+    }
+
+    /// Total outcomes observed across all classes.
+    pub fn observations(&self) -> u64 {
+        self.classes.iter().map(|c| c.n).sum()
+    }
+
+    /// Estimator state for the metrics JSON: one object per class that
+    /// has observations (fixed class order; `Value::Obj` itself sorts
+    /// keys, so the report stays deterministic either way). `None` in
+    /// static mode so the off-path report shape is pinned.
+    pub fn snapshot(&self) -> Option<Value> {
+        if !self.is_learned() {
+            return None;
+        }
+        let mut pairs: Vec<(&str, Value)> = Vec::new();
+        for (idx, est) in self.classes.iter().enumerate() {
+            if est.n == 0 {
+                continue;
+            }
+            pairs.push((class_label(idx), json::obj(vec![
+                ("n", json::num(est.n as f64)),
+                ("mean_us", json::num(est.mean_us)),
+                ("p50_us", json::num(est.quantile(0.50))),
+                ("p90_us", json::num(est.quantile(0.90))),
+                ("rel_err_ema", json::num(est.rel_err_ema)),
+                ("blend", json::num(est.heat())),
+            ])));
+        }
+        Some(json::obj(pairs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(us: u64) -> Micros {
+        Micros(us)
+    }
+
+    #[test]
+    fn static_mode_is_identity_and_stateless() {
+        let mut model = DurationModel::new(ApiPredKind::Static);
+        model.observe(ApiType::Qa, m(1_000_000), m(2_000_000));
+        assert_eq!(model.observations(), 0);
+        assert_eq!(model.revise(ApiType::Qa, m(123_456)), m(123_456));
+        assert!(model.snapshot().is_none());
+    }
+
+    #[test]
+    fn learned_passes_through_until_min_obs() {
+        let mut model = DurationModel::new(ApiPredKind::Learned);
+        for _ in 0..MIN_OBS - 1 {
+            model.observe(ApiType::Qa, m(500_000), m(1_000_000));
+        }
+        assert_eq!(model.revise(ApiType::Qa, m(500_000)), m(500_000));
+        model.observe(ApiType::Qa, m(500_000), m(1_000_000));
+        // Error EWMA is hot (50%), so the estimate shifts toward the
+        // observed mean of 1s.
+        let revised = model.revise(ApiType::Qa, m(500_000));
+        assert!(revised > m(500_000), "revised {revised:?}");
+    }
+
+    #[test]
+    fn cold_error_keeps_raw_estimates() {
+        let mut model = DurationModel::new(ApiPredKind::Learned);
+        for _ in 0..32 {
+            // Perfect predictions: rel error 0 stays under HEAT_LO.
+            model.observe(ApiType::Ve, m(90_000), m(90_000));
+        }
+        assert_eq!(model.revise(ApiType::Ve, m(42_000)), m(42_000));
+    }
+
+    #[test]
+    fn convergence_toward_class_mean_under_error() {
+        let mut model = DurationModel::new(ApiPredKind::Learned);
+        let actual = m(1_000_000);
+        // Alternating 2x over/under-prediction: rel error ~ 0.75, well
+        // past HEAT_HI, so blending saturates.
+        for i in 0..200u64 {
+            let pred = if i % 2 == 0 { m(2_000_000) } else { m(500_000) };
+            model.observe(ApiType::Image, pred, actual);
+        }
+        let revised = model.revise(ApiType::Image, m(3_000_000));
+        let err = (revised.0 as f64 - 1_000_000.0).abs() / 1_000_000.0;
+        assert!(err < 0.05,
+                "saturated blend should sit on the class mean, got \
+                 {revised:?}");
+    }
+
+    #[test]
+    fn estimator_state_is_deterministic() {
+        let run = || {
+            let mut model = DurationModel::new(ApiPredKind::Learned);
+            for i in 0..100u64 {
+                let api = super::super::api_stats::INFERCEPT_CLASSES
+                    [(i % 6) as usize];
+                model.observe(api, m(1_000 + i * 7), m(900 + i * 11));
+            }
+            json::write(&model.snapshot().unwrap())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn quantiles_track_the_window() {
+        let mut model = DurationModel::new(ApiPredKind::Learned);
+        for i in 1..=100u64 {
+            model.observe(ApiType::Tts, m(0), m(i * 1_000));
+        }
+        let snap = json::write(&model.snapshot().unwrap());
+        // Window holds the last 64 samples (37k..100k us); p50 sits near
+        // the middle of that range, not of the full stream.
+        let est = &model.classes[class_index(ApiType::Tts)];
+        assert_eq!(est.window.len(), WINDOW);
+        assert!(est.quantile(0.50) >= 37_000.0);
+        assert!(snap.contains("\"tts\""));
+    }
+
+    #[test]
+    fn seam_reexports_match_table2() {
+        assert_eq!(class_prior_duration(ApiType::Image),
+                   api_stats::predicted_duration(ApiType::Image));
+        assert_eq!(class_prior_response_tokens(ApiType::Qa),
+                   api_stats::predicted_response_tokens(ApiType::Qa));
+    }
+}

@@ -11,8 +11,25 @@
 //!   `N(0, p * measured)` per Fig 11.
 //! - [`opt_classifier::PjrtPredictor`] — the AOT-compiled OPT-125M
 //!   stand-in (embedding -> 50-bin classifier) executed via PJRT.
+//!
+//! Whatever the predictor, every API-*duration* estimate the engine
+//! consumes afterwards flows through the [`duration::DurationModel`]
+//! seam. Its contract, which all five consumer layers (handling choice,
+//! rank integral, `encounter_api`, the `ApiCallStarted` event, and the
+//! stateless placement/rescue probes) rely on:
+//! - revisions are **pure reads** (`&self`) — probes never mutate
+//!   estimator state;
+//! - estimators **update at outcome only** — one `observe` per finished
+//!   call, at the simulated/external return sites; rescue/adopt moves a
+//!   request without a second predict or observe;
+//! - estimator state is **fixed-order** (a class-indexed array, never
+//!   HashMap iteration), so learned runs stay bit-deterministic.
+//!
+//! Direct `api_stats` reads outside `predictor/` and `workload/` are
+//! banned by lamps-lint rule `predictor-seam`.
 
 pub mod api_stats;
+pub mod duration;
 #[cfg(feature = "pjrt")]
 pub mod opt_classifier;
 pub mod oracle;

@@ -29,8 +29,9 @@
 //!   may name any Table 2 class
 //!   (`math|qa|ve|chatbot|image|tts|tool`); `api_ms` is the simulated
 //!   duration — under an external source it is only a prediction hint,
-//!   and omitted it defaults to the class's historical mean
-//!   (`predictor::api_stats`). `response_tokens` defaults to 4.
+//!   and omitted it defaults to the class's historical mean, read
+//!   through the duration seam (`predictor::duration`).
+//!   `response_tokens` defaults to 4.
 //! - `{"type": "tool_result", "id": N, "index": N,
 //!    "response_tokens": N}` ([`crate::wire::Frame::ToolResult`])
 //!   resolves session `N`'s externally-held API call `index`; the
@@ -1008,7 +1009,7 @@ impl WireRequest {
                 api_type: call.api_type,
                 duration: call.api_ms.map(|ms| Micros(ms * 1000))
                     .unwrap_or_else(|| {
-                        crate::predictor::api_stats::predicted_duration(
+                        crate::predictor::duration::class_prior_duration(
                             call.api_type)
                     }),
                 response_tokens: Tokens(call.response_tokens),
@@ -1261,7 +1262,7 @@ mod tests {
         // No api_ms: the class's Table 2 mean is the duration (and the
         // oracle's prediction).
         assert_eq!(spec.api_calls[1].duration,
-                   crate::predictor::api_stats::predicted_duration(
+                   crate::predictor::duration::class_prior_duration(
                        ApiType::Image));
         assert_eq!(spec.api_calls[1].response_tokens, Tokens(4));
         // No api_type: the generic tool class.

@@ -1,0 +1,163 @@
+//! The `--api-pred` duration seam, end to end: byte-identity of the
+//! off path, determinism of the learned path, estimator convergence
+//! under injected Gaussian error, and the rescue/adopt contract (a
+//! moved request neither re-predicts nor double-updates).
+
+use lamps::cluster::ReplicaSet;
+use lamps::config::{ApiPredKind, PredictorKind, SystemConfig};
+use lamps::engine::Engine;
+use lamps::util::json;
+use lamps::workload::infercept;
+
+fn lamps_cfg() -> SystemConfig {
+    SystemConfig::preset("lamps").unwrap()
+}
+
+/// `--api-pred static` (the default) must be byte-identical to a
+/// config that never mentions the knob — engine report and fleet
+/// report alike — and the learned-only `api_pred_model` key must not
+/// leak into the off-path JSON.
+#[test]
+fn static_mode_reports_are_byte_identical_to_default() {
+    let trace = infercept::multi_api_dataset(60, 2.0, 21);
+
+    let default_json =
+        Engine::simulated(lamps_cfg()).run_trace(&trace).to_json(true);
+    let mut cfg = lamps_cfg();
+    cfg.api_pred = ApiPredKind::Static;
+    let static_json =
+        Engine::simulated(cfg).run_trace(&trace).to_json(true);
+    assert_eq!(default_json, static_json,
+               "explicit --api-pred static must not move a byte");
+    assert!(!static_json.contains("api_pred_model"),
+            "estimator state must not leak into the off-path report");
+
+    let fleet_default = ReplicaSet::simulated(lamps_cfg())
+        .run_trace(&trace)
+        .to_json(true);
+    let mut cfg = lamps_cfg();
+    cfg.api_pred = ApiPredKind::Static;
+    let fleet_static =
+        ReplicaSet::simulated(cfg).run_trace(&trace).to_json(true);
+    assert_eq!(fleet_default, fleet_static);
+    assert!(!fleet_static.contains("api_pred_model"));
+}
+
+/// Two identical learned runs produce bit-identical reports (estimator
+/// state included): the estimators are deterministic, fixed-order
+/// state with no wall-clock or map-order dependence.
+#[test]
+fn learned_mode_is_deterministic_across_runs() {
+    let trace = infercept::multi_api_dataset(60, 2.0, 23);
+    let run = || {
+        let mut cfg = lamps_cfg();
+        cfg.predictor = PredictorKind::NoisyOracle { error_pct: 0.3 };
+        cfg.api_pred = ApiPredKind::Learned;
+        Engine::simulated(cfg).run_trace(&trace).to_json(true)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "learned runs must be bit-identical");
+    assert!(a.contains("api_pred_model"),
+            "learned report must expose estimator state");
+
+    let fleet = || {
+        let mut cfg = lamps_cfg();
+        cfg.predictor = PredictorKind::NoisyOracle { error_pct: 0.3 };
+        cfg.api_pred = ApiPredKind::Learned;
+        ReplicaSet::simulated(cfg).run_trace(&trace).to_json(true)
+    };
+    assert_eq!(fleet(), fleet());
+}
+
+/// Under injected Gaussian error the estimators fill in and stay
+/// coherent: every populated class has a positive mean, ordered
+/// quantiles, a blend weight in [0, 1], and the class counts sum to
+/// the engine's observation total.
+#[test]
+fn estimators_converge_under_injected_error() {
+    let trace = infercept::multi_api_dataset(80, 2.0, 29);
+    let mut cfg = lamps_cfg();
+    cfg.predictor = PredictorKind::NoisyOracle { error_pct: 0.5 };
+    cfg.api_pred = ApiPredKind::Learned;
+    let mut engine = Engine::simulated(cfg);
+    let report = engine.run_trace(&trace);
+    assert!(engine.api_pred_observations() > 0,
+            "simulated returns must feed the estimators");
+
+    let v = json::parse(&report.to_json(false)).unwrap();
+    let model = v.get("api_pred_model").expect("learned state in JSON");
+    let classes = model.as_obj().expect("per-class object");
+    assert!(!classes.is_empty());
+    let mut total_n = 0u64;
+    for (label, est) in classes {
+        let f = |key: &str| {
+            est.get(key)
+                .and_then(|x| x.as_f64())
+                .unwrap_or_else(|| panic!("{label}.{key} missing"))
+        };
+        let n = f("n");
+        assert!(n >= 1.0, "{label}: n");
+        total_n += n as u64;
+        assert!(f("mean_us") > 0.0, "{label}: mean");
+        assert!(f("p50_us") <= f("p90_us"), "{label}: quantile order");
+        let blend = f("blend");
+        assert!((0.0..=1.0).contains(&blend), "{label}: blend");
+        assert!(f("rel_err_ema") >= 0.0, "{label}: rel_err_ema");
+    }
+    assert_eq!(total_n, engine.api_pred_observations(),
+               "class counts must sum to the engine total");
+    // 50% injected noise must register as observed error somewhere.
+    assert!(classes.values().any(|est| {
+        est.get("rel_err_ema").and_then(|x| x.as_f64()).unwrap_or(0.0)
+            > 0.05
+    }), "injected error must show up in the error EMAs");
+}
+
+/// Rescue/adopt carries predictions verbatim: moving a waiting request
+/// from a cold replica to a warm one must neither re-predict the
+/// segments through the adopter's estimators nor add an observation on
+/// either side.
+#[test]
+fn adopted_request_neither_repredicts_nor_double_updates() {
+    let probe_trace = infercept::multi_api_dataset(2, 2.0, 31);
+    let probe = probe_trace.requests[0].clone();
+    let id = probe.id;
+
+    // Cold owner: learned but with zero observations, so submit-time
+    // predictions are the raw class priors.
+    let mut cfg = lamps_cfg();
+    cfg.predictor = PredictorKind::NoisyOracle { error_pct: 0.6 };
+    cfg.api_pred = ApiPredKind::Learned;
+    let mut owner = Engine::simulated(cfg.clone());
+
+    // Warm adopter: run a trace through it first so its estimators are
+    // hot — if adopt re-predicted, they would rewrite the estimates.
+    let mut adopter = Engine::simulated(cfg);
+    adopter.run_trace(&infercept::multi_api_dataset(60, 2.0, 37));
+    let warm_obs = adopter.api_pred_observations();
+    assert!(warm_obs >= 4, "adopter must be warm for the pin to bite");
+
+    owner.submit(probe);
+    let before = owner
+        .request(id)
+        .expect("submitted request is resident")
+        .predictions
+        .clone();
+    assert!(!before.is_empty());
+
+    let w = owner.withdraw_waiting(id).expect("request is waiting");
+    adopter.adopt(w);
+
+    let after = &adopter
+        .request(id)
+        .expect("adopted request is resident")
+        .predictions;
+    assert_eq!(&before, after,
+               "adopt must carry predictions verbatim, not re-predict \
+                through the warm estimators");
+    assert_eq!(adopter.api_pred_observations(), warm_obs,
+               "a move is not an outcome — no estimator update");
+    assert_eq!(owner.api_pred_observations(), 0,
+               "withdrawing must not record an outcome either");
+}
