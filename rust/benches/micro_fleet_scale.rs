@@ -1,0 +1,389 @@
+//! micro_fleet_scale: fleet-scale sweep of the modeled network —
+//! replicas ∈ {4, 16, 64, 256} × staleness (exact, gossip-lagged LAN,
+//! LAN with a deliberately tight staleness budget) on a shared-prefix
+//! burst workload sized per replica, so the work grows with the fleet
+//! while per-replica pressure stays flat (PR 10).
+//!
+//! Three jobs in one binary, mirroring `micro_placement`:
+//!
+//! 1. **Correctness cross-check** (always): every run — exact and
+//!    armed — must drain completely. Staleness may cost re-prefill,
+//!    never a lost or stuck request.
+//! 2. **Graceful degradation + O(k) probes** (always): at every fleet
+//!    size the armed runs' mean completion time must stay within
+//!    `DEGRADE_FACTOR`× the exact run plus `DEGRADE_SLACK_S` (the
+//!    256-replica case is the PR's acceptance criterion), and the
+//!    live placement probes issued under bounded staleness must stay
+//!    under a constant per arrival — independent of the replica
+//!    count — or the bench exits non-zero. A small autoscale smoke
+//!    rides along: a diurnally retimed trace on a 1:16 elastic fleet
+//!    must scale up at the crest and still drain.
+//! 3. **Perf trajectory**: `--json PATH` (or `LAMPS_BENCH_JSON`)
+//!    writes the stable `BENCH_micro_fleet.json` snapshot; `--gate
+//!    PATH` (or `LAMPS_BENCH_GATE`) reads the checked-in snapshot —
+//!    a conservative floor, not a measurement — and fails if armed
+//!    steps/sec at 256 replicas falls below half of it.
+//!
+//! ```sh
+//! cargo bench --bench micro_fleet_scale -- \
+//!     --gate "$PWD/../BENCH_micro_fleet.json" \
+//!     --json "$PWD/../BENCH_micro_fleet.fresh.json"
+//! ```
+
+use std::time::Instant;
+
+use lamps::cluster::ReplicaSet;
+use lamps::config::{AutoscaleConfig, NetModelKind, PlacementKind,
+                    PrefixCacheConfig, SystemConfig};
+use lamps::core::request::{ApiCallSpec, ApiType, RequestSpec};
+use lamps::core::types::{Micros, RequestId, Tokens};
+use lamps::metrics::NetStats;
+use lamps::util::json::{self, Value};
+use lamps::workload::{self, ArrivalProcess, Trace};
+
+const REPLICA_COUNTS: [usize; 4] = [4, 16, 64, 256];
+/// Requests per replica in the sweep trace (`LAMPS_FLEET_REQS`
+/// overrides): the burst scales with the fleet, per-replica load
+/// does not.
+const REQS_PER_REPLICA: u64 = 4;
+/// Shortlist size pinned explicitly so the probe bound below is
+/// self-contained rather than inherited from a default.
+const TOPK: usize = 4;
+/// Per-replica KV budget in token slots — roomy enough that the sweep
+/// measures gossip/placement overhead, not preemption storms.
+const BUDGET: u64 = 2_000;
+/// Graceful degradation: armed mean completion must stay within
+/// `factor × exact + slack`. The additive slack keeps tiny absolute
+/// latencies from blowing up the ratio.
+const DEGRADE_FACTOR: f64 = 2.0;
+const DEGRADE_SLACK_S: f64 = 0.25;
+/// Live probes per placement are capped at O(topk); requeues and
+/// rescue re-validations add a bounded number of extra placements per
+/// request, so 3 placements × topk probes is a generous constant
+/// ceiling — the point is that it does not scale with the replica
+/// count.
+const PROBE_PLACEMENTS_PER_REQ: u64 = 3;
+
+/// Shared-prefix burst: `n × per_replica` requests over ~2 virtual
+/// seconds regardless of fleet size, drawing prompts from a small
+/// prefix pool (so gossip carries real `PrefixDelta` traffic) with a
+/// sprinkling of short API calls (so replicas park and resume).
+fn fleet_trace(n: usize, per_replica: u64) -> Trace {
+    const PREFIXES: [&str; 4] = [
+        "System: answer in one short paragraph and cite sources for \
+         any external facts referenced in the reply body here. ",
+        "System: you are a strict JSON transformer; never add prose \
+         or commentary around the emitted document body at all. ",
+        "System: translate the user's message to French, preserving \
+         code spans and inline markup fragments fully verbatim. ",
+        "System: summarize the thread in three bullets, keeping the \
+         participants' own terminology wherever it is unambiguous. ",
+    ];
+    let m = (n as u64 * per_replica).max(1);
+    let gap = (2_000_000 / m).max(1);
+    let specs = (0..m)
+        .map(|i| {
+            let prefix = PREFIXES[(i % 4) as usize];
+            let prompt = format!("{prefix}tail-{i:06}");
+            let prompt_tokens = Tokens(prompt.len() as u64);
+            let api_calls = if i % 5 == 0 {
+                vec![ApiCallSpec {
+                    decode_before: Tokens(4),
+                    api_type: ApiType::Qa,
+                    duration: Micros(40_000 + 10_000 * (i % 3)),
+                    response_tokens: Tokens(2),
+                }]
+            } else {
+                vec![]
+            };
+            RequestSpec {
+                id: RequestId(i),
+                arrival: Micros(i * gap),
+                prompt,
+                prompt_tokens,
+                api_calls,
+                final_decode: Tokens(8 + (i % 9)),
+            }
+        })
+        .collect();
+    Trace::new("fleet-scale", 1.0, specs)
+}
+
+struct RunOut {
+    steps: u64,
+    steps_per_sec: f64,
+    mean_latency_s: f64,
+    completed: usize,
+    /// Live placement probes issued under bounded staleness (armed
+    /// runs only).
+    probes: Option<u64>,
+    net: Option<NetStats>,
+}
+
+/// Drive one fleet over `trace` to quiesce, timing the step loop.
+fn run_fleet(trace: &Trace, n: usize, model: NetModelKind,
+             staleness: Option<Micros>,
+             autoscale: Option<AutoscaleConfig>) -> RunOut {
+    let mut cfg = SystemConfig::preset("lamps")
+        .expect("lamps preset exists");
+    cfg.replicas = n;
+    cfg.placement = PlacementKind::LeastLoaded;
+    cfg.memory_budget = Tokens(BUDGET);
+    cfg.prefix_cache = PrefixCacheConfig::on();
+    cfg.shared_prefix = true;
+    cfg.net.model = model;
+    cfg.net.topk = TOPK;
+    if let Some(b) = staleness {
+        cfg.net.staleness_budget = b;
+    }
+    cfg.net.autoscale = autoscale;
+    let mut set = ReplicaSet::simulated(cfg);
+    for spec in &trace.requests {
+        set.enqueue(spec.clone());
+    }
+    let t0 = Instant::now();
+    let mut steps = 0u64;
+    while set.step() {
+        steps += 1;
+        assert!(steps < 50_000_000,
+                "fleet-scale run failed to drain ({n} replicas, \
+                 {model:?})");
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let probes = set.net_state().map(|ns| ns.probes_issued());
+    let report = set.fleet_report();
+    RunOut {
+        steps,
+        steps_per_sec: steps as f64 / secs,
+        mean_latency_s: report.fleet.latency.mean_secs(),
+        completed: report.fleet.completed,
+        probes,
+        net: report.net,
+    }
+}
+
+fn arg_or_env(args: &[String], flag: &str, env: &str)
+              -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+        .or_else(|| std::env::var(env).ok())
+}
+
+fn gate_value(v: &Value, section: &str, key: &str) -> Option<f64> {
+    v.get(section)?.get(key)?.as_f64()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let per_replica: u64 = std::env::var("LAMPS_FLEET_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(REQS_PER_REPLICA);
+
+    let mut failed = false;
+    let mut sections: Vec<(String, Value)> = Vec::new();
+    let mut armed_256: Option<f64> = None;
+
+    for n in REPLICA_COUNTS {
+        let trace = fleet_trace(n, per_replica);
+        let m = trace.len();
+        let exact =
+            run_fleet(&trace, n, NetModelKind::Off, None, None);
+        let lan = run_fleet(&trace, n, NetModelKind::Lan, None, None);
+        // A 1ms budget expires digests well inside the 5ms gossip
+        // cadence: placement runs mostly on "assume idle" optimism,
+        // the worst case the degradation bound must absorb.
+        let tight = run_fleet(&trace, n, NetModelKind::Lan,
+                              Some(Micros(1_000)), None);
+
+        // -- Correctness before speed -------------------------------
+        for (label, r) in
+            [("exact", &exact), ("lan", &lan), ("lan_tight", &tight)]
+        {
+            if r.completed != m {
+                eprintln!("FAIL: {label} at {n} replicas completed \
+                           {}/{m} — staleness may never lose a \
+                           request", r.completed);
+                failed = true;
+            }
+        }
+
+        // -- Graceful degradation -----------------------------------
+        let bound =
+            exact.mean_latency_s * DEGRADE_FACTOR + DEGRADE_SLACK_S;
+        for (label, r) in [("lan", &lan), ("lan_tight", &tight)] {
+            if r.mean_latency_s > bound {
+                eprintln!("FAIL: {label} at {n} replicas degraded \
+                           non-gracefully: mean {:.4}s > bound \
+                           {bound:.4}s (exact {:.4}s)",
+                          r.mean_latency_s, exact.mean_latency_s);
+                failed = true;
+            }
+        }
+
+        // -- O(k) placement probes ----------------------------------
+        let probe_cap =
+            m as u64 * PROBE_PLACEMENTS_PER_REQ * TOPK as u64;
+        for (label, r) in [("lan", &lan), ("lan_tight", &tight)] {
+            let probes = r.probes.unwrap_or(0);
+            if probes > probe_cap {
+                eprintln!("FAIL: {label} at {n} replicas issued \
+                           {probes} live probes for {m} requests \
+                           (cap {probe_cap}) — per-arrival placement \
+                           must stay O(topk), not O(replicas)");
+                failed = true;
+            }
+        }
+
+        let stale = lan.net.as_ref().map_or(0, |s| {
+            s.stale_steer_requests
+        });
+        let gossip =
+            lan.net.as_ref().map_or(0, |s| s.gossip_messages);
+        println!("== micro_fleet_scale: {n} replicas x \
+                  {per_replica} reqs/replica ({m} requests) ==");
+        println!("{:<22} {:>10} {:>12} {:>12}", "mode", "steps",
+                 "steps/s", "mean lat s");
+        for (label, r) in
+            [("exact (net off)", &exact), ("lan", &lan),
+             ("lan tight budget", &tight)]
+        {
+            println!("{label:<22} {:>10} {:>12.0} {:>12.4}", r.steps,
+                     r.steps_per_sec, r.mean_latency_s);
+        }
+        println!("lan: {} gossip msgs, {} stale steers, {} probes \
+                  (cap {probe_cap})",
+                 gossip, stale, lan.probes.unwrap_or(0));
+
+        sections.push((format!("replicas_{n}"), json::obj(vec![
+            ("requests", json::num(m as f64)),
+            ("exact_steps_per_sec", json::num(exact.steps_per_sec)),
+            ("lan_steps_per_sec", json::num(lan.steps_per_sec)),
+            ("lan_tight_steps_per_sec",
+             json::num(tight.steps_per_sec)),
+            ("exact_mean_latency_s",
+             json::num(exact.mean_latency_s)),
+            ("lan_mean_latency_s", json::num(lan.mean_latency_s)),
+            ("lan_tight_mean_latency_s",
+             json::num(tight.mean_latency_s)),
+            ("lan_probes_per_arrival",
+             json::num(lan.probes.unwrap_or(0) as f64
+                       / m.max(1) as f64)),
+            ("lan_stale_steer_requests", json::num(stale as f64)),
+            ("lan_gossip_messages", json::num(gossip as f64)),
+        ])));
+        if n == 256 {
+            armed_256 = Some(lan.steps_per_sec);
+        }
+    }
+
+    // -- Autoscale smoke: diurnal load on an elastic 1:16 fleet -----
+    // Retime a 16-replica trace onto a sharp diurnal curve: the crest
+    // must wake parked replicas (scale-ups), and the fleet must still
+    // drain every request.
+    let base = fleet_trace(16, 10);
+    let diurnal = workload::retime(&base, ArrivalProcess::Diurnal {
+        base_rate: 0.5,
+        peak_rate: 200.0,
+        period_secs: 10.0,
+    }, 0xF1EE7);
+    let auto_run = run_fleet(&diurnal, 16, NetModelKind::Lan, None,
+                             Some(AutoscaleConfig { min: 1, max: 16 }));
+    let (ups, downs) = auto_run.net.as_ref().map_or((0, 0), |s| {
+        (s.scale_ups, s.scale_downs)
+    });
+    if auto_run.completed != diurnal.len() {
+        eprintln!("FAIL: autoscale run completed {}/{} — elastic \
+                   scaling may never lose a request",
+                  auto_run.completed, diurnal.len());
+        failed = true;
+    }
+    if ups == 0 {
+        eprintln!("FAIL: diurnal crest on a min-1 fleet produced no \
+                   scale-ups — the elastic path is dead");
+        failed = true;
+    }
+    println!("== micro_fleet_scale: autoscale 1:16 diurnal ==");
+    println!("{} requests, {} steps, {:.0} steps/s, {ups} ups / \
+              {downs} downs, mean lat {:.4}s",
+             diurnal.len(), auto_run.steps, auto_run.steps_per_sec,
+             auto_run.mean_latency_s);
+    sections.push(("autoscale_diurnal".to_string(), json::obj(vec![
+        ("requests", json::num(diurnal.len() as f64)),
+        ("steps_per_sec", json::num(auto_run.steps_per_sec)),
+        ("mean_latency_s", json::num(auto_run.mean_latency_s)),
+        ("scale_ups", json::num(ups as f64)),
+        ("scale_downs", json::num(downs as f64)),
+    ])));
+
+    // -- Regression gate against the checked-in floor ---------------
+    // The baseline is a conservative floor, not a measurement, so the
+    // gate trips at 0.5× — a real collapse, not scheduler jitter.
+    let lan_256 = armed_256.expect("256-replica sweep ran");
+    if let Some(path) = arg_or_env(&args, "--gate", "LAMPS_BENCH_GATE")
+    {
+        match std::fs::read_to_string(&path)
+            .map_err(|e| e.to_string())
+            .and_then(|text| {
+                json::parse(&text).map_err(|e| e.to_string())
+            }) {
+            Ok(baseline) => {
+                let key = "lan_steps_per_sec";
+                match gate_value(&baseline, "replicas_256", key) {
+                    Some(base_v) => {
+                        let floor = base_v * 0.5;
+                        if lan_256 < floor {
+                            eprintln!(
+                                "FAIL: replicas_256 {key} {lan_256:.0} \
+                                 fell below floor {floor:.0} (0.5x \
+                                 baseline {base_v:.0}) from {path}");
+                            failed = true;
+                        } else {
+                            println!(
+                                "gate ok: replicas_256 {key} \
+                                 {lan_256:.0} >= floor {floor:.0}");
+                        }
+                    }
+                    None => {
+                        eprintln!("FAIL: baseline {path} is missing \
+                                   replicas_256.{key}");
+                        failed = true;
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!("FAIL: cannot read gate baseline {path}: \
+                           {e}");
+                failed = true;
+            }
+        }
+    }
+
+    // -- Perf-trajectory snapshot -----------------------------------
+    if let Some(path) = arg_or_env(&args, "--json", "LAMPS_BENCH_JSON")
+    {
+        let mut body = vec![
+            ("reqs_per_replica", json::num(per_replica as f64)),
+            ("topk", json::num(TOPK as f64)),
+            ("degrade_factor", json::num(DEGRADE_FACTOR)),
+            ("degrade_slack_s", json::num(DEGRADE_SLACK_S)),
+        ];
+        for (name, v) in &sections {
+            body.push((name.as_str(), v.clone()));
+        }
+        match lamps::bench::write_bench_json(&path,
+                                             "micro_fleet_scale",
+                                             body) {
+            Ok(()) => eprintln!("bench json written to {path}"),
+            Err(e) => {
+                eprintln!("FAIL: cannot write bench json {path}: {e}");
+                failed = true;
+            }
+        }
+    }
+
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,14 @@
+//! Seeded violation for `gossip-seam`: a cluster-layer consumer
+//! mutating the fleet's `SharedPrefixIndex` mirror directly instead of
+//! feeding journal deltas through the gossip pipeline, so the mirror
+//! outruns the modeled network.
+
+pub fn steal_credit(index: &mut SharedPrefixIndex, hash: BlockHash,
+                    replica: usize) {
+    index.mirror_insert(hash, replica);
+}
+
+pub fn drop_claim(index: &mut SharedPrefixIndex, hash: BlockHash,
+                  replica: usize) {
+    index.mirror_remove(hash, replica);
+}

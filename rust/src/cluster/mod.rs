@@ -36,24 +36,42 @@
 //! (`SystemConfig::admission_requeue`): a request memory-rejected by
 //! its owner before it ever ran is re-queued once to the best sibling
 //! with free KV instead of waiting out the owner's pressure.
+//!
+//! **Modeled network** (`--net-model`, see [`net`]): with a network
+//! armed, cross-replica signals stop teleporting — prefix deltas ride
+//! seeded-delay gossip (the mirror lags; a stale steer costs a
+//! measured re-prefill), placement and rescue read bounded-staleness
+//! load digests plus a top-k shortlist instead of probing every
+//! replica live (O(k) probes per arrival), and `--autoscale` drains
+//! or warms replicas on the gossip cadence. `--net-model off` (the
+//! default) constructs none of it and stays byte-identical to the
+//! exact-mirror fleet.
 
+pub mod net;
 pub mod shared_prefix;
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 
 use crate::config::{PlacementKind, SystemConfig};
 use crate::core::request::RequestSpec;
 use crate::core::types::{Micros, RequestId, Tokens};
 use crate::engine::Engine;
 use crate::kv::prefix;
-use crate::metrics::{RunReport, SharedPrefixStats};
+use crate::metrics::{NetStats, RunReport, SharedPrefixStats};
 use crate::workload::Trace;
 
+pub use net::{LoadDigest, NetState, ReplicaState};
 pub use shared_prefix::{PrefixDeltaSink, SharedPrefixIndex};
 
 /// Safety valve against scheduling livelock across the fleet (mirrors
 /// the engine's own guard).
 const MAX_FLEET_STEPS: u64 = 400_000_000;
+
+/// Blocks a warming replica pre-seeds from a sibling's resident set
+/// (`--autoscale` warm-up): enough to carry the hot shared prefixes,
+/// small enough that warm-up never floods a replica's free list.
+const PRESEED_MAX_BLOCKS: u64 = 64;
 
 /// One arrival's placement-time scratch state: the spec plus its
 /// lazily-computed, computed-at-most-once prompt content chain.
@@ -178,6 +196,139 @@ pub fn pick_replica(replicas: &[Engine], policy: PlacementKind,
             (best, Tokens(credit))
         }
     }
+}
+
+/// Bounded-staleness variant of [`pick_replica`] (`--net-model`
+/// armed): instead of probing every replica live, the choice reads
+/// the gossip digest table and probes only the top-k
+/// [`NetState::shortlist`] — plus, under prefix-affinity, the top-k
+/// credit holders of the (stale) mirror, so a request's prefix home
+/// stays probeable even when its load digest is mid-pack — capping
+/// expensive per-arrival live probes at O(k) no matter the fleet
+/// size. Ineligible (draining/parked) replicas are never chosen.
+/// Ties break toward the lowest index, and every live probe is
+/// counted via [`NetState::note_probe`] so the `micro_fleet_scale`
+/// bench can assert the O(k) bound.
+pub fn pick_replica_bounded(replicas: &[Engine], policy: PlacementKind,
+                            rr_next: &mut usize,
+                            arrival: &ArrivalScratch<'_>,
+                            shared: Option<&SharedPrefixIndex>,
+                            netstate: &NetState, now: Micros,
+                            eligible: &[bool]) -> (usize, Tokens) {
+    if replicas.len() <= 1 {
+        return (0, Tokens::ZERO);
+    }
+    let n = replicas.len();
+    let fallback = eligible.iter().position(|&ok| ok).unwrap_or(0);
+    match policy {
+        PlacementKind::RoundRobin => {
+            // Rotate the cursor over eligible replicas only.
+            for _ in 0..n {
+                let r = *rr_next % n;
+                *rr_next += 1;
+                if eligible.get(r).copied().unwrap_or(false) {
+                    return (r, Tokens::ZERO);
+                }
+            }
+            (fallback, Tokens::ZERO)
+        }
+        PlacementKind::LeastLoaded => {
+            let mut best: Option<(usize, usize)> = None;
+            for i in netstate.shortlist(now, eligible) {
+                let Some(e) = replicas.get(i) else { continue };
+                netstate.note_probe();
+                let load = e.live_load();
+                if best.map_or(true, |(bl, bi)| (load, i) < (bl, bi)) {
+                    best = Some((load, i));
+                }
+            }
+            (best.map_or(fallback, |(_, i)| i), Tokens::ZERO)
+        }
+        PlacementKind::MemoryOverTime => {
+            let mut best: Option<(f64, usize)> = None;
+            for i in netstate.shortlist(now, eligible) {
+                let Some(e) = replicas.get(i) else { continue };
+                netstate.note_probe();
+                let load = e.load_memory_over_time();
+                let better = best.map_or(true, |(bs, bi)| {
+                    load < bs || (load == bs && i < bi)
+                });
+                if better {
+                    best = Some((load, i));
+                }
+            }
+            (best.map_or(fallback, |(_, i)| i), Tokens::ZERO)
+        }
+        PlacementKind::PrefixAffinity => {
+            let credits = prefix_credits(replicas, arrival, shared);
+            let mut cands = netstate.shortlist(now, eligible);
+            let k = netstate.config().topk.max(1);
+            let mut holders: Vec<(u64, usize)> = credits
+                .iter()
+                .enumerate()
+                .filter(|&(i, &c)| {
+                    c > 0 && eligible.get(i).copied().unwrap_or(false)
+                })
+                .map(|(i, &c)| (c, i))
+                .collect();
+            holders.sort_unstable_by_key(|&(c, i)| (Reverse(c), i));
+            for &(_, i) in holders.iter().take(k) {
+                if !cands.contains(&i) {
+                    cands.push(i);
+                }
+            }
+            // Ascending index + strict < keeps ties deterministic.
+            cands.sort_unstable();
+            let mut best: Option<(f64, usize)> = None;
+            for i in cands {
+                let Some(e) = replicas.get(i) else { continue };
+                let credit = credits.get(i).copied().unwrap_or(0);
+                netstate.note_probe();
+                let score = e.placement_score_prefixed(arrival.spec(),
+                                                       Tokens(credit));
+                if best.map_or(true, |(bs, _)| score < bs) {
+                    best = Some((score, i));
+                }
+            }
+            let r = best.map_or(fallback, |(_, i)| i);
+            (r, Tokens(credits.get(r).copied().unwrap_or(0)))
+        }
+    }
+}
+
+/// Bounded-staleness rescue target choice: candidates are filtered and
+/// scored on published load digests alone — optimistically, a replica
+/// with no fresh digest reads as roomy and idle — so a sweep costs
+/// O(replicas) cheap arithmetic and **zero** live probes. The caller
+/// must re-validate the winner against the live engine
+/// ([`Engine::can_fit_fresh_with`]) at adoption time: a stale digest
+/// may say "fits" when reality will not.
+fn pick_rescue_sibling_bounded(netstate: &NetState, owner: usize,
+                               now: Micros, eligible: &[bool],
+                               promised: &[u64], needed: u64)
+                               -> Option<usize> {
+    let budget = netstate.config().staleness_budget;
+    let mut best: Option<(f64, usize)> = None;
+    for (j, ok) in eligible.iter().enumerate() {
+        if j == owner || !*ok {
+            continue;
+        }
+        let fresh = netstate
+            .digest(j)
+            .filter(|d| now <= d.published_at + budget);
+        let headroom = fresh.map_or(u64::MAX, |d| d.headroom_tokens);
+        if headroom
+            < needed + promised.get(j).copied().unwrap_or(0)
+        {
+            continue;
+        }
+        let score = fresh.map_or(f64::NEG_INFINITY, |d| d.score);
+        // Ascending j + strict < keeps the lowest index on ties.
+        if best.map_or(true, |(bs, _)| score < bs) {
+            best = Some((score, j));
+        }
+    }
+    best.map(|(_, j)| j)
 }
 
 /// Best sibling able to admit `spec` right now, excluding `owner` —
@@ -351,6 +502,11 @@ pub struct FleetReport {
     /// was active, so the index-less fleet JSON (the PR 3 shape) stays
     /// byte-identical with the feature off.
     pub shared_prefix: Option<SharedPrefixStats>,
+    /// Modeled-network stats — `Some` only when `--net-model` was
+    /// armed, so the net-off fleet JSON stays byte-identical to the
+    /// PR 9 shape (the same Option-gated-key discipline as
+    /// `shared_prefix`).
+    pub net: Option<NetStats>,
 }
 
 impl FleetReport {
@@ -374,6 +530,9 @@ impl FleetReport {
         ];
         if let Some(stats) = &self.shared_prefix {
             pairs.push(("shared_prefix", stats.to_value()));
+        }
+        if let Some(stats) = &self.net {
+            pairs.push(("net", stats.to_value()));
         }
         json::write(&json::obj(pairs))
     }
@@ -412,6 +571,45 @@ pub struct ReplicaSet {
     /// after every step, per `cfg.audit`. Observe-only; the
     /// per-replica engines additionally run their own auditors.
     audit: bool,
+    /// The modeled network (`--net-model` armed, replicas > 1); `None`
+    /// keeps every pre-net code path byte-identical.
+    netstate: Option<NetState>,
+    /// Per-replica elastic lifecycle state; all `Active` without
+    /// `--autoscale`.
+    states: Vec<ReplicaState>,
+    /// Parallel to `states`: may placement/rescue route work to the
+    /// replica? Rebuilt on every state transition so per-arrival reads
+    /// allocate nothing.
+    eligible: Vec<bool>,
+    /// Requests whose bounded-staleness rescue was refused once at
+    /// adoption-time re-validation (stale digest said "fits", the live
+    /// engine said no). The refusal does not burn the once-only
+    /// `requeued` guard — a second refusal does, so a request can
+    /// never thrash between refusals forever.
+    rescue_refused: HashSet<RequestId>,
+    /// Clock-keyed min-heap over `(replica clock, index)` driving the
+    /// most-lagging-first step order. Entries go stale when a clock
+    /// advances and are lazily re-filed on pop, so a round that makes
+    /// progress on the first candidate costs O(log n) instead of the
+    /// old O(n log n) full sort — the 256-replica sweep fix. Exactly
+    /// one entry per replica at all times.
+    step_heap: BinaryHeap<Reverse<(Micros, usize)>>,
+    /// Round stamp per replica: `step_seen[i] == step_round` ⇔ replica
+    /// `i` already had its turn this round (heap dedup without a
+    /// per-round allocation).
+    step_seen: Vec<u64>,
+    step_round: u64,
+    /// Entries popped this round that must return to the heap at round
+    /// end (already-seen or idle replicas) — a reusable buffer.
+    step_deferred: Vec<(Micros, usize)>,
+    /// Test-only switch back to the original full-sort step order; the
+    /// equivalence test pins heap == scan, step for step.
+    #[cfg(test)]
+    legacy_scan: bool,
+    /// Test-only journal of every replica index actually stepped, in
+    /// order — what the heap/scan equivalence test compares.
+    #[cfg(test)]
+    stepped_log: Vec<usize>,
 }
 
 impl ReplicaSet {
@@ -425,8 +623,35 @@ impl ReplicaSet {
             && cfg.replicas > 1;
         let requeue = cfg.admission_requeue && cfg.replicas > 1;
         let n = cfg.replicas;
-        let replicas = (0..n)
+        let replicas: Vec<Engine> = (0..n)
             .map(|_| Engine::simulated(cfg.clone()))
+            .collect();
+        let netstate = cfg
+            .net
+            .armed(n)
+            .then(|| NetState::new(cfg.net, n, cfg.seed));
+        // With autoscale, the fleet boots at the floor: the first
+        // `min` replicas are active, the rest parked until digest
+        // pressure warms them up. Otherwise everyone serves, always.
+        let states: Vec<ReplicaState> = match (&netstate,
+                                               cfg.net.autoscale) {
+            (Some(_), Some(scale)) => (0..n)
+                .map(|i| if i < scale.min.min(n) {
+                    ReplicaState::Active
+                } else {
+                    ReplicaState::Parked
+                })
+                .collect(),
+            _ => vec![ReplicaState::Active; n],
+        };
+        let eligible = states
+            .iter()
+            .map(|s| *s == ReplicaState::Active)
+            .collect();
+        let step_heap = replicas
+            .iter()
+            .enumerate()
+            .map(|(i, e)| Reverse((e.now(), i)))
             .collect();
         ReplicaSet {
             replicas,
@@ -442,6 +667,18 @@ impl ReplicaSet {
             requeued: HashSet::new(),
             steered_log: HashMap::new(),
             audit: cfg.audit.enabled(),
+            netstate,
+            states,
+            eligible,
+            rescue_refused: HashSet::new(),
+            step_heap,
+            step_seen: vec![0; n],
+            step_round: 0,
+            step_deferred: Vec::new(),
+            #[cfg(test)]
+            legacy_scan: false,
+            #[cfg(test)]
+            stepped_log: Vec::new(),
         }
     }
 
@@ -481,6 +718,19 @@ impl ReplicaSet {
     /// Steering stats of the shared index (`Some` iff it is active).
     pub fn shared_stats(&self) -> Option<&SharedPrefixStats> {
         self.shared_stats.as_ref()
+    }
+
+    /// The modeled network, when `--net-model` is armed (the audit
+    /// layer reads its pending-removal forgiveness set; tests and
+    /// benches read its stats and probe counter).
+    pub fn net_state(&self) -> Option<&NetState> {
+        self.netstate.as_ref()
+    }
+
+    /// Per-replica elastic lifecycle states (all `Active` without
+    /// `--autoscale`).
+    pub fn replica_states(&self) -> &[ReplicaState] {
+        &self.states
     }
 
     /// Fleet frontier: the minimum replica clock (the time up to which
@@ -555,9 +805,33 @@ impl ReplicaSet {
                 .map_or(1, |e| e.cfg.block_size)
                 .max(1);
             let arrival = ArrivalScratch::new(&spec, block_size);
-            let (r, credit) = pick_replica(&self.replicas, self.policy,
-                                           &mut self.rr_next, &arrival,
-                                           self.shared.as_ref());
+            let (r, credit) = match self.netstate.as_ref() {
+                Some(netstate) => pick_replica_bounded(
+                    &self.replicas, self.policy, &mut self.rr_next,
+                    &arrival, self.shared.as_ref(), netstate, frontier,
+                    &self.eligible),
+                None => pick_replica(&self.replicas, self.policy,
+                                     &mut self.rr_next, &arrival,
+                                     self.shared.as_ref()),
+            };
+            // Stale-steer accounting: a gossip-lagged credit may claim
+            // blocks the chosen replica already evicted. Measure the
+            // overclaim against what is actually resident — the tokens
+            // the arrival will re-prefill instead of sharing. Never an
+            // error: admission walks the live cache either way.
+            if credit > Tokens::ZERO {
+                if let Some(netstate) = self.netstate.as_mut() {
+                    let actual = self
+                        .replicas
+                        .get(r)
+                        .map_or(0, |e| {
+                            e.cached_lead_tokens(arrival.chain())
+                        });
+                    netstate.stats
+                        .note_stale_steer(
+                            credit.0.saturating_sub(actual));
+                }
+            }
             if let Some(chain) = arrival.into_chain() {
                 // Placement hashed the prompt once — seed the chosen
                 // replica's memo so admission/registration extend it
@@ -585,14 +859,28 @@ impl ReplicaSet {
 
     /// Mirror replica `i`'s journaled prefix-cache resident-set deltas
     /// into the fleet index through the [`PrefixDeltaSink`] observer
-    /// seam (no-op unless `--shared-prefix` armed the journals).
+    /// seam (no-op unless `--shared-prefix` armed the journals). With
+    /// a modeled network armed, the deltas board the gossip outbox
+    /// instead and reach the index only when their message lands — the
+    /// mirror lags, which is the point.
     fn absorb_prefix_deltas(&mut self, i: usize) {
-        let Some(index) = self.shared.as_mut() else {
+        if self.shared.is_none() {
             return;
-        };
+        }
         // lamps-lint: allow(panic) callers pass the index they just stepped
-        for delta in self.replicas[i].drain_prefix_deltas() {
-            index.on_delta(i, &delta);
+        let deltas = self.replicas[i].drain_prefix_deltas();
+        if deltas.is_empty() {
+            return;
+        }
+        match self.netstate.as_mut() {
+            Some(netstate) => netstate.note_deltas(i, deltas),
+            None => {
+                if let Some(index) = self.shared.as_mut() {
+                    for delta in &deltas {
+                        index.on_delta(i, delta);
+                    }
+                }
+            }
         }
     }
 
@@ -611,9 +899,13 @@ impl ReplicaSet {
         if !self.requeue {
             return false;
         }
-        let moves = rescue_stranded_on(&mut self.replicas, owner,
-                                       self.policy, self.shared.as_ref(),
-                                       &mut self.requeued);
+        let moves = if self.netstate.is_some() {
+            self.rescue_moves_bounded(owner)
+        } else {
+            rescue_stranded_on(&mut self.replicas, owner, self.policy,
+                               self.shared.as_ref(),
+                               &mut self.requeued)
+        };
         for &(id, j, credit) in &moves {
             // The dispatch-time steering claim no longer holds once the
             // request leaves the replica it was steered to: re-book the
@@ -638,6 +930,133 @@ impl ReplicaSet {
             }
         }
         !moves.is_empty()
+    }
+
+    /// Bounded-staleness rescue sweep (`--net-model` armed): targets
+    /// come from [`pick_rescue_sibling_bounded`] — digest headroom and
+    /// digest load, zero live probes — and the **one** live check runs
+    /// at adoption time: [`Engine::can_fit_fresh_with`] against the
+    /// chosen sibling, because a stale digest can say "fits" when
+    /// reality will not. A refused rescue leaves the request stranded
+    /// on its owner *without* burning the once-only `requeued` guard
+    /// (it re-queues on a later sweep, with fresher digests); a second
+    /// refusal burns it — genuine fleet-wide pressure, and bouncing
+    /// would thrash.
+    fn rescue_moves_bounded(&mut self, owner: usize)
+                            -> Vec<(RequestId, usize, Tokens)> {
+        let Some(stranded) = self
+            .replicas
+            .get(owner)
+            .map(|e| e.stranded_waiting())
+        else {
+            return Vec::new();
+        };
+        if stranded.is_empty() {
+            return Vec::new();
+        }
+        let Some(netstate) = self.netstate.as_mut() else {
+            return Vec::new();
+        };
+        let now = self
+            .replicas
+            .iter()
+            .map(|e| e.now())
+            .min()
+            .unwrap_or(Micros::ZERO);
+        let block_size = self
+            .replicas
+            .first()
+            .map_or(1, |e| e.cfg.block_size)
+            .max(1);
+        let round = |t: u64| t.div_ceil(block_size) * block_size;
+        let mut promised: Vec<u64> = self
+            .replicas
+            .iter()
+            .map(|e| e.owed_admission_tokens().0)
+            .collect();
+        let mut moves = Vec::new();
+        for id in stranded {
+            if self.requeued.contains(&id) {
+                continue;
+            }
+            let (target, chain) = {
+                let Some(req) = self
+                    .replicas
+                    .get(owner)
+                    .and_then(|e| e.request(id))
+                else {
+                    continue;
+                };
+                let needed = round(req.spec.prompt_tokens.0 + 1);
+                let arrival =
+                    ArrivalScratch::new(&req.spec, block_size);
+                let target = pick_rescue_sibling_bounded(
+                    netstate, owner, now, &self.eligible, &promised,
+                    needed);
+                // The steering stats re-book against the target's
+                // stale-mirror credit, like dispatch.
+                let credit = match (target, self.policy) {
+                    (Some(j), PlacementKind::PrefixAffinity) => {
+                        prefix_credits(&self.replicas, &arrival,
+                                       self.shared.as_ref())
+                            .get(j)
+                            .copied()
+                            .unwrap_or(0)
+                    }
+                    _ => 0,
+                };
+                (target.map(|j| (j, credit)), arrival.into_chain())
+            };
+            let Some((j, credit)) = target else {
+                continue; // no digest promises room — leave it
+            };
+            // Adoption-time re-validation against the live engine —
+            // the sweep's one live probe.
+            netstate.note_probe();
+            let fits = {
+                let Some(req) = self
+                    .replicas
+                    .get(owner)
+                    .and_then(|e| e.request(id))
+                else {
+                    continue;
+                };
+                self.replicas.get(j).is_some_and(|e| {
+                    e.can_fit_fresh_with(
+                        &req.spec,
+                        Tokens(promised.get(j).copied().unwrap_or(0)))
+                })
+            };
+            if !fits {
+                netstate.stats.rescue_refusals += 1;
+                if !self.rescue_refused.insert(id) {
+                    // Second refusal: burn the guard for real.
+                    self.requeued.insert(id);
+                }
+                continue;
+            }
+            let Some(w) = self
+                .replicas
+                .get_mut(owner)
+                .and_then(|e| e.withdraw_waiting(id))
+            else {
+                continue;
+            };
+            if let Some(p) = promised.get_mut(j) {
+                *p += round(w.spec.prompt_tokens.0 + 1);
+            }
+            self.requeued.insert(id);
+            if let Some(chain) = chain {
+                if let Some(e) = self.replicas.get_mut(j) {
+                    e.seed_chain(id, block_size, chain);
+                }
+            }
+            if let Some(e) = self.replicas.get_mut(j) {
+                e.adopt(w);
+            }
+            moves.push((id, j, Tokens(credit)));
+        }
+        moves
     }
 
     /// One fleet round: dispatch due arrivals, then advance the
@@ -668,10 +1087,17 @@ impl ReplicaSet {
             // mirroring the single engine's idle jump exactly
             // (including time-cap semantics: the jump is its own round).
             let Some(t) = next_arrival else {
+                // Nothing in flight, nothing pending: quiesce — land
+                // every buffered gossip message so the mirror
+                // converges to exact before the fleet reports idle.
+                self.net_flush();
                 return false;
             };
             for e in &mut self.replicas {
                 e.advance_clock_to(t);
+            }
+            if self.netstate.is_some() {
+                self.net_pump(t);
             }
             self.dispatch_due(t);
             return true;
@@ -690,6 +1116,9 @@ impl ReplicaSet {
             }
         }
         let frontier = self.now();
+        if self.netstate.is_some() {
+            self.net_pump(frontier);
+        }
         self.dispatch_due(frontier);
         // Every replica sees the next shared arrival as an idle-jump
         // target — the single-engine parity trick for the corner where
@@ -698,20 +1127,72 @@ impl ReplicaSet {
         for e in &mut self.replicas {
             e.set_external_event(hint);
         }
-        let mut order: Vec<usize> = (0..self.replicas.len()).collect();
-        // lamps-lint: allow(panic) order holds indexes of this very Vec
-        order.sort_by_key(|&i| (self.replicas[i].now(), i));
-        for i in order {
-            // lamps-lint: allow(panic) order holds indexes of this very Vec
-            if !self.replicas[i].has_live_work() {
+        #[cfg(test)]
+        {
+            if self.legacy_scan {
+                return self.step_round_scan();
+            }
+        }
+        let progressed = self.step_round_heap();
+        if !progressed {
+            // No replica progressed and (therefore) no arrivals
+            // remain: the stuck remainder can never run (same
+            // termination the single engine reaches). Converge the
+            // mirror before reporting idle.
+            self.net_flush();
+        }
+        progressed
+    }
+
+    /// One round of most-lagging-first stepping over the clock-keyed
+    /// min-heap. Identical step order to the old full sort — the
+    /// round's order is fixed by the clocks at round start; stale
+    /// entries (clock advanced since push) are lazily re-filed on pop,
+    /// already-stepped and idle replicas are deferred back to the heap
+    /// at round end — but a round that progresses on its first
+    /// candidate pops O(1) entries instead of sorting all n
+    /// (`heap_matches_legacy_scan_step_order` pins the equivalence).
+    fn step_round_heap(&mut self) -> bool {
+        self.step_round += 1;
+        let round = self.step_round;
+        self.step_deferred.clear();
+        let mut result = false;
+        while let Some(Reverse((t, i))) = self.step_heap.pop() {
+            let Some(now_i) = self.replicas.get(i).map(|e| e.now())
+            else {
+                continue;
+            };
+            if self.step_seen.get(i).copied() == Some(round) {
+                // This replica already had its turn (its refreshed
+                // entry rose back to the top); keep it for later
+                // rounds.
+                self.step_deferred.push((t, i));
                 continue;
             }
-            // lamps-lint: allow(panic) order holds indexes of this very Vec
+            if t != now_i {
+                // Stale after a clock advance: re-file at the true
+                // position and re-examine in order.
+                self.step_heap.push(Reverse((now_i, i)));
+                continue;
+            }
+            if let Some(s) = self.step_seen.get_mut(i) {
+                *s = round;
+            }
+            let live = self
+                .replicas
+                .get(i)
+                .is_some_and(|e| e.has_live_work());
+            if !live {
+                self.step_deferred.push((t, i));
+                continue;
+            }
+            self.note_stepped(i);
+            // lamps-lint: allow(panic) the heap holds indexes of this very Vec
             let progressed = self.replicas[i].step();
             // A step mutates only the stepped replica — mirror its
             // prefix-cache resident-set deltas into the shared index
-            // even when it reported no progress (a no-progress step can
-            // still have purged cache entries while dropping an
+            // even when it reported no progress (a no-progress step
+            // can still have purged cache entries while dropping an
             // oversized request), then give any request it
             // memory-rejected before first run a one-time chance on a
             // sibling with free KV. A rescue is fleet progress in its
@@ -719,14 +1200,197 @@ impl ReplicaSet {
             // every replica's own step stalled this round.
             self.absorb_prefix_deltas(i);
             let rescued = self.rescue_stranded(i);
+            let refreshed = self
+                .replicas
+                .get(i)
+                .map_or(t, |e| e.now());
+            self.step_heap.push(Reverse((refreshed, i)));
+            if progressed || rescued {
+                result = true;
+                break;
+            }
+        }
+        for &(t, i) in &self.step_deferred {
+            self.step_heap.push(Reverse((t, i)));
+        }
+        result
+    }
+
+    /// The pre-heap step order — a full `(clock, index)` sort every
+    /// round — kept verbatim so the equivalence test can pin the heap
+    /// against it, step for step and byte for byte.
+    #[cfg(test)]
+    fn step_round_scan(&mut self) -> bool {
+        let mut order: Vec<usize> = (0..self.replicas.len()).collect();
+        order.sort_by_key(|&i| (self.replicas[i].now(), i));
+        for i in order {
+            if !self.replicas[i].has_live_work() {
+                continue;
+            }
+            self.note_stepped(i);
+            let progressed = self.replicas[i].step();
+            self.absorb_prefix_deltas(i);
+            let rescued = self.rescue_stranded(i);
             if progressed || rescued {
                 return true;
             }
         }
-        // No replica progressed and (therefore) no arrivals remain: the
-        // stuck remainder can never run (same termination the single
-        // engine reaches).
+        self.net_flush();
         false
+    }
+
+    #[cfg(test)]
+    fn note_stepped(&mut self, i: usize) {
+        self.stepped_log.push(i);
+    }
+
+    #[cfg(not(test))]
+    fn note_stepped(&mut self, _i: usize) {}
+
+    /// Land every in-flight and buffered gossip message (no-op with
+    /// the network off). Called at every quiesce point so the mirror's
+    /// eventual-consistency contract — exact at idle — holds.
+    fn net_flush(&mut self) {
+        if let Some(netstate) = self.netstate.as_mut() {
+            netstate.flush(self.shared.as_mut());
+        }
+    }
+
+    /// One modeled-network round: publish each replica's due gossip
+    /// window and load digest at its own clock, deliver everything due
+    /// at the fleet frontier, then run the elastic-fleet tick.
+    fn net_pump(&mut self, frontier: Micros) {
+        if let Some(netstate) = self.netstate.as_mut() {
+            for (i, e) in self.replicas.iter().enumerate() {
+                netstate.publish_due(i, e.now(), e);
+            }
+            netstate.deliver_until(frontier, self.shared.as_mut());
+        }
+        self.autoscale_tick(frontier);
+    }
+
+    /// Elastic replica count (`--autoscale MIN:MAX`): park any replica
+    /// whose drain completed, then — on the gossip cadence — warm a
+    /// parked replica up when digest pressure says the active set is
+    /// saturated (pre-seeding its prefix cache from the sibling with
+    /// the largest resident set), or start draining an idle replica
+    /// down toward the floor when the fleet has gone quiet. Every
+    /// decision reads published digests only (bounded staleness), so
+    /// it is deterministic and needs no live probes.
+    fn autoscale_tick(&mut self, frontier: Micros) {
+        for (i, e) in self.replicas.iter_mut().enumerate() {
+            if self.states.get(i).copied() == Some(ReplicaState::Draining)
+                && e.drain_complete()
+            {
+                e.set_draining(false);
+                if let Some(s) = self.states.get_mut(i) {
+                    *s = ReplicaState::Parked;
+                }
+            }
+        }
+        let Some(netstate) = self.netstate.as_mut() else {
+            return;
+        };
+        let Some(scale) = netstate.config().autoscale else {
+            return;
+        };
+        if !netstate.autoscale_due(frontier) {
+            return;
+        }
+        let active: Vec<usize> = self
+            .states
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| **s == ReplicaState::Active)
+            .map(|(i, _)| i)
+            .collect();
+        let saturated = active
+            .iter()
+            .filter(|&&i| {
+                netstate
+                    .digest(i)
+                    .is_some_and(|d| d.headroom_tokens == 0)
+            })
+            .count();
+        let idle = active
+            .iter()
+            .filter(|&&i| {
+                netstate.digest(i).is_some_and(|d| d.live == 0)
+            })
+            .count();
+        let want_up = self.pending.len() > active.len()
+            || saturated * 2 > active.len();
+        if want_up && active.len() < scale.max {
+            let parked = self
+                .states
+                .iter()
+                .position(|s| *s == ReplicaState::Parked);
+            if let Some(p) = parked {
+                // Warm-up: pre-seed the newcomer's prefix cache from
+                // the sibling with the largest resident set, so its
+                // first arrivals hit instead of cold-starting.
+                let donor = active
+                    .iter()
+                    .copied()
+                    .max_by_key(|&i| {
+                        (self
+                             .replicas
+                             .get(i)
+                             .map_or(0,
+                                     |e| e.resident_prefix_hashes()
+                                         .len()),
+                         Reverse(i))
+                    });
+                if let Some(d) = donor {
+                    let hashes = self
+                        .replicas
+                        .get(d)
+                        .map(|e| e.resident_prefix_hashes())
+                        .unwrap_or_default();
+                    if !hashes.is_empty() {
+                        if let Some(e) = self.replicas.get_mut(p) {
+                            e.preseed_prefix_cache(&hashes,
+                                                   PRESEED_MAX_BLOCKS);
+                            // The seeded blocks are journaled like any
+                            // resident-set change — put them on the
+                            // wire now so the mirror learns about the
+                            // newcomer's warm cache.
+                            let deltas = e.drain_prefix_deltas();
+                            netstate.note_deltas(p, deltas);
+                        }
+                    }
+                }
+                if let Some(s) = self.states.get_mut(p) {
+                    *s = ReplicaState::Active;
+                }
+                netstate.stats.scale_ups += 1;
+            }
+        } else if self.pending.is_empty()
+            && active.len() > scale.min
+            && idle > 0
+        {
+            // Drain the highest-index active replica that is idle
+            // right now; it parks once its (empty) drain completes.
+            let victim = active.iter().copied().rev().find(|&i| {
+                self.replicas
+                    .get(i)
+                    .is_some_and(|e| !e.has_live_work())
+            });
+            if let Some(v) = victim {
+                if let Some(e) = self.replicas.get_mut(v) {
+                    e.set_draining(true);
+                }
+                if let Some(s) = self.states.get_mut(v) {
+                    *s = ReplicaState::Draining;
+                }
+                netstate.stats.scale_downs += 1;
+            }
+        }
+        self.eligible = self
+            .states
+            .iter()
+            .map(|s| *s == ReplicaState::Active)
+            .collect();
     }
 
     /// Drive the fleet until idle (or `time_cap` on the fleet frontier).
@@ -799,6 +1463,7 @@ impl ReplicaSet {
             per_replica,
             placement: self.policy,
             shared_prefix: self.shared_stats.clone(),
+            net: self.netstate.as_ref().map(|n| n.stats().clone()),
         }
     }
 }
@@ -1015,6 +1680,158 @@ mod tests {
                    "2 decoded + 3 tool-result tokens + 1 final");
         assert_eq!(set.replica(0).metrics.api_calls_completed, 1,
                    "the predicted-vs-actual gap is observable");
+    }
+
+    #[test]
+    fn heap_matches_legacy_scan_step_order() {
+        // Satellite 1: the clock-keyed min-heap must reproduce the old
+        // full-sort most-lagging order exactly — same replicas stepped
+        // in the same order, same final report bytes.
+        let trace = Trace::new("t", 1.0, (0..40)
+            .map(|i| RequestSpec {
+                prompt_tokens: Tokens(i % 7),
+                ..simple_spec(i, i * 137_000, (i % 5) + 1)
+            })
+            .collect());
+        let run = |legacy: bool| {
+            let mut set = ReplicaSet::simulated(
+                unit_cfg(5, PlacementKind::RoundRobin));
+            set.legacy_scan = legacy;
+            let report = set.run_trace(&trace);
+            (set.stepped_log.clone(), report.to_json(true))
+        };
+        let (heap_log, heap_json) = run(false);
+        let (scan_log, scan_json) = run(true);
+        assert!(!heap_log.is_empty());
+        assert_eq!(heap_log, scan_log,
+                   "heap and scan must step identical replica order");
+        assert_eq!(heap_json, scan_json);
+    }
+
+    #[test]
+    fn bounded_rescue_revalidates_before_adopting() {
+        // Satellite 2: with no fresh digest the bounded rescue
+        // optimistically assumes the sibling is roomy — the live
+        // `can_fit_fresh` re-validation at adoption time must catch
+        // the lie, and the first refusal must not burn the once-only
+        // re-queue guard (the second does).
+        use crate::config::NetModelKind;
+        let mut cfg = unit_cfg(2, PlacementKind::RoundRobin);
+        cfg.memory_budget = Tokens(30);
+        cfg.handling =
+            HandlingPolicy::Forced(HandlingStrategy::Preserve);
+        cfg.admission_requeue = true;
+        cfg.net.model = NetModelKind::Lan;
+        let hog = |id: u64| RequestSpec {
+            prompt_tokens: Tokens(25),
+            api_calls: vec![ApiCallSpec {
+                decode_before: Tokens(2),
+                api_type: ApiType::Qa,
+                duration: Micros(100_000 * 1_000_000),
+                response_tokens: Tokens(0),
+            }],
+            ..simple_spec(id, 0, 1)
+        };
+        let mut set = ReplicaSet::simulated(cfg.clone());
+        assert!(set.net_state().is_some(), "lan model arms the net");
+        // Both replicas park a 27-token hog behind a 100 000 s call;
+        // replica 0 additionally strands a 4-token victim.
+        set.replicas[0].enqueue(hog(0));
+        set.replicas[1].enqueue(hog(1));
+        for e in &mut set.replicas {
+            e.step(); // drain the arrival into the waiting queue
+            while e.has_runnable_work() {
+                e.step();
+            }
+        }
+        let victim = RequestSpec {
+            prompt_tokens: Tokens(4),
+            ..simple_spec(2, 0, 1)
+        };
+        set.replicas[0].enqueue(victim);
+        set.replicas[0].step();
+        assert_eq!(set.replicas[0].stranded_waiting(),
+                   vec![RequestId(2)]);
+        // No digest ever published: the picker assumes replica 1 is
+        // roomy, the live check refuses, the guard survives.
+        assert!(set.rescue_moves_bounded(0).is_empty());
+        assert_eq!(set.net_state().unwrap().stats().rescue_refusals, 1);
+        assert!(!set.requeued.contains(&RequestId(2)),
+                "first refusal must not burn the once-only guard");
+        assert!(set.rescue_refused.contains(&RequestId(2)));
+        // Second refusal burns it; a third sweep skips the request.
+        assert!(set.rescue_moves_bounded(0).is_empty());
+        assert_eq!(set.net_state().unwrap().stats().rescue_refusals, 2);
+        assert!(set.requeued.contains(&RequestId(2)),
+                "second refusal burns the guard");
+        assert!(set.rescue_moves_bounded(0).is_empty());
+        assert_eq!(set.net_state().unwrap().stats().rescue_refusals, 2);
+
+        // Same setup with an idle sibling: re-validation passes and
+        // the move happens on the first sweep.
+        let mut set = ReplicaSet::simulated(cfg);
+        set.replicas[0].enqueue(hog(0));
+        set.replicas[0].step();
+        while set.replicas[0].has_runnable_work() {
+            set.replicas[0].step();
+        }
+        set.replicas[0].enqueue(RequestSpec {
+            prompt_tokens: Tokens(4),
+            ..simple_spec(2, 0, 1)
+        });
+        set.replicas[0].step();
+        let moves = set.rescue_moves_bounded(0);
+        assert_eq!(moves, vec![(RequestId(2), 1, Tokens(0))]);
+        assert!(set.requeued.contains(&RequestId(2)));
+        assert!(set.replicas[1].request(RequestId(2)).is_some());
+    }
+
+    #[test]
+    fn autoscale_warms_up_under_backlog_and_drains_at_quiesce() {
+        use crate::config::{AutoscaleConfig, NetModelKind};
+        let mut cfg = unit_cfg(3, PlacementKind::LeastLoaded);
+        cfg.net.model = NetModelKind::Lan;
+        cfg.net.autoscale = Some(AutoscaleConfig { min: 1, max: 3 });
+        let mut set = ReplicaSet::simulated(cfg);
+        assert_eq!(set.replica_states(),
+                   &[ReplicaState::Active, ReplicaState::Parked,
+                     ReplicaState::Parked],
+                   "autoscale boots at the floor");
+        let trace = Trace::new("t", 1.0, (0..12)
+            .map(|i| simple_spec(i, 0, 3))
+            .collect());
+        let report = set.run_trace(&trace);
+        assert_eq!(report.fleet.completed, 12,
+                   "elasticity must never lose a request");
+        let stats = report.net.as_ref().unwrap();
+        assert!(stats.scale_ups >= 1,
+                "a 12-deep backlog on one active replica must warm a \
+                 parked sibling up (got {} scale-ups)", stats.scale_ups);
+        let active = set
+            .replica_states()
+            .iter()
+            .filter(|s| **s == ReplicaState::Active)
+            .count();
+        assert!(active >= 1, "the floor is always staffed");
+        for (i, s) in set.replica_states().iter().enumerate() {
+            if *s != ReplicaState::Active {
+                assert!(!set.replica(i).has_live_work(),
+                        "a non-active replica must hold no live work");
+            }
+        }
+    }
+
+    #[test]
+    fn net_off_keeps_net_key_out_of_fleet_json() {
+        let mut set =
+            ReplicaSet::simulated(unit_cfg(2, PlacementKind::RoundRobin));
+        let trace = Trace::new("t", 1.0, (0..3)
+            .map(|i| simple_spec(i, i * 1000, 1))
+            .collect());
+        let report = set.run_trace(&trace);
+        assert!(report.net.is_none());
+        assert!(!report.to_json(false).contains("\"net\""));
+        assert!(set.net_state().is_none());
     }
 
     #[test]

@@ -1,0 +1,576 @@
+//! `cluster::net` — the modeled cross-replica network
+//! (`--net-model`): every fleet-level signal that a real cluster
+//! would carry over wires — shared-prefix index deltas, per-replica
+//! load digests — rides a simulated network with per-link delays
+//! here, instead of teleporting between replicas at step boundaries.
+//!
+//! # What it models
+//!
+//! - **Gossip-lagged prefix mirror.** Replicas buffer their
+//!   [`PrefixDelta`] journals per publish window; every
+//!   `--gossip-interval` the window is flushed as one delta batch
+//!   onto the network. The fleet's [`SharedPrefixIndex`] therefore
+//!   mirrors a *past* resident set: prefix-affinity placement can
+//!   steer an arrival toward a replica that already evicted the
+//!   prefix. That stale hit is measured (the `stale_steer_*` family
+//!   in [`NetStats`]) and costs exactly one re-prefill — never an
+//!   error, because the index has been advisory since PR 4.
+//! - **Bounded-staleness load digests.** Each publish also carries a
+//!   [`LoadDigest`] snapshot (memory-over-time score, live count,
+//!   admission headroom). Placement and rescue read the digest table
+//!   plus a top-k [`NetState::shortlist`] instead of probing every
+//!   live engine, capping expensive per-arrival probes at O(k). A
+//!   digest older than `--staleness-budget` (or never received) reads
+//!   as "assume idle" — optimistic, corrected by the live probe or
+//!   the adoption-time re-validation.
+//! - **Elastic replica count.** With `--autoscale MIN:MAX`, digest
+//!   pressure warms parked replicas up (prefix-cache pre-seeded from
+//!   the busiest sibling) or drains active ones down on the gossip
+//!   cadence.
+//!
+//! # Determinism contract
+//!
+//! The network is a deterministic discrete-event component: link
+//! delays come from one seeded [`Rng`] stream (keyed off the system
+//! seed), messages are delivered in `(deliver_at, send-sequence)`
+//! order, and each sender's channel is FIFO (a later publish never
+//! overtakes an earlier one, like a TCP stream) — so a fixed seed,
+//! config, and trace replay the identical run, message for message.
+//! No wall clock is read anywhere.
+//!
+//! # Eventual-consistency contract
+//!
+//! Mirror staleness is bounded by `gossip_interval + max link delay`
+//! of live traffic: every delta a replica journals is published at
+//! the next gossip tick and applied when its message lands. When
+//! traffic quiesces (the fleet makes no more progress), the driver
+//! calls [`NetState::flush`] and the mirror becomes *exact* — equal
+//! to the union of live resident sets — which
+//! `tests/replica_properties.rs` pins on randomized runs. Staleness
+//! is never an error: a stale index claim survives in the mirror only
+//! while its `Removed` delta is buffered or in flight, which is
+//! exactly the window the relaxed auditor invariant
+//! ([`crate::audit`]) forgives.
+
+use std::cell::Cell;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::config::NetConfig;
+use crate::core::types::Micros;
+use crate::engine::Engine;
+use crate::kv::prefix::BlockHash;
+use crate::kv::PrefixDelta;
+use crate::metrics::NetStats;
+use crate::util::Rng;
+
+use super::shared_prefix::{PrefixDeltaSink, SharedPrefixIndex};
+
+/// Elastic-fleet lifecycle state of one replica (`--autoscale`).
+/// Without autoscale every replica is permanently [`Active`] and the
+/// fleet behaves exactly as before this type existed.
+///
+/// [`Active`]: ReplicaState::Active
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Serving: placement and rescue may route work here.
+    Active,
+    /// Decommissioning: finishes its live work, attracts nothing new;
+    /// parked once the drain completes.
+    Draining,
+    /// Decommissioned or not yet warmed up: holds no work and attracts
+    /// none. Its clock still trails the fleet (idle-follow) so a
+    /// parked replica never freezes the dispatch frontier.
+    Parked,
+}
+
+/// One replica's periodically-published load snapshot — everything a
+/// remote placement or rescue decision may know about it without a
+/// live probe.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadDigest {
+    /// Memory-over-time load aggregate at publish time
+    /// ([`Engine::load_memory_over_time`]).
+    pub score: f64,
+    /// Live (unfinished + queued) request count at publish time.
+    pub live: usize,
+    /// Admission token headroom at publish time
+    /// ([`Engine::digest_headroom`]) — what a rescue sweep may
+    /// optimistically assume fits, before the live re-validation.
+    pub headroom_tokens: u64,
+    /// Publish timestamp; older than the staleness budget ⇒ the
+    /// shortlist treats the replica as unknown.
+    pub published_at: Micros,
+}
+
+/// A message on the simulated network.
+enum Payload {
+    /// One sender's gossip window of prefix-cache resident-set deltas.
+    Deltas {
+        from: usize,
+        deltas: Vec<PrefixDelta>,
+    },
+    /// One sender's load snapshot.
+    Digest { from: usize, digest: LoadDigest },
+}
+
+/// In-flight message: ordered by `(deliver_at, seq)` only — `seq` is
+/// the global send sequence, so simultaneous deliveries stay in send
+/// order and the heap order is total without comparing payloads.
+struct Envelope {
+    deliver_at: Micros,
+    seq: u64,
+    payload: Payload,
+}
+
+impl PartialEq for Envelope {
+    fn eq(&self, other: &Envelope) -> bool {
+        self.deliver_at == other.deliver_at && self.seq == other.seq
+    }
+}
+
+impl Eq for Envelope {}
+
+impl PartialOrd for Envelope {
+    fn partial_cmp(&self, other: &Envelope) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Envelope {
+    fn cmp(&self, other: &Envelope) -> std::cmp::Ordering {
+        (self.deliver_at, self.seq).cmp(&(other.deliver_at, other.seq))
+    }
+}
+
+/// The modeled network: per-link delays, the in-flight message heap,
+/// per-replica gossip outboxes, and the digest table every bounded-
+/// staleness decision reads. Owned by the
+/// [`ReplicaSet`](crate::cluster::ReplicaSet) when
+/// [`NetConfig::armed`] — a net-off fleet never constructs one.
+pub struct NetState {
+    cfg: NetConfig,
+    rng: Rng,
+    /// Global send sequence (total message order tiebreak).
+    seq: u64,
+    /// In-flight messages, min-heap by `(deliver_at, seq)`.
+    inbox: BinaryHeap<Reverse<Envelope>>,
+    /// Per-replica deltas journaled since that replica's last publish.
+    outbox: Vec<Vec<PrefixDelta>>,
+    /// Per-sender latest scheduled delivery: links are FIFO, so a new
+    /// message never lands before an earlier one from the same sender.
+    last_delivery: Vec<Micros>,
+    /// Per-replica next publish tick.
+    next_publish: Vec<Micros>,
+    /// Next autoscale watermark evaluation (gossip cadence).
+    next_scale_eval: Micros,
+    /// Latest received digest per replica (`None` until one lands).
+    digests: Vec<Option<LoadDigest>>,
+    /// Per source replica: hashes with a `Removed` delta buffered or
+    /// in flight (count, since a hash can churn repeatedly within one
+    /// window). The audit relaxation's forgiveness set: an index
+    /// claim without residency is legal exactly while its removal is
+    /// still traveling.
+    pending_removals: Vec<HashMap<BlockHash, usize>>,
+    /// Fleet-visible stats (the `"net"` section of the fleet report).
+    pub(crate) stats: NetStats,
+    /// Live placement probes issued under bounded staleness —
+    /// interior-mutable so probe paths stay `&self`; the
+    /// `micro_fleet_scale` bench asserts O(topk) per arrival.
+    probes: Cell<u64>,
+}
+
+impl NetState {
+    pub fn new(cfg: NetConfig, replicas: usize, seed: u64) -> NetState {
+        NetState {
+            // Decorrelated from the workload generators' streams
+            // (which also key off the system seed).
+            rng: Rng::new(seed ^ 0x6e65_745f_6c61_6d70),
+            seq: 0,
+            inbox: BinaryHeap::new(),
+            outbox: (0..replicas).map(|_| Vec::new()).collect(),
+            last_delivery: vec![Micros::ZERO; replicas],
+            next_publish: vec![Micros::ZERO; replicas],
+            next_scale_eval: Micros::ZERO,
+            digests: vec![None; replicas],
+            pending_removals: (0..replicas).map(|_| HashMap::new())
+                .collect(),
+            stats: NetStats::default(),
+            probes: Cell::new(0),
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &NetConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> &NetStats {
+        &self.stats
+    }
+
+    /// Latest digest received from `replica`, if any ever landed.
+    pub fn digest(&self, replica: usize) -> Option<&LoadDigest> {
+        self.digests.get(replica).and_then(|d| d.as_ref())
+    }
+
+    /// Sample one one-way link delay from the seeded stream.
+    fn link_delay(&mut self) -> Micros {
+        match self.cfg.model.delay_bounds_us() {
+            Some((lo, hi)) => Micros(self.rng.int_range(lo, hi)),
+            None => Micros::ZERO,
+        }
+    }
+
+    /// Put a message on the wire at `now`, preserving per-sender FIFO.
+    fn send(&mut self, from: usize, now: Micros, payload: Payload) {
+        let delay = self.link_delay();
+        let mut at = now + delay;
+        if let Some(last) = self.last_delivery.get_mut(from) {
+            if at < *last {
+                at = *last;
+            }
+            *last = at;
+        }
+        self.seq += 1;
+        self.inbox.push(Reverse(Envelope {
+            deliver_at: at,
+            seq: self.seq,
+            payload,
+        }));
+    }
+
+    /// Buffer `replica`'s freshly-drained prefix journal into its
+    /// gossip window (it rides the wire at the next publish tick).
+    pub fn note_deltas(&mut self, replica: usize,
+                       deltas: Vec<PrefixDelta>) {
+        if deltas.is_empty() {
+            return;
+        }
+        if let Some(pending) = self.pending_removals.get_mut(replica) {
+            for delta in &deltas {
+                if let PrefixDelta::Removed(h) = delta {
+                    *pending.entry(*h).or_insert(0) += 1;
+                }
+            }
+        }
+        if let Some(out) = self.outbox.get_mut(replica) {
+            out.extend(deltas);
+        }
+    }
+
+    /// If `replica`'s publish tick is due at `now`, flush its gossip
+    /// window and a fresh [`LoadDigest`] onto the network.
+    pub fn publish_due(&mut self, replica: usize, now: Micros,
+                       engine: &Engine) {
+        match self.next_publish.get_mut(replica) {
+            Some(t) if now >= *t => {
+                *t = now + self.cfg.gossip_interval;
+            }
+            _ => return,
+        }
+        let window = match self.outbox.get_mut(replica) {
+            Some(out) if !out.is_empty() => std::mem::take(out),
+            _ => Vec::new(),
+        };
+        if !window.is_empty() {
+            self.stats.gossip_deltas += window.len() as u64;
+            self.send(replica, now, Payload::Deltas {
+                from: replica,
+                deltas: window,
+            });
+        }
+        let digest = LoadDigest {
+            score: engine.load_memory_over_time(),
+            live: engine.live_load(),
+            headroom_tokens: engine.digest_headroom().0,
+            published_at: now,
+        };
+        self.stats.digest_publishes += 1;
+        self.send(replica, now, Payload::Digest {
+            from: replica,
+            digest,
+        });
+    }
+
+    /// Deliver every in-flight message due at or before `frontier`:
+    /// delta batches land in the shared index (the sanctioned
+    /// [`PrefixDeltaSink`] seam), digests refresh the table.
+    pub fn deliver_until(&mut self, frontier: Micros,
+                         mut index: Option<&mut SharedPrefixIndex>) {
+        loop {
+            match self.inbox.peek() {
+                Some(Reverse(env)) if env.deliver_at <= frontier => {}
+                _ => break,
+            }
+            let Some(Reverse(env)) = self.inbox.pop() else { break };
+            self.stats.gossip_messages += 1;
+            match env.payload {
+                Payload::Deltas { from, deltas } => {
+                    self.apply_deltas(from, &deltas,
+                                      index.as_deref_mut());
+                }
+                Payload::Digest { from, digest } => {
+                    if let Some(slot) = self.digests.get_mut(from) {
+                        *slot = Some(digest);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Land one delta batch: settle the pending-removal forgiveness
+    /// counts and mirror into the index.
+    fn apply_deltas(&mut self, from: usize, deltas: &[PrefixDelta],
+                    index: Option<&mut SharedPrefixIndex>) {
+        if let Some(pending) = self.pending_removals.get_mut(from) {
+            for delta in deltas {
+                if let PrefixDelta::Removed(h) = delta {
+                    if let Some(cnt) = pending.get_mut(h) {
+                        *cnt -= 1;
+                        if *cnt == 0 {
+                            pending.remove(h);
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(ix) = index {
+            for delta in deltas {
+                ix.on_delta(from, delta);
+            }
+        }
+    }
+
+    /// Quiesce: deliver everything in flight and land every buffered
+    /// gossip window immediately. Called when the fleet stops making
+    /// progress — from here the mirror is exact (the
+    /// eventual-consistency contract's convergence point).
+    pub fn flush(&mut self, mut index: Option<&mut SharedPrefixIndex>) {
+        self.deliver_until(Micros(u64::MAX), index.as_deref_mut());
+        for from in 0..self.outbox.len() {
+            let window = match self.outbox.get_mut(from) {
+                Some(out) if !out.is_empty() => std::mem::take(out),
+                _ => continue,
+            };
+            self.stats.gossip_deltas += window.len() as u64;
+            self.stats.gossip_messages += 1;
+            self.apply_deltas(from, &window, index.as_deref_mut());
+        }
+        for pending in &mut self.pending_removals {
+            pending.clear();
+        }
+    }
+
+    /// Is an index claim of `hash` on `replica` explainable by a
+    /// removal still buffered or in flight? (The audit relaxation.)
+    pub fn pending_removal(&self, replica: usize,
+                           hash: BlockHash) -> bool {
+        self.pending_removals
+            .get(replica)
+            .is_some_and(|m| m.contains_key(&hash))
+    }
+
+    /// The up-to-`topk` most attractive candidates by digest score
+    /// (ascending — less load is more attractive), ties by index. A
+    /// replica with no digest, or one older than the staleness
+    /// budget, reads as most attractive (assume idle): optimism means
+    /// a silent replica gets probed rather than forgotten, and the
+    /// live probe (or rescue re-validation) corrects it. One O(n·k)
+    /// insertion scan, one allocation.
+    pub fn shortlist(&self, now: Micros, eligible: &[bool])
+                     -> Vec<usize> {
+        let k = self.cfg.topk.max(1);
+        let mut best: Vec<(f64, usize)> = Vec::with_capacity(k + 1);
+        for (i, ok) in eligible.iter().enumerate() {
+            if !*ok {
+                continue;
+            }
+            let score = match self.digest(i) {
+                Some(d) if now
+                    <= d.published_at + self.cfg.staleness_budget =>
+                {
+                    d.score
+                }
+                _ => f64::NEG_INFINITY,
+            };
+            let pos = best.partition_point(|&(s, j)| {
+                s < score || (s == score && j < i)
+            });
+            if pos < k {
+                best.insert(pos, (score, i));
+                best.truncate(k);
+            }
+        }
+        best.into_iter().map(|(_, i)| i).collect()
+    }
+
+    /// Count one live engine probe issued under bounded staleness
+    /// (`&self`: probe paths are pure — the probe-purity contract).
+    pub fn note_probe(&self) {
+        self.probes.set(self.probes.get() + 1);
+    }
+
+    /// Total live probes issued so far (bench introspection: the O(k)
+    /// per-arrival bound is asserted against this counter).
+    pub fn probes_issued(&self) -> u64 {
+        self.probes.get()
+    }
+
+    /// Is an autoscale watermark evaluation due at `now`? Consumes
+    /// the tick (gossip cadence). Always false without `--autoscale`.
+    pub fn autoscale_due(&mut self, now: Micros) -> bool {
+        if self.cfg.autoscale.is_none() || now < self.next_scale_eval {
+            return false;
+        }
+        self.next_scale_eval = now + self.cfg.gossip_interval;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetModelKind;
+
+    fn lan_cfg() -> NetConfig {
+        NetConfig {
+            model: NetModelKind::Lan,
+            ..NetConfig::default()
+        }
+    }
+
+    fn digest_at(t: Micros) -> LoadDigest {
+        LoadDigest {
+            score: 1.0,
+            live: 1,
+            headroom_tokens: 100,
+            published_at: t,
+        }
+    }
+
+    #[test]
+    fn link_delays_are_seeded_and_bounded() {
+        let mut a = NetState::new(lan_cfg(), 4, 7);
+        let mut b = NetState::new(lan_cfg(), 4, 7);
+        let mut c = NetState::new(lan_cfg(), 4, 8);
+        let (lo, hi) = NetModelKind::Lan.delay_bounds_us().unwrap();
+        let da: Vec<u64> = (0..64).map(|_| a.link_delay().0).collect();
+        let db: Vec<u64> = (0..64).map(|_| b.link_delay().0).collect();
+        let dc: Vec<u64> = (0..64).map(|_| c.link_delay().0).collect();
+        assert_eq!(da, db, "same seed, same delays");
+        assert_ne!(da, dc, "different seed, different delays");
+        assert!(da.iter().all(|&d| (lo..=hi).contains(&d)));
+    }
+
+    #[test]
+    fn links_are_fifo_per_sender() {
+        let mut net = NetState::new(lan_cfg(), 2, 3);
+        // Many sends from one replica at increasing times: scheduled
+        // deliveries must be non-decreasing even when a later send
+        // samples a smaller delay.
+        let mut last = Micros::ZERO;
+        for k in 0..200u64 {
+            net.send(0, Micros(k * 10), Payload::Digest {
+                from: 0,
+                digest: digest_at(Micros(k * 10)),
+            });
+            let at = net.last_delivery[0];
+            assert!(at >= last, "send {k} reordered: {at:?} < {last:?}");
+            last = at;
+        }
+    }
+
+    #[test]
+    fn deltas_apply_in_order_and_settle_pending_removals() {
+        let mut net = NetState::new(lan_cfg(), 2, 5);
+        let mut index = SharedPrefixIndex::new();
+        let h = 42u64;
+        net.note_deltas(0, vec![PrefixDelta::Registered(h)]);
+        net.note_deltas(0, vec![PrefixDelta::Removed(h)]);
+        assert!(net.pending_removal(0, h));
+        // Nothing published yet: the mirror is empty.
+        let mut e = Engine::simulated(
+            crate::config::SystemConfig::default());
+        net.publish_due(0, Micros::ZERO, &e);
+        assert!(!index.holds(h, 0), "nothing delivered yet");
+        net.deliver_until(Micros(u64::MAX), Some(&mut index));
+        // Registered then Removed landed in order: net zero.
+        assert!(!index.holds(h, 0));
+        assert!(!net.pending_removal(0, h), "removal settled");
+        // A register alone survives the trip.
+        net.note_deltas(1, vec![PrefixDelta::Registered(h)]);
+        net.publish_due(1, Micros(1), &e);
+        net.deliver_until(Micros(u64::MAX), Some(&mut index));
+        assert!(index.holds(h, 1));
+        e.step();
+    }
+
+    #[test]
+    fn flush_lands_unpublished_windows() {
+        let mut net = NetState::new(lan_cfg(), 2, 5);
+        let mut index = SharedPrefixIndex::new();
+        net.note_deltas(1, vec![PrefixDelta::Registered(9)]);
+        net.flush(Some(&mut index));
+        assert!(index.holds(9, 1),
+                "flush must land buffered windows without a publish");
+        assert!(!net.pending_removal(1, 9));
+    }
+
+    #[test]
+    fn shortlist_prefers_low_scores_and_assumes_unknown_idle() {
+        let cfg = NetConfig {
+            topk: 2,
+            ..lan_cfg()
+        };
+        let mut net = NetState::new(cfg, 4, 1);
+        let now = Micros(100_000);
+        net.digests[0] = Some(LoadDigest {
+            score: 5.0,
+            ..digest_at(now)
+        });
+        net.digests[1] = Some(LoadDigest {
+            score: 1.0,
+            ..digest_at(now)
+        });
+        net.digests[2] = Some(LoadDigest {
+            score: 3.0,
+            ..digest_at(now)
+        });
+        net.digests[3] = Some(LoadDigest {
+            score: 2.0,
+            ..digest_at(now)
+        });
+        let all = vec![true; 4];
+        assert_eq!(net.shortlist(now, &all), vec![1, 3]);
+        // An over-budget-stale digest outranks everyone (assume idle).
+        net.digests[0] = Some(LoadDigest {
+            score: 5.0,
+            ..digest_at(Micros::ZERO)
+        });
+        let now = Micros(10_000_000);
+        assert_eq!(net.shortlist(now, &all), vec![0, 1]);
+        // Ineligible (draining/parked) replicas never shortlist.
+        let eligible = vec![false, true, true, true];
+        assert_eq!(net.shortlist(now, &eligible), vec![1, 3]);
+    }
+
+    #[test]
+    fn autoscale_ticks_only_when_configured() {
+        let mut off = NetState::new(lan_cfg(), 2, 1);
+        assert!(!off.autoscale_due(Micros(1_000_000)));
+        let cfg = NetConfig {
+            autoscale: Some(crate::config::AutoscaleConfig {
+                min: 1,
+                max: 2,
+            }),
+            ..lan_cfg()
+        };
+        let mut on = NetState::new(cfg, 2, 1);
+        assert!(on.autoscale_due(Micros::ZERO));
+        assert!(!on.autoscale_due(Micros(1)),
+                "tick consumed until the next gossip interval");
+        assert!(on.autoscale_due(Micros::ZERO
+            + cfg.gossip_interval));
+    }
+}

@@ -20,10 +20,21 @@
 //! resident-set deltas ([`PrefixDelta`]: register / evict / purge); the
 //! [`ReplicaSet`](super::ReplicaSet) drains the stepped replica's
 //! journal after every step and feeds it through the
-//! [`PrefixDeltaSink`] observer seam. Because the fleet simulation is a
-//! sequential discrete-event loop, the mirror is exact at every step
-//! boundary; the wall-clock serving frontend drains on the same
-//! schedule and may lag a step.
+//! [`PrefixDeltaSink`] observer seam. With `--net-model off` (the
+//! default) the fleet simulation is a sequential discrete-event loop
+//! and the mirror is exact at every step boundary; with a modeled
+//! network armed, the drained journal instead rides
+//! [`cluster::net`](super::net) gossip and the mirror lags by up to a
+//! gossip interval plus link delay (staleness costs a measured
+//! re-prefill, never an error). The wall-clock serving frontend
+//! drains on the exact schedule and may lag a step.
+//!
+//! The raw mutators [`SharedPrefixIndex::mirror_insert`] /
+//! [`SharedPrefixIndex::mirror_remove`] exist for the
+//! [`PrefixDeltaSink`] impl below and `cluster::net` delivery only —
+//! lamps-lint rule `gossip-seam` bans them everywhere else, so no
+//! code path can quietly mutate the mirror without going through the
+//! journal → gossip pipeline.
 //!
 //! **Advisory only.** Nothing correctness-bearing reads the index: a
 //! stale *present* entry merely places a request whose blocks were
@@ -71,7 +82,7 @@ impl SharedPrefixIndex {
     }
 
     /// Mark `hash` resident on `replica`.
-    pub fn insert(&mut self, hash: BlockHash, replica: usize) {
+    pub fn mirror_insert(&mut self, hash: BlockHash, replica: usize) {
         if replica >= MAX_TRACKED_REPLICAS {
             return;
         }
@@ -80,7 +91,7 @@ impl SharedPrefixIndex {
 
     /// Mark `hash` no longer resident on `replica`; the entry vanishes
     /// with its last holder (no entry survives a replica-local purge).
-    pub fn remove(&mut self, hash: BlockHash, replica: usize) {
+    pub fn mirror_remove(&mut self, hash: BlockHash, replica: usize) {
         if replica >= MAX_TRACKED_REPLICAS {
             return;
         }
@@ -159,8 +170,8 @@ impl SharedPrefixIndex {
 impl PrefixDeltaSink for SharedPrefixIndex {
     fn on_delta(&mut self, replica: usize, delta: &PrefixDelta) {
         match *delta {
-            PrefixDelta::Registered(hash) => self.insert(hash, replica),
-            PrefixDelta::Removed(hash) => self.remove(hash, replica),
+            PrefixDelta::Registered(hash) => self.mirror_insert(hash, replica),
+            PrefixDelta::Removed(hash) => self.mirror_remove(hash, replica),
         }
     }
 }
@@ -170,25 +181,25 @@ mod tests {
     use super::*;
 
     #[test]
-    fn insert_remove_lifecycle() {
+    fn mirror_insert_remove_lifecycle() {
         let mut idx = SharedPrefixIndex::new();
         assert!(idx.is_empty());
-        idx.insert(7, 0);
-        idx.insert(7, 2);
-        idx.insert(9, 1);
+        idx.mirror_insert(7, 0);
+        idx.mirror_insert(7, 2);
+        idx.mirror_insert(9, 1);
         assert_eq!(idx.len(), 2);
         assert!(idx.holds(7, 0) && idx.holds(7, 2) && !idx.holds(7, 1));
         assert_eq!(idx.replicas_of(7), vec![0, 2]);
         assert_eq!(idx.hashes(), vec![7, 9]);
-        idx.remove(7, 0);
+        idx.mirror_remove(7, 0);
         assert_eq!(idx.replicas_of(7), vec![2]);
         // The entry vanishes with its last holder.
-        idx.remove(7, 2);
+        idx.mirror_remove(7, 2);
         assert!(!idx.holds(7, 2));
         assert_eq!(idx.hashes(), vec![9]);
         // Removing an absent pair is a no-op.
-        idx.remove(7, 2);
-        idx.remove(42, 0);
+        idx.mirror_remove(7, 2);
+        idx.mirror_remove(42, 0);
         assert_eq!(idx.len(), 1);
     }
 
@@ -210,10 +221,10 @@ mod tests {
         // Replica 0 holds blocks 0,1,2; replica 1 holds 0 and 2 (gap at
         // 1); replica 2 holds nothing of this chain.
         for h in [10, 11, 12] {
-            idx.insert(h, 0);
+            idx.mirror_insert(h, 0);
         }
-        idx.insert(10, 1);
-        idx.insert(12, 1);
+        idx.mirror_insert(10, 1);
+        idx.mirror_insert(12, 1);
         let credit = idx.cached_tokens_per_replica(&[10, 11, 12], 16, 3);
         assert_eq!(credit, vec![48, 16, 0],
                    "an interior hit behind a gap is unusable");
@@ -229,10 +240,10 @@ mod tests {
     #[test]
     fn untracked_replicas_are_ignored_not_errors() {
         let mut idx = SharedPrefixIndex::new();
-        idx.insert(1, MAX_TRACKED_REPLICAS); // silently dropped
+        idx.mirror_insert(1, MAX_TRACKED_REPLICAS); // silently dropped
         assert!(idx.is_empty());
-        idx.insert(1, 0);
-        idx.remove(1, MAX_TRACKED_REPLICAS + 5); // no-op
+        idx.mirror_insert(1, 0);
+        idx.mirror_remove(1, MAX_TRACKED_REPLICAS + 5); // no-op
         assert!(idx.holds(1, 0));
         assert!(!idx.holds(1, MAX_TRACKED_REPLICAS));
         // Credit for a fleet wider than the bitset: the tracked prefix

@@ -303,6 +303,125 @@ impl AuditMode {
     }
 }
 
+/// Which simulated network model carries cross-replica signals
+/// (`--net-model`): the per-link delay distribution of the
+/// [`cluster::net`](crate::cluster::net) subsystem. `Off` (the
+/// default) keeps the fleet sequentially stepped with an exact
+/// shared-prefix mirror and exact live placement probes —
+/// byte-identical to the net-less fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NetModelKind {
+    /// No modeled network: gossip, digests, and autoscale are all
+    /// inert. The default.
+    #[default]
+    Off,
+    /// Datacenter-local links: 50–200 µs per message.
+    Lan,
+    /// Cross-zone links: 2–10 ms per message.
+    Wan,
+}
+
+impl NetModelKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            NetModelKind::Off => "off",
+            NetModelKind::Lan => "lan",
+            NetModelKind::Wan => "wan",
+        }
+    }
+
+    /// Parse a CLI name (`--net-model`).
+    pub fn parse(name: &str) -> Option<NetModelKind> {
+        Some(match name {
+            "off" => NetModelKind::Off,
+            "lan" => NetModelKind::Lan,
+            "wan" => NetModelKind::Wan,
+            _ => return None,
+        })
+    }
+
+    /// Sampled one-way link delay bounds in microseconds (inclusive
+    /// low, exclusive high). `None` for `Off`.
+    pub fn delay_bounds_us(&self) -> Option<(u64, u64)> {
+        match self {
+            NetModelKind::Off => None,
+            NetModelKind::Lan => Some((50, 200)),
+            NetModelKind::Wan => Some((2_000, 10_000)),
+        }
+    }
+}
+
+/// Elastic replica-count bounds (`--autoscale MIN:MAX`): the fleet
+/// starts with `min` active replicas and may warm up parked ones (with
+/// prefix-cache pre-seeding from a sibling) or drain active ones back
+/// to parked as the published load digests cross the watermarks. Only
+/// meaningful with a modeled network (`--net-model` ≠ off).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AutoscaleConfig {
+    /// Active replicas never drop below this.
+    pub min: usize,
+    /// Active replicas never exceed this (clamped to `--replicas`).
+    pub max: usize,
+}
+
+impl AutoscaleConfig {
+    /// Parse the CLI form `MIN:MAX`.
+    pub fn parse(s: &str) -> Option<AutoscaleConfig> {
+        let (lo, hi) = s.split_once(':')?;
+        let min: usize = lo.trim().parse().ok()?;
+        let max: usize = hi.trim().parse().ok()?;
+        if min == 0 || min > max {
+            return None;
+        }
+        Some(AutoscaleConfig { min, max })
+    }
+}
+
+/// Modeled-network knobs (the [`cluster::net`](crate::cluster::net)
+/// subsystem). With `model == Off` — the default — every other field
+/// is inert and the fleet is byte-identical to the net-less one.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetConfig {
+    /// Per-link delay distribution (`--net-model off|lan|wan`).
+    pub model: NetModelKind,
+    /// Gossip cadence (`--gossip-interval`, milliseconds on the CLI):
+    /// how often each replica flushes its buffered `PrefixDelta`s and
+    /// publishes a fresh load digest onto the network.
+    pub gossip_interval: Micros,
+    /// Staleness budget (`--staleness-budget`, milliseconds on the
+    /// CLI): a load digest older than this is treated as unknown by
+    /// the placement shortlist (an unknown replica is assumed idle —
+    /// optimistic, and corrected by the live probe or the rescue
+    /// re-validation).
+    pub staleness_budget: Micros,
+    /// Shortlist size (`--net-topk`): expensive live placement probes
+    /// per arrival are capped at O(topk).
+    pub topk: usize,
+    /// Elastic replica bounds (`--autoscale MIN:MAX`); `None` keeps
+    /// every replica active.
+    pub autoscale: Option<AutoscaleConfig>,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            model: NetModelKind::Off,
+            gossip_interval: Micros(5_000),
+            staleness_budget: Micros(50_000),
+            topk: 4,
+            autoscale: None,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Is the modeled network in effect for a fleet of `replicas`?
+    /// (A single engine has no cross-replica signals to model.)
+    pub fn armed(&self, replicas: usize) -> bool {
+        self.model != NetModelKind::Off && replicas > 1
+    }
+}
+
 /// Which predictor feeds the scheduler.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum PredictorKind {
@@ -474,6 +593,11 @@ pub struct SystemConfig {
     /// enforces exact equality with the stateless oracle — so `off`
     /// exists only as an escape hatch and for A/B benchmarking.
     pub placement_cache: bool,
+    /// Modeled cross-replica network (`--net-model` and friends):
+    /// gossip-lagged shared-prefix mirror, bounded-staleness load
+    /// digests, and elastic replica count. [`NetModelKind::Off`] by
+    /// default ⇒ byte-identical to the net-less fleet.
+    pub net: NetConfig,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -501,6 +625,7 @@ impl Default for SystemConfig {
             api_pred: ApiPredKind::default(),
             audit: AuditMode::default(),
             placement_cache: true,
+            net: NetConfig::default(),
             cost: CostModel::paper_scale(),
             seed: 0,
         }
@@ -681,6 +806,56 @@ mod tests {
             assert_eq!(SystemConfig::preset(name).unwrap().audit,
                        AuditMode::Auto, "{name}");
         }
+    }
+
+    #[test]
+    fn net_defaults_off_and_parses() {
+        // `--net-model off` (the default) must leave every preset on
+        // the sequentially-stepped exact-mirror fleet — the
+        // byte-identical-to-PR-9 path.
+        let c = NetConfig::default();
+        assert_eq!(c.model, NetModelKind::Off);
+        assert!(!c.armed(1));
+        assert!(!c.armed(256), "off is off at any fleet size");
+        assert_eq!(c.autoscale, None, "autoscale must default off");
+        assert_eq!(SystemConfig::default().net, NetConfig::default());
+        for name in ["vllm", "infercept", "lamps", "lamps-no-sched",
+                     "sjf", "sjf-total"] {
+            assert_eq!(SystemConfig::preset(name).unwrap().net.model,
+                       NetModelKind::Off, "{name}");
+        }
+        for kind in [NetModelKind::Off, NetModelKind::Lan,
+                     NetModelKind::Wan] {
+            assert_eq!(NetModelKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(NetModelKind::parse("nope"), None);
+        // Armed needs both a model and a fleet.
+        let lan = NetConfig {
+            model: NetModelKind::Lan,
+            ..NetConfig::default()
+        };
+        assert!(!lan.armed(1), "a single engine has no links");
+        assert!(lan.armed(2));
+        // Delay bounds exist exactly for the modeled links.
+        assert_eq!(NetModelKind::Off.delay_bounds_us(), None);
+        for kind in [NetModelKind::Lan, NetModelKind::Wan] {
+            let (lo, hi) = kind.delay_bounds_us().unwrap();
+            assert!(lo < hi, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn autoscale_parse_roundtrip() {
+        assert_eq!(AutoscaleConfig::parse("2:8"),
+                   Some(AutoscaleConfig { min: 2, max: 8 }));
+        assert_eq!(AutoscaleConfig::parse("4:4"),
+                   Some(AutoscaleConfig { min: 4, max: 4 }));
+        assert_eq!(AutoscaleConfig::parse("0:4"), None,
+                   "min 0 would drain the whole fleet");
+        assert_eq!(AutoscaleConfig::parse("8:2"), None,
+                   "min > max is a config error");
+        assert_eq!(AutoscaleConfig::parse("8"), None);
+        assert_eq!(AutoscaleConfig::parse("a:b"), None);
     }
 
     #[test]

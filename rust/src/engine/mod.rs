@@ -204,6 +204,12 @@ pub struct Engine {
     /// oracle-run report bytes unchanged). External outcomes are always
     /// recorded regardless.
     record_sim_outcomes: bool,
+    /// Decommission marker ([`Engine::set_draining`]): a draining
+    /// replica finishes its live work but a fleet driver stops routing
+    /// new arrivals to it. Purely observational engine-side — nothing
+    /// in the scheduler reads it, so a draining engine steps
+    /// byte-identically to a live one.
+    draining: bool,
 }
 
 impl Engine {
@@ -262,6 +268,7 @@ impl Engine {
             duration_model: DurationModel::new(cfg.api_pred),
             record_sim_outcomes: !matches!(cfg.predictor,
                                            PredictorKind::Oracle),
+            draining: false,
             cfg,
         }
     }
@@ -583,6 +590,56 @@ impl Engine {
     /// truth the fleet index must stay a subset of (test invariant).
     pub fn resident_prefix_hashes(&self) -> Vec<prefix::BlockHash> {
         self.kv.resident_prefix_hashes()
+    }
+
+    /// Admission headroom for a published load digest: free KV tokens
+    /// minus what this replica already owes its accepted-but-unadmitted
+    /// backlog ([`Engine::owed_admission_tokens`]). A bounded-staleness
+    /// rescue filters siblings on this instead of probing them live.
+    pub fn digest_headroom(&self) -> Tokens {
+        Tokens(self.kv
+            .free_tokens()
+            .0
+            .saturating_sub(self.owed_admission_tokens().0))
+    }
+
+    /// Consecutive leading blocks of `chain` resident in this replica's
+    /// prefix cache, in tokens — what a prefix-affinity steer actually
+    /// finds on arrival, measured against the (possibly stale)
+    /// fleet-index credit that steered it here.
+    pub fn cached_lead_tokens(&self, chain: &[prefix::BlockHash]) -> u64 {
+        self.kv.cached_lead_tokens(chain)
+    }
+
+    /// Warm-up pre-seeding from a sibling's resident hash set: adopt up
+    /// to `max_blocks` of `hashes` as zero-ref cached blocks (free-list
+    /// only, never evicting live work). Returns blocks seeded. See
+    /// [`BlockManager::preseed_cached`].
+    pub fn preseed_prefix_cache(&mut self, hashes: &[prefix::BlockHash],
+                                max_blocks: u64) -> u64 {
+        self.kv.preseed_cached(hashes, max_blocks)
+    }
+
+    // ------------------------------------------------------------------
+    // Elastic-fleet decommission markers (cluster::net autoscale)
+    // ------------------------------------------------------------------
+
+    /// Mark (or unmark) this replica as draining for decommission. The
+    /// marker is observational: the engine itself keeps stepping its
+    /// live work byte-identically; the fleet driver is what stops
+    /// routing arrivals and rescues here.
+    pub fn set_draining(&mut self, draining: bool) {
+        self.draining = draining;
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
+    /// A draining replica whose live work has fully finished — safe to
+    /// park (decommission) without dropping anything.
+    pub fn drain_complete(&self) -> bool {
+        self.draining && !self.has_live_work()
     }
 
     /// Downcast access to backend-specific state (e.g. PJRT generated

@@ -219,6 +219,69 @@ impl BlockManager {
             .unwrap_or_default()
     }
 
+    /// Consecutive leading blocks of `chain` resident in the local
+    /// prefix cache, in tokens — the replica-local ground truth a
+    /// (possibly stale) fleet-level cached-token credit is measured
+    /// against. 0 without a cache. Consecutive-only matches what
+    /// [`BlockManager::allocate_prefixed`] can actually serve.
+    pub fn cached_lead_tokens(&self, chain: &[BlockHash]) -> u64 {
+        let Some(cache) = self.prefix.as_ref() else {
+            return 0;
+        };
+        let mut lead = 0u64;
+        for hash in chain {
+            if !cache.contains(*hash) {
+                break;
+            }
+            lead += self.block_size;
+        }
+        lead
+    }
+
+    /// Warm-up pre-seeding: adopt up to `max_blocks` of `hashes` into
+    /// the local prefix cache as zero-ref cached blocks, drawing
+    /// physical blocks from the free list only (never evicting live
+    /// work). Models a warm sibling streaming its resident prefix
+    /// blocks to a freshly activated replica. Already-resident hashes
+    /// are skipped; each adoption is journaled like any other
+    /// resident-set change, so gossip mirrors the seeded blocks. The
+    /// retention cap is re-applied afterwards. Returns blocks seeded.
+    pub fn preseed_cached(&mut self, hashes: &[BlockHash],
+                          max_blocks: u64) -> u64 {
+        let mut seeded = 0u64;
+        for &hash in hashes {
+            if seeded >= max_blocks {
+                break;
+            }
+            let Some(cache) = self.prefix.as_mut() else {
+                break;
+            };
+            if cache.contains(hash) {
+                continue;
+            }
+            let Some(block) = self.free_blocks.pop() else {
+                break;
+            };
+            if cache.register(hash, block) {
+                // Drop the registration pin: zero-ref cached, exactly
+                // the state a locally-warmed-then-released block lands
+                // in, reclaimable under pressure.
+                cache.release(hash);
+                seeded += 1;
+            } else {
+                self.free_blocks.push(block);
+            }
+        }
+        if seeded > 0 {
+            if let Some(cache) = self.prefix.as_mut() {
+                let evicted = cache.evict_over_capacity();
+                self.free_blocks.extend(evicted);
+            }
+            self.note_peak();
+        }
+        seeded
+    }
+
     /// Fraction of capacity physically in use (non-free blocks,
     /// including reclaimable cached ones), in [0, 1].
     pub fn occupancy(&self) -> f64 {

@@ -16,6 +16,7 @@
 //! | `probe-purity` | everywhere                          | a placement probe (`load_memory_over_time*`, `placement_score*`, `prefix_credits`) taking any `&mut` |
 //! | `probe-hot-loop` | `cluster/`                        | prompt hashing (`content_chain` / `extend_content_chain`) inside a `for` loop — per-replica iteration must borrow the arrival's one-shot chain (`ArrivalScratch`), not rehash it per candidate (the PR 8 class) |
 //! | `predictor-seam` | everywhere but `predictor/ workload/` | direct Table 2 reads (`api_stats::stats_for` / `predicted_duration` / `predicted_response_tokens`) — consumers go through the `predictor::duration` seam (`DurationModel::revise`, `class_prior_*`) so learned estimators can revise every estimate (the PR 9 class) |
+//! | `gossip-seam`  | everywhere but `cluster/net/` and `cluster/shared_prefix.rs` | direct `SharedPrefixIndex` mutation (`mirror_insert` / `mirror_remove`) — the fleet mirror is updated only by journal deltas riding the gossip pipeline (`PrefixDeltaSink::on_delta` stays legal), so no code path can outrun the modeled network (the PR 10 class) |
 //!
 //! A genuine exception is written down, not waved through:
 //!
@@ -38,8 +39,8 @@ use std::fs;
 use std::io;
 use std::path::{Path, PathBuf};
 
-/// The eight enforced rule slugs (what `allow(...)` accepts).
-pub const RULES: [&str; 8] = [
+/// The nine enforced rule slugs (what `allow(...)` accepts).
+pub const RULES: [&str; 9] = [
     "wire-format",
     "wire-hot-path",
     "panic",
@@ -48,6 +49,7 @@ pub const RULES: [&str; 8] = [
     "probe-purity",
     "probe-hot-loop",
     "predictor-seam",
+    "gossip-seam",
 ];
 
 /// One finding: file, 1-based line, rule slug, human message.
@@ -513,6 +515,8 @@ pub fn scan_source(rel_path: &str, src: &str) -> Vec<Violation> {
     let seam_scope = !["predictor", "workload"]
         .iter()
         .any(|d| in_dir(&rel, d));
+    let gossip_scope =
+        !in_dir(&rel, "cluster/net") && rel != "cluster/shared_prefix.rs";
 
     if panic_scope {
         rule_panic(&tokens, &mut ctx);
@@ -532,6 +536,9 @@ pub fn scan_source(rel_path: &str, src: &str) -> Vec<Violation> {
     }
     if seam_scope {
         rule_predictor_seam(&tokens, &mut ctx);
+    }
+    if gossip_scope {
+        rule_gossip_seam(&tokens, &mut ctx);
     }
     rule_probe_purity(&tokens, &mut ctx);
 
@@ -709,6 +716,31 @@ fn rule_predictor_seam(t: &[Token], ctx: &mut Ctx<'_>) {
              seam — read through predictor::duration \
              (DurationModel::revise / class_prior_*) so learned \
              estimators stay in the loop (PR 9 class)"));
+    }
+}
+
+/// Rule `gossip-seam`: direct `SharedPrefixIndex` mutation outside
+/// `cluster/net/` and `cluster/shared_prefix.rs`. A raw
+/// `mirror_insert` / `mirror_remove` call lets fleet state outrun the
+/// modeled network — the mirror must only change via journal deltas
+/// riding the gossip pipeline (the `PrefixDeltaSink::on_delta` seam,
+/// which stays legal everywhere), or `--net-model` byte-identity and
+/// the bounded-staleness audit both silently rot (the PR 10 class).
+fn rule_gossip_seam(t: &[Token], ctx: &mut Ctx<'_>) {
+    for i in 0..t.len() {
+        let Some(name) = id_at(t, i) else { continue };
+        if !matches!(name, "mirror_insert" | "mirror_remove") {
+            continue;
+        }
+        if !punct_at(t, i + 1, '(') {
+            continue;
+        }
+        ctx.push(t[i].line, "gossip-seam", format!(
+            "direct SharedPrefixIndex::{name} call bypasses the gossip \
+             pipeline — mutate the mirror only through journal deltas \
+             (PrefixDeltaSink::on_delta / cluster::net delivery) so \
+             fleet state cannot outrun the modeled network (PR 10 \
+             class)"));
     }
 }
 

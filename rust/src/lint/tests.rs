@@ -446,6 +446,55 @@ pub fn eta(api: ApiType) -> Micros {
     assert!(scan_source("metrics/mod.rs", src).is_empty());
 }
 
+// -- gossip-seam -------------------------------------------------------
+
+#[test]
+fn gossip_seam_flags_direct_mirror_mutation() {
+    let src = r#"
+pub fn cheat(index: &mut SharedPrefixIndex, hash: BlockHash) {
+    index.mirror_insert(hash, 0);
+    index.mirror_remove(hash, 1);
+}
+"#;
+    let v = scan_source("cluster/mod.rs", src);
+    let hits = rules_hit(&v);
+    assert_eq!(hits.iter().filter(|r| **r == "gossip-seam").count(), 2,
+               "{v:?}");
+    // The rule applies crate-wide, not just under cluster/.
+    let v = scan_source("coordinator/placement.rs", src);
+    assert!(rules_hit(&v).contains(&"gossip-seam"), "{v:?}");
+}
+
+#[test]
+fn gossip_seam_exempts_the_pipeline_and_spares_on_delta() {
+    let direct = r#"
+pub fn apply(index: &mut SharedPrefixIndex, hash: BlockHash) {
+    index.mirror_insert(hash, 0);
+}
+"#;
+    // The index impl and the modeled-network delivery own the mirror.
+    assert!(scan_source("cluster/shared_prefix.rs", direct).is_empty());
+    assert!(scan_source("cluster/net/mod.rs", direct).is_empty());
+    // The delta-sink seam stays legal everywhere.
+    let through_seam = r#"
+pub fn mirror(index: &mut SharedPrefixIndex, delta: &PrefixDelta) {
+    index.on_delta(0, delta);
+}
+"#;
+    assert!(scan_source("cluster/mod.rs", through_seam).is_empty());
+}
+
+#[test]
+fn gossip_seam_allow_escape_suppresses() {
+    let src = r#"
+pub fn rebuild(index: &mut SharedPrefixIndex, hash: BlockHash) {
+    // lamps-lint: allow(gossip-seam) cold-start rebuild, network not armed yet
+    index.mirror_insert(hash, 0);
+}
+"#;
+    assert!(scan_source("cluster/mod.rs", src).is_empty());
+}
+
 // -- the on-disk fixture corpus + the crate itself ---------------------
 
 #[test]

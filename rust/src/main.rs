@@ -14,7 +14,8 @@ use anyhow::Result;
 
 use lamps::bench::{Dataset, ModelPreset};
 use lamps::cluster::ReplicaSet;
-use lamps::config::{ApiPredKind, ApiSourceKind, AuditMode, PlacementKind,
+use lamps::config::{ApiPredKind, ApiSourceKind, AuditMode,
+                    AutoscaleConfig, NetModelKind, PlacementKind,
                     SystemConfig};
 use lamps::core::types::Micros;
 #[cfg(feature = "pjrt")]
@@ -42,6 +43,9 @@ USAGE:
                 [--async-swap]
                 [--prefix-cache] [--prefix-cache-blocks N]
                 [--shared-prefix] [--no-admission-requeue]
+                [--net-model off|lan|wan] [--gossip-interval MS]
+                [--staleness-budget MS] [--net-topk K]
+                [--autoscale MIN:MAX]
                 [--audit] [--placement-cache on|off]
   lamps run     [--dataset single-api|multi-api|toolbench|<trace.json>]
                 [--system vllm|infercept|lamps|lamps-no-sched|sjf|sjf-total]
@@ -55,6 +59,9 @@ USAGE:
                 [--async-swap]
                 [--prefix-cache] [--prefix-cache-blocks N]
                 [--shared-prefix] [--no-admission-requeue]
+                [--net-model off|lan|wan] [--gossip-interval MS]
+                [--staleness-budget MS] [--net-topk K]
+                [--autoscale MIN:MAX]
                 [--audit] [--placement-cache on|off] [--timeline]
   lamps gen-workload --out trace.json [--dataset single-api] [--rate 3.0]
                 [--requests 500] [--seed 42]
@@ -106,7 +113,19 @@ WIRE PROTOCOL (serve; JSON lines over TCP, one frame per line):
   prefix index those discounts come from. A request memory-rejected by
   its owner before first run is re-queued once to the best sibling
   unless --no-admission-requeue. With --replicas 1 the single-engine
-  path runs unchanged. --audit re-checks the engine/fleet invariants
+  path runs unchanged. --net-model off (default) keeps the fleet on
+  the exact sequential coordination path, byte-identical to the
+  network-less engine; lan|wan arms a deterministic simulated network
+  (seeded per-link delays) that gossip-lags the shared prefix index
+  on the --gossip-interval cadence (ms; default 5) and feeds
+  placement/rescue from bounded-staleness per-replica load digests
+  (--staleness-budget ms, default 50; --net-topk shortlist width,
+  default 4) — a stale steer costs a measured re-prefill
+  (stale_steer_* metrics), never an error. --autoscale MIN:MAX (needs
+  a modeled network) drives an elastic replica count between the
+  bounds: parked replicas warm up under backlog with their prefix
+  cache pre-seeded from the busiest sibling, and idle replicas drain
+  and decommission when pressure falls. --audit re-checks the engine/fleet invariants
   (block conservation, prefix refcounts, queue order, event
   causality) after every step and aborts on the first violation —
   always on in debug builds, opt-in here for release builds.
@@ -290,6 +309,57 @@ fn apply_replica_flags(cfg: &mut SystemConfig, args: &Args)
     Ok(())
 }
 
+/// Apply the modeled-network flags (`--net-model off|lan|wan`,
+/// `--gossip-interval MS`, `--staleness-budget MS`, `--net-topk K`,
+/// `--autoscale MIN:MAX`). Off — the default — keeps the fleet on the
+/// exact sequential coordination path; the knobs are accepted but
+/// inert then, except `--autoscale`, which requires a modeled network
+/// and is rejected without one.
+fn apply_net_flags(cfg: &mut SystemConfig, args: &Args) -> Result<()> {
+    if let Some(name) = args.flags.get("net-model") {
+        cfg.net.model = NetModelKind::parse(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown net model '{name}' (expected off, lan, or wan)")
+        })?;
+    }
+    if let Some(ms) = args.flags.get("gossip-interval") {
+        let ms: u64 = ms.parse().map_err(|_| {
+            anyhow::anyhow!("unparseable --gossip-interval '{ms}' \
+                             (expected milliseconds)")
+        })?;
+        cfg.net.gossip_interval = Micros(ms.saturating_mul(1_000).max(1));
+    }
+    if let Some(ms) = args.flags.get("staleness-budget") {
+        let ms: u64 = ms.parse().map_err(|_| {
+            anyhow::anyhow!("unparseable --staleness-budget '{ms}' \
+                             (expected milliseconds)")
+        })?;
+        cfg.net.staleness_budget =
+            Micros(ms.saturating_mul(1_000).max(1));
+    }
+    if let Some(k) = args.flags.get("net-topk") {
+        let k: usize = k.parse().map_err(|_| {
+            anyhow::anyhow!("unparseable --net-topk '{k}' (expected a \
+                             replica count)")
+        })?;
+        cfg.net.topk = k.max(1);
+    }
+    if let Some(spec) = args.flags.get("autoscale") {
+        let scale = AutoscaleConfig::parse(spec).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unparseable --autoscale '{spec}' (expected MIN:MAX \
+                 with 1 <= MIN <= MAX)")
+        })?;
+        if cfg.net.model == NetModelKind::Off {
+            anyhow::bail!(
+                "--autoscale needs a modeled network; pass \
+                 --net-model lan|wan");
+        }
+        cfg.net.autoscale = Some(scale);
+    }
+    Ok(())
+}
+
 /// Apply the KV prefix-cache flags: `--prefix-cache` turns refcounted
 /// prefix block sharing on (off by default ⇒ legacy behavior);
 /// `--prefix-cache-blocks N` caps the zero-ref cached blocks retained
@@ -357,6 +427,7 @@ fn serve(args: &Args) -> Result<()> {
     apply_compose_flags(&mut base_cfg, args);
     apply_prefix_flags(&mut base_cfg, args);
     apply_replica_flags(&mut base_cfg, args)?;
+    apply_net_flags(&mut base_cfg, args)?;
     apply_api_source_flag(&mut base_cfg, args, true)?;
     apply_api_pred_flag(&mut base_cfg, args)?;
     eprintln!(
@@ -367,6 +438,19 @@ fn serve(args: &Args) -> Result<()> {
         base_cfg.api_source.label(), base_cfg.api_pred.label(),
         base_cfg.audit.label(),
         if base_cfg.audit.enabled() { "active" } else { "inactive" });
+    if base_cfg.net.armed(base_cfg.replicas) {
+        eprintln!(
+            "lamps: net-model {} (gossip every {}ms, staleness budget \
+             {}ms, top-{} shortlist{})",
+            base_cfg.net.model.label(),
+            base_cfg.net.gossip_interval.0 / 1_000,
+            base_cfg.net.staleness_budget.0 / 1_000,
+            base_cfg.net.topk,
+            match base_cfg.net.autoscale {
+                Some(s) => format!(", autoscale {}:{}", s.min, s.max),
+                None => String::new(),
+            });
+    }
 
     // PJRT handles are not Send: build them inside the engine thread.
     // Each replica loads its own model runtime (one modeled device).
@@ -432,6 +516,7 @@ fn run(args: &Args) -> Result<()> {
     apply_compose_flags(&mut cfg, args);
     apply_prefix_flags(&mut cfg, args);
     apply_replica_flags(&mut cfg, args)?;
+    apply_net_flags(&mut cfg, args)?;
     apply_api_source_flag(&mut cfg, args, false)?;
     apply_api_pred_flag(&mut cfg, args)?;
     if cfg.audit.enabled() {

@@ -133,6 +133,65 @@ impl SharedPrefixStats {
     }
 }
 
+/// Fleet-level stats of the modeled network (`--net-model`): gossip
+/// traffic, stale-steer re-prefill cost, bounded-staleness rescue
+/// refusals, and elastic scaling events. Carried by
+/// [`FleetReport`](crate::cluster::FleetReport) only when the network
+/// is armed, so the net-less fleet JSON stays byte-identical.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NetStats {
+    /// Placements whose gossip-lagged cached-prefix credit exceeded
+    /// what was actually resident on the chosen replica at dispatch —
+    /// a stale steer. The shortfall is re-prefilled, never an error.
+    pub stale_steer_requests: u64,
+    /// Total over-claimed tokens of those placements (the measured
+    /// re-prefill cost of mirror staleness).
+    pub stale_steer_tokens: u64,
+    /// Gossip messages delivered (delta batches + digests).
+    pub gossip_messages: u64,
+    /// `PrefixDelta`s that rode those messages.
+    pub gossip_deltas: u64,
+    /// Load-digest publications.
+    pub digest_publishes: u64,
+    /// Rescue adoptions refused by the live `can_fit_fresh`
+    /// re-validation after a stale digest claimed the sibling fit.
+    pub rescue_refusals: u64,
+    /// Elastic scale-up events (parked replica warmed + pre-seeded).
+    pub scale_ups: u64,
+    /// Elastic scale-down events (active replica sent draining).
+    pub scale_downs: u64,
+}
+
+impl NetStats {
+    /// Record one stale-steer shortfall; an exact (or conservative)
+    /// credit is not staleness.
+    pub fn note_stale_steer(&mut self, overclaimed_tokens: u64) {
+        if overclaimed_tokens == 0 {
+            return;
+        }
+        self.stale_steer_requests += 1;
+        self.stale_steer_tokens += overclaimed_tokens;
+    }
+
+    /// JSON value form (embedded in the fleet report).
+    pub fn to_value(&self) -> crate::util::json::Value {
+        use crate::util::json;
+        json::obj(vec![
+            ("stale_steer_requests",
+             json::num(self.stale_steer_requests as f64)),
+            ("stale_steer_tokens",
+             json::num(self.stale_steer_tokens as f64)),
+            ("gossip_messages", json::num(self.gossip_messages as f64)),
+            ("gossip_deltas", json::num(self.gossip_deltas as f64)),
+            ("digest_publishes",
+             json::num(self.digest_publishes as f64)),
+            ("rescue_refusals", json::num(self.rescue_refusals as f64)),
+            ("scale_ups", json::num(self.scale_ups as f64)),
+            ("scale_downs", json::num(self.scale_downs as f64)),
+        ])
+    }
+}
+
 /// Per-request lifecycle record.
 #[derive(Debug, Clone, Copy)]
 pub struct RequestRecord {

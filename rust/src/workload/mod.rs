@@ -116,6 +116,17 @@ pub enum ArrivalProcess {
     Poisson { rate: f64 },
     /// All at t=0 (the Fig 3 worked example).
     Simultaneous,
+    /// Inhomogeneous Poisson on a raised-cosine day curve: the
+    /// instantaneous rate is
+    /// `base + (peak - base) · ½(1 − cos(2πt/period))` — trough
+    /// `base_rate` at t = 0, crest `peak_rate` half a period in. The
+    /// elastic-fleet autoscaler (`--autoscale`) is exercised against
+    /// this curve: warm-ups ride the climb, drains ride the descent.
+    Diurnal {
+        base_rate: f64,
+        peak_rate: f64,
+        period_secs: f64,
+    },
 }
 
 impl ArrivalProcess {
@@ -132,8 +143,58 @@ impl ArrivalProcess {
                     .collect()
             }
             ArrivalProcess::Simultaneous => vec![Micros::ZERO; n],
+            ArrivalProcess::Diurnal {
+                base_rate,
+                peak_rate,
+                period_secs,
+            } => {
+                // Lewis–Shedler thinning: draw candidate gaps at the
+                // envelope rate, accept each candidate with probability
+                // λ(t)/envelope. Exact for any bounded λ and keeps the
+                // stream strictly increasing.
+                let base = base_rate.max(0.0);
+                let peak = peak_rate.max(base);
+                let period = period_secs.max(f64::EPSILON);
+                if peak <= 0.0 {
+                    return vec![Micros::ZERO; n];
+                }
+                let lambda = |t: f64| {
+                    let phase =
+                        (2.0 * std::f64::consts::PI * t) / period;
+                    base + (peak - base) * 0.5 * (1.0 - phase.cos())
+                };
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| loop {
+                        t += rng.exponential(peak);
+                        if rng.f64() * peak <= lambda(t) {
+                            break Micros::from_secs_f64(t);
+                        }
+                    })
+                    .collect()
+            }
         }
     }
+}
+
+/// Re-draw a trace's arrival times from `process`, leaving request
+/// bodies untouched (requests keep their ids; `Trace::new` re-sorts by
+/// the fresh times). The elastic-fleet bench re-times a flat
+/// INFERCEPT-style dataset onto a diurnal day curve this way.
+pub fn retime(trace: &Trace, process: ArrivalProcess, seed: u64)
+              -> Trace {
+    let mut rng = Rng::new(seed);
+    let arrivals = process.sample(trace.len(), &mut rng);
+    let requests = trace
+        .requests
+        .iter()
+        .zip(arrivals)
+        .map(|(req, arrival)| RequestSpec {
+            arrival,
+            ..req.clone()
+        })
+        .collect();
+    Trace::new(&trace.name, trace.rate, requests)
 }
 
 /// Manual JSON mapping for traces (no serde in the offline vendor set).
@@ -277,6 +338,72 @@ mod tests {
         let mut rng = Rng::new(1);
         let arrivals = ArrivalProcess::Simultaneous.sample(3, &mut rng);
         assert_eq!(arrivals, vec![Micros::ZERO; 3]);
+    }
+
+    #[test]
+    fn diurnal_peaks_mid_period_and_stays_sorted() {
+        let mut rng = Rng::new(7);
+        let period = 100.0;
+        let arrivals = ArrivalProcess::Diurnal {
+            base_rate: 1.0,
+            peak_rate: 20.0,
+            period_secs: period,
+        }
+        .sample(4000, &mut rng);
+        assert!(arrivals.windows(2).all(|w| w[0] <= w[1]));
+        // Crest (phase 0.45–0.55) must be far denser than the trough
+        // (phase within 0.05 of 0) — same-width windows, λ ratio 20:1.
+        let phase_count = |lo: f64, hi: f64| {
+            arrivals
+                .iter()
+                .filter(|a| {
+                    let p = (a.as_secs_f64() % period) / period;
+                    p >= lo && p < hi
+                })
+                .count()
+        };
+        let crest = phase_count(0.45, 0.55);
+        let trough = phase_count(0.0, 0.05) + phase_count(0.95, 1.0);
+        assert!(crest > 3 * trough.max(1),
+                "crest {crest} vs trough {trough}");
+    }
+
+    #[test]
+    fn diurnal_flat_curve_matches_poisson_rate() {
+        let mut rng = Rng::new(3);
+        let arrivals = ArrivalProcess::Diurnal {
+            base_rate: 5.0,
+            peak_rate: 5.0,
+            period_secs: 60.0,
+        }
+        .sample(5000, &mut rng);
+        let span = arrivals.last().unwrap().as_secs_f64();
+        let measured = 5000.0 / span;
+        assert!((measured - 5.0).abs() < 0.3,
+                "flat diurnal degenerates to Poisson, got {measured}");
+    }
+
+    #[test]
+    fn retime_keeps_bodies_and_resorts() {
+        let t = infercept::single_api_dataset(20, 2.0, 7);
+        let d = retime(&t, ArrivalProcess::Diurnal {
+            base_rate: 0.5,
+            peak_rate: 8.0,
+            period_secs: 30.0,
+        }, 11);
+        assert_eq!(d.len(), t.len());
+        assert!(d.requests.windows(2)
+                 .all(|w| (w[0].arrival, w[0].id)
+                      <= (w[1].arrival, w[1].id)));
+        let mut orig: Vec<_> = t.requests.iter()
+            .map(|r| (r.id, r.prompt_tokens, r.api_calls.clone()))
+            .collect();
+        let mut back: Vec<_> = d.requests.iter()
+            .map(|r| (r.id, r.prompt_tokens, r.api_calls.clone()))
+            .collect();
+        orig.sort_by_key(|(id, ..)| *id);
+        back.sort_by_key(|(id, ..)| *id);
+        assert_eq!(orig, back, "retime must not touch request bodies");
     }
 
     #[test]

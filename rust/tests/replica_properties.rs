@@ -421,6 +421,108 @@ fn prop_single_replica_fleet_matches_engine_multi_api() {
     }
 }
 
+/// Randomized gossip-staleness invariants (the modeled network of
+/// `cluster::net`): with `--net-model lan|wan` armed the shared-prefix
+/// mirror lags reality, and the only legal consequence is a measured
+/// re-prefill (`stale_steer_*`) — never a lost request, never an audit
+/// failure. The staleness-aware fleet auditor must hold at every step,
+/// and the mirror must converge to exact (both directions) once the
+/// fleet quiesces and the network flushes.
+#[test]
+fn prop_gossip_staleness_only_costs_reprefill() {
+    use lamps::config::NetModelKind;
+    let mut rng = Rng::new(0x5E7_0030);
+    for (model, replicas, placement) in [
+        (NetModelKind::Lan, 3usize, PlacementKind::PrefixAffinity),
+        (NetModelKind::Wan, 4, PlacementKind::PrefixAffinity),
+        (NetModelKind::Lan, 4, PlacementKind::MemoryOverTime),
+    ] {
+        let trace = random_shared_trace(&mut rng, 40);
+        let n = trace.len() as u64;
+        let mut cfg = SystemConfig::preset("lamps").unwrap();
+        cfg.memory_budget = Tokens(1_500);
+        cfg.replicas = replicas;
+        cfg.placement = placement;
+        cfg.prefix_cache = PrefixCacheConfig::on();
+        cfg.shared_prefix = true;
+        cfg.net.model = model;
+        let mut set = ReplicaSet::simulated(cfg);
+        assert!(set.net_state().is_some(), "{model:?} must arm the net");
+        for spec in &trace.requests {
+            set.enqueue(spec.clone());
+        }
+        let mut steps = 0u64;
+        while set.step() {
+            steps += 1;
+            assert!(steps < 5_000_000, "fleet failed to drain");
+            // The bounded-staleness auditor must forgive exactly the
+            // in-flight window and nothing else, at every step.
+            if let Err(e) = lamps::audit::check_fleet(&set) {
+                panic!("{model:?}/{placement:?}: staleness-aware fleet \
+                        invariant violated: {e}");
+            }
+        }
+        let report = set.fleet_report();
+        assert_eq!(report.fleet.completed as u64, n,
+                   "{model:?}/{placement:?}: staleness may slow, \
+                    never lose");
+        let stats = report.net.as_ref().expect("armed run reports net");
+        assert!(stats.gossip_messages > 0,
+                "deltas and digests must actually ride the network");
+
+        // Quiesce: the final no-progress round flushes the network, so
+        // the mirror is exact again — in both directions.
+        let index = set.shared_index().expect("shared index active");
+        assert_index_subset_of_resident(&set);
+        for i in 0..set.len() {
+            for hash in set.replica(i).resident_prefix_hashes() {
+                assert!(index.holds(hash, i),
+                        "{model:?}: resident {hash:#x} on replica {i} \
+                         missing from the flushed mirror");
+            }
+        }
+    }
+}
+
+/// `--net-model off` (the default) must keep the fleet byte-identical
+/// to the network-less path: same report JSON, same dispatch log, no
+/// "net" key — regardless of how the other (inert when off) network
+/// knobs are set, across placements.
+#[test]
+fn prop_net_model_off_is_byte_identical() {
+    for placement in [PlacementKind::PrefixAffinity,
+                      PlacementKind::MemoryOverTime,
+                      PlacementKind::LeastLoaded,
+                      PlacementKind::RoundRobin] {
+        let mut rng = Rng::new(0x5E7_0040);
+        let trace = random_shared_trace(&mut rng, 35);
+        let run = |touch_knobs: bool| {
+            let mut cfg = SystemConfig::preset("lamps").unwrap();
+            cfg.memory_budget = Tokens(2_000);
+            cfg.replicas = 3;
+            cfg.placement = placement;
+            cfg.prefix_cache = PrefixCacheConfig::on();
+            cfg.shared_prefix = true;
+            if touch_knobs {
+                // Everything but the model itself: all inert when off.
+                cfg.net.gossip_interval = Micros(1_000);
+                cfg.net.staleness_budget = Micros(7_000);
+                cfg.net.topk = 2;
+            }
+            let mut set = ReplicaSet::simulated(cfg);
+            let report = set.run_trace(&trace);
+            (report.to_json(true), set.assignments().to_vec())
+        };
+        let (default_json, default_assigned) = run(false);
+        let (knobs_json, knobs_assigned) = run(true);
+        assert_eq!(default_assigned, knobs_assigned, "{placement:?}");
+        assert_eq!(default_json, knobs_json,
+                   "{placement:?}: off-path knobs must be inert");
+        assert!(!default_json.contains("\"net\""),
+                "no net block may appear with the model off");
+    }
+}
+
 /// The always-on invariant auditor must be observationally pure: a
 /// fig6-shaped fleet run with the auditor forced on yields a
 /// byte-identical timeline report to the same run with it forced off —
